@@ -1,0 +1,57 @@
+//! Year-scale fleet study: the population-drift and scheduling figures.
+//!
+//! Regenerates the Fig. 1 / Fig. 4 / Fig. 6 / Fig. 16 data and prints the
+//! tables, then runs a 30-day dynamic-fleet simulation under the default
+//! evolution model and reports its MPG decomposition by segment.
+//!
+//! Run with: `cargo run --release --example fleet_year`
+
+use tpufleet::fleet::EvolutionModel;
+use tpufleet::metrics::goodput::{self, Axis};
+use tpufleet::report::figures;
+use tpufleet::sim::{SimConfig, Simulation};
+
+fn main() {
+    println!("{}", figures::fig1_fleet_mix().table.to_ascii());
+    println!("{}", figures::fig4_job_sizes(0xFEE7).table.to_ascii());
+    println!("{}", figures::fig6_pathways(0xFEE7).table.to_ascii());
+    println!("{}", figures::fig16_sg_jobsize(0xFEE7).table.to_ascii());
+
+    // A month on an *evolving* fleet (pods added/removed monthly).
+    let mut cfg = SimConfig {
+        seed: 0xFEE7,
+        duration_s: 30.0 * 24.0 * 3600.0,
+        evolution: Some(EvolutionModel::default()),
+        ..Default::default()
+    };
+    cfg.generator.arrivals_per_hour = 6.0;
+    // The evolution model starts with tpu-a/b/gpu; jobs target what exists.
+    cfg.generator.gen_mix = vec![
+        (tpufleet::fleet::ChipGeneration::TpuA, 0.3),
+        (tpufleet::fleet::ChipGeneration::TpuB, 0.6),
+        (tpufleet::fleet::ChipGeneration::Gpu, 0.1),
+    ];
+    eprintln!("running 30-day evolving-fleet simulation...");
+    let t0 = std::time::Instant::now();
+    let mut sim = Simulation::new(cfg.clone());
+    let res = sim.run();
+    eprintln!("done in {:.1?}: {res:?}", t0.elapsed());
+
+    println!(
+        "{}",
+        figures::mpg_summary(&sim.ledger, 0.0, cfg.duration_s).to_ascii()
+    );
+    for axis in [Axis::Generation] {
+        for seg in goodput::segmented(&sim.ledger, 0.0, cfg.duration_s, axis) {
+            let r = seg.report;
+            println!(
+                "{:<16} SG {:.3}  RG {:.3}  PG {:.3}  MPG {:.3}",
+                seg.label,
+                r.sg,
+                r.rg,
+                r.pg,
+                r.mpg()
+            );
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the five-minute tour of the public API.
+//!
+//! 1. Run a small fleet simulation and read its MPG decomposition.
+//! 2. Load a real AOT artifact through PJRT, execute it, and compute its
+//!    measured Program Goodput against the HLO roofline.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (Step 2 is skipped if `make artifacts` hasn't been run.)
+
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::metrics::goodput;
+use tpufleet::roofline;
+use tpufleet::runtime::{Engine, Manifest};
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. Simulate a fleet for three days --------------------------
+    let mut cfg = SimConfig {
+        seed: 7,
+        duration_s: 3.0 * 24.0 * 3600.0,
+        ..Default::default()
+    };
+    cfg.generator.arrivals_per_hour = 8.0;
+    let mut sim = Simulation::new(cfg.clone());
+    let result = sim.run();
+    println!(
+        "simulated 3 days: {} jobs arrived, {} completed, {} preempted",
+        result.arrived_jobs, result.completed_jobs, result.preemptions
+    );
+
+    let fleet = goodput::report(&sim.ledger, 0.0, cfg.duration_s, |_| true);
+    println!(
+        "fleet MPG = SG {:.3} x RG {:.3} x PG {:.3} = {:.3}\n",
+        fleet.sg,
+        fleet.rg,
+        fleet.pg,
+        fleet.mpg()
+    );
+
+    // ---- 2. Execute a real AOT artifact through PJRT ------------------
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; run `make artifacts` for the PJRT half");
+        return Ok(());
+    }
+    let mut engine = Engine::new(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // The quickstart artifact is a bare Pallas tiled matmul (256x256).
+    let mut rng = Rng::new(1);
+    let n = 256;
+    let a: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let la = Engine::literal_f32(&a, &[n, n])?;
+    let lb = Engine::literal_f32(&b, &[n, n])?;
+    let (outs, dt) = engine.execute_timed("matmul_pallas", &[la, lb])?;
+    let out = outs[0].to_vec::<f32>()?;
+    println!("matmul_pallas: {} output elements in {:.2} ms", out.len(), dt * 1e3);
+
+    // Measured Program Goodput = HLO-roofline ideal time / actual time.
+    let cost = engine.module_cost("matmul_pallas")?;
+    let est = roofline::estimate(&cost, ChipGeneration::Cpu.spec(), false);
+    println!(
+        "useful FLOPs {:.2e}, ideal {:.3} ms, measured PG {:.3}",
+        cost.flops,
+        est.ideal_compute_s * 1e3,
+        roofline::program_goodput(est.ideal_compute_s, dt)
+    );
+    Ok(())
+}

@@ -1,0 +1,187 @@
+"""AOT compile path: lower every artifact to HLO **text** + a JSON manifest.
+
+HLO text (never `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the runtime's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). The Rust runtime loads these with
+`HloModuleProto::from_text_file`.
+
+Python runs ONLY here — `make artifacts` — never on the request path.
+
+Artifacts produced (all under artifacts/):
+  init_params.hlo.txt   seed            -> flat params            (runtime)
+  train_step.hlo.txt    params,tok,lr   -> params', loss          (runtime)
+  infer_step.hlo.txt    params,tok      -> logits                 (runtime)
+  matmul_pallas.hlo.txt x,w             -> x@w                    (quickstart)
+  mlp_fused.hlo.txt     x,w1,b1,w2,b2   -> mlp(x)  [Pallas fused] (PG study)
+  mlp_naive.hlo.txt     same            -> same, written badly    (PG study)
+  manifest.json         shapes/dtypes/roles for every artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as model_lib
+from compile.kernels import matmul as matmul_k
+
+# The PG-study MLP is deliberately larger than the LM so its step time is
+# comfortably measurable from Rust (~ms scale on CPU).
+PG_STUDY_SHAPE = dict(batch=256, d_in=256, d_ff=1024)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name: str, s: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_artifact(
+    fn: Callable,
+    in_specs: List[Tuple[str, jax.ShapeDtypeStruct]],
+    out_dir: str,
+    fname: str,
+) -> dict:
+    lowered = jax.jit(fn).lower(*[s for _, s in in_specs])
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = lowered.out_info
+    flat_out, _ = jax.tree_util.tree_flatten(out_avals)
+    return {
+        "file": fname,
+        "inputs": [_io_entry(n, s) for n, s in in_specs],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in flat_out
+        ],
+        "hlo_bytes": len(text),
+    }
+
+
+def naive_mlp(x, w1, b1, w2, b2):
+    """The "poorly written program" of the Fig. 12 PG study.
+
+    Semantically identical to mlp_fused but the matmuls are expressed as
+    broadcast-multiply-reduce (which XLA does NOT rewrite into dot on CPU) —
+    the ideal-time analysis on the *unoptimized* graph assigns it the same
+    useful FLOPs, while its actual execution is far slower, i.e. low Program
+    Goodput. This mirrors pre-algebraic-simplification code in the paper.
+    """
+    h = jnp.sum(x[:, :, None] * w1[None, :, :], axis=1) + b1
+    h = jax.nn.gelu(h)
+    out = jnp.sum(h[:, :, None] * w2[None, :, :], axis=1) + b2
+    return (out,)
+
+
+def fused_mlp(x, w1, b1, w2, b2):
+    """The optimized program: Pallas fused matmul+bias+gelu kernels."""
+    h = matmul_k.matmul_bias_act(x, w1, b1, activation="gelu")
+    out = matmul_k.matmul_bias_act(h, w2, b2, activation=None)
+    return (out,)
+
+
+def build_all(out_dir: str, cfg: model_lib.ModelConfig) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "model_config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "param_count": cfg.param_count(),
+        },
+        "artifacts": {},
+    }
+
+    pspec = model_lib.param_spec(cfg)
+    param_inputs = [(name, spec(shape, dtype)) for name, shape, dtype in pspec]
+    tokens = ("tokens", spec((cfg.batch, cfg.seq_len), jnp.int32))
+    lr = ("lr", spec((), jnp.float32))
+
+    manifest["artifacts"]["init_params"] = lower_artifact(
+        model_lib.make_init_fn(cfg),
+        [("seed", spec((), jnp.int32))],
+        out_dir,
+        "init_params.hlo.txt",
+    )
+    manifest["artifacts"]["train_step"] = lower_artifact(
+        model_lib.make_train_fn(cfg),
+        param_inputs + [tokens, lr],
+        out_dir,
+        "train_step.hlo.txt",
+    )
+    manifest["artifacts"]["infer_step"] = lower_artifact(
+        model_lib.make_infer_fn(cfg),
+        param_inputs + [tokens],
+        out_dir,
+        "infer_step.hlo.txt",
+    )
+
+    # Quickstart artifact: one bare Pallas matmul.
+    manifest["artifacts"]["matmul_pallas"] = lower_artifact(
+        lambda x, w: (matmul_k.matmul(x, w),),
+        [("x", spec((256, 256))), ("w", spec((256, 256)))],
+        out_dir,
+        "matmul_pallas.hlo.txt",
+    )
+
+    # Fig. 12 PG-study pair.
+    s = PG_STUDY_SHAPE
+    mlp_inputs = [
+        ("x", spec((s["batch"], s["d_in"]))),
+        ("w1", spec((s["d_in"], s["d_ff"]))),
+        ("b1", spec((s["d_ff"],))),
+        ("w2", spec((s["d_ff"], s["d_in"]))),
+        ("b2", spec((s["d_in"],))),
+    ]
+    manifest["artifacts"]["mlp_fused"] = lower_artifact(
+        fused_mlp, mlp_inputs, out_dir, "mlp_fused.hlo.txt"
+    )
+    manifest["artifacts"]["mlp_naive"] = lower_artifact(
+        naive_mlp, mlp_inputs, out_dir, "mlp_naive.hlo.txt"
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    cfg = model_lib.ModelConfig()
+    manifest = build_all(args.out, cfg)
+    total = sum(a["hlo_bytes"] for a in manifest["artifacts"].values())
+    print(
+        f"wrote {len(manifest['artifacts'])} artifacts "
+        f"({total} bytes HLO) + manifest.json to {args.out}",
+        file=sys.stderr,
+    )
+
+
+if __name__ == "__main__":
+    main()

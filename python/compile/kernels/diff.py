@@ -1,0 +1,114 @@
+"""Differentiable wrappers for the Pallas kernels.
+
+Pallas `pallas_call`s are not transparently differentiable (autodiff would
+have to differentiate through `program_id`), so the L2 model calls these
+`jax.custom_vjp` wrappers instead:
+
+  * matmul / matmul_bias_act — backward passes are themselves expressed with
+    the Pallas matmul kernel (dx = g·wᵀ, dw = xᵀ·g), so the training-step
+    artifact's hot FLOPs run through L1 in both directions.
+  * attention — forward is the flash kernel; backward recomputes through the
+    dense oracle with jax.vjp (the standard recompute-in-backward trade:
+    O(S²) memory is fine at artifact sizes, and the oracle is the ground
+    truth the kernel is tested against).
+
+Gradient correctness is pinned by python/tests/test_model.py, which compares
+jax.grad through this path against jax.grad through the pure-jnp reference
+model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention as attn_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable (M,K)@(K,N) via the Pallas kernel."""
+    return matmul_k.matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_k.matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul_k.matmul(g, w.T)
+    dw = matmul_k.matmul(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x, w, b, activation="gelu"):
+    """Differentiable fused (M,K)@(K,N)+b with activation epilogue."""
+    return matmul_k.matmul_bias_act(x, w, b, activation=activation)
+
+
+def _mba_fwd(x, w, b, activation):
+    # Save the pre-activation z: the epilogue is cheap to re-derive from it
+    # and it is exactly what the activation backward needs.
+    z = matmul_k.matmul_bias_act(x, w, b, activation=None)
+    out = ref._activation_ref(z, activation) if activation else z
+    return out, (x, w, z)
+
+
+def _mba_bwd(activation, res, g):
+    x, w, z = res
+    if activation is None:
+        gz = g
+    else:
+        _, act_vjp = jax.vjp(lambda t: ref._activation_ref(t, activation), z)
+        (gz,) = act_vjp(g)
+    dx = matmul_k.matmul(gz, w.T)
+    dw = matmul_k.matmul(x.T, gz)
+    db = jnp.sum(gz, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(q, k, v, block_q=64, block_k=64):
+    """Differentiable causal flash attention (B,H,S,D)."""
+    return attn_k.attention(q, k, v, block_q=block_q, block_k=block_k, causal=True)
+
+
+def _attn_fwd(q, k, v, block_q, block_k):
+    out = attn_k.attention(q, k, v, block_q=block_q, block_k=block_k, causal=True)
+    return out, (q, k, v)
+
+
+def _attn_bwd(block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref.attention_ref(q_, k_, v_, causal=True), q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,180 @@
+"""L1 Pallas kernels: tiled matmul with optional fused bias + activation.
+
+TPU-style tiling: BlockSpecs carve the operands into MXU-friendly blocks
+(multiples of 128 where the problem size allows), with the contraction (K)
+dimension innermost in the grid so each (m, n) output tile is accumulated in
+VMEM across K steps and written once.
+
+Hardware adaptation note (DESIGN.md §Hardware-Adaptation): these kernels are
+authored for the TPU memory hierarchy — blocks sized for VMEM residency and
+the 128x128 MXU systolic array — but are *executed* with interpret=True
+because only the CPU PJRT plugin is available here. interpret=True lowers the
+kernel to plain HLO so the same artifact runs on any backend; real-TPU
+performance is estimated analytically (see DESIGN.md §Roofline notes below).
+
+Roofline notes (per-kernel VMEM / MXU estimates for the default blocks):
+  matmul, block (128, 128, 128), f32:
+    VMEM footprint = (128*128 x + 128*128 w + 128*128 acc) * 4B = 192 KiB
+    well under the ~16 MiB/core budget; K-innermost reuse gives each x/w
+    block exactly one HBM read. MXU utilization estimate: the inner
+    jnp.dot(128x128, 128x128) maps to 128 MXU passes at full occupancy;
+    arithmetic intensity = 2*128^3 FLOP / 3*128^2*4 B = 64/3 FLOP/B tile-
+    local, i.e. compute-bound for bf16/f32 on all TPU generations modeled
+    in rust/src/fleet/chip.rs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int, activation: Optional[str]):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (fastest) axis.
+
+    The output block is zero-initialized on the first K step and accumulated
+    in place; the (optional) epilogue runs on the last K step only, so the
+    activation is applied exactly once per output tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    if activation is not None:
+
+        @pl.when(k == n_k - 1)
+        def _epilogue():
+            o_ref[...] = _apply_activation(o_ref[...], activation)
+
+
+def _matmul_bias_kernel(
+    x_ref, w_ref, b_ref, o_ref, *, n_k: int, activation: Optional[str]
+):
+    """Like _matmul_kernel but fuses a bias add into the epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        acc = o_ref[...] + b_ref[...]
+        if activation is not None:
+            acc = _apply_activation(acc, activation)
+        o_ref[...] = acc
+
+
+def _apply_activation(x, activation: str):
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want, preferring MXU multiples."""
+    if dim <= want:
+        return dim
+    for cand in range(want, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "activation")
+)
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    activation: Optional[str] = None,
+) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N).
+
+    Block sizes are clipped to divisors of the problem size, so any shape is
+    accepted; the defaults are MXU-shaped (128).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _block(m, block_m), _block(n, block_n), _block(k, block_k)
+    n_k = k // bk
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    kernel = functools.partial(_matmul_kernel, n_k=n_k, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(x, w)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "activation")
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    activation: Optional[str] = "gelu",
+) -> jax.Array:
+    """Fused (M, K) @ (K, N) + b with optional activation epilogue.
+
+    This is the "optimized program" of the Fig. 12 Program-Goodput study:
+    one kernel, bias+activation fused into the final K step.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {w.shape}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bn, bk = _block(m, block_m), _block(n, block_n), _block(k, block_k)
+    n_k = k // bk
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+
+    kernel = functools.partial(
+        _matmul_bias_kernel, n_k=n_k, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=True,
+    )(x, w, b)

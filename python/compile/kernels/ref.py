@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package must match its oracle to float tolerance across
+the hypothesis shape/dtype sweep in python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, activation: Optional[str] = None):
+    out = jnp.matmul(
+        x, w, preferred_element_type=jnp.promote_types(x.dtype, w.dtype)
+    )
+    return _activation_ref(out, activation)
+
+
+def matmul_bias_act_ref(x, w, b, activation: Optional[str] = "gelu"):
+    out = jnp.matmul(
+        x, w, preferred_element_type=jnp.promote_types(x.dtype, w.dtype)
+    )
+    out = out + b
+    return _activation_ref(out, activation)
+
+
+def _activation_ref(x, activation: Optional[str]):
+    if activation is None:
+        return x
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    raise ValueError(f"unknown activation: {activation}")
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Dense softmax attention over (B, H, S, D)."""
+    d = q.shape[-1]
+    s = q.shape[-2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    weights = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", weights, v).astype(q.dtype)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Transformer MLP block: gelu(x@w1 + b1) @ w2 + b2."""
+    h = jax.nn.gelu(x @ w1 + b1)
+    return h @ w2 + b2

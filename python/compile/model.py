@@ -1,0 +1,249 @@
+"""L2: transformer language model (fwd/bwd) built on the L1 Pallas kernels.
+
+This is the "workload program" of the reproduction: a decoder-only LM whose
+training step and inference step are AOT-lowered (aot.py) to HLO text and
+executed from the Rust coordinator through PJRT. Program Goodput for the real
+execution path is measured against the compute roofline that the Rust HLO
+analyzer derives from these artifacts.
+
+Parameter flattening contract with the Rust runtime
+----------------------------------------------------
+Artifacts take/return *flat* argument lists. The order is
+`jax.tree_util.tree_flatten(params)` order of the params pytree built by
+`init_params` (dict keys sorted lexicographically — jax guarantees sorted
+dict flattening). aot.py records the exact (name, shape, dtype) list in
+artifacts/manifest.json, which is the only thing the Rust side reads; it
+never needs to re-derive the pytree structure.
+
+Artifacts:
+  init_params : (seed: i32[])                  -> params...
+  train_step  : (params..., tokens: i32[B,S], lr: f32[]) -> (params..., loss)
+  infer_step  : (params..., tokens: i32[B,S])  -> logits f32[B,S,V]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import diff as diff_k
+from compile.kernels import ref as ref_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only LM hyperparameters (CPU-sized defaults: ~0.8M params)."""
+
+    vocab: int = 256          # byte-level vocabulary
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 8
+    use_pallas: bool = True   # False -> pure-jnp path (oracle / PG study)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self, params=None) -> int:
+        p = params if params is not None else init_params(jax.random.PRNGKey(0), self)
+        return sum(int(x.size) for x in jax.tree_util.tree_leaves(p))
+
+
+Params = Dict[str, jax.Array]
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Params:
+    """Scaled-normal init. Flat dict keyed by `layerN/name` — sorted-dict
+    flattening gives the artifact argument order."""
+    keys = jax.random.split(rng, 4 + 6 * cfg.n_layers)
+    ki = iter(range(len(keys)))
+
+    def dense(key, fan_in, shape):
+        return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(
+            jnp.float32
+        )
+
+    p: Params = {
+        "embed/tok": dense(keys[next(ki)], cfg.d_model, (cfg.vocab, cfg.d_model)),
+        "embed/pos": dense(keys[next(ki)], cfg.d_model, (cfg.seq_len, cfg.d_model)),
+        "final_ln/scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "final_ln/bias": jnp.zeros((cfg.d_model,), jnp.float32),
+        "lm_head/w": dense(keys[next(ki)], cfg.d_model, (cfg.d_model, cfg.vocab)),
+    }
+    for layer in range(cfg.n_layers):
+        pre = f"layer{layer}"
+        p[f"{pre}/ln1/scale"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"{pre}/ln1/bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[f"{pre}/attn/wqkv"] = dense(
+            keys[next(ki)], cfg.d_model, (cfg.d_model, 3 * cfg.d_model)
+        )
+        p[f"{pre}/attn/wo"] = dense(
+            keys[next(ki)], cfg.d_model, (cfg.d_model, cfg.d_model)
+        )
+        p[f"{pre}/ln2/scale"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"{pre}/ln2/bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[f"{pre}/mlp/w1"] = dense(keys[next(ki)], cfg.d_model, (cfg.d_model, cfg.d_ff))
+        p[f"{pre}/mlp/b1"] = jnp.zeros((cfg.d_ff,), jnp.float32)
+        p[f"{pre}/mlp/w2"] = dense(keys[next(ki)], cfg.d_ff, (cfg.d_ff, cfg.d_model))
+        p[f"{pre}/mlp/b2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _matmul2d(x, w, cfg: ModelConfig, activation=None):
+    """(…, K) @ (K, N) through the Pallas kernel (flattening leading dims)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.use_pallas:
+        if activation is None:
+            out = diff_k.matmul(x2, w)
+        else:
+            out = diff_k.matmul_bias_act(
+                x2, w, jnp.zeros((w.shape[-1],), w.dtype), activation
+            )
+    else:
+        out = ref_k.matmul_ref(x2, w, activation=activation)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def _mlp(x, w1, b1, w2, b2, cfg: ModelConfig):
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.use_pallas:
+        h = diff_k.matmul_bias_act(x2, w1, b1, "gelu")
+        out = diff_k.matmul_bias_act(h, w2, b2, None)
+    else:
+        out = ref_k.mlp_ref(x2, w1, b1, w2, b2)
+    return out.reshape(*lead, w2.shape[-1])
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    if cfg.use_pallas:
+        # Kernel block sizes are clipped to the (small) model seq len.
+        return diff_k.attention(q, k, v, 64, 64)
+    return ref_k.attention_ref(q, k, v, causal=True)
+
+
+def forward(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens i32[B, S] -> logits f32[B, S, V]."""
+    b, s = tokens.shape
+    x = params["embed/tok"][tokens] + params["embed/pos"][None, :s, :]
+    for layer in range(cfg.n_layers):
+        pre = f"layer{layer}"
+        h = _layer_norm(x, params[f"{pre}/ln1/scale"], params[f"{pre}/ln1/bias"])
+        qkv = _matmul2d(h, params[f"{pre}/attn/wqkv"], cfg)  # (B,S,3D)
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.head_dim)
+        q, k, v = (
+            jnp.transpose(qkv[:, :, i], (0, 2, 1, 3)) for i in range(3)
+        )  # each (B,H,S,Dh)
+        o = _attention(q, k, v, cfg)
+        o = jnp.transpose(o, (0, 2, 1, 3)).reshape(b, s, cfg.d_model)
+        x = x + _matmul2d(o, params[f"{pre}/attn/wo"], cfg)
+        h = _layer_norm(x, params[f"{pre}/ln2/scale"], params[f"{pre}/ln2/bias"])
+        x = x + _mlp(
+            h,
+            params[f"{pre}/mlp/w1"],
+            params[f"{pre}/mlp/b1"],
+            params[f"{pre}/mlp/w2"],
+            params[f"{pre}/mlp/b2"],
+            cfg,
+        )
+    x = _layer_norm(x, params["final_ln/scale"], params["final_ln/bias"])
+    return _matmul2d(x, params["lm_head/w"], cfg)
+
+
+def loss_fn(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Next-token cross-entropy; position i predicts token i+1."""
+    logits = forward(params, tokens, cfg)  # (B,S,V)
+    targets = tokens[:, 1:]  # (B,S-1)
+    logits = logits[:, :-1, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(
+    params: Params, tokens: jax.Array, lr: jax.Array, cfg: ModelConfig
+) -> Tuple[Params, jax.Array]:
+    """One SGD step; returns (updated params, loss). SGD (not Adam) keeps the
+    artifact I/O arity equal to the parameter count, which keeps the
+    Rust-side buffer plumbing simple and the device-to-device feedback loop
+    allocation-free."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, tokens, cfg)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new_params, loss
+
+
+def infer_step(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    return forward(params, tokens, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers for AOT lowering (the artifact entry points).
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], str]]:
+    """(name, shape, dtype) in tree_flatten order — the manifest contract."""
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = sorted(params.keys())
+    assert len(names) == len(leaves)
+    return [
+        (name, tuple(int(d) for d in leaf.shape), str(leaf.dtype))
+        for name, leaf in zip(names, leaves)
+    ]
+
+
+def _unflatten(flat: List[jax.Array], cfg: ModelConfig) -> Params:
+    names = sorted(init_params(jax.random.PRNGKey(0), cfg).keys())
+    assert len(flat) == len(names)
+    return dict(zip(names, flat))
+
+
+def make_init_fn(cfg: ModelConfig):
+    def init_flat(seed: jax.Array):
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        leaves, _ = jax.tree_util.tree_flatten(params)
+        return tuple(leaves)
+
+    return init_flat
+
+
+def make_train_fn(cfg: ModelConfig):
+    n_params = len(param_spec(cfg))
+
+    def train_flat(*args):
+        flat_params = list(args[:n_params])
+        tokens, lr = args[n_params], args[n_params + 1]
+        params = _unflatten(flat_params, cfg)
+        new_params, loss = train_step(params, tokens, lr, cfg)
+        leaves, _ = jax.tree_util.tree_flatten(new_params)
+        return tuple(leaves) + (loss,)
+
+    return train_flat
+
+
+def make_infer_fn(cfg: ModelConfig):
+    n_params = len(param_spec(cfg))
+
+    def infer_flat(*args):
+        flat_params = list(args[:n_params])
+        tokens = args[n_params]
+        params = _unflatten(flat_params, cfg)
+        return (infer_step(params, tokens, cfg),)
+
+    return infer_flat

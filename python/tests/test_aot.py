@@ -1,0 +1,88 @@
+"""AOT artifact validity: manifest consistency + HLO text well-formedness.
+
+These tests regenerate nothing; they validate whatever `make artifacts` last
+produced (skipping cleanly if it hasn't run), so `pytest` stays fast and the
+build graph stays make-driven.
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+REQUIRED = [
+    "init_params",
+    "train_step",
+    "infer_step",
+    "matmul_pallas",
+    "mlp_fused",
+    "mlp_naive",
+]
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_all_artifacts_listed_and_present(manifest):
+    for name in REQUIRED:
+        assert name in manifest["artifacts"], name
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) > 100, path
+
+
+def test_hlo_text_not_serialized_proto(manifest):
+    """Guard the interchange contract: HLO *text*, which always begins with
+    an HloModule header — a serialized proto would be binary."""
+    for name in REQUIRED:
+        path = os.path.join(ART, manifest["artifacts"][name]["file"])
+        with open(path, "rb") as f:
+            head = f.read(64)
+        assert head.startswith(b"HloModule"), (name, head[:20])
+
+
+def test_train_step_io_arity(manifest):
+    m = manifest["artifacts"]["train_step"]
+    n_params = len(manifest["artifacts"]["init_params"]["outputs"])
+    assert len(m["inputs"]) == n_params + 2  # params + tokens + lr
+    assert len(m["outputs"]) == n_params + 1  # params' + loss
+    assert m["inputs"][-2]["name"] == "tokens"
+    assert m["inputs"][-1]["name"] == "lr"
+    assert m["outputs"][-1]["shape"] == []  # scalar loss
+
+
+def test_infer_step_io(manifest):
+    m = manifest["artifacts"]["infer_step"]
+    cfg = manifest["model_config"]
+    n_params = len(manifest["artifacts"]["init_params"]["outputs"])
+    assert len(m["inputs"]) == n_params + 1
+    assert m["outputs"][0]["shape"] == [cfg["batch"], cfg["seq_len"], cfg["vocab"]]
+
+
+def test_param_shapes_consistent_between_init_and_train(manifest):
+    init_outs = manifest["artifacts"]["init_params"]["outputs"]
+    train_ins = manifest["artifacts"]["train_step"]["inputs"]
+    for io, ti in zip(init_outs, train_ins):
+        assert io["shape"] == ti["shape"], (io, ti)
+        assert io["dtype"] == ti["dtype"], (io, ti)
+
+
+def test_pg_study_pair_same_io(manifest):
+    fused = manifest["artifacts"]["mlp_fused"]
+    naive = manifest["artifacts"]["mlp_naive"]
+    assert [i["shape"] for i in fused["inputs"]] == [
+        i["shape"] for i in naive["inputs"]
+    ]
+    assert fused["outputs"] == naive["outputs"]
+
+
+def test_param_count_in_manifest(manifest):
+    assert manifest["model_config"]["param_count"] > 100_000

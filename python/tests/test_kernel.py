@@ -1,0 +1,183 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes/block sizes; every property asserts
+assert_allclose against ref.py. This is the CORE correctness signal for the
+compute path — the AOT artifacts embed exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_k
+from compile.kernels import matmul as matmul_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5
+    )
+
+
+def _close(got, want, dtype):
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+)
+def test_matmul_matches_ref_across_shapes(m, k, n, bm, bn, bk):
+    x = _rand(m * 7 + 1, (m, k), jnp.float32)
+    w = _rand(n * 11 + 2, (k, n), jnp.float32)
+    got = matmul_k.matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    _close(got, ref.matmul_ref(x, w), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    m=st.sampled_from([16, 64, 128]),
+)
+def test_matmul_dtypes(dtype, m):
+    x = _rand(1, (m, 64), dtype)
+    w = _rand(2, (64, 32), dtype)
+    got = matmul_k.matmul(x, w)
+    _close(got, ref.matmul_ref(x, w), dtype)
+
+
+@settings(**SETTINGS)
+@given(activation=st.sampled_from(["gelu", "relu", "silu", None]))
+def test_matmul_activation_epilogue(activation):
+    x = _rand(3, (48, 40), jnp.float32)
+    w = _rand(4, (40, 56), jnp.float32)
+    got = matmul_k.matmul(x, w, block_m=16, block_n=8, block_k=8, activation=activation)
+    _close(got, ref.matmul_ref(x, w, activation=activation), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 80),
+    n=st.integers(1, 80),
+    activation=st.sampled_from(["gelu", "relu", None]),
+)
+def test_matmul_bias_act_matches_ref(m, k, n, activation):
+    x = _rand(m + 13, (m, k), jnp.float32)
+    w = _rand(n + 17, (k, n), jnp.float32)
+    b = _rand(n + 19, (n,), jnp.float32)
+    got = matmul_k.matmul_bias_act(
+        x, w, b, block_m=32, block_n=32, block_k=32, activation=activation
+    )
+    _close(got, ref.matmul_bias_act_ref(x, w, b, activation=activation), jnp.float32)
+
+
+def test_matmul_rejects_contraction_mismatch():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 7))
+    with pytest.raises(AssertionError):
+        matmul_k.matmul(x, w)
+
+
+def test_matmul_identity():
+    x = _rand(5, (32, 32), jnp.float32)
+    got = matmul_k.matmul(x, jnp.eye(32), block_m=16, block_n=16, block_k=16)
+    _close(got, x, jnp.float32)
+
+
+def test_matmul_block_larger_than_dim_clips():
+    x = _rand(6, (8, 8), jnp.float32)
+    w = _rand(7, (8, 8), jnp.float32)
+    got = matmul_k.matmul(x, w, block_m=128, block_n=128, block_k=128)
+    _close(got, ref.matmul_ref(x, w), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 16, 32, 48, 64]),
+    d=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+)
+def test_attention_matches_ref(b, h, s, d, causal):
+    q = _rand(b + 100, (b, h, s, d), jnp.float32)
+    k = _rand(h + 200, (b, h, s, d), jnp.float32)
+    v = _rand(s + 300, (b, h, s, d), jnp.float32)
+    got = attn_k.attention(q, k, v, block_q=16, block_k=16, causal=causal)
+    _close(got, ref.attention_ref(q, k, v, causal=causal), jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    bq=st.sampled_from([8, 16, 32, 64, 128]),
+    bk=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_attention_block_size_invariance(bq, bk):
+    """Output must not depend on the block decomposition."""
+    q = _rand(11, (2, 2, 64, 16), jnp.float32)
+    k = _rand(12, (2, 2, 64, 16), jnp.float32)
+    v = _rand(13, (2, 2, 64, 16), jnp.float32)
+    got = attn_k.attention(q, k, v, block_q=bq, block_k=bk)
+    _close(got, ref.attention_ref(q, k, v), jnp.float32)
+
+
+def test_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q = _rand(21, (1, 1, 32, 8), jnp.float32)
+    k = _rand(22, (1, 1, 32, 8), jnp.float32)
+    v = _rand(23, (1, 1, 32, 8), jnp.float32)
+    base = attn_k.attention(q, k, v, block_q=8, block_k=8, causal=True)
+    k2 = k.at[:, :, 20:, :].add(100.0)
+    v2 = v.at[:, :, 20:, :].add(-50.0)
+    pert = attn_k.attention(q, k2, v2, block_q=8, block_k=8, causal=True)
+    np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[:, :, 20:], pert[:, :, 20:])
+
+
+def test_attention_softmax_rows_are_convex_combination():
+    """With v = const, attention output must equal that const everywhere."""
+    q = _rand(31, (1, 2, 16, 8), jnp.float32)
+    k = _rand(32, (1, 2, 16, 8), jnp.float32)
+    v = jnp.ones((1, 2, 16, 8), jnp.float32) * 3.5
+    got = attn_k.attention(q, k, v, block_q=8, block_k=8, causal=True)
+    np.testing.assert_allclose(np.asarray(got), 3.5, rtol=1e-5)
+
+
+def test_attention_large_scores_numerically_stable():
+    """Online softmax must survive score magnitudes that overflow naive exp."""
+    q = 30.0 * _rand(41, (1, 1, 32, 8), jnp.float32)
+    k = 30.0 * _rand(42, (1, 1, 32, 8), jnp.float32)
+    v = _rand(43, (1, 1, 32, 8), jnp.float32)
+    got = attn_k.attention(q, k, v, block_q=8, block_k=8, causal=False)
+    assert np.isfinite(np.asarray(got)).all()
+    _close(got, ref.attention_ref(q, k, v, causal=False), jnp.float32)

@@ -1,0 +1,133 @@
+"""L2 correctness: transformer model shapes, loss, gradients, training.
+
+The key property: the Pallas-kernel path and the pure-jnp reference path of
+the SAME model must produce identical losses and parameter updates — this is
+what makes ref.py a genuine oracle for the AOT'd train-step artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig()
+CFG_REF = M.ModelConfig(use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return jax.random.randint(
+        jax.random.PRNGKey(1), (CFG.batch, CFG.seq_len), 0, CFG.vocab
+    )
+
+
+def test_param_count_is_sub_million(params):
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    assert 100_000 < n < 2_000_000, n
+
+
+def test_forward_shape_and_finiteness(params, tokens):
+    logits = M.forward(params, tokens, CFG)
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform(params, tokens):
+    loss = M.loss_fn(params, tokens, CFG)
+    # Untrained byte-level LM should be near ln(256) ≈ 5.545.
+    assert 4.5 < float(loss) < 7.5, float(loss)
+
+
+def test_pallas_and_ref_forward_agree(params, tokens):
+    lp = M.forward(params, tokens, CFG)
+    lr = M.forward(params, tokens, CFG_REF)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lr), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_and_ref_gradients_agree(params, tokens):
+    gp = jax.grad(M.loss_fn)(params, tokens, CFG)
+    gr = jax.grad(M.loss_fn)(params, tokens, CFG_REF)
+    for k in sorted(gp.keys()):
+        np.testing.assert_allclose(
+            np.asarray(gp[k]), np.asarray(gr[k]), rtol=1e-3, atol=1e-4, err_msg=k
+        )
+
+
+def test_train_step_reduces_loss_on_fixed_batch(params, tokens):
+    p = params
+    lr = jnp.float32(0.5)
+    first = float(M.loss_fn(p, tokens, CFG))
+    for _ in range(5):
+        p, loss = M.train_step(p, tokens, lr, CFG)
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_train_step_is_deterministic(params, tokens):
+    p1, l1 = M.train_step(params, tokens, jnp.float32(0.1), CFG)
+    p2, l2 = M.train_step(params, tokens, jnp.float32(0.1), CFG)
+    assert float(l1) == float(l2)
+    for k in sorted(p1.keys()):
+        np.testing.assert_array_equal(np.asarray(p1[k]), np.asarray(p2[k]))
+
+
+def test_causality_of_lm(params, tokens):
+    """Changing token t must not change logits before position t."""
+    logits = M.forward(params, tokens, CFG)
+    toks2 = tokens.at[:, 40:].set((tokens[:, 40:] + 1) % CFG.vocab)
+    logits2 = M.forward(params, toks2, CFG)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, :40]), np.asarray(logits2[:, :40]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_param_spec_matches_flatten_order(params):
+    spec = M.param_spec(CFG)
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    assert len(spec) == len(leaves)
+    for (name, shape, dtype), leaf in zip(spec, leaves):
+        assert tuple(leaf.shape) == shape, name
+        assert str(leaf.dtype) == dtype, name
+
+
+def test_flat_wrappers_roundtrip(params, tokens):
+    """The AOT entry points must agree with the pytree-level API."""
+    train_flat = M.make_train_fn(CFG)
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    outs = train_flat(*leaves, tokens, jnp.float32(0.1))
+    want_params, want_loss = M.train_step(params, tokens, jnp.float32(0.1), CFG)
+    want_leaves, _ = jax.tree_util.tree_flatten(want_params)
+    assert len(outs) == len(want_leaves) + 1
+    np.testing.assert_allclose(float(outs[-1]), float(want_loss), rtol=1e-6)
+    for got, want in zip(outs[:-1], want_leaves):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_init_fn_deterministic_per_seed():
+    init_flat = M.make_init_fn(CFG)
+    a = init_flat(jnp.int32(7))
+    b = init_flat(jnp.int32(7))
+    c = init_flat(jnp.int32(8))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(
+        not np.array_equal(np.asarray(x), np.asarray(z)) for x, z in zip(a, c)
+    )
+
+
+def test_infer_matches_forward(params, tokens):
+    infer_flat = M.make_infer_fn(CFG)
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    (logits,) = infer_flat(*leaves, tokens)
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(M.forward(params, tokens, CFG)),
+        rtol=1e-5, atol=1e-5,
+    )

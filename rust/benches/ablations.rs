@@ -1,0 +1,15 @@
+//! Bench: design-choice ablation matrix (DESIGN.md §6) — 8 variant
+//! simulations replaying one 7-day trace.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let ab = figures::ablations(0xAB1A);
+    println!("{}", ab.table.to_ascii());
+    let _ = ab.table.save_csv("bench_out", "ablations");
+    Bench::new("ablations/8_variants_7_days").iters(1).run(|| figures::ablations(0xAB1A));
+    let row = |name: &str| ab.rows.iter().find(|r| r.name == name).unwrap();
+    let ok = row("async-ckpt-all").rg > row("sync-ckpt-only").rg
+        && row("no-preemption").preemptions < row("baseline").preemptions / 5;
+    println!("shape: ablation directions ... {}", if ok { "OK" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,47 @@
+//! Bench: Fig. 12 — PG step-change on the top-150 benchmark when the
+//! algebraic-simplification pass lands, plus the REAL measured naive/fused
+//! PG pair when artifacts are present.
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::report::figures;
+use tpufleet::roofline;
+use tpufleet::runtime::{Engine, Manifest};
+use tpufleet::util::bench::Bench;
+use tpufleet::util::Rng;
+
+fn main() {
+    let fig = figures::fig12_algsimp(0xF16_12);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig12");
+    Bench::new("fig12/benchmark_sweep_150x30").iters(10).run(|| figures::fig12_algsimp(0xF16_12));
+    let n_before = fig.days.iter().filter(|&&d| d < fig.deploy_day).count();
+    let before: f64 = fig.mean_pg[..n_before].iter().sum::<f64>() / n_before as f64;
+    let after: f64 = fig.mean_pg[n_before..].iter().sum::<f64>() / (fig.mean_pg.len() - n_before) as f64;
+    println!("shape: mean PG {before:.4} -> {after:.4} ... {}",
+        if after > before * 1.02 { "OK (step up)" } else { "UNEXPECTED" });
+
+    // Measured half: PJRT execution of the real artifact pair.
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing; measured PG pair skipped)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).unwrap();
+    let spec = engine.manifest.artifact("mlp_fused").unwrap().clone();
+    let mut rng = Rng::new(6);
+    let inputs: Vec<Vec<f32>> = spec.inputs.iter()
+        .map(|t| (0..t.elements()).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect())
+        .collect();
+    for name in ["mlp_naive", "mlp_fused"] {
+        engine.prepare(name).unwrap();
+        let r = Bench::new(&format!("fig12/execute_{name}")).iters(7)
+            .run(|| {
+                let lits: Vec<xla::Literal> = inputs.iter().zip(&spec.inputs)
+                    .map(|(v, t)| Engine::literal_f32(v, &t.shape).unwrap())
+                    .collect();
+                engine.execute(name, &lits).unwrap()
+            });
+        let cost = engine.module_cost(name).unwrap();
+        let est = roofline::estimate(&cost, ChipGeneration::Cpu.spec(), false);
+        println!("  {name}: measured PG = {:.4}", roofline::program_goodput(est.ideal_compute_s, r.min_s));
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench: Fig. 13 — PG vs allocation over a chip lifecycle.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let fig = figures::fig13_lifecycle(0xF16_13);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig13");
+    Bench::new("fig13/lifecycle_44_months").iters(10).run(|| figures::fig13_lifecycle(0xF16_13));
+    let at = |m: i32| fig.mean_pg[fig.months.iter().position(|&x| x == m).unwrap()];
+    println!("shape: PG intro {:.3} < maturity {:.3} > post-decom {:.3} ... {}",
+        at(5), at(25), at(40),
+        if at(5) < at(25) && at(40) < at(25) { "OK (ramp/plateau/decline)" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,23 @@
+//! Bench: Fig. 14 — quarterly RG speedups by segment (full DES run).
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let fig = figures::fig14_rg_segments(0xF16_14);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig14");
+    println!("bench fig14/quarter_sim                         time: [single {:?}]", t0.elapsed());
+    // One timed repetition is enough; the DES is deterministic.
+    Bench::new("fig14/quarter_sim_rerun").iters(1).run(|| figures::fig14_rg_segments(0xF16_14));
+    let last_vs_first = |label: &str| {
+        let v = &fig.series.iter().find(|(l, _)| l == label).unwrap().1;
+        let f = v.iter().copied().find(|&x| x > 0.0).unwrap_or(1.0);
+        let l = v.iter().rev().copied().find(|&x| x > 0.0).unwrap_or(1.0);
+        l / f
+    };
+    println!("shape: segment gains A {:.3} B {:.3} C {:.3}",
+        last_vs_first("A: training+pathways"),
+        last_vs_first("B: training+multi-client"),
+        last_vs_first("C: bulk inference"));
+}

@@ -1,0 +1,14 @@
+//! Bench: Fig. 15 — six-month RG by phase with the bulk-inference dip.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let fig = figures::fig15_rg_phase(0xF16_15);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig15");
+    Bench::new("fig15/six_month_sim").iters(1).run(|| figures::fig15_rg_phase(0xF16_15));
+    let bulk_early = (fig.rg[0][2] + fig.rg[1][2] + fig.rg[2][2]) / 3.0;
+    let bulk_late = (fig.rg[3][2] + fig.rg[4][2] + fig.rg[5][2]) / 3.0;
+    println!("shape: bulk-inference RG {bulk_early:.3} -> {bulk_late:.3} ... {}",
+        if bulk_late < bulk_early * 0.93 { "OK (dip months 3-6)" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,18 @@
+//! Bench: Fig. 16 — demand-relative SG by job size on a 30-day DES run.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+use tpufleet::workload::SizeClass;
+
+fn main() {
+    let fig = figures::fig16_sg_jobsize(0xF16_16);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig16");
+    Bench::new("fig16/month_sim").iters(1).run(|| figures::fig16_sg_jobsize(0xF16_16));
+    let sg = |s: SizeClass| fig.sg_by_size.iter().find(|&&(x, _)| x == s).unwrap().1;
+    let all95 = fig.sg_by_size.iter().all(|&(_, v)| v > 0.95);
+    let u_shape = sg(SizeClass::Small) >= sg(SizeClass::Medium).min(sg(SizeClass::Large))
+        && sg(SizeClass::ExtraLarge) >= sg(SizeClass::Large);
+    println!("shape: all>95% {} / U-shape {}",
+        if all95 { "OK" } else { "UNEXPECTED" },
+        if u_shape { "OK" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig. 1 (fleet mix over five years) and time it.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let fig = figures::fig1_fleet_mix();
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig1");
+    Bench::new("fig1/fleet_mix_60_months").iters(20).run(figures::fig1_fleet_mix);
+    // Shape check (paper: dominant generation churns over the 5 years).
+    let first = &fig.shares[0];
+    let last = &fig.shares[fig.shares.len() - 1];
+    let dom = |s: &Vec<(tpufleet::fleet::ChipGeneration, f64)>| {
+        s.iter().cloned().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0
+    };
+    println!("shape: dominant {} -> {} ... {}", dom(first).name(), dom(last).name(),
+        if dom(first) != dom(last) { "OK (churn)" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig. 4 (job-size drift over a year) and time it.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let fig = figures::fig4_job_sizes(0xF16_4);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig4");
+    Bench::new("fig4/year_of_arrivals").iters(5).run(|| figures::fig4_job_sizes(0xF16_4));
+    let (xl0, xl3) = (fig.quarters[0][3], fig.quarters[3][3]);
+    println!("shape: XL share {:.1}% -> {:.1}% ... {}", xl0 * 100.0, xl3 * 100.0,
+        if xl3 > xl0 * 1.3 { "OK (grows)" } else { "UNEXPECTED" });
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig. 6 (Pathways adoption) and time it.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let fig = figures::fig6_pathways(0xF16_6);
+    println!("{}", fig.table.to_ascii());
+    let _ = fig.table.save_csv("bench_out", "fig6");
+    Bench::new("fig6/year_of_arrivals").iters(5).run(|| figures::fig6_pathways(0xF16_6));
+    let (a, b) = (fig.monthly_share[0], fig.monthly_share[11]);
+    println!("shape: pathways {:.0}% -> {:.0}% ... {}", a * 100.0, b * 100.0,
+        if b > a + 0.25 { "OK (adoption)" } else { "UNEXPECTED" });
+}

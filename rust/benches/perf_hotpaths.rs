@@ -1,0 +1,92 @@
+//! Bench: the L3 hot paths the performance pass optimizes (EXPERIMENTS.md
+//! §Perf): DES throughput, scheduler pass latency, HLO parsing + cost
+//! analysis, ledger reduction, and (when artifacts exist) PJRT step time.
+
+use tpufleet::fleet::{ChipGeneration, Fleet};
+use tpufleet::hlo::{CostAnalysis, HloModule};
+use tpufleet::metrics::goodput;
+use tpufleet::scheduler::{Scheduler, SchedulerPolicy};
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::util::bench::Bench;
+use tpufleet::util::Rng;
+use tpufleet::workload::{GeneratorConfig, WorkloadGenerator};
+
+fn main() {
+    // --- DES throughput: simulated chip-hours per wall second ----------
+    let mut cfg = SimConfig {
+        seed: 0xBE,
+        duration_s: 7.0 * 24.0 * 3600.0,
+        ..Default::default()
+    };
+    cfg.generator.arrivals_per_hour = 10.0;
+    let chips: u64 = cfg.static_fleet.iter().map(|&(g, p)| (p * g.spec().chips_per_pod()) as u64).sum();
+    let r = Bench::new("sim/week_10jph").iters(3).run(|| {
+        let mut sim = Simulation::new(cfg.clone());
+        sim.run()
+    });
+    let chip_hours = chips as f64 * 7.0 * 24.0;
+    println!("  -> {:.2e} simulated chip-hours/sec wall", chip_hours / r.median_s);
+
+    // --- Scheduler pass latency under contention ------------------------
+    let fleet0 = {
+        let mut f = Fleet::new();
+        f.add_pods(ChipGeneration::TpuC, 40);
+        f
+    };
+    Bench::new("scheduler/pass_300_queued_40_pods").iters(10).run(|| {
+        let mut f = fleet0.clone();
+        let mut s = Scheduler::new(SchedulerPolicy::default());
+        let mut g = WorkloadGenerator::new(GeneratorConfig {
+            arrivals_per_hour: 1000.0,
+            gen_mix: vec![(ChipGeneration::TpuC, 1.0)],
+            ..Default::default()
+        });
+        for _ in 0..300 {
+            if let Some(j) = g.next_job() {
+                s.submit(j);
+            }
+        }
+        s.schedule(&mut f, 0.0)
+    });
+
+    // --- HLO parse + cost on the real train-step artifact ---------------
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/train_step.hlo.txt");
+    if let Ok(text) = std::fs::read_to_string(path) {
+        println!("  train_step.hlo.txt: {} bytes", text.len());
+        Bench::new("hlo/parse_train_step").iters(20).run(|| HloModule::parse(&text).unwrap());
+        let module = HloModule::parse(&text).unwrap();
+        Bench::new("hlo/cost_train_step").iters(20).run(|| {
+            CostAnalysis::new(&module).module_cost()
+        });
+    } else {
+        println!("  (artifacts missing; HLO benches skipped)");
+    }
+
+    // --- Ledger reduction over a populated run --------------------------
+    let mut sim = Simulation::new(cfg.clone());
+    sim.run();
+    let n_spans: usize = sim.ledger.jobs.values().map(|(_, jl)| jl.spans.len()).sum();
+    println!("  ledger: {} jobs, {} spans", sim.ledger.jobs.len(), n_spans);
+    Bench::new("metrics/fleet_report_week").iters(50).run(|| {
+        goodput::report(&sim.ledger, 0.0, cfg.duration_s, |_| true)
+    });
+    Bench::new("metrics/segmented_phase_week").iters(50).run(|| {
+        goodput::segmented(&sim.ledger, 0.0, cfg.duration_s, goodput::Axis::Phase)
+    });
+
+    // --- PJRT step time (matmul artifact) -------------------------------
+    let dir = tpufleet::runtime::Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut engine = tpufleet::runtime::Engine::new(&dir).unwrap();
+        engine.prepare("matmul_pallas").unwrap();
+        let mut rng = Rng::new(1);
+        let n = 256;
+        let a: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        Bench::new("pjrt/matmul_pallas_256").iters(20).run(|| {
+            let la = tpufleet::runtime::Engine::literal_f32(&a, &[n, n]).unwrap();
+            let lb = tpufleet::runtime::Engine::literal_f32(&b, &[n, n]).unwrap();
+            engine.execute("matmul_pallas", &[la, lb]).unwrap()
+        });
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench: Table 2 — MPG component response matrix.
+use tpufleet::report::figures;
+use tpufleet::util::bench::Bench;
+
+fn main() {
+    let t2 = figures::table2_matrix();
+    println!("{}", t2.table.to_ascii());
+    let _ = t2.table.save_csv("bench_out", "table2");
+    Bench::new("table2/matrix").iters(100).run(figures::table2_matrix);
+    let ok = t2.compiler_device_bound.d_pg > 0.0
+        && t2.compiler_device_bound.d_mpg > 0.0
+        && t2.runtime_off_duty.d_rg > 0.0
+        && t2.scheduler_partial.d_sg > 0.0
+        && t2.compiler_host_bound.d_mpg.abs() < t2.compiler_device_bound.d_mpg.abs();
+    println!("shape: paper sign matrix ... {}", if ok { "OK" } else { "UNEXPECTED" });
+}

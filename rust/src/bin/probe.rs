@@ -1,0 +1,14 @@
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::fleet::ChipGeneration;
+fn main() {
+    let hours: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(6.0);
+    let mut cfg = SimConfig::default();
+    cfg.duration_s = hours * 3600.0;
+    cfg.generator.arrivals_per_hour = 12.0;
+    cfg.static_fleet = vec![(ChipGeneration::TpuC, 20)];
+    cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+    let t0 = std::time::Instant::now();
+    let mut sim = Simulation::new(cfg);
+    let res = sim.run();
+    println!("{hours}h sim in {:?}: {res:?}", t0.elapsed());
+}

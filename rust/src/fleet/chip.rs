@@ -1,0 +1,261 @@
+//! Chip generation specs — the roofline parameters Program Goodput needs.
+//!
+//! The paper's fleet mixes several TPU generations (plus GPUs) whose real
+//! specs are Google-internal; we model five fictional-but-calibrated
+//! accelerator generations whose peak-FLOPs / HBM-bandwidth ratios track the
+//! public TPU v2→v5p trajectory, plus a GPU class for the Fig. 1 hardware
+//! mix. PG's ideal-time numerator divides HLO FLOPs by `peak_flops_f32` (or
+//! bf16), so only ratios — not absolute numbers — matter for the
+//! reproduction's "shape".
+
+/// One accelerator generation in the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ChipGeneration {
+    /// Oldest TPU generation still in the fleet (v2-like).
+    TpuA,
+    /// v3-like.
+    TpuB,
+    /// v4-like (the SparseCore generation in the paper's example).
+    TpuC,
+    /// v5e-like efficiency part.
+    TpuD,
+    /// v5p-like flagship (introduced mid-scenario in Fig. 13 runs).
+    TpuE,
+    /// Commodity GPU class (the fleet is not TPU-only; Fig. 1).
+    Gpu,
+    /// Host CPUs — scheduling/input pipelines; never runs accelerator steps.
+    Cpu,
+}
+
+pub const GEN_COUNT: usize = 7;
+
+pub const ALL_GENERATIONS: [ChipGeneration; GEN_COUNT] = [
+    ChipGeneration::TpuA,
+    ChipGeneration::TpuB,
+    ChipGeneration::TpuC,
+    ChipGeneration::TpuD,
+    ChipGeneration::TpuE,
+    ChipGeneration::Gpu,
+    ChipGeneration::Cpu,
+];
+
+impl ChipGeneration {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChipGeneration::TpuA => "tpu-a",
+            ChipGeneration::TpuB => "tpu-b",
+            ChipGeneration::TpuC => "tpu-c",
+            ChipGeneration::TpuD => "tpu-d",
+            ChipGeneration::TpuE => "tpu-e",
+            ChipGeneration::Gpu => "gpu",
+            ChipGeneration::Cpu => "cpu",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        ALL_GENERATIONS.iter().copied().find(|g| g.name() == s)
+    }
+
+    pub fn index(self) -> usize {
+        ALL_GENERATIONS.iter().position(|&g| g == self).unwrap()
+    }
+
+    pub fn is_accelerator(self) -> bool {
+        !matches!(self, ChipGeneration::Cpu)
+    }
+
+    pub fn spec(self) -> &'static ChipSpec {
+        &SPECS[self.index()]
+    }
+}
+
+/// Static per-generation hardware description.
+#[derive(Clone, Debug)]
+pub struct ChipSpec {
+    pub gen: ChipGeneration,
+    /// Peak dense bf16 matmul throughput, TFLOP/s per chip.
+    pub peak_bf16_tflops: f64,
+    /// Peak dense f32 throughput, TFLOP/s per chip.
+    pub peak_f32_tflops: f64,
+    /// HBM capacity, GiB.
+    pub hbm_gib: f64,
+    /// HBM bandwidth, GiB/s.
+    pub hbm_gibs: f64,
+    /// On-chip scratchpad (VMEM), MiB — kernel tiling budget.
+    pub vmem_mib: f64,
+    /// Inter-chip interconnect bandwidth per link, GiB/s.
+    pub ici_gibs: f64,
+    /// Chips per machine (failure domain granularity).
+    pub chips_per_machine: u32,
+    /// Mean time between machine failures, hours (sim failure injection).
+    pub mtbf_hours: f64,
+    /// Typical pod torus shape for this generation.
+    pub pod_shape: [u32; 3],
+}
+
+/// Calibration notes: ratios follow the public TPU trajectory —
+/// roughly 2.2× peak-FLOPs per generation with HBM BW growing slower
+/// (which is why newer generations are more roofline-sensitive), and the
+/// GPU class sitting near TpuC in peak but with a smaller pod domain.
+pub static SPECS: [ChipSpec; GEN_COUNT] = [
+    ChipSpec {
+        gen: ChipGeneration::TpuA,
+        peak_bf16_tflops: 45.0,
+        peak_f32_tflops: 11.5,
+        hbm_gib: 8.0,
+        hbm_gibs: 600.0,
+        vmem_mib: 16.0,
+        ici_gibs: 62.5,
+        chips_per_machine: 4,
+        mtbf_hours: 4_000.0,
+        pod_shape: [4, 4, 2],
+    },
+    ChipSpec {
+        gen: ChipGeneration::TpuB,
+        peak_bf16_tflops: 105.0,
+        peak_f32_tflops: 26.0,
+        hbm_gib: 16.0,
+        hbm_gibs: 900.0,
+        vmem_mib: 16.0,
+        ici_gibs: 100.0,
+        chips_per_machine: 4,
+        mtbf_hours: 5_000.0,
+        pod_shape: [4, 4, 4],
+    },
+    ChipSpec {
+        gen: ChipGeneration::TpuC,
+        peak_bf16_tflops: 230.0,
+        peak_f32_tflops: 57.0,
+        hbm_gib: 32.0,
+        hbm_gibs: 1_200.0,
+        vmem_mib: 32.0,
+        ici_gibs: 150.0,
+        chips_per_machine: 4,
+        mtbf_hours: 6_000.0,
+        pod_shape: [4, 4, 4],
+    },
+    ChipSpec {
+        gen: ChipGeneration::TpuD,
+        peak_bf16_tflops: 200.0,
+        peak_f32_tflops: 50.0,
+        hbm_gib: 16.0,
+        hbm_gibs: 820.0,
+        vmem_mib: 32.0,
+        ici_gibs: 100.0,
+        chips_per_machine: 8,
+        mtbf_hours: 7_000.0,
+        pod_shape: [8, 4, 2],
+    },
+    ChipSpec {
+        gen: ChipGeneration::TpuE,
+        peak_bf16_tflops: 460.0,
+        peak_f32_tflops: 115.0,
+        hbm_gib: 96.0,
+        hbm_gibs: 2_700.0,
+        vmem_mib: 48.0,
+        ici_gibs: 200.0,
+        chips_per_machine: 4,
+        mtbf_hours: 5_500.0,
+        pod_shape: [8, 4, 4],
+    },
+    ChipSpec {
+        gen: ChipGeneration::Gpu,
+        peak_bf16_tflops: 250.0,
+        peak_f32_tflops: 60.0,
+        hbm_gib: 80.0,
+        hbm_gibs: 2_000.0,
+        vmem_mib: 20.0, // L2/SMEM-equivalent staging budget
+        ici_gibs: 56.0,
+        chips_per_machine: 8,
+        mtbf_hours: 3_000.0,
+        pod_shape: [8, 1, 1], // NVLink island, no torus
+    },
+    ChipSpec {
+        gen: ChipGeneration::Cpu,
+        peak_bf16_tflops: 0.0,
+        peak_f32_tflops: 3.0,
+        hbm_gib: 256.0,
+        hbm_gibs: 300.0,
+        vmem_mib: 0.0,
+        ici_gibs: 12.5,
+        chips_per_machine: 1,
+        mtbf_hours: 15_000.0,
+        pod_shape: [1, 1, 1],
+    },
+];
+
+impl ChipSpec {
+    /// Ideal seconds to execute `flops` of dense f32 work on one chip.
+    pub fn ideal_seconds_f32(&self, flops: f64) -> f64 {
+        flops / (self.peak_f32_tflops * 1e12)
+    }
+
+    /// Ideal seconds for bf16 (MXU) work.
+    pub fn ideal_seconds_bf16(&self, flops: f64) -> f64 {
+        flops / (self.peak_bf16_tflops * 1e12)
+    }
+
+    /// Ideal seconds to move `bytes` through HBM.
+    pub fn ideal_seconds_hbm(&self, bytes: f64) -> f64 {
+        bytes / (self.hbm_gibs * 1024.0 * 1024.0 * 1024.0)
+    }
+
+    /// Compute-roofline arithmetic-intensity knee, FLOP/byte.
+    pub fn roofline_knee(&self) -> f64 {
+        self.peak_f32_tflops * 1e12 / (self.hbm_gibs * 1024.0 * 1024.0 * 1024.0)
+    }
+
+    pub fn chips_per_pod(&self) -> u32 {
+        self.pod_shape.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for g in ALL_GENERATIONS {
+            assert_eq!(ChipGeneration::from_name(g.name()), Some(g));
+        }
+        assert_eq!(ChipGeneration::from_name("tpu-z"), None);
+    }
+
+    #[test]
+    fn specs_are_monotone_where_expected() {
+        // Flagship trajectory: each TPU flagship generation is faster.
+        let f = |g: ChipGeneration| g.spec().peak_bf16_tflops;
+        assert!(f(ChipGeneration::TpuA) < f(ChipGeneration::TpuB));
+        assert!(f(ChipGeneration::TpuB) < f(ChipGeneration::TpuC));
+        assert!(f(ChipGeneration::TpuC) < f(ChipGeneration::TpuE));
+    }
+
+    #[test]
+    fn ideal_time_scales_linearly() {
+        let s = ChipGeneration::TpuC.spec();
+        let t1 = s.ideal_seconds_f32(1e12);
+        let t2 = s.ideal_seconds_f32(2e12);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roofline_knee_positive_for_accelerators() {
+        for g in ALL_GENERATIONS {
+            if g.is_accelerator() {
+                assert!(g.spec().roofline_knee() > 1.0, "{}", g.name());
+            }
+        }
+    }
+
+    #[test]
+    fn pod_shape_consistent_with_chip_count() {
+        for g in ALL_GENERATIONS {
+            let s = g.spec();
+            assert_eq!(
+                s.chips_per_pod(),
+                s.pod_shape[0] * s.pod_shape[1] * s.pod_shape[2]
+            );
+        }
+    }
+}

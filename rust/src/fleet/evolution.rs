@@ -1,0 +1,271 @@
+//! Fleet-evolution model: the hardware mix over time (Fig. 1) and the
+//! chip-lifecycle software-maturity curve (Fig. 13).
+//!
+//! Each generation follows a deployment lifecycle: introduction month, an
+//! S-curve ramp to peak pod count, a plateau, then decommissioning. The
+//! *software maturity* factor models the paper's Fig. 13 observation that a
+//! newly introduced chip initially runs at low Program Goodput (model and
+//! compiler code not yet tuned for it), improves as accelerator-specific
+//! optimizations roll out, and degrades after decommissioning begins
+//! (workload/compiler drift).
+
+use super::chip::{ChipGeneration, ALL_GENERATIONS};
+
+/// Deployment lifecycle for one generation, in months from scenario start.
+#[derive(Clone, Copy, Debug)]
+pub struct Lifecycle {
+    pub gen: ChipGeneration,
+    /// First month pods of this generation exist in the fleet.
+    pub intro_month: i32,
+    /// Months from intro to reach peak deployment (S-curve ramp).
+    pub ramp_months: i32,
+    /// Peak number of pods deployed.
+    pub peak_pods: u32,
+    /// Month decommissioning begins (i32::MAX = never within scenario).
+    pub decom_month: i32,
+    /// Months from decommission start until fully drained.
+    pub drain_months: i32,
+}
+
+impl Lifecycle {
+    /// Deployed pod count at `month` (piecewise S-curve / plateau / drain).
+    pub fn pods_at(&self, month: i32) -> u32 {
+        if month < self.intro_month {
+            return 0;
+        }
+        let ramp_end = self.intro_month + self.ramp_months;
+        let up = if month >= ramp_end {
+            self.peak_pods
+        } else {
+            // Smoothstep ramp: gentle start, fast middle, gentle saturation.
+            let t = (month - self.intro_month) as f64 / self.ramp_months as f64;
+            let s = t * t * (3.0 - 2.0 * t);
+            ((self.peak_pods as f64) * s).round() as u32
+        };
+        if month < self.decom_month {
+            return up;
+        }
+        let dt = month - self.decom_month;
+        if dt >= self.drain_months {
+            return 0;
+        }
+        let remain = 1.0 - dt as f64 / self.drain_months as f64;
+        ((up as f64) * remain).round() as u32
+    }
+
+    /// Software-maturity factor in (0, 1]: multiplies the achievable
+    /// fraction of roofline for programs on this generation (Fig. 13).
+    pub fn software_maturity(&self, month: i32) -> f64 {
+        if month < self.intro_month {
+            return 0.0;
+        }
+        let age = (month - self.intro_month) as f64;
+        // Maturation: 0.55 at intro, → ~0.95 over ~2x ramp time.
+        let tau = (self.ramp_months as f64).max(1.0) * 1.2;
+        let mut m = 0.95 - 0.40 * (-age / tau).exp();
+        // Post-decommission drift: compiler/workload attention moves on.
+        if month >= self.decom_month {
+            let dt = (month - self.decom_month) as f64;
+            m *= 1.0 - 0.25 * (dt / self.drain_months.max(1) as f64).min(1.0);
+        }
+        m
+    }
+}
+
+/// A point-in-time fleet composition snapshot.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    pub month: i32,
+    /// (generation, pods deployed, chips deployed).
+    pub mix: Vec<(ChipGeneration, u32, u64)>,
+}
+
+impl FleetSnapshot {
+    pub fn total_chips(&self) -> u64 {
+        self.mix.iter().map(|&(_, _, c)| c).sum()
+    }
+
+    pub fn share(&self, gen: ChipGeneration) -> f64 {
+        let total = self.total_chips();
+        if total == 0 {
+            return 0.0;
+        }
+        let c = self.mix.iter().find(|&&(g, _, _)| g == gen).map_or(0, |&(_, _, c)| c);
+        c as f64 / total as f64
+    }
+}
+
+/// The five-year default scenario behind Fig. 1: staggered generation
+/// introductions with older generations draining as newer ones ramp —
+/// reproducing the paper's "Cambrian explosion" of accelerator churn.
+#[derive(Clone, Debug)]
+pub struct EvolutionModel {
+    pub lifecycles: Vec<Lifecycle>,
+}
+
+impl Default for EvolutionModel {
+    fn default() -> Self {
+        EvolutionModel {
+            lifecycles: vec![
+                Lifecycle {
+                    gen: ChipGeneration::TpuA,
+                    intro_month: -24, // already mature at scenario start
+                    ramp_months: 10,
+                    peak_pods: 60,
+                    decom_month: 14,
+                    drain_months: 18,
+                },
+                Lifecycle {
+                    gen: ChipGeneration::TpuB,
+                    intro_month: -8,
+                    ramp_months: 12,
+                    peak_pods: 90,
+                    decom_month: 38,
+                    drain_months: 20,
+                },
+                Lifecycle {
+                    gen: ChipGeneration::TpuC,
+                    intro_month: 8,
+                    ramp_months: 14,
+                    peak_pods: 140,
+                    decom_month: i32::MAX,
+                    drain_months: 24,
+                },
+                Lifecycle {
+                    gen: ChipGeneration::TpuD,
+                    intro_month: 22,
+                    ramp_months: 10,
+                    peak_pods: 110,
+                    decom_month: i32::MAX,
+                    drain_months: 24,
+                },
+                Lifecycle {
+                    gen: ChipGeneration::TpuE,
+                    intro_month: 38,
+                    ramp_months: 12,
+                    peak_pods: 150,
+                    decom_month: i32::MAX,
+                    drain_months: 24,
+                },
+                Lifecycle {
+                    gen: ChipGeneration::Gpu,
+                    intro_month: -12,
+                    ramp_months: 18,
+                    peak_pods: 70,
+                    decom_month: i32::MAX,
+                    drain_months: 24,
+                },
+            ],
+        }
+    }
+}
+
+impl EvolutionModel {
+    pub fn lifecycle(&self, gen: ChipGeneration) -> Option<&Lifecycle> {
+        self.lifecycles.iter().find(|l| l.gen == gen)
+    }
+
+    pub fn snapshot(&self, month: i32) -> FleetSnapshot {
+        let mut mix = Vec::new();
+        for gen in ALL_GENERATIONS {
+            if let Some(lc) = self.lifecycle(gen) {
+                let pods = lc.pods_at(month);
+                if pods > 0 {
+                    let chips = pods as u64 * gen.spec().chips_per_pod() as u64;
+                    mix.push((gen, pods, chips));
+                }
+            }
+        }
+        FleetSnapshot { month, mix }
+    }
+
+    /// Monthly snapshots over `[start, end)` — the Fig. 1 time series.
+    pub fn series(&self, start: i32, end: i32) -> Vec<FleetSnapshot> {
+        (start..end).map(|m| self.snapshot(m)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lc() -> Lifecycle {
+        Lifecycle {
+            gen: ChipGeneration::TpuC,
+            intro_month: 10,
+            ramp_months: 10,
+            peak_pods: 100,
+            decom_month: 40,
+            drain_months: 10,
+        }
+    }
+
+    #[test]
+    fn zero_before_intro_and_after_drain() {
+        let l = lc();
+        assert_eq!(l.pods_at(9), 0);
+        assert_eq!(l.pods_at(50), 0);
+        assert_eq!(l.pods_at(51), 0);
+    }
+
+    #[test]
+    fn ramp_is_monotone_to_peak() {
+        let l = lc();
+        let mut prev = 0;
+        for m in 10..=20 {
+            let p = l.pods_at(m);
+            assert!(p >= prev, "month {m}: {p} < {prev}");
+            prev = p;
+        }
+        assert_eq!(l.pods_at(20), 100);
+        assert_eq!(l.pods_at(39), 100);
+    }
+
+    #[test]
+    fn drain_is_monotone_down() {
+        let l = lc();
+        let mut prev = u32::MAX;
+        for m in 40..=50 {
+            let p = l.pods_at(m);
+            assert!(p <= prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn maturity_rises_then_falls_after_decom() {
+        let l = lc();
+        assert!(l.software_maturity(10) < l.software_maturity(20));
+        assert!(l.software_maturity(20) < l.software_maturity(39));
+        assert!(l.software_maturity(45) < l.software_maturity(39));
+        for m in 10..60 {
+            let v = l.software_maturity(m);
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn default_scenario_has_churn() {
+        // Fig. 1's qualitative shape: the month-0 dominant generation is no
+        // longer dominant at month 59.
+        let ev = EvolutionModel::default();
+        let first = ev.snapshot(0);
+        let last = ev.snapshot(59);
+        let dominant =
+            |s: &FleetSnapshot| s.mix.iter().max_by_key(|&&(_, _, c)| c).map(|&(g, _, _)| g);
+        assert_ne!(dominant(&first), dominant(&last));
+        // And total capacity grows over the 5 years.
+        assert!(last.total_chips() > first.total_chips());
+    }
+
+    #[test]
+    fn snapshot_shares_sum_to_one() {
+        let ev = EvolutionModel::default();
+        for m in [0, 12, 30, 59] {
+            let s = ev.snapshot(m);
+            let total: f64 =
+                s.mix.iter().map(|&(g, _, _)| s.share(g)).sum();
+            assert!((total - 1.0).abs() < 1e-9, "month {m}: {total}");
+        }
+    }
+}

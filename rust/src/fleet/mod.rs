@@ -1,0 +1,11 @@
+//! Hardware layer of the ML fleet (paper §3.1): chip generations, pods of
+//! chips in 3D-torus topologies, cells grouping pods of one generation, and
+//! the fleet-evolution model behind Fig. 1 / Fig. 13.
+
+pub mod chip;
+pub mod evolution;
+pub mod pod;
+
+pub use chip::{ChipGeneration, ChipSpec, GEN_COUNT};
+pub use evolution::{EvolutionModel, FleetSnapshot, Lifecycle};
+pub use pod::{Cell, Fleet, Pod, PodId, SliceId};

@@ -1,0 +1,471 @@
+//! Pods, cells, and the fleet: 3D-torus occupancy and slice carving.
+//!
+//! A pod is a 3D torus of chips of one generation. Jobs request axis-aligned
+//! cuboid slices (`[x,y,z]` shapes); XL jobs request several whole pods.
+//! Slice allocation — finding a free cuboid of the right shape — is the
+//! topology-matching half of the paper's scheduling bin-packing problem
+//! (§3.2, §5.3): capacity alone does not imply schedulability, because free
+//! chips may be fragmented across pods or non-cuboid-shaped (Myth 1).
+
+use super::chip::{ChipGeneration, ChipSpec};
+
+pub type PodId = u32;
+
+/// A carved slice: which pod, where, and what shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SliceId {
+    pub pod: PodId,
+    pub origin: [u32; 3],
+    pub shape: [u32; 3],
+}
+
+impl SliceId {
+    pub fn chips(&self) -> u32 {
+        self.shape.iter().product()
+    }
+}
+
+/// Occupancy state of one pod.
+#[derive(Clone, Debug)]
+pub struct Pod {
+    pub id: PodId,
+    pub gen: ChipGeneration,
+    pub shape: [u32; 3],
+    /// Per-chip owner; u64::MAX = free. Indexed x + dx*(y + dy*z).
+    occupancy: Vec<u64>,
+    /// Per-machine health. Chip c belongs to machine c / chips_per_machine.
+    machine_up: Vec<bool>,
+    free_chips: u32,
+}
+
+pub const FREE: u64 = u64::MAX;
+
+impl Pod {
+    pub fn new(id: PodId, gen: ChipGeneration) -> Pod {
+        let shape = gen.spec().pod_shape;
+        let n = (shape[0] * shape[1] * shape[2]) as usize;
+        let cpm = gen.spec().chips_per_machine as usize;
+        Pod {
+            id,
+            gen,
+            shape,
+            occupancy: vec![FREE; n],
+            machine_up: vec![true; n.div_ceil(cpm)],
+            free_chips: n as u32,
+        }
+    }
+
+    pub fn spec(&self) -> &'static ChipSpec {
+        self.gen.spec()
+    }
+
+    pub fn total_chips(&self) -> u32 {
+        self.occupancy.len() as u32
+    }
+
+    pub fn free_chips(&self) -> u32 {
+        self.free_chips
+    }
+
+    pub fn machine_count(&self) -> u32 {
+        self.machine_up.len() as u32
+    }
+
+    #[inline]
+    fn index(&self, p: [u32; 3]) -> usize {
+        (p[0] + self.shape[0] * (p[1] + self.shape[1] * p[2])) as usize
+    }
+
+    #[inline]
+    fn machine_of(&self, chip_index: usize) -> usize {
+        chip_index / self.spec().chips_per_machine as usize
+    }
+
+    /// Is the chip at linear index both unowned and on a healthy machine?
+    #[inline]
+    fn chip_available(&self, idx: usize) -> bool {
+        self.occupancy[idx] == FREE && self.machine_up[self.machine_of(idx)]
+    }
+
+    /// Whether the whole pod is free (for XL whole-pod placement).
+    pub fn is_empty_and_healthy(&self) -> bool {
+        self.free_chips == self.total_chips() && self.machine_up.iter().all(|&u| u)
+    }
+
+    /// Find a free axis-aligned cuboid of `shape` (also trying the axis
+    /// permutations of `shape` — a 2x4x4 request fits a 4x4x2 hole).
+    /// Returns the slice without claiming it.
+    pub fn find_slice(&self, shape: [u32; 3]) -> Option<SliceId> {
+        for perm in axis_permutations(shape) {
+            if let Some(origin) = self.find_origin(perm) {
+                return Some(SliceId { pod: self.id, origin, shape: perm });
+            }
+        }
+        None
+    }
+
+    fn find_origin(&self, shape: [u32; 3]) -> Option<[u32; 3]> {
+        let [dx, dy, dz] = self.shape;
+        let [sx, sy, sz] = shape;
+        if sx > dx || sy > dy || sz > dz {
+            return None;
+        }
+        for oz in 0..=(dz - sz) {
+            for oy in 0..=(dy - sy) {
+                'origin: for ox in 0..=(dx - sx) {
+                    for z in oz..oz + sz {
+                        for y in oy..oy + sy {
+                            for x in ox..ox + sx {
+                                if !self.chip_available(self.index([x, y, z])) {
+                                    continue 'origin;
+                                }
+                            }
+                        }
+                    }
+                    return Some([ox, oy, oz]);
+                }
+            }
+        }
+        None
+    }
+
+    /// Claim a previously found slice for `job`. Panics if any chip is
+    /// taken — callers must not hold stale SliceIds (scheduler invariant,
+    /// property-tested in rust/tests/prop_invariants.rs).
+    pub fn claim(&mut self, slice: SliceId, job: u64) {
+        assert_eq!(slice.pod, self.id);
+        for idx in self.slice_indices(slice) {
+            assert_eq!(self.occupancy[idx], FREE, "double-booked chip {idx}");
+            assert!(self.machine_up[self.machine_of(idx)], "claim on dead machine");
+            self.occupancy[idx] = job;
+        }
+        self.free_chips -= slice.chips();
+    }
+
+    /// Release a slice. Panics if any chip isn't owned by `job`.
+    pub fn release(&mut self, slice: SliceId, job: u64) {
+        assert_eq!(slice.pod, self.id);
+        for idx in self.slice_indices(slice) {
+            assert_eq!(self.occupancy[idx], job, "release of foreign chip");
+            self.occupancy[idx] = FREE;
+        }
+        self.free_chips += slice.chips();
+    }
+
+    fn slice_indices(&self, slice: SliceId) -> Vec<usize> {
+        let mut out = Vec::with_capacity(slice.chips() as usize);
+        for z in slice.origin[2]..slice.origin[2] + slice.shape[2] {
+            for y in slice.origin[1]..slice.origin[1] + slice.shape[1] {
+                for x in slice.origin[0]..slice.origin[0] + slice.shape[0] {
+                    out.push(self.index([x, y, z]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Mark a machine failed; returns the owners of chips that went down
+    /// (the scheduler must evict those jobs' allocations).
+    pub fn fail_machine(&mut self, machine: u32) -> Vec<u64> {
+        let m = machine as usize;
+        assert!(m < self.machine_up.len());
+        if !self.machine_up[m] {
+            return vec![];
+        }
+        self.machine_up[m] = false;
+        let cpm = self.spec().chips_per_machine as usize;
+        let lo = m * cpm;
+        let hi = ((m + 1) * cpm).min(self.occupancy.len());
+        let mut owners: Vec<u64> = self.occupancy[lo..hi]
+            .iter()
+            .copied()
+            .filter(|&o| o != FREE)
+            .collect();
+        owners.sort_unstable();
+        owners.dedup();
+        owners
+    }
+
+    pub fn repair_machine(&mut self, machine: u32) {
+        self.machine_up[machine as usize] = true;
+    }
+
+    pub fn machine_is_up(&self, machine: u32) -> bool {
+        self.machine_up[machine as usize]
+    }
+
+    /// Chips currently usable (healthy machine), free or not.
+    pub fn healthy_chips(&self) -> u32 {
+        (0..self.occupancy.len())
+            .filter(|&i| self.machine_up[self.machine_of(i)])
+            .count() as u32
+    }
+
+    /// Largest free cuboid volume — the fragmentation signal: a pod can
+    /// have many free chips but no large schedulable hole.
+    pub fn largest_free_cuboid(&self) -> u32 {
+        let [dx, dy, dz] = self.shape;
+        let mut best = 0;
+        // Pods are small (<= a few hundred chips): brute force over all
+        // cuboid shapes is fine and exact.
+        for sx in 1..=dx {
+            for sy in 1..=dy {
+                for sz in 1..=dz {
+                    let vol = sx * sy * sz;
+                    if vol > best && self.find_origin([sx, sy, sz]).is_some() {
+                        best = vol;
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    pub fn owner_at(&self, p: [u32; 3]) -> u64 {
+        self.occupancy[self.index(p)]
+    }
+}
+
+/// The unique axis permutations of a shape (up to 6, deduplicated).
+pub fn axis_permutations(s: [u32; 3]) -> Vec<[u32; 3]> {
+    let perms = [
+        [s[0], s[1], s[2]],
+        [s[0], s[2], s[1]],
+        [s[1], s[0], s[2]],
+        [s[1], s[2], s[0]],
+        [s[2], s[0], s[1]],
+        [s[2], s[1], s[0]],
+    ];
+    let mut out: Vec<[u32; 3]> = Vec::new();
+    for p in perms {
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// A cell: pods of a single generation (the scheduler's placement domain).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub gen: ChipGeneration,
+    pub pods: Vec<Pod>,
+}
+
+impl Cell {
+    pub fn new(gen: ChipGeneration, n_pods: u32, first_pod_id: PodId) -> Cell {
+        let pods = (0..n_pods).map(|i| Pod::new(first_pod_id + i, gen)).collect();
+        Cell { gen, pods }
+    }
+
+    pub fn total_chips(&self) -> u64 {
+        self.pods.iter().map(|p| p.total_chips() as u64).sum()
+    }
+
+    pub fn free_chips(&self) -> u64 {
+        self.pods.iter().map(|p| p.free_chips() as u64).sum()
+    }
+
+    pub fn healthy_chips(&self) -> u64 {
+        self.pods.iter().map(|p| p.healthy_chips() as u64).sum()
+    }
+}
+
+/// The whole fleet: one cell per active generation.
+#[derive(Clone, Debug, Default)]
+pub struct Fleet {
+    pub cells: Vec<Cell>,
+    next_pod_id: PodId,
+}
+
+impl Fleet {
+    pub fn new() -> Fleet {
+        Fleet::default()
+    }
+
+    /// Add `n_pods` pods of `gen` (fleet evolution: new deployments).
+    pub fn add_pods(&mut self, gen: ChipGeneration, n_pods: u32) {
+        let first = self.next_pod_id;
+        self.next_pod_id += n_pods;
+        if let Some(cell) = self.cells.iter_mut().find(|c| c.gen == gen) {
+            for i in 0..n_pods {
+                cell.pods.push(Pod::new(first + i, gen));
+            }
+        } else {
+            self.cells.push(Cell::new(gen, n_pods, first));
+        }
+    }
+
+    /// Remove up to `n_pods` *empty* pods of `gen` (decommissioning);
+    /// returns how many were actually removed — busy pods stay until idle.
+    pub fn remove_empty_pods(&mut self, gen: ChipGeneration, n_pods: u32) -> u32 {
+        let Some(cell) = self.cells.iter_mut().find(|c| c.gen == gen) else {
+            return 0;
+        };
+        let mut removed = 0;
+        cell.pods.retain(|p| {
+            if removed < n_pods && p.free_chips() == p.total_chips() {
+                removed += 1;
+                false
+            } else {
+                true
+            }
+        });
+        removed
+    }
+
+    pub fn cell(&self, gen: ChipGeneration) -> Option<&Cell> {
+        self.cells.iter().find(|c| c.gen == gen)
+    }
+
+    pub fn cell_mut(&mut self, gen: ChipGeneration) -> Option<&mut Cell> {
+        self.cells.iter_mut().find(|c| c.gen == gen)
+    }
+
+    pub fn pod_mut(&mut self, pod: PodId) -> Option<&mut Pod> {
+        self.cells.iter_mut().flat_map(|c| c.pods.iter_mut()).find(|p| p.id == pod)
+    }
+
+    pub fn pod(&self, pod: PodId) -> Option<&Pod> {
+        self.cells.iter().flat_map(|c| c.pods.iter()).find(|p| p.id == pod)
+    }
+
+    pub fn total_chips(&self) -> u64 {
+        self.cells.iter().map(|c| c.total_chips()).sum()
+    }
+
+    pub fn healthy_chips(&self) -> u64 {
+        self.cells.iter().map(|c| c.healthy_chips()).sum()
+    }
+
+    /// A scratch fleet containing only the given cell (cloned). Used by the
+    /// scheduler's what-if preemption planning: placement is cell-local, so
+    /// cloning the rest of the fleet would be wasted work.
+    pub fn clone_cell(&self, gen: ChipGeneration) -> Fleet {
+        Fleet {
+            cells: self.cell(gen).map(|c| vec![c.clone()]).unwrap_or_default(),
+            next_pod_id: self.next_pod_id,
+        }
+    }
+
+    /// Fleet-level fragmentation in a cell: free chips vs largest single
+    /// schedulable cuboid. 0 = perfectly compact, →1 = heavily fragmented.
+    pub fn fragmentation(&self, gen: ChipGeneration) -> f64 {
+        let Some(cell) = self.cell(gen) else { return 0.0 };
+        let free: u32 = cell.pods.iter().map(|p| p.free_chips()).sum();
+        if free == 0 {
+            return 0.0;
+        }
+        let largest: u32 = cell.pods.iter().map(|p| p.largest_free_cuboid()).max().unwrap_or(0);
+        1.0 - largest as f64 / free as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pod() -> Pod {
+        Pod::new(0, ChipGeneration::TpuB) // 4x4x4 = 64 chips
+    }
+
+    #[test]
+    fn fresh_pod_fits_itself() {
+        let p = pod();
+        let s = p.find_slice([4, 4, 4]).unwrap();
+        assert_eq!(s.chips(), 64);
+        assert_eq!(s.origin, [0, 0, 0]);
+    }
+
+    #[test]
+    fn claim_reduces_free_and_release_restores() {
+        let mut p = pod();
+        let s = p.find_slice([2, 2, 2]).unwrap();
+        p.claim(s, 7);
+        assert_eq!(p.free_chips(), 56);
+        assert_eq!(p.owner_at(s.origin), 7);
+        p.release(s, 7);
+        assert_eq!(p.free_chips(), 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "double-booked")]
+    fn double_claim_panics() {
+        let mut p = pod();
+        let s = p.find_slice([2, 2, 2]).unwrap();
+        p.claim(s, 1);
+        p.claim(s, 2);
+    }
+
+    #[test]
+    fn axis_permutation_finds_rotated_hole() {
+        let mut p = pod();
+        // Fill a 2x4x4 block leaving a 2x4x4 hole; request 4x4x2.
+        let s = SliceId { pod: 0, origin: [0, 0, 0], shape: [2, 4, 4] };
+        p.claim(s, 1);
+        let found = p.find_slice([4, 4, 2]);
+        assert!(found.is_some(), "rotation should fit");
+        // But an impossible 4x4x4 cannot fit.
+        assert!(p.find_slice([4, 4, 4]).is_none());
+    }
+
+    #[test]
+    fn fragmentation_blocks_large_slices_despite_capacity() {
+        // Myth 1 in miniature: 32 free chips, but no 2x2x2 hole...
+        let mut p = pod();
+        // Claim a 3D checkerboard at even parity: every 1x1x1 of one color.
+        let mut cnt = 0;
+        for z in 0..4 {
+            for y in 0..4 {
+                for x in 0..4 {
+                    if (x + y + z) % 2 == 0 {
+                        let s = SliceId { pod: 0, origin: [x, y, z], shape: [1, 1, 1] };
+                        p.claim(s, 99);
+                        cnt += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(cnt, 32);
+        assert_eq!(p.free_chips(), 32);
+        assert!(p.find_slice([2, 2, 2]).is_none());
+        assert_eq!(p.largest_free_cuboid(), 1);
+    }
+
+    #[test]
+    fn machine_failure_reports_owners_and_blocks_placement() {
+        let mut p = pod();
+        let s = p.find_slice([4, 4, 4]).unwrap();
+        p.claim(s, 42);
+        let owners = p.fail_machine(0);
+        assert_eq!(owners, vec![42]);
+        // Repeated failure reports nothing new.
+        assert_eq!(p.fail_machine(0), Vec::<u64>::new());
+        p.release(s, 42);
+        // Machine 0's 4 chips unavailable: full-pod slice no longer fits.
+        assert!(p.find_slice([4, 4, 4]).is_none());
+        p.repair_machine(0);
+        assert!(p.find_slice([4, 4, 4]).is_some());
+    }
+
+    #[test]
+    fn fleet_add_remove_pods() {
+        let mut f = Fleet::new();
+        f.add_pods(ChipGeneration::TpuC, 3);
+        assert_eq!(f.total_chips(), 3 * 64);
+        // Occupy one pod; decommission should skip it.
+        let pid = f.cell(ChipGeneration::TpuC).unwrap().pods[0].id;
+        let s = f.pod_mut(pid).unwrap().find_slice([1, 1, 1]).unwrap();
+        f.pod_mut(pid).unwrap().claim(s, 5);
+        let removed = f.remove_empty_pods(ChipGeneration::TpuC, 3);
+        assert_eq!(removed, 2);
+        assert_eq!(f.cell(ChipGeneration::TpuC).unwrap().pods.len(), 1);
+    }
+
+    #[test]
+    fn permutations_dedup() {
+        assert_eq!(axis_permutations([2, 2, 2]).len(), 1);
+        assert_eq!(axis_permutations([1, 2, 2]).len(), 3);
+        assert_eq!(axis_permutations([1, 2, 3]).len(), 6);
+    }
+}

@@ -1,0 +1,487 @@
+//! FLOP / byte cost analysis over a parsed HLO module.
+//!
+//! The analysis walks the entry computation, inlining called computations
+//! (call / reduce bodies / conditional branches) and multiplying while-loop
+//! bodies by their inferred trip counts. jax lowers `fori_loop`/`scan` to
+//! the canonical pattern
+//!     cond:  ROOT compare(get-tuple-element(param, K), constant(N)), LT
+//!     body:  tuple element K = add(get-tuple-element(param, K), constant(S))
+//! from which the trip count is exact; anything unrecognized falls back to
+//! one iteration and sets `unknown_trip_counts` so callers can tell the
+//! estimate is a lower bound.
+
+use std::collections::HashMap;
+
+use super::parser::{Computation, HloModule, Instruction};
+
+/// Aggregate cost of a module.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ModuleCost {
+    /// Useful floating-point operations (the PG ideal-time numerator).
+    pub flops: f64,
+    /// Transcendental ops counted separately (exp/log/tanh/...): these hit
+    /// a different hardware unit; reported for roofline refinement.
+    pub transcendentals: f64,
+    /// Bytes touched (operands read + results written), a traffic proxy.
+    pub bytes: f64,
+    /// While loops whose trip count couldn't be inferred.
+    pub unknown_trip_counts: u32,
+    /// Per-opcode FLOP attribution (top contributors for reports).
+    pub by_opcode: HashMap<String, f64>,
+}
+
+impl ModuleCost {
+    pub fn add_flops(&mut self, opcode: &str, f: f64, scale: f64) {
+        let v = f * scale;
+        self.flops += v;
+        *self.by_opcode.entry(opcode.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Merge `other` scaled by `k` (loop bodies).
+    pub fn absorb(&mut self, other: &ModuleCost, k: f64) {
+        self.flops += other.flops * k;
+        self.transcendentals += other.transcendentals * k;
+        self.bytes += other.bytes * k;
+        self.unknown_trip_counts += other.unknown_trip_counts;
+        for (op, f) in &other.by_opcode {
+            *self.by_opcode.entry(op.clone()).or_insert(0.0) += f * k;
+        }
+    }
+
+    /// Arithmetic intensity, FLOP/byte.
+    pub fn intensity(&self) -> f64 {
+        if self.bytes > 0.0 {
+            self.flops / self.bytes
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The analyzer; memoizes per-computation costs.
+pub struct CostAnalysis<'m> {
+    module: &'m HloModule,
+    memo: HashMap<String, ModuleCost>,
+}
+
+impl<'m> CostAnalysis<'m> {
+    pub fn new(module: &'m HloModule) -> Self {
+        CostAnalysis { module, memo: HashMap::new() }
+    }
+
+    /// Cost of the entry computation (i.e. one execution of the program).
+    pub fn module_cost(&mut self) -> ModuleCost {
+        let entry = self.module.entry().name.clone();
+        self.computation_cost(&entry)
+    }
+
+    pub fn computation_cost(&mut self, name: &str) -> ModuleCost {
+        if let Some(c) = self.memo.get(name) {
+            return c.clone();
+        }
+        let Some(comp) = self.module.computation(name) else {
+            return ModuleCost::default();
+        };
+        let mut cost = ModuleCost::default();
+        for instr in &comp.instructions {
+            self.instruction_cost(comp, instr, &mut cost);
+        }
+        self.memo.insert(name.to_string(), cost.clone());
+        cost
+    }
+
+    fn instruction_cost(&mut self, comp: &Computation, i: &Instruction, cost: &mut ModuleCost) {
+        let out_elems = i.shape.elements() as f64;
+        // Traffic proxy: result bytes + operand bytes (operand shapes come
+        // from their defining instructions within the same computation).
+        let mut bytes = i.shape.bytes() as f64;
+        for op in &i.operands {
+            if let Some(def) = comp.by_name(op) {
+                bytes += def.shape.bytes() as f64;
+            }
+        }
+
+        match i.opcode.as_str() {
+            // Pure data movement / bookkeeping: zero FLOPs.
+            "parameter" | "constant" | "get-tuple-element" | "tuple" | "reshape"
+            | "broadcast" | "transpose" | "copy" | "bitcast" | "bitcast-convert"
+            | "slice" | "dynamic-slice" | "dynamic-update-slice" | "concatenate"
+            | "pad" | "iota" | "gather" | "scatter" | "reverse"
+            | "after-all" | "custom-call" | "rng-bit-generator" | "optimization-barrier" => {
+                cost.bytes += bytes;
+            }
+
+            "dot" => {
+                // FLOPs = 2 * |output| * contracted extent (per output
+                // element: one multiply + one add per contracted index).
+                let lhs_dims = i
+                    .operands
+                    .first()
+                    .and_then(|n| comp.by_name(n))
+                    .map(|d| d.shape.dims().to_vec())
+                    .unwrap_or_default();
+                let contract: f64 = i
+                    .attr_int_list("lhs_contracting_dims")
+                    .iter()
+                    .map(|&d| *lhs_dims.get(d as usize).unwrap_or(&1) as f64)
+                    .product();
+                cost.add_flops("dot", 2.0 * out_elems * contract.max(1.0), 1.0);
+                cost.bytes += bytes;
+            }
+
+            "convolution" => {
+                // Not emitted by our artifacts; approximate as dense dot
+                // over the kernel volume if it ever appears.
+                cost.add_flops("convolution", 2.0 * out_elems, 1.0);
+                cost.bytes += bytes;
+            }
+
+            "reduce" | "reduce-window" => {
+                // One application of the reduction body per input element.
+                let in_elems: f64 = i
+                    .operands
+                    .first()
+                    .and_then(|n| comp.by_name(n))
+                    .map(|d| d.shape.elements() as f64)
+                    .unwrap_or(out_elems);
+                let body = i.attr_str("to_apply").map(|s| s.to_string());
+                let body_cost = body
+                    .map(|b| self.computation_cost(&b))
+                    .unwrap_or_default();
+                // Body cost is per-application; bodies are scalar so their
+                // own byte traffic is negligible — count FLOPs only.
+                let per_app = (body_cost.flops + body_cost.transcendentals).max(1.0);
+                cost.add_flops("reduce", in_elems * per_app, 1.0);
+                cost.bytes += bytes;
+            }
+
+            "while" => {
+                let cond = i.attr_str("condition").map(str::to_string);
+                let body = i.attr_str("body").map(str::to_string);
+                let trips = self.infer_trip_count(comp, i);
+                let trips_f = match trips {
+                    Some(t) => t as f64,
+                    None => {
+                        cost.unknown_trip_counts += 1;
+                        1.0
+                    }
+                };
+                if let Some(b) = body {
+                    let bc = self.computation_cost(&b);
+                    cost.absorb(&bc, trips_f);
+                }
+                if let Some(c) = cond {
+                    let cc = self.computation_cost(&c);
+                    cost.absorb(&cc, trips_f + 1.0);
+                }
+            }
+
+            "call" | "fusion" | "map" => {
+                if let Some(callee) = i.attr_str("to_apply").map(str::to_string) {
+                    let cc = self.computation_cost(&callee);
+                    let k = if i.opcode == "map" { out_elems } else { 1.0 };
+                    cost.absorb(&cc, k);
+                }
+                cost.bytes += bytes;
+            }
+
+            "conditional" => {
+                // Charge the more expensive branch (upper bound of one run).
+                let mut branch_costs: Vec<ModuleCost> = Vec::new();
+                for key in ["true_computation", "false_computation", "branch_computations"] {
+                    if let Some(v) = i.attr_str(key).map(str::to_string) {
+                        for name in v
+                            .trim_matches(|c| c == '{' || c == '}')
+                            .split(',')
+                            .map(str::trim)
+                        {
+                            if !name.is_empty() {
+                                branch_costs.push(self.computation_cost(name));
+                            }
+                        }
+                    }
+                }
+                if let Some(max) = branch_costs
+                    .iter()
+                    .max_by(|a, b| a.flops.partial_cmp(&b.flops).unwrap())
+                {
+                    cost.absorb(max, 1.0);
+                }
+                cost.bytes += bytes;
+            }
+
+            // Transcendental unaries.
+            "exponential" | "log" | "tanh" | "rsqrt" | "sqrt" | "logistic"
+            | "exponential-minus-one" | "log-plus-one" | "cbrt" | "sine" | "cosine"
+            | "power" | "atan2" => {
+                cost.transcendentals += out_elems;
+                cost.bytes += bytes;
+            }
+
+            // Everything else: elementwise at one FLOP per output element.
+            // (add, multiply, subtract, divide, maximum, minimum, compare,
+            // select, and, or, xor, not, negate, abs, sign, floor, ceil,
+            // round-nearest-*, convert, clamp, remainder, shift-*, ...)
+            _ => {
+                cost.add_flops(&i.opcode, out_elems, 1.0);
+                cost.bytes += bytes;
+            }
+        }
+    }
+
+    /// Infer a while's trip count from the canonical jax counter pattern.
+    fn infer_trip_count(&self, caller: &Computation, w: &Instruction) -> Option<u64> {
+        let cond_name = w.attr_str("condition")?;
+        let body_name = w.attr_str("body")?;
+        let cond = self.module.computation(cond_name)?;
+        let body = self.module.computation(body_name)?;
+
+        // Condition root: compare(gte(param, K), constant(N)) direction=LT/LE
+        // (or the mirrored constant-first form).
+        let root = cond.root()?;
+        if root.opcode != "compare" {
+            return None;
+        }
+        let dir = root.attr_str("direction")?;
+        let (a, b) = (root.operands.first()?, root.operands.get(1)?);
+        let (gte, bound, flipped) = {
+            let ia = cond.by_name(a)?;
+            let ib = cond.by_name(b)?;
+            if ia.opcode == "get-tuple-element" && ib.opcode == "constant" {
+                (ia, ib.literal?, false)
+            } else if ib.opcode == "get-tuple-element" && ia.opcode == "constant" {
+                (ib, ia.literal?, true)
+            } else {
+                return None;
+            }
+        };
+        let k = gte.attr_str("index")?.parse::<usize>().ok()?;
+
+        // Init value: the while operand tuple's K-th element in the caller.
+        let init_tuple = caller.by_name(w.operands.first()?)?;
+        let init = if init_tuple.opcode == "tuple" {
+            let elem = caller.by_name(init_tuple.operands.get(k)?)?;
+            resolve_scalar(caller, elem)?
+        } else {
+            return None;
+        };
+
+        // Step: body root tuple element K = add(gte(param, K), constant(S)).
+        let broot = body.root()?;
+        if broot.opcode != "tuple" {
+            return None;
+        }
+        let next = body.by_name(broot.operands.get(k)?)?;
+        if next.opcode != "add" {
+            return None;
+        }
+        let step = next
+            .operands
+            .iter()
+            .filter_map(|n| body.by_name(n))
+            .find_map(|d| if d.opcode == "constant" { d.literal } else { None })?;
+        if step <= 0.0 {
+            return None;
+        }
+
+        // Normalize direction: counter `c` continues while `c DIR bound`
+        // (or `bound DIR c` when flipped).
+        let effective = if flipped { mirror(dir) } else { dir.to_string() };
+        let trips = match effective.as_str() {
+            "LT" => ((bound - init) / step).ceil(),
+            "LE" => ((bound - init + 1.0) / step).ceil(),
+            _ => return None,
+        };
+        if trips >= 0.0 && trips.is_finite() {
+            Some(trips as u64)
+        } else {
+            None
+        }
+    }
+}
+
+fn mirror(dir: &str) -> String {
+    match dir {
+        "GT" => "LT".into(),
+        "GE" => "LE".into(),
+        other => other.to_string(),
+    }
+}
+
+/// Resolve a scalar value through converts/copies to a constant.
+fn resolve_scalar(comp: &Computation, i: &Instruction) -> Option<f64> {
+    let mut cur = i;
+    for _ in 0..8 {
+        match cur.opcode.as_str() {
+            "constant" => return cur.literal,
+            "convert" | "copy" | "reshape" | "broadcast" => {
+                cur = comp.by_name(cur.operands.first()?)?;
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::HloModule;
+
+    const LOOP: &str = r#"HloModule jit_loop
+
+body.1 {
+  arg.1 = (s32[], f32[8,8]{1,0}) parameter(0)
+  i.1 = s32[] get-tuple-element(arg.1), index=0
+  x.1 = f32[8,8]{1,0} get-tuple-element(arg.1), index=1
+  one.1 = s32[] constant(1)
+  next.1 = s32[] add(i.1, one.1)
+  d.1 = f32[8,8]{1,0} dot(x.1, x.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT out.1 = (s32[], f32[8,8]{1,0}) tuple(next.1, d.1)
+}
+
+cond.1 {
+  arg.2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  i.2 = s32[] get-tuple-element(arg.2), index=0
+  n.1 = s32[] constant(12)
+  ROOT cmp.1 = pred[] compare(i.2, n.1), direction=LT
+}
+
+ENTRY main.1 {
+  p.1 = f32[8,8]{1,0} parameter(0)
+  z.1 = s32[] constant(0)
+  t.1 = (s32[], f32[8,8]{1,0}) tuple(z.1, p.1)
+  w.1 = (s32[], f32[8,8]{1,0}) while(t.1), condition=cond.1, body=body.1
+  ROOT r.1 = f32[8,8]{1,0} get-tuple-element(w.1), index=1
+}
+"#;
+
+    #[test]
+    fn dot_flops_exact() {
+        let text = r#"HloModule m
+ENTRY e.1 {
+  a.1 = f32[64,128]{1,0} parameter(0)
+  b.1 = f32[128,32]{1,0} parameter(1)
+  ROOT d.1 = f32[64,32]{1,0} dot(a.1, b.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let cost = CostAnalysis::new(&m).module_cost();
+        assert_eq!(cost.flops, 2.0 * 64.0 * 32.0 * 128.0);
+        assert_eq!(cost.unknown_trip_counts, 0);
+    }
+
+    #[test]
+    fn while_trip_count_inferred_and_multiplied() {
+        let m = HloModule::parse(LOOP).unwrap();
+        let mut ca = CostAnalysis::new(&m);
+        let cost = ca.module_cost();
+        // Body dot: 2*8*8*8 = 1024 flops × 12 trips, plus 12 adds (s32 add
+        // counted as 1 elementwise op) and 13 compares.
+        let dot_flops = 1024.0 * 12.0;
+        let got_dot = cost.by_opcode.get("dot").copied().unwrap_or(0.0);
+        assert_eq!(got_dot, dot_flops);
+        assert_eq!(cost.unknown_trip_counts, 0);
+        assert!(cost.flops >= dot_flops);
+    }
+
+    #[test]
+    fn unknown_while_pattern_flagged() {
+        // Data-dependent loop bound (bound is a parameter, not a constant).
+        let text = r#"HloModule m
+body.1 {
+  arg.1 = (s32[], s32[]) parameter(0)
+  i.1 = s32[] get-tuple-element(arg.1), index=0
+  n.0 = s32[] get-tuple-element(arg.1), index=1
+  one.1 = s32[] constant(1)
+  next.1 = s32[] add(i.1, one.1)
+  ROOT out.1 = (s32[], s32[]) tuple(next.1, n.0)
+}
+cond.1 {
+  arg.2 = (s32[], s32[]) parameter(0)
+  i.2 = s32[] get-tuple-element(arg.2), index=0
+  n.1 = s32[] get-tuple-element(arg.2), index=1
+  ROOT cmp.1 = pred[] compare(i.2, n.1), direction=LT
+}
+ENTRY main.1 {
+  lim.1 = s32[] parameter(0)
+  z.1 = s32[] constant(0)
+  t.1 = (s32[], s32[]) tuple(z.1, lim.1)
+  ROOT w.1 = (s32[], s32[]) while(t.1), condition=cond.1, body=body.1
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let cost = CostAnalysis::new(&m).module_cost();
+        assert_eq!(cost.unknown_trip_counts, 1);
+    }
+
+    #[test]
+    fn reduce_counts_input_elements() {
+        let text = r#"HloModule m
+region_0.1 {
+  a.1 = f32[] parameter(0)
+  b.1 = f32[] parameter(1)
+  ROOT add.1 = f32[] add(a.1, b.1)
+}
+ENTRY e.1 {
+  x.1 = f32[32,64]{1,0} parameter(0)
+  z.1 = f32[] constant(0)
+  ROOT r.1 = f32[32]{0} reduce(x.1, z.1), dimensions={1}, to_apply=region_0.1
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let cost = CostAnalysis::new(&m).module_cost();
+        assert_eq!(cost.by_opcode.get("reduce").copied().unwrap(), 32.0 * 64.0);
+    }
+
+    #[test]
+    fn transcendentals_counted_separately() {
+        let text = r#"HloModule m
+ENTRY e.1 {
+  x.1 = f32[100]{0} parameter(0)
+  t.1 = f32[100]{0} tanh(x.1)
+  ROOT y.1 = f32[100]{0} exponential(t.1)
+}
+"#;
+        let m = HloModule::parse(text).unwrap();
+        let cost = CostAnalysis::new(&m).module_cost();
+        assert_eq!(cost.transcendentals, 200.0);
+        assert_eq!(cost.flops, 0.0);
+    }
+
+    #[test]
+    fn naive_and_fused_artifacts_have_comparable_useful_flops() {
+        // The PG-study core premise: the unoptimized-graph analysis assigns
+        // both programs the same order of useful work.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        let naive = std::fs::read_to_string(format!("{dir}/mlp_naive.hlo.txt"));
+        let fused = std::fs::read_to_string(format!("{dir}/mlp_fused.hlo.txt"));
+        let (Ok(naive), Ok(fused)) = (naive, fused) else { return };
+        let mn = HloModule::parse(&naive).unwrap();
+        let mf = HloModule::parse(&fused).unwrap();
+        let cn = CostAnalysis::new(&mn).module_cost();
+        let cf = CostAnalysis::new(&mf).module_cost();
+        // Dominant term both ways: 2 * (256*256*1024 + 256*1024*256) ≈ 268M.
+        let dominant = 2.0 * (256.0 * 256.0 * 1024.0) * 2.0;
+        for (label, c) in [("naive", &cn), ("fused", &cf)] {
+            assert!(
+                c.flops > 0.5 * dominant && c.flops < 3.0 * dominant,
+                "{label}: flops={} vs dominant={dominant}",
+                c.flops
+            );
+        }
+        assert_eq!(cf.unknown_trip_counts, 0, "fused loop trip counts must resolve");
+    }
+
+    #[test]
+    fn train_step_artifact_parses_and_costs() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/train_step.hlo.txt");
+        let Ok(text) = std::fs::read_to_string(path) else { return };
+        let m = HloModule::parse(&text).unwrap();
+        let cost = CostAnalysis::new(&m).module_cost();
+        // ~0.8M params, batch 8, seq 64: fwd+bwd ≳ 6 * params * tokens
+        // ≈ 6 * 8e5 * 512 ≈ 2.5e9 FLOPs. Accept a broad band.
+        assert!(cost.flops > 1e8, "flops={}", cost.flops);
+        assert!(cost.flops < 1e12, "flops={}", cost.flops);
+    }
+}

@@ -1,0 +1,15 @@
+//! HLO-text analysis (paper §4.3): parse the *unoptimized* HLO emitted by
+//! the AOT path and compute the compiler-decision-agnostic FLOP/byte cost
+//! that forms Program Goodput's ideal-time numerator.
+//!
+//! "By analyzing the shape of the unoptimized high-level operations (HLO)
+//! graph, we can estimate how many floating point operations (FLOPs) the
+//! program would require at its theoretical peak performance. Since we are
+//! analyzing the computation graph before any compiler optimizations, this
+//! prediction is agnostic to compiler decisions." — the paper, §4.3.
+
+pub mod cost;
+pub mod parser;
+
+pub use cost::{CostAnalysis, ModuleCost};
+pub use parser::{Computation, HloModule, Instruction, Shape};

@@ -1,0 +1,536 @@
+//! Parser for XLA HLO text (the `as_hlo_text()` format jax's AOT path
+//! emits). Handles everything our artifacts contain: nested tuple shapes,
+//! `/*index=N*/` comments, ROOT markers, arbitrary attribute lists, and
+//! region (non-entry) computations for while/reduce/call bodies.
+
+use std::collections::HashMap;
+
+/// Element type of an array shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemType {
+    F64,
+    F32,
+    Bf16,
+    F16,
+    S64,
+    S32,
+    S16,
+    S8,
+    U64,
+    U32,
+    U16,
+    U8,
+    Pred,
+    C64,
+    Token,
+    Opaque,
+}
+
+impl ElemType {
+    pub fn parse(s: &str) -> Option<ElemType> {
+        Some(match s {
+            "f64" => ElemType::F64,
+            "f32" => ElemType::F32,
+            "bf16" => ElemType::Bf16,
+            "f16" => ElemType::F16,
+            "s64" => ElemType::S64,
+            "s32" => ElemType::S32,
+            "s16" => ElemType::S16,
+            "s8" => ElemType::S8,
+            "u64" => ElemType::U64,
+            "u32" => ElemType::U32,
+            "u16" => ElemType::U16,
+            "u8" => ElemType::U8,
+            "pred" => ElemType::Pred,
+            "c64" => ElemType::C64,
+            "token" => ElemType::Token,
+            "opaque" => ElemType::Opaque,
+            _ => return None,
+        })
+    }
+
+    pub fn bytes(self) -> u64 {
+        match self {
+            ElemType::F64 | ElemType::S64 | ElemType::U64 | ElemType::C64 => 8,
+            ElemType::F32 | ElemType::S32 | ElemType::U32 => 4,
+            ElemType::Bf16 | ElemType::F16 | ElemType::S16 | ElemType::U16 => 2,
+            ElemType::S8 | ElemType::U8 | ElemType::Pred => 1,
+            ElemType::Token | ElemType::Opaque => 0,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            ElemType::F64 | ElemType::F32 | ElemType::Bf16 | ElemType::F16 | ElemType::C64
+        )
+    }
+}
+
+/// An HLO shape: an array or a (possibly nested) tuple.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Shape {
+    Array { ty: ElemType, dims: Vec<u64> },
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn elements(&self) -> u64 {
+        match self {
+            Shape::Array { dims, .. } => dims.iter().product::<u64>().max(1),
+            Shape::Tuple(ts) => ts.iter().map(|t| t.elements()).sum(),
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        match self {
+            Shape::Array { ty, dims } => {
+                dims.iter().product::<u64>().max(1) * ty.bytes()
+            }
+            Shape::Tuple(ts) => ts.iter().map(|t| t.bytes()).sum(),
+        }
+    }
+
+    pub fn dims(&self) -> &[u64] {
+        match self {
+            Shape::Array { dims, .. } => dims,
+            Shape::Tuple(_) => &[],
+        }
+    }
+
+    pub fn tuple_elem(&self, i: usize) -> Option<&Shape> {
+        match self {
+            Shape::Tuple(ts) => ts.get(i),
+            _ => None,
+        }
+    }
+}
+
+/// One HLO instruction.
+#[derive(Clone, Debug)]
+pub struct Instruction {
+    pub name: String,
+    pub shape: Shape,
+    pub opcode: String,
+    pub operands: Vec<String>,
+    /// Raw attribute text keyed by attribute name (e.g. "dimensions" ->
+    /// "{1}", "to_apply" -> "region_0.1", "direction" -> "LT").
+    pub attrs: HashMap<String, String>,
+    pub is_root: bool,
+    /// For `constant` of scalar integer/float type: the parsed value.
+    pub literal: Option<f64>,
+}
+
+impl Instruction {
+    /// Attribute parsed as a brace-list of integers: "{1,0}" -> [1, 0].
+    pub fn attr_int_list(&self, key: &str) -> Vec<i64> {
+        let Some(raw) = self.attrs.get(key) else { return vec![] };
+        raw.trim_matches(|c| c == '{' || c == '}')
+            .split(',')
+            .filter_map(|t| t.trim().parse::<i64>().ok())
+            .collect()
+    }
+
+    pub fn attr_str(&self, key: &str) -> Option<&str> {
+        self.attrs.get(key).map(|s| s.as_str())
+    }
+}
+
+/// One computation (the ENTRY or a region).
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    pub instructions: Vec<Instruction>,
+    pub is_entry: bool,
+}
+
+impl Computation {
+    pub fn root(&self) -> Option<&Instruction> {
+        self.instructions
+            .iter()
+            .find(|i| i.is_root)
+            .or_else(|| self.instructions.last())
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&Instruction> {
+        self.instructions.iter().find(|i| i.name == name)
+    }
+
+    pub fn parameter(&self, index: usize) -> Option<&Instruction> {
+        self.instructions.iter().find(|i| {
+            i.opcode == "parameter"
+                && i.attrs.get("__param_index").and_then(|s| s.parse::<usize>().ok())
+                    == Some(index)
+        })
+    }
+}
+
+/// A parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct HloModule {
+    pub name: String,
+    pub computations: Vec<Computation>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "hlo parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl HloModule {
+    pub fn entry(&self) -> &Computation {
+        self.computations
+            .iter()
+            .find(|c| c.is_entry)
+            .unwrap_or_else(|| self.computations.last().expect("empty module"))
+    }
+
+    pub fn computation(&self, name: &str) -> Option<&Computation> {
+        self.computations.iter().find(|c| c.name == name)
+    }
+
+    pub fn parse_file(path: &str) -> anyhow::Result<HloModule> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn parse(text: &str) -> Result<HloModule, ParseError> {
+        let mut name = String::new();
+        let mut computations = Vec::new();
+        let mut current: Option<Computation> = None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comments(raw);
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("HloModule") {
+                name = rest
+                    .trim()
+                    .split([',', ' '])
+                    .next()
+                    .unwrap_or("")
+                    .to_string();
+                continue;
+            }
+            if line == "}" {
+                if let Some(c) = current.take() {
+                    computations.push(c);
+                }
+                continue;
+            }
+            if line.ends_with('{') && !line.contains('=') {
+                // Computation header: "ENTRY main.3 {" or "region_0.1 {"
+                // (possibly with a parameter list or attrs we can ignore).
+                let head = line.trim_end_matches('{').trim();
+                let is_entry = head.starts_with("ENTRY");
+                let cname = head
+                    .trim_start_matches("ENTRY")
+                    .trim()
+                    .split([' ', '('])
+                    .next()
+                    .unwrap_or("")
+                    .trim_start_matches('%')
+                    .to_string();
+                current = Some(Computation {
+                    name: cname,
+                    instructions: Vec::new(),
+                    is_entry,
+                });
+                continue;
+            }
+            // Instruction line.
+            if let Some(comp) = current.as_mut() {
+                let instr = parse_instruction(line).map_err(|msg| ParseError {
+                    line: lineno + 1,
+                    msg,
+                })?;
+                comp.instructions.push(instr);
+            }
+        }
+        if let Some(c) = current.take() {
+            computations.push(c);
+        }
+        if computations.is_empty() {
+            return Err(ParseError { line: 0, msg: "no computations found".into() });
+        }
+        Ok(HloModule { name, computations })
+    }
+}
+
+/// Remove `/*...*/` comments (the `/*index=5*/` markers in tuple types).
+fn strip_comments(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut rest = s;
+    while let Some(start) = rest.find("/*") {
+        out.push_str(&rest[..start]);
+        match rest[start..].find("*/") {
+            Some(end) => rest = &rest[start + end + 2..],
+            None => {
+                rest = "";
+                break;
+            }
+        }
+    }
+    out.push_str(rest);
+    out
+}
+
+fn parse_instruction(line: &str) -> Result<Instruction, String> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line.find(" = ").ok_or("missing ' = '")?;
+    let name = line[..eq].trim().trim_start_matches('%').to_string();
+    let rest = &line[eq + 3..];
+
+    // Shape: either a tuple starting with '(' or `dtype[...]{layout}`.
+    let (shape, after_shape) = parse_shape(rest)?;
+    let rest = after_shape.trim_start();
+
+    // Opcode up to '('.
+    let paren = rest.find('(').ok_or("missing '(' after opcode")?;
+    let opcode = rest[..paren].trim().to_string();
+
+    // Operand list: balanced parens (operands may contain nothing else for
+    // our format — names and literals).
+    let (args_str, after_args) = balanced(&rest[paren..])?;
+    let mut literal = None;
+    let mut operands = Vec::new();
+    if opcode == "constant" {
+        literal = args_str.trim().parse::<f64>().ok().or_else(|| {
+            match args_str.trim() {
+                "true" => Some(1.0),
+                "false" => Some(0.0),
+                "inf" => Some(f64::INFINITY),
+                "-inf" => Some(f64::NEG_INFINITY),
+                _ => None,
+            }
+        });
+    } else {
+        operands = split_top_level(args_str)
+            .into_iter()
+            .map(|t| t.trim().trim_start_matches('%').to_string())
+            .filter(|t| !t.is_empty())
+            .collect();
+    }
+
+    // Attributes: ", key=value" list after the operand parens.
+    let mut attrs = HashMap::new();
+    for part in split_top_level(after_args.trim_start_matches(',')) {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some(eq) = part.find('=') {
+            let key = part[..eq].trim().to_string();
+            let val = part[eq + 1..].trim().to_string();
+            attrs.insert(key, val);
+        }
+    }
+    if opcode == "parameter" {
+        attrs.insert("__param_index".into(), args_str.trim().to_string());
+    }
+
+    Ok(Instruction { name, shape, opcode, operands, attrs, is_root, literal })
+}
+
+/// Parse a shape at the start of `s`; return (shape, rest-of-string).
+fn parse_shape(s: &str) -> Result<(Shape, &str), String> {
+    let s = s.trim_start();
+    if let Some(stripped) = s.strip_prefix('(') {
+        // Tuple shape: find the balanced close.
+        let (inner, rest) = balanced_inner(stripped)?;
+        let mut elems = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (shape, leftover) = parse_shape(part)?;
+            if !leftover.trim().is_empty() {
+                return Err(format!("junk after tuple element shape: {leftover}"));
+            }
+            elems.push(shape);
+        }
+        return Ok((Shape::Tuple(elems), rest));
+    }
+    // Array shape: dtype [ dims ] { layout }?
+    let bracket = s.find('[').ok_or_else(|| format!("no '[' in shape: {s}"))?;
+    let ty = ElemType::parse(s[..bracket].trim())
+        .ok_or_else(|| format!("unknown element type: {}", &s[..bracket]))?;
+    let close = s[bracket..].find(']').ok_or("unterminated dims")? + bracket;
+    let dims: Vec<u64> = s[bracket + 1..close]
+        .split(',')
+        .filter(|t| !t.trim().is_empty())
+        .map(|t| t.trim().parse::<u64>().map_err(|e| e.to_string()))
+        .collect::<Result<_, _>>()?;
+    let mut rest = &s[close + 1..];
+    // Optional layout "{1,0}".
+    if let Some(stripped) = rest.strip_prefix('{') {
+        let end = stripped.find('}').ok_or("unterminated layout")?;
+        rest = &stripped[end + 1..];
+    }
+    Ok((Shape::Array { ty, dims }, rest))
+}
+
+/// Given a string starting with '(', return (inner, rest-after-close).
+fn balanced(s: &str) -> Result<(&str, &str), String> {
+    let stripped = s.strip_prefix('(').ok_or("expected '('")?;
+    balanced_inner(stripped)
+}
+
+fn balanced_inner(s: &str) -> Result<(&str, &str), String> {
+    let mut depth = 1usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Ok((&s[..i], &s[i + 1..]));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err("unbalanced parens".into())
+}
+
+/// Split on commas that are outside any (), {}, [] nesting.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '{' | '[' => depth += 1,
+            ')' | '}' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+region_0.1 {
+  Arg_0.2 = f32[] parameter(0)
+  Arg_1.2 = f32[] parameter(1)
+  ROOT add.1 = f32[] add(Arg_0.2, Arg_1.2)
+}
+
+ENTRY main.3 {
+  Arg_0.5 = f32[2,2]{1,0} parameter(0)
+  constant.9 = f32[] constant(0)
+  transpose.1 = f32[2,2]{1,0} transpose(Arg_0.5), dimensions={1,0}
+  dot.1 = f32[2,2]{1,0} dot(Arg_0.5, transpose.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  reduce.2 = f32[2]{0} reduce(dot.1, constant.9), dimensions={1}, to_apply=region_0.1
+  tup.1 = (s32[], s32[], /*index=2*/f32[512,128]{1,0}) tuple(constant.9, constant.9, Arg_0.5)
+  ROOT out.1 = (f32[2,2]{1,0}) tuple(dot.1)
+}
+"#;
+
+    #[test]
+    fn parses_module_structure() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "jit_fn");
+        assert_eq!(m.computations.len(), 2);
+        let entry = m.entry();
+        assert_eq!(entry.name, "main.3");
+        assert!(entry.is_entry);
+        assert_eq!(entry.instructions.len(), 7);
+    }
+
+    #[test]
+    fn parses_shapes_and_costs() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let entry = m.entry();
+        let dot = entry.by_name("dot.1").unwrap();
+        assert_eq!(dot.shape, Shape::Array { ty: ElemType::F32, dims: vec![2, 2] });
+        assert_eq!(dot.shape.bytes(), 16);
+        assert_eq!(dot.operands, vec!["Arg_0.5", "transpose.1"]);
+        assert_eq!(dot.attr_int_list("lhs_contracting_dims"), vec![1]);
+    }
+
+    #[test]
+    fn parses_tuple_shapes_with_index_comments() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let tup = m.entry().by_name("tup.1").unwrap();
+        match &tup.shape {
+            Shape::Tuple(elems) => {
+                assert_eq!(elems.len(), 3);
+                assert_eq!(elems[2], Shape::Array { ty: ElemType::F32, dims: vec![512, 128] });
+            }
+            _ => panic!("expected tuple"),
+        }
+    }
+
+    #[test]
+    fn root_detection() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        assert_eq!(m.entry().root().unwrap().name, "out.1");
+        assert_eq!(m.computation("region_0.1").unwrap().root().unwrap().name, "add.1");
+    }
+
+    #[test]
+    fn parses_constant_literal() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let c = m.entry().by_name("constant.9").unwrap();
+        assert_eq!(c.literal, Some(0.0));
+    }
+
+    #[test]
+    fn parameter_indices() {
+        let m = HloModule::parse(SAMPLE).unwrap();
+        let region = m.computation("region_0.1").unwrap();
+        assert_eq!(region.parameter(0).unwrap().name, "Arg_0.2");
+        assert_eq!(region.parameter(1).unwrap().name, "Arg_1.2");
+    }
+
+    #[test]
+    fn scalar_shape_elements() {
+        let s = Shape::Array { ty: ElemType::F32, dims: vec![] };
+        assert_eq!(s.elements(), 1);
+        assert_eq!(s.bytes(), 4);
+    }
+
+    #[test]
+    fn parses_real_artifact_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/mlp_naive.hlo.txt");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = HloModule::parse(&text).unwrap();
+            assert!(m.entry().instructions.len() > 10);
+            assert!(m
+                .entry()
+                .instructions
+                .iter()
+                .any(|i| i.opcode == "reduce"));
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(HloModule::parse("not hlo at all").is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! `tpufleet` — ML fleet efficiency simulator and ML Productivity Goodput
+//! (MPG) instrumentation.
+//!
+//! Reproduces "Machine Learning Fleet Efficiency: Analyzing and Optimizing
+//! Large-Scale Google TPU Systems with ML Productivity Goodput"
+//! (Wongpanich et al., 2025). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod fleet;
+pub mod hlo;
+pub mod metrics;
+pub mod report;
+pub mod roofline;
+pub mod runtime;
+pub mod runtime_model;
+pub mod scheduler;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+pub mod xlaopt;
+pub mod workload;

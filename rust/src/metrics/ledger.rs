@@ -1,0 +1,331 @@
+//! Chip-time ledger: the raw accounting MPG is computed from.
+//!
+//! Every allocated second of every job is classified into exactly one
+//! `TimeClass`; capacity (the SG denominator) is integrated separately from
+//! fleet health. The ledger is append-only and windowable, so the same run
+//! yields aggregate, per-segment, and per-month reports.
+
+use std::collections::BTreeMap;
+
+use crate::fleet::ChipGeneration;
+use crate::workload::{Framework, Job, JobId, ModelArch, Phase, SizeClass};
+
+/// Classification of allocated chip-time (paper Fig. 5 / Fig. 10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TimeClass {
+    /// All tasks up, making step progress that was later checkpoint-saved.
+    Productive,
+    /// All tasks up, but initializing / compiling / restoring (Fig. 5's
+    /// workload-initialization overhead).
+    Startup,
+    /// All tasks up, stalled writing a synchronous checkpoint.
+    CkptStall,
+    /// All tasks up, input-pipeline or other runtime stall (host-bound).
+    RuntimeStall,
+    /// Progress made after the last checkpoint and discarded at
+    /// eviction/failure — allocated but not productive (RG's key subtlety).
+    Lost,
+    /// Allocated but NOT all tasks up (a machine died; bulk-synchronous
+    /// progress impossible). Counts against SG, not RG.
+    Partial,
+    /// Not allocated at all: waiting in queue for resources. `chips` is the
+    /// *requested* count. Used for the demand-relative SG of Fig. 16;
+    /// excluded from both SG and RG numerators/denominators.
+    Queued,
+}
+
+impl TimeClass {
+    pub const ALL: [TimeClass; 7] = [
+        TimeClass::Productive,
+        TimeClass::Startup,
+        TimeClass::CkptStall,
+        TimeClass::RuntimeStall,
+        TimeClass::Lost,
+        TimeClass::Partial,
+        TimeClass::Queued,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeClass::Productive => "productive",
+            TimeClass::Startup => "startup",
+            TimeClass::CkptStall => "ckpt-stall",
+            TimeClass::RuntimeStall => "runtime-stall",
+            TimeClass::Lost => "lost",
+            TimeClass::Partial => "partial",
+            TimeClass::Queued => "queued",
+        }
+    }
+
+    /// Does this class count as "all-allocated" time (the SG numerator and
+    /// RG denominator)? `Partial` does not: the bulk-synchronous gang is
+    /// incomplete (Fig. 11). `Queued` holds no chips at all.
+    pub fn is_all_allocated(self) -> bool {
+        !matches!(self, TimeClass::Partial | TimeClass::Queued)
+    }
+}
+
+/// Immutable per-job facts used as segmentation keys.
+#[derive(Clone, Debug)]
+pub struct JobMeta {
+    pub id: JobId,
+    pub phase: Phase,
+    pub framework: Framework,
+    pub arch: ModelArch,
+    pub gen: ChipGeneration,
+    pub size: SizeClass,
+    pub chips: u32,
+}
+
+impl JobMeta {
+    pub fn of(job: &Job) -> JobMeta {
+        JobMeta {
+            id: job.id,
+            phase: job.phase,
+            framework: job.framework,
+            arch: job.arch,
+            gen: job.gen,
+            size: job.size_class(),
+            chips: job.chips(),
+        }
+    }
+}
+
+/// One classified span of chip-time.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub t0: f64,
+    pub t1: f64,
+    pub chips: u32,
+    pub class: TimeClass,
+}
+
+impl Span {
+    pub fn chip_seconds(&self) -> f64 {
+        (self.t1 - self.t0) * self.chips as f64
+    }
+
+    /// Chip-seconds of this span clipped to window [w0, w1).
+    pub fn clipped(&self, w0: f64, w1: f64) -> f64 {
+        let lo = self.t0.max(w0);
+        let hi = self.t1.min(w1);
+        if hi <= lo {
+            0.0
+        } else {
+            (hi - lo) * self.chips as f64
+        }
+    }
+}
+
+/// A Program-Goodput sample: over some productive span, the job ran at
+/// `pg` = ideal/actual. Weighted by productive chip-seconds when reduced.
+#[derive(Clone, Copy, Debug)]
+pub struct PgSample {
+    pub t0: f64,
+    pub t1: f64,
+    pub chip_seconds: f64,
+    pub pg: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct JobLedger {
+    pub spans: Vec<Span>,
+    pub pg_samples: Vec<PgSample>,
+}
+
+/// The fleet-wide accounting book.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub jobs: BTreeMap<JobId, (JobMeta, JobLedger)>,
+    /// Piecewise-constant fleet capacity: (time, healthy accelerator chips)
+    /// breakpoints; capacity integrates this over any window.
+    capacity_steps: Vec<(f64, u64)>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    pub fn ensure_job(&mut self, meta: JobMeta) {
+        self.jobs.entry(meta.id).or_insert_with(|| (meta, JobLedger::default()));
+    }
+
+    /// Record a classified span for a job. Zero/negative spans are ignored.
+    pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
+        entry.1.spans.push(Span { t0, t1, chips, class });
+    }
+
+    /// Record a PG sample over a productive span.
+    pub fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        assert!((0.0..=1.0 + 1e-9).contains(&pg), "pg={pg}");
+        let entry = self.jobs.get_mut(&id).expect("add_pg_sample before ensure_job");
+        entry.1.pg_samples.push(PgSample {
+            t0,
+            t1,
+            chip_seconds: (t1 - t0) * chips as f64,
+            pg,
+        });
+    }
+
+    /// Declare fleet capacity (healthy accelerator chips) from time `t` on.
+    pub fn set_capacity(&mut self, t: f64, chips: u64) {
+        if let Some(last) = self.capacity_steps.last() {
+            assert!(t >= last.0, "capacity steps must be time-ordered");
+            if last.1 == chips {
+                return;
+            }
+        }
+        self.capacity_steps.push((t, chips));
+    }
+
+    /// Integrated capacity chip-seconds over [w0, w1).
+    pub fn capacity_chip_seconds(&self, w0: f64, w1: f64) -> f64 {
+        if self.capacity_steps.is_empty() || w1 <= w0 {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        for (i, &(t, chips)) in self.capacity_steps.iter().enumerate() {
+            let next = self
+                .capacity_steps
+                .get(i + 1)
+                .map(|&(t2, _)| t2)
+                .unwrap_or(f64::INFINITY);
+            let lo = t.max(w0);
+            let hi = next.min(w1);
+            if hi > lo {
+                total += (hi - lo) * chips as f64;
+            }
+        }
+        total
+    }
+
+    /// Sum of chip-seconds of `class` over [w0, w1), optionally filtered.
+    pub fn class_chip_seconds<F: Fn(&JobMeta) -> bool>(
+        &self,
+        class: TimeClass,
+        w0: f64,
+        w1: f64,
+        filter: F,
+    ) -> f64 {
+        self.jobs
+            .values()
+            .filter(|(meta, _)| filter(meta))
+            .flat_map(|(_, jl)| jl.spans.iter())
+            .filter(|s| s.class == class)
+            .map(|s| s.clipped(w0, w1))
+            .sum()
+    }
+
+    pub fn end_time(&self) -> f64 {
+        self.jobs
+            .values()
+            .flat_map(|(_, jl)| jl.spans.iter().map(|s| s.t1))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{CheckpointPolicy, Priority, StepProfile};
+
+    fn meta(id: JobId) -> JobMeta {
+        let job = Job {
+            id,
+            arrival_s: 0.0,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        };
+        JobMeta::of(&job)
+    }
+
+    #[test]
+    fn span_clipping() {
+        let s = Span { t0: 10.0, t1: 20.0, chips: 4, class: TimeClass::Productive };
+        assert_eq!(s.chip_seconds(), 40.0);
+        assert_eq!(s.clipped(0.0, 100.0), 40.0);
+        assert_eq!(s.clipped(15.0, 100.0), 20.0);
+        assert_eq!(s.clipped(0.0, 12.0), 8.0);
+        assert_eq!(s.clipped(20.0, 30.0), 0.0);
+    }
+
+    #[test]
+    fn capacity_integration_with_steps() {
+        let mut l = Ledger::new();
+        l.set_capacity(0.0, 100);
+        l.set_capacity(50.0, 200);
+        assert_eq!(l.capacity_chip_seconds(0.0, 100.0), 50.0 * 100.0 + 50.0 * 200.0);
+        assert_eq!(l.capacity_chip_seconds(25.0, 75.0), 25.0 * 100.0 + 25.0 * 200.0);
+        assert_eq!(l.capacity_chip_seconds(60.0, 60.0), 0.0);
+    }
+
+    #[test]
+    fn capacity_dedups_equal_steps() {
+        let mut l = Ledger::new();
+        l.set_capacity(0.0, 100);
+        l.set_capacity(10.0, 100);
+        assert_eq!(l.capacity_steps.len(), 1);
+    }
+
+    #[test]
+    fn class_accounting_respects_filter() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        l.add_span(1, 0.0, 10.0, 8, TimeClass::Productive);
+        l.add_span(1, 10.0, 12.0, 8, TimeClass::Lost);
+        assert_eq!(l.class_chip_seconds(TimeClass::Productive, 0.0, 100.0, |_| true), 80.0);
+        assert_eq!(l.class_chip_seconds(TimeClass::Lost, 0.0, 100.0, |_| true), 16.0);
+        assert_eq!(
+            l.class_chip_seconds(TimeClass::Productive, 0.0, 100.0, |m| m.phase
+                == Phase::Serving),
+            0.0
+        );
+    }
+
+    #[test]
+    fn zero_spans_ignored() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        l.add_span(1, 5.0, 5.0, 8, TimeClass::Productive);
+        l.add_span(1, 6.0, 5.0, 8, TimeClass::Productive);
+        assert!(l.jobs[&1].1.spans.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "pg=")]
+    fn pg_sample_out_of_range_panics() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        l.add_pg_sample(1, 0.0, 1.0, 8, 1.5);
+    }
+
+    #[test]
+    fn all_allocated_classification() {
+        assert!(TimeClass::Productive.is_all_allocated());
+        assert!(TimeClass::Lost.is_all_allocated());
+        assert!(TimeClass::CkptStall.is_all_allocated());
+        assert!(!TimeClass::Partial.is_all_allocated());
+    }
+}

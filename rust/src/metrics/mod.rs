@@ -1,0 +1,20 @@
+//! ML Productivity Goodput (paper §4): chip-time ledgers, the SG/RG/PG
+//! decomposition, segmentation, and time-series reporting.
+//!
+//! `MPG = Scheduling Goodput × Runtime Goodput × Program Goodput`, the
+//! paper's "iron law" for ML fleets:
+//!   * SG = all-allocated chip-time / fleet-capacity chip-time
+//!   * RG = productive (checkpoint-saved) chip-time / all-allocated chip-time
+//!   * PG = ideal execution time / actual execution time (compute roofline
+//!     on the *unoptimized* HLO graph — compiler-decision agnostic)
+//!
+//! Every report is decomposable along fleet axes (phase, framework, size
+//! class, generation, architecture) — the paper's Simpson's-paradox guard.
+
+pub mod goodput;
+pub mod ledger;
+pub mod series;
+
+pub use goodput::{GoodputReport, SegmentReport};
+pub use ledger::{JobMeta, Ledger, TimeClass};
+pub use series::{TimeSeries, Window};

@@ -1,0 +1,136 @@
+//! Windowed time series of goodput reports — the Fig. 13/14/15 machinery.
+
+use super::goodput::{report, GoodputReport};
+use super::ledger::{JobMeta, Ledger};
+
+/// A reporting window.
+#[derive(Clone, Copy, Debug)]
+pub struct Window {
+    pub t0: f64,
+    pub t1: f64,
+}
+
+impl Window {
+    pub fn mid(&self) -> f64 {
+        0.5 * (self.t0 + self.t1)
+    }
+}
+
+/// A labeled series of per-window reports.
+#[derive(Clone, Debug)]
+pub struct TimeSeries {
+    pub label: String,
+    pub windows: Vec<Window>,
+    pub reports: Vec<GoodputReport>,
+}
+
+impl TimeSeries {
+    /// Build a series by evaluating the ledger in consecutive windows of
+    /// `width_s` covering [t0, t1).
+    pub fn build<F: Fn(&JobMeta) -> bool>(
+        label: &str,
+        ledger: &Ledger,
+        t0: f64,
+        t1: f64,
+        width_s: f64,
+        filter: F,
+    ) -> TimeSeries {
+        assert!(width_s > 0.0);
+        let mut windows = Vec::new();
+        let mut reports = Vec::new();
+        let mut w0 = t0;
+        while w0 < t1 {
+            let w1 = (w0 + width_s).min(t1);
+            windows.push(Window { t0: w0, t1: w1 });
+            reports.push(report(ledger, w0, w1, &filter));
+            w0 = w1;
+        }
+        TimeSeries { label: label.to_string(), windows, reports }
+    }
+
+    pub fn rg_values(&self) -> Vec<f64> {
+        self.reports.iter().map(|r| r.rg).collect()
+    }
+
+    pub fn pg_values(&self) -> Vec<f64> {
+        self.reports.iter().map(|r| r.pg).collect()
+    }
+
+    pub fn sg_values(&self) -> Vec<f64> {
+        self.reports.iter().map(|r| r.sg).collect()
+    }
+
+    pub fn mpg_values(&self) -> Vec<f64> {
+        self.reports.iter().map(|r| r.mpg()).collect()
+    }
+
+    /// Speedup of a metric relative to its first non-zero window (the
+    /// Fig. 14 normalization: "speedup normalized to the top-N workloads
+    /// measured at the beginning of the quarter").
+    pub fn normalized(&self, values: &[f64]) -> Vec<f64> {
+        let base = values.iter().copied().find(|&v| v > 0.0).unwrap_or(1.0);
+        values.iter().map(|&v| if base > 0.0 { v / base } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::metrics::ledger::{JobMeta, TimeClass};
+    use crate::workload::{CheckpointPolicy, Job, Phase, Priority, StepProfile};
+    use crate::workload::{Framework, ModelArch};
+
+    fn meta(id: u64) -> JobMeta {
+        JobMeta::of(&Job {
+            id,
+            arrival_s: 0.0,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        })
+    }
+
+    #[test]
+    fn series_windows_tile_the_range() {
+        let mut l = Ledger::new();
+        l.set_capacity(0.0, 10);
+        l.ensure_job(meta(1));
+        l.add_span(1, 0.0, 100.0, 8, TimeClass::Productive);
+        let ts = TimeSeries::build("t", &l, 0.0, 100.0, 30.0, |_| true);
+        assert_eq!(ts.windows.len(), 4);
+        assert_eq!(ts.windows[3].t1, 100.0);
+        // All windows fully productive -> rg = 1 everywhere.
+        assert!(ts.rg_values().iter().all(|&v| (v - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn series_captures_improvement_over_time() {
+        let mut l = Ledger::new();
+        l.set_capacity(0.0, 10);
+        l.ensure_job(meta(1));
+        // First half: half the allocated time lost; second half: none.
+        l.add_span(1, 0.0, 25.0, 8, TimeClass::Productive);
+        l.add_span(1, 25.0, 50.0, 8, TimeClass::Lost);
+        l.add_span(1, 50.0, 100.0, 8, TimeClass::Productive);
+        let ts = TimeSeries::build("t", &l, 0.0, 100.0, 50.0, |_| true);
+        let rg = ts.rg_values();
+        assert!((rg[0] - 0.5).abs() < 1e-9);
+        assert!((rg[1] - 1.0).abs() < 1e-9);
+        let norm = ts.normalized(&rg);
+        assert!((norm[1] - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Reporting: ASCII tables, CSV emission, and the generators for every
+//! figure/table in the paper's evaluation (the experiment index in
+//! DESIGN.md §6 maps each to its function here).
+
+pub mod figures;
+pub mod table;
+
+pub use figures::*;
+pub use table::Table;

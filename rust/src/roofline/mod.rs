@@ -1,0 +1,102 @@
+//! Roofline / ideal-time model (paper §4.3).
+//!
+//! PG's numerator is the *compute-based* roofline: FLOPs from the
+//! unoptimized HLO graph divided by chip peak. The traditional
+//! memory-inclusive roofline is also computed for diagnostics (the paper
+//! §4.3 explains why it is NOT used for PG: it is too sensitive to compiler
+//! decisions like fusion and rematerialization).
+
+use crate::fleet::ChipSpec;
+use crate::hlo::ModuleCost;
+
+/// Ideal-time estimate of one program execution on one chip.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineEstimate {
+    /// Compute-based ideal seconds (the PG numerator).
+    pub ideal_compute_s: f64,
+    /// Memory-bandwidth-bound seconds (diagnostic).
+    pub ideal_memory_s: f64,
+    /// Arithmetic intensity of the program, FLOP/byte.
+    pub intensity: f64,
+    /// The chip's roofline knee, FLOP/byte.
+    pub knee: f64,
+}
+
+impl RooflineEstimate {
+    /// True iff the program sits right of the knee (compute-bound).
+    pub fn compute_bound(&self) -> bool {
+        self.intensity >= self.knee
+    }
+
+    /// The max of the two bounds (the classical roofline time).
+    pub fn classical_ideal_s(&self) -> f64 {
+        self.ideal_compute_s.max(self.ideal_memory_s)
+    }
+}
+
+/// Estimate ideal time for `cost` on `spec` using f32 peak (our artifacts
+/// are f32; pass bf16=true for MXU-native workloads).
+pub fn estimate(cost: &ModuleCost, spec: &ChipSpec, bf16: bool) -> RooflineEstimate {
+    let flops = cost.flops + cost.transcendentals;
+    let ideal_compute_s =
+        if bf16 { spec.ideal_seconds_bf16(flops) } else { spec.ideal_seconds_f32(flops) };
+    RooflineEstimate {
+        ideal_compute_s,
+        ideal_memory_s: spec.ideal_seconds_hbm(cost.bytes),
+        intensity: cost.intensity(),
+        knee: spec.roofline_knee(),
+    }
+}
+
+/// Program Goodput of a measured execution: ideal / actual, clamped to
+/// [0, 1] (measurement noise can nudge it over 1 on tiny programs).
+pub fn program_goodput(ideal_s: f64, measured_s: f64) -> f64 {
+    if measured_s <= 0.0 {
+        return 0.0;
+    }
+    (ideal_s / measured_s).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use std::collections::HashMap;
+
+    fn cost(flops: f64, bytes: f64) -> ModuleCost {
+        ModuleCost {
+            flops,
+            transcendentals: 0.0,
+            bytes,
+            unknown_trip_counts: 0,
+            by_opcode: HashMap::new(),
+        }
+    }
+
+    #[test]
+    fn compute_bound_detection() {
+        let spec = ChipGeneration::TpuC.spec();
+        // Very high intensity -> compute bound.
+        let hot = estimate(&cost(1e12, 1e6), spec, false);
+        assert!(hot.compute_bound());
+        assert!(hot.ideal_compute_s > hot.ideal_memory_s);
+        // Very low intensity -> memory bound.
+        let cold = estimate(&cost(1e6, 1e12), spec, false);
+        assert!(!cold.compute_bound());
+        assert!(cold.classical_ideal_s() > cold.ideal_compute_s);
+    }
+
+    #[test]
+    fn pg_clamps_and_orders() {
+        assert_eq!(program_goodput(1.0, 0.0), 0.0);
+        assert_eq!(program_goodput(2.0, 1.0), 1.0);
+        assert!((program_goodput(0.25, 1.0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bf16_faster_than_f32() {
+        let spec = ChipGeneration::TpuC.spec();
+        let c = cost(1e12, 1.0);
+        assert!(estimate(&c, spec, true).ideal_compute_s < estimate(&c, spec, false).ideal_compute_s);
+    }
+}

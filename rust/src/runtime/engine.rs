@@ -1,0 +1,138 @@
+//! PJRT execution engine: HLO text → compile once → execute many.
+//!
+//! Follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` (the
+//! text parser reassigns the 64-bit instruction ids jax ≥0.5 emits, which
+//! xla_extension 0.5.1's proto path rejects) → `client.compile` →
+//! `execute`. Artifacts are lowered with `return_tuple=True`, so each
+//! execution returns one tuple literal we decompose.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Wall seconds spent compiling each artifact (AOT-cache telemetry).
+    pub compile_seconds: HashMap<String, f64>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over the artifacts directory. Compilation
+    /// is lazy per artifact (first call to `prepare`/`execute`).
+    pub fn new(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Engine {
+            manifest,
+            client,
+            executables: HashMap::new(),
+            compile_seconds: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (idempotent).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let t0 = Instant::now();
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        self.compile_seconds
+            .insert(name.to_string(), t0.elapsed().as_secs_f64());
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given inputs; returns the decomposed
+    /// output tuple as literals.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.prepare(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+
+    /// Execute and also return the wall time of the `execute` call
+    /// (device step-time measurement for the measured-PG pipeline).
+    pub fn execute_timed(
+        &mut self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<(Vec<xla::Literal>, f64)> {
+        self.prepare(name)?;
+        let exe = self.executables.get(name).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))?;
+        Ok((outs, dt))
+    }
+
+    /// Helpers to build input literals.
+    pub fn literal_f32(values: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(values);
+        if shape.is_empty() {
+            // Scalar: vec1 of length 1 reshaped to rank 0 is not supported;
+            // build via scalar constructor.
+            return Ok(xla::Literal::scalar(values[0]));
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    pub fn literal_i32(values: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+        if shape.is_empty() {
+            return Ok(xla::Literal::scalar(values[0]));
+        }
+        let lit = xla::Literal::vec1(values);
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    /// Load + parse + cost-analyze the artifact's HLO text (for PG).
+    pub fn module_cost(&self, name: &str) -> Result<crate::hlo::ModuleCost> {
+        let spec = self.manifest.artifact(name)?;
+        let text = std::fs::read_to_string(&spec.file).context("reading artifact")?;
+        let module = crate::hlo::HloModule::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Ok(crate::hlo::CostAnalysis::new(&module).module_cost())
+    }
+}

@@ -1,0 +1,177 @@
+//! artifacts/manifest.json — the shape/dtype contract between the Python
+//! compile path and the Rust runtime. The Rust side never re-derives pytree
+//! structure; it trusts exactly this file.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec {
+            name: j.get("name").as_str().unwrap_or("").to_string(),
+            shape,
+            dtype: j
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow!("missing dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelConfig,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mc = j.get("model_config");
+        let geti = |k: &str| -> Result<usize> {
+            mc.get(k)
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("model_config.{k} missing"))
+        };
+        let model = ModelConfig {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_heads: geti("n_heads")?,
+            n_layers: geti("n_layers")?,
+            d_ff: geti("d_ff")?,
+            seq_len: geti("seq_len")?,
+            batch: geti("batch")?,
+            param_count: geti("param_count")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j.get("artifacts").as_obj().ok_or_else(|| anyhow!("no artifacts"))?;
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(file),
+                inputs: parse_list("inputs")?,
+                outputs: parse_list("outputs")?,
+            };
+            if !spec.file.exists() {
+                bail!("artifact file missing: {:?}", spec.file);
+            }
+            artifacts.insert(name.clone(), spec);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, artifacts })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact: {name}"))
+    }
+
+    /// The number of flat parameter tensors (init_params outputs).
+    pub fn param_tensor_count(&self) -> usize {
+        self.artifacts
+            .get("init_params")
+            .map(|a| a.outputs.len())
+            .unwrap_or(0)
+    }
+
+    /// Default artifacts directory: $TPUFLEET_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TPUFLEET_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.param_count > 100_000);
+        for name in ["init_params", "train_step", "infer_step", "mlp_fused", "mlp_naive"] {
+            assert!(m.artifacts.contains_key(name), "{name}");
+        }
+        let train = m.artifact("train_step").unwrap();
+        assert_eq!(train.inputs.len(), m.param_tensor_count() + 2);
+        assert_eq!(train.outputs.len(), m.param_tensor_count() + 1);
+        // tokens input is int32 [batch, seq].
+        let tokens = &train.inputs[train.inputs.len() - 2];
+        assert_eq!(tokens.dtype, "int32");
+        assert_eq!(tokens.shape, vec![m.model.batch, m.model.seq_len]);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

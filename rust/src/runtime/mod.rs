@@ -1,0 +1,15 @@
+//! Real PJRT runtime (the L3↔artifact bridge): load the AOT-compiled HLO
+//! text artifacts produced by `make artifacts`, compile them on the PJRT
+//! CPU client, and execute them from Rust — Python is never on this path.
+//!
+//! `Engine` owns the client and compiled executables; `Trainer` drives the
+//! end-to-end training loop (examples/train_e2e.rs) and measures real step
+//! times for the measured-Program-Goodput pipeline.
+
+pub mod engine;
+pub mod manifest;
+pub mod trainer;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use trainer::{corpus, TrainReport, Trainer};

@@ -1,0 +1,257 @@
+//! End-to-end training driver: initialize parameters on device, run the
+//! AOT train step for N steps over a synthetic corpus, log the loss curve
+//! and measured step times. This is the e2e validation workload
+//! (examples/train_e2e.rs, EXPERIMENTS.md §E2E).
+
+use anyhow::{anyhow, Result};
+
+use crate::util::Rng;
+
+use super::engine::Engine;
+
+/// Synthetic byte-level corpus with learnable structure: sentences composed
+/// from a small word inventory by a seeded order-1 word chain. An LM that
+/// learns anything drives its loss well below the ln(vocab) uniform floor.
+pub mod corpus {
+    use super::*;
+
+    const WORDS: [&str; 24] = [
+        "the", "fleet", "chip", "pod", "runs", "fast", "slow", "job", "model",
+        "trains", "serves", "data", "flows", "through", "mesh", "torus",
+        "goodput", "rises", "falls", "with", "load", "peak", "idle", "time",
+    ];
+
+    /// Next-word preference: each word has a couple of likely successors —
+    /// enough structure for a byte LM to learn quickly.
+    pub fn generate(rng: &mut Rng, bytes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(bytes + 16);
+        let mut w = rng.below(WORDS.len() as u64) as usize;
+        while out.len() < bytes {
+            out.extend_from_slice(WORDS[w].as_bytes());
+            out.push(b' ');
+            // Strongly-biased successor: (w*7+3) mod N with 80% probability.
+            w = if rng.chance(0.8) {
+                (w * 7 + 3) % WORDS.len()
+            } else {
+                rng.below(WORDS.len() as u64) as usize
+            };
+        }
+        out.truncate(bytes);
+        out
+    }
+
+    /// Pack a corpus into (batch, seq) i32 token windows starting at a
+    /// rotating offset.
+    pub fn batch(corpus: &[u8], rng: &mut Rng, batch: usize, seq: usize) -> Vec<i32> {
+        let mut toks = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            let start = rng.below((corpus.len() - seq) as u64) as usize;
+            toks.extend(corpus[start..start + seq].iter().map(|&b| b as i32));
+        }
+        toks
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    /// Wall seconds per executed train step.
+    pub step_seconds: Vec<f64>,
+    pub init_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+impl TrainReport {
+    pub fn first_loss(&self) -> f32 {
+        self.losses.first().copied().unwrap_or(f32::NAN)
+    }
+
+    pub fn last_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(f32::NAN)
+    }
+
+    /// Mean of the steady-state step time (skipping the first step, which
+    /// includes one-time buffer warmup).
+    pub fn mean_step_seconds(&self) -> f64 {
+        let xs = if self.step_seconds.len() > 1 {
+            &self.step_seconds[1..]
+        } else {
+            &self.step_seconds[..]
+        };
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub struct Trainer {
+    pub engine: Engine,
+    params: Vec<xla::Literal>,
+    rng: Rng,
+    corpus: Vec<u8>,
+}
+
+impl Trainer {
+    /// Build a trainer: compile init+train artifacts and initialize
+    /// parameters on device with `seed`.
+    pub fn new(mut engine: Engine, seed: i32) -> Result<Trainer> {
+        let t0 = std::time::Instant::now();
+        engine.prepare("init_params")?;
+        engine.prepare("train_step")?;
+        let _compile = t0.elapsed().as_secs_f64();
+        let seed_lit = xla::Literal::scalar(seed);
+        let params = engine.execute("init_params", &[seed_lit])?;
+        let n = engine.manifest.param_tensor_count();
+        if params.len() != n {
+            return Err(anyhow!("init returned {} tensors, manifest says {n}", params.len()));
+        }
+        let mut rng = Rng::new(seed as u64 ^ 0xC0FFEE);
+        let corpus = corpus::generate(&mut rng, 65_536);
+        Ok(Trainer { engine, params, rng, corpus })
+    }
+
+    /// One SGD step on a fresh synthetic batch; returns the loss.
+    pub fn step(&mut self, lr: f32) -> Result<(f32, f64)> {
+        let mc = &self.engine.manifest.model;
+        let (b, s) = (mc.batch, mc.seq_len);
+        let toks = corpus::batch(&self.corpus, &mut self.rng, b, s);
+        let tokens = Engine::literal_i32(&toks, &[b, s])?;
+        let lr_lit = xla::Literal::scalar(lr);
+
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 2);
+        // Literals are moved into execute by reference; clone params refs.
+        for p in &self.params {
+            inputs.push(clone_literal(p)?);
+        }
+        inputs.push(tokens);
+        inputs.push(lr_lit);
+
+        let (mut outs, dt) = self.engine.execute_timed("train_step", &inputs)?;
+        let loss_lit = outs.pop().ok_or_else(|| anyhow!("empty outputs"))?;
+        let loss = loss_lit.to_vec::<f32>().map(|v| v[0]).or_else(|_| {
+            loss_lit
+                .get_first_element::<f32>()
+                .map_err(|e| anyhow!("loss fetch: {e}"))
+        })?;
+        self.params = outs;
+        Ok((loss, dt))
+    }
+
+    /// Run `steps` SGD steps, logging every `log_every` (0 = silent).
+    pub fn train(&mut self, steps: usize, lr: f32, log_every: usize) -> Result<TrainReport> {
+        let mut report = TrainReport::default();
+        report.compile_seconds = self
+            .engine
+            .compile_seconds
+            .values()
+            .sum::<f64>();
+        for i in 0..steps {
+            let (loss, dt) = self.step(lr)?;
+            if !loss.is_finite() {
+                return Err(anyhow!("loss diverged at step {i}: {loss}"));
+            }
+            report.losses.push(loss);
+            report.step_seconds.push(dt);
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                eprintln!("step {i:>5}  loss {loss:.4}  ({:.1} ms)", dt * 1e3);
+            }
+        }
+        report.steps = steps;
+        Ok(report)
+    }
+
+    /// Run inference on a fresh batch; returns argmax accuracy of
+    /// next-token prediction (greedy) — a sanity signal that training
+    /// learned the corpus structure.
+    pub fn eval_next_token_accuracy(&mut self) -> Result<f64> {
+        let mc = &self.engine.manifest.model;
+        let (b, s, v) = (mc.batch, mc.seq_len, mc.vocab);
+        let toks = corpus::batch(&self.corpus, &mut self.rng, b, s);
+        let tokens = Engine::literal_i32(&toks, &[b, s])?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.params.len() + 1);
+        for p in &self.params {
+            inputs.push(clone_literal(p)?);
+        }
+        inputs.push(tokens);
+        let outs = self.engine.execute("infer_step", &inputs)?;
+        let logits = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for bi in 0..b {
+            for si in 0..s - 1 {
+                let base = (bi * s + si) * v;
+                let row = &logits[base..base + v];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                if pred == toks[bi * s + si + 1] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    pub fn param_tensors(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The xla crate's Literal isn't Clone; round-trip through raw bytes.
+fn clone_literal(lit: &xla::Literal) -> Result<xla::Literal> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("{e}"))?;
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match lit.ty().map_err(|e| anyhow!("{e}"))? {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e}"))
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(v[0]));
+            }
+            xla::Literal::vec1(&v).reshape(&dims).map_err(|e| anyhow!("{e}"))
+        }
+        other => Err(anyhow!("unsupported param dtype {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_has_structure() {
+        let mut rng = Rng::new(1);
+        let c = corpus::generate(&mut rng, 4096);
+        assert_eq!(c.len(), 4096);
+        // Byte histogram is far from uniform: spaces and 'e' dominate.
+        let mut hist = [0usize; 256];
+        for &b in &c {
+            hist[b as usize] += 1;
+        }
+        let nonzero = hist.iter().filter(|&&h| h > 0).count();
+        assert!(nonzero < 40, "alphabet should be small, got {nonzero}");
+        assert!(hist[b' ' as usize] > c.len() / 12);
+    }
+
+    #[test]
+    fn batch_windows_in_range() {
+        let mut rng = Rng::new(2);
+        let c = corpus::generate(&mut rng, 2048);
+        let toks = corpus::batch(&c, &mut rng, 4, 64);
+        assert_eq!(toks.len(), 4 * 64);
+        assert!(toks.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

@@ -1,0 +1,419 @@
+//! Runtime/orchestration layer model (paper §3.3, §5.2): startup, compile,
+//! input pipeline, checkpointing, and the accounting of an allocation
+//! window into Runtime-Goodput time classes.
+//!
+//! The accounting is exact arithmetic over the job's checkpoint policy (no
+//! per-step simulation): given a window of all-allocated wall time, the job
+//! pays startup (program load + compile, discounted by the Pathways
+//! compile-cache), then alternates `interval_s` of stepping with
+//! `write_stall_s` checkpoint stalls, losing the uncheckpointed tail if the
+//! window ends in eviction/failure.
+
+use crate::metrics::TimeClass;
+use crate::workload::{Job, Phase};
+
+/// Why an allocation window ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowEnd {
+    /// Job completed its work inside the window.
+    Completed,
+    /// Preempted or killed by machine failure: uncheckpointed work is lost.
+    Evicted,
+}
+
+/// Era multipliers — scenario-time effects on the runtime layer (e.g. the
+/// Fig. 15 bulk-inference regression when sharded-weight models arrive).
+#[derive(Clone, Copy, Debug)]
+pub struct EraEffects {
+    /// Multiplies input-pipeline stall fraction (data reads etc.).
+    pub stall_mult: f64,
+    /// Multiplies checkpoint restore cost.
+    pub restore_mult: f64,
+}
+
+impl Default for EraEffects {
+    fn default() -> Self {
+        EraEffects { stall_mult: 1.0, restore_mult: 1.0 }
+    }
+}
+
+/// Runtime-layer configuration (fleet-wide optimization knobs, §5.2).
+#[derive(Clone, Debug)]
+pub struct RuntimeModel {
+    /// Input-pipeline stall fraction of productive time for multi-client
+    /// stacks (tf.data-style host overhead).
+    pub multiclient_stall_frac: f64,
+    /// Same for Pathways (sharded dataflow hides most of it).
+    pub pathways_stall_frac: f64,
+    /// AOT compile cache: startup multiplier when enabled fleet-wide
+    /// (compile offloaded to cheap CPUs and cached, §5.2).
+    pub aot_cache_startup_mult: f64,
+    pub aot_cache_enabled: bool,
+}
+
+impl Default for RuntimeModel {
+    fn default() -> Self {
+        RuntimeModel {
+            multiclient_stall_frac: 0.08,
+            pathways_stall_frac: 0.02,
+            aot_cache_startup_mult: 0.45,
+            aot_cache_enabled: false,
+        }
+    }
+}
+
+/// The classified outcome of one allocation window.
+#[derive(Clone, Debug)]
+pub struct WindowAccount {
+    /// (class, seconds) in window order; seconds sum to the window length.
+    pub pieces: Vec<(TimeClass, f64)>,
+    /// Job work completed and SAVED by the end of the window (absolute).
+    pub work_done_after: f64,
+    /// True if the job finished inside the window.
+    pub completed: bool,
+}
+
+impl RuntimeModel {
+    fn stall_frac(&self, job: &Job, era: &EraEffects) -> f64 {
+        let base = if job.framework.is_pathways() {
+            self.pathways_stall_frac
+        } else {
+            self.multiclient_stall_frac
+        };
+        // Host-bound models stall more; era effects scale it.
+        (base * (1.0 + 4.0 * job.step.host_fraction) * era.stall_mult).min(0.9)
+    }
+
+    fn startup_s(&self, job: &Job, restarted: bool, era: &EraEffects) -> f64 {
+        let mut s = job.startup_s;
+        if self.aot_cache_enabled {
+            s *= self.aot_cache_startup_mult;
+        }
+        if restarted {
+            s += job.ckpt.restore_s * era.restore_mult;
+        }
+        s
+    }
+
+    /// Wall-clock seconds of allocation the job needs (from scratch in this
+    /// window) to finish its remaining work — used by the simulator to
+    /// schedule the completion event.
+    pub fn wall_to_complete(
+        &self,
+        job: &Job,
+        restarted: bool,
+        work_done: f64,
+        era: &EraEffects,
+    ) -> f64 {
+        let remaining = (job.work_s - work_done).max(0.0);
+        let startup = self.startup_s(job, restarted, era);
+        if remaining == 0.0 {
+            return startup;
+        }
+        match job.phase {
+            // Serving: no checkpoints; lifetime is wall-clock.
+            Phase::Serving => startup + remaining,
+            _ => {
+                let stall = self.stall_frac(job, era);
+                // Each interval_s of saved progress costs interval_s of
+                // stepping, its input stalls, and one checkpoint write.
+                let intervals = (remaining / job.ckpt.interval_s).ceil();
+                let stepping = remaining * (1.0 + stall);
+                startup + stepping + intervals * job.ckpt.write_stall_s
+            }
+        }
+    }
+
+    /// Classify an allocation window [0, window_s) of all-allocated time.
+    pub fn account(
+        &self,
+        job: &Job,
+        restarted: bool,
+        work_done: f64,
+        window_s: f64,
+        end: WindowEnd,
+        era: &EraEffects,
+    ) -> WindowAccount {
+        assert!(window_s >= 0.0);
+        let mut pieces: Vec<(TimeClass, f64)> = Vec::new();
+        let mut t = 0.0;
+
+        let startup = self.startup_s(job, restarted, era).min(window_s);
+        if startup > 0.0 {
+            pieces.push((TimeClass::Startup, startup));
+            t += startup;
+        }
+        let mut saved = work_done;
+
+        if job.phase == Phase::Serving {
+            // Serving progress is inherently "saved" (request results are
+            // delivered); remaining window is productive up to lifetime.
+            let remaining = (job.work_s - work_done).max(0.0);
+            let productive = (window_s - t).min(remaining);
+            if productive > 0.0 {
+                pieces.push((TimeClass::Productive, productive));
+                saved += productive;
+            }
+            let completed = saved >= job.work_s - 1e-9;
+            return WindowAccount { pieces, work_done_after: saved, completed };
+        }
+
+        let stall = self.stall_frac(job, era);
+        let mut completed = false;
+
+        // Walk checkpoint intervals until window or work is exhausted.
+        while t < window_s - 1e-12 && saved < job.work_s - 1e-12 {
+            let chunk_work = (job.work_s - saved).min(job.ckpt.interval_s);
+            let chunk_step = chunk_work * (1.0 + stall);
+            let productive_part = chunk_work;
+            let stall_part = chunk_step - chunk_work;
+
+            if t + chunk_step <= window_s + 1e-12 {
+                // Full interval of stepping fits.
+                pieces.push((TimeClass::Productive, productive_part));
+                if stall_part > 0.0 {
+                    pieces.push((TimeClass::RuntimeStall, stall_part));
+                }
+                t += chunk_step;
+                // Checkpoint write (or final save on completion).
+                let write = job.ckpt.write_stall_s.min((window_s - t).max(0.0));
+                if saved + chunk_work >= job.work_s - 1e-12 {
+                    // Completion save: always charged, capped by window.
+                    if write > 0.0 {
+                        pieces.push((TimeClass::CkptStall, write));
+                    }
+                    saved = job.work_s;
+                    completed = true;
+                    break;
+                }
+                if t + job.ckpt.write_stall_s <= window_s + 1e-12 {
+                    pieces.push((TimeClass::CkptStall, job.ckpt.write_stall_s));
+                    t += job.ckpt.write_stall_s;
+                    saved += chunk_work;
+                } else {
+                    // Window ends mid-checkpoint-write: that write is lost.
+                    let partial_write = window_s - t;
+                    if partial_write > 0.0 {
+                        pieces.push((TimeClass::Lost, partial_write));
+                    }
+                    // The whole interval's work wasn't saved: reclassify.
+                    reclassify_tail_as_lost(&mut pieces, chunk_step);
+                    break;
+                }
+            } else {
+                // Partial interval: stepping truncated by window end.
+                let avail = window_s - t;
+                if end == WindowEnd::Evicted {
+                    // Uncheckpointed tail -> Lost entirely.
+                    pieces.push((TimeClass::Lost, avail));
+                } else {
+                    // Completed shouldn't land here (caller sizes windows
+                    // via wall_to_complete), but classify conservatively.
+                    pieces.push((TimeClass::Lost, avail));
+                }
+                break;
+            }
+        }
+
+        WindowAccount { pieces, work_done_after: saved, completed }
+    }
+}
+
+/// Reclassify the last `amount` seconds of Productive/RuntimeStall pieces as
+/// Lost (an interval whose checkpoint never landed). Any trailing Lost
+/// pieces are merged into the single Lost tail this produces.
+fn reclassify_tail_as_lost(pieces: &mut Vec<(TimeClass, f64)>, mut amount: f64) {
+    let mut lost = 0.0;
+    while let Some(&(TimeClass::Lost, d)) = pieces.last() {
+        lost += d;
+        pieces.pop();
+    }
+    while amount > 1e-12 {
+        match pieces.last_mut() {
+            Some((class, dur))
+                if matches!(class, TimeClass::Productive | TimeClass::RuntimeStall) =>
+            {
+                let take = amount.min(*dur);
+                *dur -= take;
+                amount -= take;
+                lost += take;
+                if *dur <= 1e-12 {
+                    pieces.pop();
+                }
+            }
+            _ => break,
+        }
+    }
+    if lost > 0.0 {
+        pieces.push((TimeClass::Lost, lost));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::workload::{
+        CheckpointPolicy, Framework, ModelArch, Priority, StepProfile,
+    };
+
+    fn job(phase: Phase, work_s: f64) -> Job {
+        Job {
+            id: 1,
+            arrival_s: 0.0,
+            phase,
+            framework: Framework::JaxMultiClient,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.0,
+            },
+            ckpt: CheckpointPolicy { interval_s: 100.0, write_stall_s: 10.0, restore_s: 20.0 },
+            startup_s: 50.0,
+        }
+    }
+
+    fn sum_class(acct: &WindowAccount, class: TimeClass) -> f64 {
+        acct.pieces.iter().filter(|(c, _)| *c == class).map(|(_, d)| d).sum()
+    }
+
+    fn total(acct: &WindowAccount) -> f64 {
+        acct.pieces.iter().map(|(_, d)| d).sum()
+    }
+
+    #[test]
+    fn completion_account_is_exact() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 250.0);
+        let era = EraEffects::default();
+        let wall = rm.wall_to_complete(&j, false, 0.0, &era);
+        // 50 startup + 250 stepping + 3 ckpt writes (ceil(250/100)) * 10.
+        assert!((wall - (50.0 + 250.0 + 30.0)).abs() < 1e-9, "wall={wall}");
+        let acct = rm.account(&j, false, 0.0, wall, WindowEnd::Completed, &era);
+        assert!(acct.completed);
+        assert!((acct.work_done_after - 250.0).abs() < 1e-9);
+        assert!((sum_class(&acct, TimeClass::Productive) - 250.0).abs() < 1e-9);
+        assert!((sum_class(&acct, TimeClass::Startup) - 50.0).abs() < 1e-9);
+        assert!((sum_class(&acct, TimeClass::CkptStall) - 30.0).abs() < 1e-9);
+        assert!((total(&acct) - wall).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_loses_uncheckpointed_tail() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 1000.0);
+        let era = EraEffects::default();
+        // Window: startup(50) + one full interval (100 + 10 ckpt) + 60s into
+        // the second interval, then eviction.
+        let acct = rm.account(&j, false, 0.0, 220.0, WindowEnd::Evicted, &era);
+        assert!(!acct.completed);
+        assert!((acct.work_done_after - 100.0).abs() < 1e-9); // one saved ckpt
+        assert!((sum_class(&acct, TimeClass::Lost) - 60.0).abs() < 1e-9);
+        assert!((total(&acct) - 220.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eviction_mid_window_before_any_checkpoint_loses_all_progress() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 1000.0);
+        let era = EraEffects::default();
+        let acct = rm.account(&j, false, 0.0, 120.0, WindowEnd::Evicted, &era);
+        assert_eq!(acct.work_done_after, 0.0);
+        // 50 startup + 70 lost.
+        assert!((sum_class(&acct, TimeClass::Lost) - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn restart_pays_restore() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 400.0);
+        let era = EraEffects::default();
+        let w_fresh = rm.wall_to_complete(&j, false, 0.0, &era);
+        let w_restart = rm.wall_to_complete(&j, true, 0.0, &era);
+        assert!((w_restart - w_fresh - 20.0).abs() < 1e-9);
+        // With 100s already saved, less stepping is needed.
+        let w_mid = rm.wall_to_complete(&j, true, 100.0, &era);
+        assert!(w_mid < w_restart);
+    }
+
+    #[test]
+    fn serving_has_no_checkpoint_overhead() {
+        let rm = RuntimeModel::default();
+        let j = job(Phase::Serving, 500.0);
+        let era = EraEffects::default();
+        let wall = rm.wall_to_complete(&j, false, 0.0, &era);
+        assert!((wall - 550.0).abs() < 1e-9);
+        let acct = rm.account(&j, false, 0.0, wall, WindowEnd::Completed, &era);
+        assert!(acct.completed);
+        assert_eq!(sum_class(&acct, TimeClass::CkptStall), 0.0);
+        assert_eq!(sum_class(&acct, TimeClass::Lost), 0.0);
+    }
+
+    #[test]
+    fn pathways_stalls_less_than_multiclient() {
+        let rm = RuntimeModel::default();
+        let mut j = job(Phase::Training, 500.0);
+        j.step.host_fraction = 0.2;
+        let era = EraEffects::default();
+        let w_mc = rm.wall_to_complete(&j, false, 0.0, &era);
+        j.framework = Framework::JaxPathways;
+        let w_pw = rm.wall_to_complete(&j, false, 0.0, &era);
+        assert!(w_pw < w_mc);
+    }
+
+    #[test]
+    fn async_ckpt_reduces_stall_time() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let mut j = job(Phase::Training, 1000.0);
+        let era = EraEffects::default();
+        j.ckpt = CheckpointPolicy { interval_s: 100.0, write_stall_s: 10.0, restore_s: 20.0 };
+        let sync_wall = rm.wall_to_complete(&j, false, 0.0, &era);
+        j.ckpt = CheckpointPolicy { interval_s: 100.0, write_stall_s: 1.0, restore_s: 20.0 };
+        let async_wall = rm.wall_to_complete(&j, false, 0.0, &era);
+        assert!((sync_wall - async_wall - 9.0 * 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn era_effects_slow_things_down() {
+        let rm = RuntimeModel::default();
+        let mut j = job(Phase::Training, 500.0);
+        j.step.host_fraction = 0.3;
+        let base = rm.wall_to_complete(&j, true, 0.0, &EraEffects::default());
+        let bad_era = EraEffects { stall_mult: 3.0, restore_mult: 4.0 };
+        let worse = rm.wall_to_complete(&j, true, 0.0, &bad_era);
+        assert!(worse > base);
+    }
+
+    #[test]
+    fn aot_cache_cuts_startup() {
+        let mut rm = RuntimeModel::default();
+        let j = job(Phase::Training, 100.0);
+        let era = EraEffects::default();
+        let w0 = rm.wall_to_complete(&j, false, 0.0, &era);
+        rm.aot_cache_enabled = true;
+        let w1 = rm.wall_to_complete(&j, false, 0.0, &era);
+        assert!((w0 - w1 - 50.0 * 0.55).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pieces_always_sum_to_window() {
+        let rm = RuntimeModel::default();
+        let j = job(Phase::Training, 777.0);
+        let era = EraEffects::default();
+        for window in [0.0, 10.0, 49.9, 50.0, 123.4, 500.0, 2000.0] {
+            let acct = rm.account(&j, true, 55.0, window, WindowEnd::Evicted, &era);
+            let tot = total(&acct);
+            assert!(
+                (tot - window).abs() < 1e-6 || acct.completed && tot <= window + 1e-6,
+                "window={window} total={tot}"
+            );
+        }
+    }
+}

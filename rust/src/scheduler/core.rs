@@ -1,0 +1,699 @@
+//! The scheduler proper: queueing, placement, preemption, defragmentation.
+
+use std::collections::HashMap;
+
+use crate::fleet::{Fleet, PodId, SliceId};
+use crate::workload::{Job, JobId, Priority};
+
+/// Where a job currently runs.
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    pub slices: Vec<SliceId>,
+    /// Simulation second the allocation was granted.
+    pub since_s: f64,
+}
+
+impl Allocation {
+    pub fn chips(&self) -> u32 {
+        self.slices.iter().map(|s| s.chips()).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SchedulerPolicy {
+    /// Allow evicting lower-priority jobs to place higher-priority ones.
+    pub preemption: bool,
+    /// Victim-search cost exponent: cost = eviction_cost / chips^bias.
+    /// bias 1.0 = per-chip cost (paper-like: spares XL *and* small).
+    pub victim_bias: f64,
+    /// Refuse to preempt a job more often than once per this many seconds
+    /// (anti-thrash guard).
+    pub min_runtime_before_evict_s: f64,
+    /// Headroom: keep this fraction of each cell unallocated for incoming
+    /// critical jobs (the paper's deliberate underutilization for stability).
+    pub headroom_fraction: f64,
+}
+
+impl Default for SchedulerPolicy {
+    fn default() -> Self {
+        SchedulerPolicy {
+            preemption: true,
+            victim_bias: 1.0,
+            min_runtime_before_evict_s: 600.0,
+            headroom_fraction: 0.0,
+        }
+    }
+}
+
+/// Result of a scheduling pass.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleOutcome {
+    /// Jobs granted allocations this pass.
+    pub placed: Vec<JobId>,
+    /// Jobs evicted to make room (they re-enter the queue).
+    pub preempted: Vec<JobId>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerStats {
+    pub placements: u64,
+    pub preemptions: u64,
+    pub defrag_migrations: u64,
+    pub failed_placements: u64,
+}
+
+/// Placement-requirements signature packed into a u64: jobs with equal
+/// keys are interchangeable to the placement logic, so one failure this
+/// pass predicts the rest (the schedule-pass failure cache). Packed form
+/// keeps the per-entry probe a register compare (EXPERIMENTS.md §Perf).
+type ReqKey = u64;
+
+fn req_key(job: &Job) -> ReqKey {
+    (job.gen.index() as u64)
+        | (job.slice_shape[0] as u64) << 3
+        | (job.slice_shape[1] as u64) << 9
+        | (job.slice_shape[2] as u64) << 15
+        | (job.pods as u64) << 21
+        | (job.priority as u64) << 29
+}
+
+/// Queue entry with the sort key AND requirements key inlined (the
+/// schedule pass must not hash into the jobs map per queued entry — that
+/// was the dominant cost of month-scale sims; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+struct QEntry {
+    prio: Priority,
+    arrival_s: f64,
+    id: JobId,
+    key: ReqKey,
+}
+
+impl QEntry {
+    /// Sort key: higher priority first, then FIFO by arrival, then id.
+    fn key_cmp(&self, other: &QEntry) -> std::cmp::Ordering {
+        other
+            .prio
+            .cmp(&self.prio)
+            .then(self.arrival_s.partial_cmp(&other.arrival_s).unwrap())
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+pub struct Scheduler {
+    pub policy: SchedulerPolicy,
+    /// Pending queue, kept sorted: higher priority first, then FIFO.
+    queue: Vec<QEntry>,
+    jobs: HashMap<JobId, Job>,
+    allocations: HashMap<JobId, Allocation>,
+    pub stats: SchedulerStats,
+    /// Reused buffer for the schedule pass (avoids a malloc + free per
+    /// pass; passes run on every fleet event).
+    scratch: Vec<QEntry>,
+    /// Earliest time the anti-thrash guard can unblock a victim search; a
+    /// clean scheduler still re-runs its pass once this time passes.
+    retry_at_s: f64,
+    /// Set when anything changed since the last pass (submissions, chips
+    /// freed, machine repairs, pod additions). A clean scheduler skips its
+    /// pass entirely — periodic ticks against an unchanged fleet would
+    /// otherwise rescan a possibly-long stuck queue for nothing.
+    dirty: bool,
+}
+
+impl Scheduler {
+    pub fn new(policy: SchedulerPolicy) -> Self {
+        Scheduler {
+            policy,
+            queue: Vec::new(),
+            jobs: HashMap::new(),
+            allocations: HashMap::new(),
+            stats: SchedulerStats::default(),
+            scratch: Vec::new(),
+            retry_at_s: f64::INFINITY,
+            dirty: true,
+        }
+    }
+
+    /// Tell the scheduler external fleet state changed (repair, new pods).
+    pub fn mark_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn allocation(&self, id: JobId) -> Option<&Allocation> {
+        self.allocations.get(&id)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn running_jobs(&self) -> impl Iterator<Item = (&JobId, &Allocation)> {
+        self.allocations.iter()
+    }
+
+    /// Enqueue a new job (or re-enqueue a preempted one — pass the same Job).
+    pub fn submit(&mut self, job: Job) {
+        let id = job.id;
+        self.jobs.insert(id, job);
+        self.enqueue(id);
+        self.dirty = true;
+    }
+
+    fn enqueue(&mut self, id: JobId) {
+        debug_assert!(!self.queue.iter().any(|e| e.id == id));
+        let job = &self.jobs[&id];
+        let entry = QEntry {
+            prio: job.priority,
+            arrival_s: job.arrival_s,
+            id,
+            key: req_key(job),
+        };
+        // Binary-search insertion keeps the queue sorted without hashing.
+        let pos = self.queue.partition_point(|e| e.key_cmp(&entry).is_lt());
+        self.queue.insert(pos, entry);
+    }
+
+    /// Remove a finished job entirely, releasing its chips.
+    pub fn complete(&mut self, fleet: &mut Fleet, id: JobId) {
+        if let Some(alloc) = self.allocations.remove(&id) {
+            release_slices(fleet, &alloc.slices, id);
+        }
+        self.queue.retain(|q| q.id != id);
+        self.jobs.remove(&id);
+        self.dirty = true;
+    }
+
+    /// Evict a running job (machine failure or preemption); it re-queues.
+    pub fn evict(&mut self, fleet: &mut Fleet, id: JobId) {
+        if let Some(alloc) = self.allocations.remove(&id) {
+            release_slices_lenient(fleet, &alloc.slices, id);
+            self.stats.preemptions += 1;
+            self.enqueue(id);
+            self.dirty = true;
+        }
+    }
+
+    /// One scheduling pass at time `now_s`: place as much of the queue as
+    /// possible, preempting where policy allows.
+    ///
+    /// Two hot-path guards keep month-scale simulations tractable (see
+    /// EXPERIMENTS.md §Perf): a same-requirements failure cache (if an
+    /// identical request already failed this pass against the same fleet
+    /// state, later ones will too), and a cap on victim searches per pass
+    /// (the expensive preemption planning runs for the head of the queue
+    /// only, like a real scheduler's bounded lookahead).
+    pub fn schedule(&mut self, fleet: &mut Fleet, now_s: f64) -> ScheduleOutcome {
+        let mut outcome = ScheduleOutcome::default();
+        if (!self.dirty && now_s < self.retry_at_s) || self.queue.is_empty() {
+            return outcome;
+        }
+        let mut remaining = std::mem::take(&mut self.scratch);
+        remaining.clear();
+        remaining.reserve(self.queue.len());
+        let queue = std::mem::take(&mut self.queue);
+        // Requirements keys that already failed against this fleet state.
+        // A short sorted vec beats a HashSet at the ~dozens of distinct
+        // keys a real queue has.
+        let mut failed: Vec<ReqKey> = Vec::new();
+        let mut victim_searches = 0u32;
+        // Earliest moment the anti-thrash guard could unblock a failed
+        // victim search: the passage of time alone can change the outcome
+        // then, so schedule a retry at that time even with no fleet event.
+        let mut retry_at = f64::INFINITY;
+
+        for entry in queue {
+            let id = entry.id;
+            let key = entry.key;
+            // Cheap rejection before touching the jobs map at all.
+            if failed.binary_search(&key).is_ok() {
+                self.stats.failed_placements += 1;
+                remaining.push(entry);
+                continue;
+            }
+            let job = self.jobs[&id].clone();
+            if let Some(slices) = self.try_place(fleet, &job) {
+                self.grant(fleet, &job, slices, now_s);
+                outcome.placed.push(id);
+                continue;
+            }
+            if self.policy.preemption
+                && job.priority > Priority::Batch
+                && victim_searches < 4
+            {
+                victim_searches += 1;
+                let (found, unblock) = self.find_victims(fleet, &job, now_s);
+                if found.is_none() {
+                    retry_at = retry_at.min(unblock);
+                    // Same-key requests won't find victims this pass either.
+                    if let Err(pos) = failed.binary_search(&key) {
+                        failed.insert(pos, key);
+                    }
+                    self.stats.failed_placements += 1;
+                    remaining.push(entry);
+                    continue;
+                }
+                if let Some(victims) = found {
+                    for v in &victims {
+                        self.evict(fleet, *v);
+                        // evict() re-enqueues into self.queue; drain it into
+                        // `remaining` so this pass stays a single sweep.
+                        self.queue.retain(|q| {
+                            if q.id == *v {
+                                remaining.push(*q);
+                                false
+                            } else {
+                                true
+                            }
+                        });
+                        outcome.preempted.push(*v);
+                    }
+                    let slices = self
+                        .try_place(fleet, &job)
+                        .expect("victims freed enough capacity");
+                    self.grant(fleet, &job, slices, now_s);
+                    outcome.placed.push(id);
+                    continue;
+                }
+            }
+            if let Err(pos) = failed.binary_search(&key) {
+                failed.insert(pos, key);
+            }
+            self.stats.failed_placements += 1;
+            remaining.push(entry);
+        }
+
+        // `remaining` preserves the sorted iteration order; a re-sort is
+        // only needed when evict() drained re-enqueued victims into it.
+        let drained_victims = !self.queue.is_empty();
+        remaining.extend(self.queue.drain(..));
+        if drained_victims {
+            remaining.sort_by(QEntry::key_cmp);
+            remaining.dedup_by_key(|e| e.id);
+        }
+        self.scratch = std::mem::replace(&mut self.queue, remaining);
+        // Placements/preemptions changed the fleet, but this pass already
+        // swept the entire queue against the post-change state. Only the
+        // anti-thrash guard can unblock with no further event; retry then.
+        self.retry_at_s = retry_at;
+        self.dirty = false;
+        outcome
+    }
+
+    fn grant(&mut self, fleet: &mut Fleet, job: &Job, slices: Vec<SliceId>, now_s: f64) {
+        for s in &slices {
+            fleet.pod_mut(s.pod).unwrap().claim(*s, job.id);
+        }
+        self.allocations.insert(job.id, Allocation { slices, since_s: now_s });
+        self.stats.placements += 1;
+    }
+
+    /// Find chips for `job` without modifying anything. Respects headroom
+    /// for non-critical jobs.
+    fn try_place(&self, fleet: &Fleet, job: &Job) -> Option<Vec<SliceId>> {
+        let cell = fleet.cell(job.gen)?;
+        if job.priority != Priority::Critical && self.policy.headroom_fraction > 0.0 {
+            let total = cell.total_chips() as f64;
+            let free = cell.free_chips() as f64;
+            let need = job.chips() as f64;
+            if free - need < total * self.policy.headroom_fraction {
+                return None;
+            }
+        }
+        if job.pods > 0 {
+            // Whole-pod request: take the emptiest-healthy pods.
+            let free_pods: Vec<PodId> = cell
+                .pods
+                .iter()
+                .filter(|p| p.is_empty_and_healthy())
+                .map(|p| p.id)
+                .collect();
+            if (free_pods.len() as u32) < job.pods {
+                return None;
+            }
+            Some(
+                free_pods[..job.pods as usize]
+                    .iter()
+                    .map(|&pod| {
+                        let p = fleet.pod(pod).unwrap();
+                        SliceId { pod, origin: [0, 0, 0], shape: p.shape }
+                    })
+                    .collect(),
+            )
+        } else {
+            // Sub-pod cuboid: best-fit across pods (fullest pod that still
+            // fits, to keep big holes intact for large jobs).
+            let mut pods: Vec<&crate::fleet::Pod> = cell.pods.iter().collect();
+            pods.sort_by_key(|p| (p.free_chips(), p.id));
+            for p in pods {
+                if p.free_chips() < job.chips() {
+                    continue;
+                }
+                if let Some(slice) = p.find_slice(job.slice_shape) {
+                    return Some(vec![slice]);
+                }
+            }
+            None
+        }
+    }
+
+    /// Greedy victim search: evict the cheapest (per-chip eviction cost)
+    /// strictly-lower-priority jobs in the job's cell until a hypothetical
+    /// placement exists. Returns (victims, earliest_unblock_s): None
+    /// victims if impossible or not worth it; the time is when the
+    /// anti-thrash guard next releases an excluded candidate (INFINITY if
+    /// none were excluded by freshness).
+    fn find_victims(
+        &self,
+        fleet: &Fleet,
+        job: &Job,
+        now_s: f64,
+    ) -> (Option<Vec<JobId>>, f64) {
+        let mut earliest_unblock = f64::INFINITY;
+        let mut candidates: Vec<(f64, JobId)> = self
+            .allocations
+            .iter()
+            .filter_map(|(&id, alloc)| {
+                let victim = &self.jobs[&id];
+                if victim.gen != job.gen || victim.priority >= job.priority {
+                    return None;
+                }
+                if now_s - alloc.since_s < self.policy.min_runtime_before_evict_s {
+                    earliest_unblock = earliest_unblock
+                        .min(alloc.since_s + self.policy.min_runtime_before_evict_s);
+                    return None;
+                }
+                // Per-chip restart cost, weighted by the paper's §5.3
+                // preemption preferences: evicting an XL job cascades
+                // (enormous restart + re-place cost) and evicting a small
+                // job barely helps (it finishes soon anyway, and freeing a
+                // few chips rarely unblocks anything) — so medium jobs are
+                // the preferred victims.
+                let size_weight = match victim.size_class() {
+                    crate::workload::SizeClass::Small => 4.0,
+                    crate::workload::SizeClass::Medium => 1.0,
+                    crate::workload::SizeClass::Large => 2.5,
+                    crate::workload::SizeClass::ExtraLarge => 50.0,
+                };
+                let cost = size_weight * victim.eviction_cost()
+                    / (victim.chips() as f64).powf(self.policy.victim_bias);
+                Some((cost, id))
+            })
+            .collect();
+        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        candidates.truncate(32); // bounded lookahead
+
+        // Simulate evictions on a scratch fleet (only the job's cell —
+        // placement never looks outside it).
+        let mut scratch = fleet.clone_cell(job.gen);
+        let mut victims = Vec::new();
+        for (_, id) in candidates {
+            if victims.len() >= 24 {
+                break; // cap cascade depth: mass eviction is never worth it
+            }
+            let alloc = &self.allocations[&id];
+            release_slices_lenient(&mut scratch, &alloc.slices, id);
+            victims.push(id);
+            if self.try_place(&scratch, job).is_some() {
+                return (Some(victims), earliest_unblock);
+            }
+        }
+        (None, earliest_unblock)
+    }
+
+    /// Defragmentation pass: try to migrate small sub-pod jobs out of the
+    /// emptiest pods so whole pods open up for Large/XL placement. Returns
+    /// migrated job ids. (Migration is modeled as evict+replace, which the
+    /// runtime layer charges a restart for — defrag isn't free.)
+    pub fn defrag(&mut self, fleet: &mut Fleet, now_s: f64, max_migrations: u32) -> Vec<JobId> {
+        let mut migrated = Vec::new();
+        for _ in 0..max_migrations {
+            let Some((job_id, target)) = self.find_defrag_move(fleet) else { break };
+            let alloc = self.allocations.remove(&job_id).unwrap();
+            release_slices(fleet, &alloc.slices, job_id);
+            for s in &target {
+                fleet.pod_mut(s.pod).unwrap().claim(*s, job_id);
+            }
+            self.allocations.insert(job_id, Allocation { slices: target, since_s: now_s });
+            self.stats.defrag_migrations += 1;
+            migrated.push(job_id);
+        }
+        migrated
+    }
+
+    /// Pick the move that most helps: the smallest job that is the sole
+    /// occupant blocking an otherwise-nearly-empty pod, if it fits in a
+    /// fuller pod of the same cell. Ties break by job id so the choice is
+    /// independent of HashMap iteration order (sim determinism).
+    fn find_defrag_move(&self, fleet: &Fleet) -> Option<(JobId, Vec<SliceId>)> {
+        let mut best: Option<(u32, JobId, Vec<SliceId>)> = None;
+        for (&id, alloc) in &self.allocations {
+            let job = &self.jobs[&id];
+            if job.pods > 0 || alloc.slices.len() != 1 {
+                continue;
+            }
+            let home = alloc.slices[0].pod;
+            let Some(home_pod) = fleet.pod(home) else { continue };
+            // Only worth moving if the home pod would become empty.
+            if home_pod.total_chips() - home_pod.free_chips() != job.chips() {
+                continue;
+            }
+            let cell = fleet.cell(job.gen)?;
+            let mut pods: Vec<&crate::fleet::Pod> = cell
+                .pods
+                .iter()
+                .filter(|p| p.id != home && p.free_chips() < p.total_chips())
+                .collect();
+            pods.sort_by_key(|p| (p.free_chips(), p.id));
+            for p in pods {
+                if let Some(slice) = p.find_slice(job.slice_shape) {
+                    let key = job.chips();
+                    if best.as_ref().map_or(true, |b| (key, id) < (b.0, b.1)) {
+                        best = Some((key, id, vec![slice]));
+                    }
+                    break;
+                }
+            }
+        }
+        best.map(|(_, id, slices)| (id, slices))
+    }
+
+    /// Sanity invariant (property-tested): every allocated slice's chips are
+    /// owned by exactly that job in the fleet, and no chip is double-owned.
+    pub fn check_invariants(&self, fleet: &Fleet) -> Result<(), String> {
+        let mut seen: HashMap<(PodId, [u32; 3]), JobId> = HashMap::new();
+        for (&id, alloc) in &self.allocations {
+            for s in &alloc.slices {
+                let pod = fleet.pod(s.pod).ok_or(format!("job {id}: missing pod {}", s.pod))?;
+                for z in s.origin[2]..s.origin[2] + s.shape[2] {
+                    for y in s.origin[1]..s.origin[1] + s.shape[1] {
+                        for x in s.origin[0]..s.origin[0] + s.shape[0] {
+                            let owner = pod.owner_at([x, y, z]);
+                            if owner != id {
+                                return Err(format!(
+                                    "job {id}: chip {:?} owned by {owner}",
+                                    [x, y, z]
+                                ));
+                            }
+                            if let Some(prev) = seen.insert((s.pod, [x, y, z]), id) {
+                                return Err(format!(
+                                    "chip {:?} double-allocated to {prev} and {id}",
+                                    [x, y, z]
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn release_slices(fleet: &mut Fleet, slices: &[SliceId], id: JobId) {
+    for s in slices {
+        fleet.pod_mut(s.pod).unwrap().release(*s, id);
+    }
+}
+
+/// Release that tolerates pods removed by decommissioning.
+fn release_slices_lenient(fleet: &mut Fleet, slices: &[SliceId], id: JobId) {
+    for s in slices {
+        if let Some(p) = fleet.pod_mut(s.pod) {
+            p.release(*s, id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::workload::{CheckpointPolicy, Framework, ModelArch, Phase, StepProfile};
+
+    fn mkjob(id: JobId, prio: Priority, slice: [u32; 3], pods: u32) -> Job {
+        Job {
+            id,
+            arrival_s: id as f64,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: prio,
+            gen: ChipGeneration::TpuC,
+            slice_shape: slice,
+            pods,
+            work_s: 7200.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.2,
+                host_fraction: 0.05,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 120.0,
+        }
+    }
+
+    fn fleet(pods: u32) -> Fleet {
+        let mut f = Fleet::new();
+        f.add_pods(ChipGeneration::TpuC, pods);
+        f
+    }
+
+    #[test]
+    fn places_queue_in_priority_order() {
+        let mut f = fleet(1); // one 64-chip pod
+        let mut s = Scheduler::new(SchedulerPolicy::default());
+        s.submit(mkjob(1, Priority::Batch, [4, 4, 4], 0)); // fills pod
+        s.submit(mkjob(2, Priority::Critical, [4, 4, 4], 0)); // also fills pod
+        let out = s.schedule(&mut f, 0.0);
+        // Critical must win the pod even though Batch arrived first.
+        assert_eq!(out.placed, vec![2]);
+        assert_eq!(s.queue_len(), 1);
+        s.check_invariants(&f).unwrap();
+    }
+
+    #[test]
+    fn preempts_lower_priority_when_needed() {
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy {
+            min_runtime_before_evict_s: 0.0,
+            ..Default::default()
+        });
+        s.submit(mkjob(1, Priority::Batch, [4, 4, 4], 0));
+        assert_eq!(s.schedule(&mut f, 0.0).placed, vec![1]);
+        s.submit(mkjob(2, Priority::Critical, [4, 4, 4], 0));
+        let out = s.schedule(&mut f, 100.0);
+        assert_eq!(out.placed, vec![2]);
+        assert_eq!(out.preempted, vec![1]);
+        assert!(s.allocation(2).is_some());
+        assert!(s.allocation(1).is_none());
+        assert_eq!(s.queue_len(), 1); // job 1 requeued
+        s.check_invariants(&f).unwrap();
+    }
+
+    #[test]
+    fn no_preemption_of_equal_or_higher_priority() {
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy {
+            min_runtime_before_evict_s: 0.0,
+            ..Default::default()
+        });
+        s.submit(mkjob(1, Priority::Prod, [4, 4, 4], 0));
+        s.schedule(&mut f, 0.0);
+        s.submit(mkjob(2, Priority::Prod, [4, 4, 4], 0));
+        let out = s.schedule(&mut f, 10.0);
+        assert!(out.placed.is_empty());
+        assert!(out.preempted.is_empty());
+    }
+
+    #[test]
+    fn anti_thrash_guard_blocks_fresh_evictions() {
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy {
+            min_runtime_before_evict_s: 1000.0,
+            ..Default::default()
+        });
+        s.submit(mkjob(1, Priority::Batch, [4, 4, 4], 0));
+        s.schedule(&mut f, 0.0);
+        s.submit(mkjob(2, Priority::Critical, [4, 4, 4], 0));
+        // At t=10 the batch job is too fresh to evict.
+        assert!(s.schedule(&mut f, 10.0).placed.is_empty());
+        // At t=2000 it is evictable.
+        assert_eq!(s.schedule(&mut f, 2000.0).placed, vec![2]);
+    }
+
+    #[test]
+    fn whole_pod_placement_needs_empty_pods() {
+        let mut f = fleet(3);
+        let mut s = Scheduler::new(SchedulerPolicy::default());
+        // A single chip in one pod blocks a 3-pod XL job.
+        s.submit(mkjob(1, Priority::Prod, [1, 1, 1], 0));
+        s.schedule(&mut f, 0.0);
+        s.submit(mkjob(2, Priority::Prod, [0, 0, 0], 3));
+        assert!(s.schedule(&mut f, 1.0).placed.is_empty());
+        // 2-pod job fits.
+        s.submit(mkjob(3, Priority::Prod, [0, 0, 0], 2));
+        assert_eq!(s.schedule(&mut f, 2.0).placed, vec![3]);
+        s.check_invariants(&f).unwrap();
+    }
+
+    #[test]
+    fn defrag_opens_whole_pod() {
+        let mut f = fleet(2);
+        let mut s = Scheduler::new(SchedulerPolicy::default());
+        // Filler (32 chips) lands in pod0; A (16) best-fits into pod0 too;
+        // B (48) only fits pod1. Completing the filler leaves A alone in
+        // pod0 and pod1 with 16 free — fragmentation defrag can fix.
+        s.submit(mkjob(1, Priority::Prod, [4, 4, 2], 0)); // filler, 32
+        s.schedule(&mut f, 0.0);
+        s.submit(mkjob(2, Priority::Prod, [4, 4, 1], 0)); // A, 16
+        s.schedule(&mut f, 0.0);
+        s.submit(mkjob(3, Priority::Prod, [4, 4, 3], 0)); // B, 48
+        s.schedule(&mut f, 0.0);
+        s.complete(&mut f, 1);
+        let pods_used: std::collections::HashSet<_> = s
+            .running_jobs()
+            .flat_map(|(_, a)| a.slices.iter().map(|sl| sl.pod))
+            .collect();
+        assert_eq!(pods_used.len(), 2, "A and B must start in different pods");
+        let migrated = s.defrag(&mut f, 100.0, 4);
+        assert_eq!(migrated, vec![2]);
+        let empty_pods = f
+            .cell(ChipGeneration::TpuC)
+            .unwrap()
+            .pods
+            .iter()
+            .filter(|p| p.free_chips() == p.total_chips())
+            .count();
+        assert_eq!(empty_pods, 1);
+        s.check_invariants(&f).unwrap();
+    }
+
+    #[test]
+    fn complete_releases_chips() {
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy::default());
+        s.submit(mkjob(1, Priority::Prod, [2, 2, 2], 0));
+        s.schedule(&mut f, 0.0);
+        assert_eq!(f.cell(ChipGeneration::TpuC).unwrap().free_chips(), 56);
+        s.complete(&mut f, 1);
+        assert_eq!(f.cell(ChipGeneration::TpuC).unwrap().free_chips(), 64);
+        assert!(s.job(1).is_none());
+    }
+
+    #[test]
+    fn headroom_blocks_batch_but_not_critical() {
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy {
+            headroom_fraction: 0.5,
+            ..Default::default()
+        });
+        s.submit(mkjob(1, Priority::Batch, [4, 4, 3], 0)); // 48 > 32 headroom
+        assert!(s.schedule(&mut f, 0.0).placed.is_empty());
+        s.submit(mkjob(2, Priority::Critical, [4, 4, 3], 0));
+        assert_eq!(s.schedule(&mut f, 1.0).placed, vec![2]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Scheduler layer (paper §3.2, §5.3): priority scheduling with topology
+//! matching, preemption, and defragmentation over the 3D-torus fleet.
+//!
+//! The placement problem is the paper's NP-hard bin-packing: each job
+//! requests a chip topology (sub-pod cuboid or whole pods) of a specific
+//! generation, and the scheduler must place it while minimizing
+//! fragmentation. The preemption policy encodes the §5.3 observations:
+//! evicting extra-large jobs causes cascading MPG damage (huge startup and
+//! restore overheads), and small jobs are cheap to replace — so the victim
+//! search prefers medium jobs, which is exactly what produces Fig. 16's
+//! U-shaped Scheduling Goodput by size class.
+
+pub mod core;
+
+pub use core::{Allocation, ScheduleOutcome, Scheduler, SchedulerPolicy, SchedulerStats};

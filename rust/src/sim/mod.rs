@@ -1,0 +1,12 @@
+//! Discrete-event fleet simulator: the substrate that stands in for the
+//! production fleet the paper measured (see DESIGN.md §Substitutions).
+//!
+//! Composes the fleet (pods/chips), the scheduler, the workload generator,
+//! the runtime-layer accounting model, the compiler stack, and failure
+//! injection, writing every classified chip-second into the MPG ledger.
+
+pub mod engine;
+pub mod scenario;
+
+pub use engine::{SimConfig, SimResult, Simulation};
+pub use scenario::{EraRule, EraSchedule};

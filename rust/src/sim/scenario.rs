@@ -1,0 +1,75 @@
+//! Scenario-time effects on the runtime layer (era rules) — e.g. the
+//! Fig. 15 bulk-inference regression when sharded-weight and expert models
+//! arrive mid-scenario.
+
+use crate::runtime_model::EraEffects;
+use crate::workload::Phase;
+
+/// One rule: during [t0, t1), jobs of `phase` (or all phases if None)
+/// experience multiplied runtime-layer costs.
+#[derive(Clone, Copy, Debug)]
+pub struct EraRule {
+    pub t0: f64,
+    pub t1: f64,
+    pub phase: Option<Phase>,
+    pub effects: EraEffects,
+}
+
+/// Ordered set of era rules; effects compose multiplicatively.
+#[derive(Clone, Debug, Default)]
+pub struct EraSchedule {
+    pub rules: Vec<EraRule>,
+}
+
+impl EraSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, rule: EraRule) -> &mut Self {
+        self.rules.push(rule);
+        self
+    }
+
+    pub fn effects_at(&self, t: f64, phase: Phase) -> EraEffects {
+        let mut out = EraEffects::default();
+        for r in &self.rules {
+            if t >= r.t0 && t < r.t1 && r.phase.map_or(true, |p| p == phase) {
+                out.stall_mult *= r.effects.stall_mult;
+                out.restore_mult *= r.effects.restore_mult;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rules_apply_in_window_and_phase() {
+        let mut s = EraSchedule::new();
+        s.add(EraRule {
+            t0: 100.0,
+            t1: 200.0,
+            phase: Some(Phase::BulkInference),
+            effects: EraEffects { stall_mult: 4.0, restore_mult: 3.0 },
+        });
+        let inside = s.effects_at(150.0, Phase::BulkInference);
+        assert_eq!(inside.stall_mult, 4.0);
+        let wrong_phase = s.effects_at(150.0, Phase::Training);
+        assert_eq!(wrong_phase.stall_mult, 1.0);
+        let outside = s.effects_at(250.0, Phase::BulkInference);
+        assert_eq!(outside.stall_mult, 1.0);
+    }
+
+    #[test]
+    fn overlapping_rules_compose() {
+        let mut s = EraSchedule::new();
+        let e = EraEffects { stall_mult: 2.0, restore_mult: 1.0 };
+        s.add(EraRule { t0: 0.0, t1: 100.0, phase: None, effects: e });
+        s.add(EraRule { t0: 50.0, t1: 100.0, phase: None, effects: e });
+        assert_eq!(s.effects_at(75.0, Phase::Serving).stall_mult, 4.0);
+    }
+}

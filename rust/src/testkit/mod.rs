@@ -1,0 +1,60 @@
+//! In-tree property-testing kit (the offline build has no proptest).
+//!
+//! `check(cases, seed, f)` runs `f` against `cases` independently seeded
+//! RNGs; on panic it re-raises with the failing case seed so the case can
+//! be replayed exactly (`check_one(seed, f)`). No shrinking — cases are
+//! kept small instead.
+
+use crate::util::Rng;
+
+/// Run `f` for `cases` random cases. Panics with the failing case's seed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, seed: u64, f: F) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(case_seed);
+            f(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed on case {case} (replay with check_one({case_seed:#x}, f)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_one<F: Fn(&mut Rng)>(case_seed: u64, f: F) {
+    let mut rng = Rng::new(case_seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, 1, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(50, 2, |rng| {
+                assert!(rng.below(10) != 3, "hit the forbidden value");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay with check_one"), "{msg}");
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal benchmark harness (the offline build has no criterion).
+//!
+//! `cargo bench` targets use `harness = false` and call `Bench::run`:
+//! warmup, N timed iterations, report min/median/mean. Output format is
+//! stable and greppable; figures benches also print their tables.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    pub warmup: u32,
+    pub iters: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub iters: u32,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        Bench { name: name.to_string(), warmup: 1, iters: 5 }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: u32) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Time `f` and print a criterion-style line. Returns timing stats.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            min_s: times[0],
+            median_s: times[times.len() / 2],
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            iters: self.iters,
+        };
+        println!(
+            "bench {:<40} time: [min {:>10} median {:>10} mean {:>10}] ({} iters)",
+            self.name,
+            fmt_dur(res.min_s),
+            fmt_dur(res.median_s),
+            fmt_dur(res.mean_s),
+            res.iters
+        );
+        res
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop").iters(3).run(|| 1 + 1);
+        assert!(r.min_s >= 0.0);
+        assert!(r.median_s >= r.min_s);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_dur(5e-9).contains("ns"));
+        assert!(fmt_dur(5e-5).contains("µs"));
+        assert!(fmt_dur(5e-2).contains("ms"));
+        assert!(fmt_dur(5.0).contains(" s"));
+    }
+}

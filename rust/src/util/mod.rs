@@ -1,0 +1,10 @@
+//! In-tree utility substrates (the offline build has no tokio/clap/serde/
+//! rand/criterion — these modules replace the slices of them we need).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

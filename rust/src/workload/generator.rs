@@ -1,0 +1,371 @@
+//! Workload generator: Poisson arrivals with drifting population mixes.
+//!
+//! The paper's Fig. 4 (job-size drift toward extra-large) and Fig. 6
+//! (Pathways adoption) are population-shift phenomena. `MixDrift` linearly
+//! interpolates categorical weights over the scenario, so a year-long run
+//! reproduces the same monotone share curves; everything is seeded and
+//! deterministic.
+
+use crate::fleet::ChipGeneration;
+use crate::util::Rng;
+
+use super::job::{
+    CheckpointPolicy, Framework, Job, JobId, ModelArch, Phase, Priority, SizeClass,
+    StepProfile,
+};
+
+/// Categorical weights that drift linearly from `start` to `end` over the
+/// scenario duration.
+#[derive(Clone, Debug)]
+pub struct MixDrift<const N: usize> {
+    pub start: [f64; N],
+    pub end: [f64; N],
+}
+
+impl<const N: usize> MixDrift<N> {
+    pub fn constant(w: [f64; N]) -> Self {
+        MixDrift { start: w, end: w }
+    }
+
+    /// Interpolated weights at progress `t` in [0, 1].
+    pub fn at(&self, t: f64) -> [f64; N] {
+        let t = t.clamp(0.0, 1.0);
+        let mut w = [0.0; N];
+        for i in 0..N {
+            w[i] = self.start[i] + (self.end[i] - self.start[i]) * t;
+        }
+        w
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub seed: u64,
+    /// Mean job arrivals per hour.
+    pub arrivals_per_hour: f64,
+    /// Scenario length in seconds (drift denominator).
+    pub duration_s: f64,
+    /// Size-class mix drift (Fig. 4: XL share grows).
+    pub size_mix: MixDrift<4>,
+    /// Framework mix drift (Fig. 6: Pathways adoption).
+    pub framework_mix: MixDrift<3>,
+    /// Phase mix drift (training / serving / bulk-inference).
+    pub phase_mix: MixDrift<3>,
+    /// Architecture mix drift.
+    pub arch_mix: MixDrift<4>,
+    /// Generations jobs may request, with weights (no drift: hardware
+    /// targeting shifts come from the evolution model instead).
+    pub gen_mix: Vec<(ChipGeneration, f64)>,
+    /// Fraction of jobs using async checkpointing (RG optimization knob;
+    /// can be swept by the Fig. 14 scenario).
+    pub async_ckpt_fraction: f64,
+    /// Whole-pod count range for ExtraLarge jobs (inclusive). Scenarios
+    /// with small cells lower the max so XL requests stay feasible.
+    pub xl_pods: (u32, u32),
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            seed: 0x7EE7,
+            arrivals_per_hour: 40.0,
+            duration_s: 30.0 * 24.0 * 3600.0,
+            // Fig. 4 defaults: XL share triples over the scenario.
+            size_mix: MixDrift { start: [0.45, 0.33, 0.15, 0.07], end: [0.30, 0.28, 0.20, 0.22] },
+            // Fig. 6 defaults: Pathways 15% -> 65%.
+            framework_mix: MixDrift { start: [0.15, 0.45, 0.40], end: [0.65, 0.20, 0.15] },
+            phase_mix: MixDrift::constant([0.55, 0.25, 0.20]),
+            arch_mix: MixDrift::constant([0.45, 0.15, 0.25, 0.15]),
+            gen_mix: vec![
+                (ChipGeneration::TpuB, 0.3),
+                (ChipGeneration::TpuC, 0.5),
+                (ChipGeneration::TpuD, 0.2),
+            ],
+            async_ckpt_fraction: 0.3,
+            xl_pods: (5, 16),
+        }
+    }
+}
+
+pub struct WorkloadGenerator {
+    cfg: GeneratorConfig,
+    rng: Rng,
+    next_id: JobId,
+    clock_s: f64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(cfg: GeneratorConfig) -> Self {
+        let rng = Rng::new(cfg.seed);
+        WorkloadGenerator { cfg, rng, next_id: 1, clock_s: 0.0 }
+    }
+
+    /// Generate the full arrival trace for the configured duration.
+    pub fn trace(&mut self) -> Vec<Job> {
+        let mut out = Vec::new();
+        while let Some(job) = self.next_job() {
+            out.push(job);
+        }
+        out
+    }
+
+    /// Next arrival, or None once past the scenario duration.
+    pub fn next_job(&mut self) -> Option<Job> {
+        let rate_per_s = self.cfg.arrivals_per_hour / 3600.0;
+        self.clock_s += self.rng.exponential(rate_per_s);
+        if self.clock_s >= self.cfg.duration_s {
+            return None;
+        }
+        Some(self.job_at(self.clock_s))
+    }
+
+    /// Sample one job at absolute time `t_s` (mixes evaluated at t/duration).
+    pub fn job_at(&mut self, t_s: f64) -> Job {
+        let t = t_s / self.cfg.duration_s;
+        let id = self.next_id;
+        self.next_id += 1;
+
+        let size = SizeClass::ALL[self.rng.weighted(&self.cfg.size_mix.at(t))];
+        let framework = Framework::ALL[self.rng.weighted(&self.cfg.framework_mix.at(t))];
+        let phase = Phase::ALL[self.rng.weighted(&self.cfg.phase_mix.at(t))];
+        let arch = ModelArch::ALL[self.rng.weighted(&self.cfg.arch_mix.at(t))];
+        let gw: Vec<f64> = self.cfg.gen_mix.iter().map(|&(_, w)| w).collect();
+        let gen = self.cfg.gen_mix[self.rng.weighted(&gw)].0;
+
+        let (slice_shape, pods) = self.sample_topology(size, gen);
+        let mut priority = match phase {
+            Phase::Serving => Priority::Critical,
+            Phase::Training => {
+                if self.rng.chance(0.7) {
+                    Priority::Prod
+                } else {
+                    Priority::Batch
+                }
+            }
+            Phase::BulkInference => Priority::Batch,
+        };
+        // Multipod jobs run under capacity reservations (the paper's
+        // scheduler both places them ahead of the queue and avoids evicting
+        // them — churn on an XL job cascades through MPG, §5.3).
+        if size == SizeClass::ExtraLarge {
+            priority = Priority::Critical;
+        }
+
+        // Work requirement: log-normal hours, larger jobs run longer.
+        let size_factor = match size {
+            SizeClass::Small => 0.0,
+            SizeClass::Medium => 0.5,
+            SizeClass::Large => 1.1,
+            SizeClass::ExtraLarge => 1.8,
+        };
+        let work_hours = self.rng.log_normal(0.6 + size_factor, 0.9).clamp(0.05, 24.0 * 14.0);
+        let work_s = work_hours * 3600.0;
+
+        let step = self.sample_step_profile(arch, phase);
+        let ckpt = if self.rng.chance(self.cfg.async_ckpt_fraction) {
+            CheckpointPolicy::asynchronous()
+        } else {
+            CheckpointPolicy::synchronous()
+        };
+        // Startup: base program-load plus compile; scales with job size
+        // (more hosts to coordinate), lower with Pathways AOT compile cache.
+        let chips = if pods > 0 { pods * gen.spec().chips_per_pod() } else {
+            slice_shape.iter().product()
+        };
+        let mut startup_s = 60.0 + 25.0 * (chips as f64).sqrt() * self.rng.range_f64(0.7, 1.3);
+        if framework.is_pathways() {
+            startup_s *= 0.6; // compile-cache + single-client startup
+        }
+
+        Job {
+            id,
+            arrival_s: t_s,
+            phase,
+            framework,
+            arch,
+            priority,
+            gen,
+            slice_shape,
+            pods,
+            work_s,
+            step,
+            ckpt,
+            startup_s,
+        }
+    }
+
+    fn sample_topology(&mut self, size: SizeClass, gen: ChipGeneration) -> ([u32; 3], u32) {
+        let pod = gen.spec().pod_shape;
+        match size {
+            SizeClass::Small => {
+                // 1..8 chips in a small cuboid.
+                let shapes: [[u32; 3]; 4] = [[1, 1, 1], [2, 1, 1], [2, 2, 1], [2, 2, 2]];
+                (shapes[self.rng.below(4) as usize], 0)
+            }
+            SizeClass::Medium => {
+                // Sub-pod cuboid, 9..chips_per_pod chips.
+                let candidates: Vec<[u32; 3]> = medium_shapes(pod);
+                (candidates[self.rng.below(candidates.len() as u64) as usize], 0)
+            }
+            SizeClass::Large => ([0, 0, 0], self.rng.range_u64(1, 4) as u32),
+            SizeClass::ExtraLarge => {
+                let (lo, hi) = self.cfg.xl_pods;
+                ([0, 0, 0], self.rng.range_u64(lo as u64, hi as u64) as u32)
+            }
+        }
+    }
+
+    fn sample_step_profile(&mut self, arch: ModelArch, phase: Phase) -> StepProfile {
+        // Per-arch characteristics (paper §5.1: many high-cost workloads are
+        // communication-bound; recommenders are host/input-bound).
+        let (eff_lo, eff_hi, comm, host) = match arch {
+            ModelArch::Transformer => (0.35, 0.62, 0.25, 0.05),
+            ModelArch::MoE => (0.30, 0.50, 0.45, 0.05),
+            ModelArch::Recommender => (0.20, 0.40, 0.15, 0.30),
+            ModelArch::Vision => (0.40, 0.65, 0.10, 0.12),
+        };
+        let phase_scale = match phase {
+            Phase::Training => 1.0,
+            Phase::Serving => 0.3,       // small batched steps
+            Phase::BulkInference => 0.7, // forward-only
+        };
+        StepProfile {
+            ideal_flops_per_chip: self.rng.log_normal(27.0, 0.8) * phase_scale,
+            base_efficiency: self.rng.range_f64(eff_lo, eff_hi),
+            comm_fraction: (comm * self.rng.range_f64(0.6, 1.4)).min(0.7),
+            host_fraction: (host * self.rng.range_f64(0.5, 1.5)).min(0.6),
+        }
+    }
+}
+
+/// All sub-pod cuboids with more than 8 chips (the Medium bucket) that fit
+/// strictly inside `pod` (at least one axis smaller).
+fn medium_shapes(pod: [u32; 3]) -> Vec<[u32; 3]> {
+    let mut out = Vec::new();
+    let divisors = |n: u32| (1..=n).filter(move |d| n % d == 0);
+    for x in divisors(pod[0]) {
+        for y in divisors(pod[1]) {
+            for z in divisors(pod[2]) {
+                let chips = x * y * z;
+                let whole = chips == pod[0] * pod[1] * pod[2];
+                if chips > 8 && !whole {
+                    out.push([x, y, z]);
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push([pod[0], pod[1], 1]); // degenerate small pods
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_trace_given_seed() {
+        let cfg = GeneratorConfig { duration_s: 3.0 * 24.0 * 3600.0, ..Default::default() };
+        let a = WorkloadGenerator::new(cfg.clone()).trace();
+        let b = WorkloadGenerator::new(cfg).trace();
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.chips(), y.chips());
+            assert_eq!(x.framework, y.framework);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let cfg = GeneratorConfig {
+            arrivals_per_hour: 60.0,
+            duration_s: 10.0 * 24.0 * 3600.0,
+            ..Default::default()
+        };
+        let trace = WorkloadGenerator::new(cfg).trace();
+        let expected = 60.0 * 10.0 * 24.0;
+        let got = trace.len() as f64;
+        assert!((got - expected).abs() < expected * 0.1, "{got} vs {expected}");
+    }
+
+    #[test]
+    fn arrivals_are_sorted_and_within_duration() {
+        let cfg = GeneratorConfig { duration_s: 86400.0, ..Default::default() };
+        let trace = WorkloadGenerator::new(cfg).trace();
+        for w in trace.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+        assert!(trace.iter().all(|j| j.arrival_s < 86400.0));
+    }
+
+    #[test]
+    fn size_drift_grows_xl_share() {
+        // Fig. 4's core claim, on the generator itself.
+        let cfg = GeneratorConfig {
+            arrivals_per_hour: 200.0,
+            duration_s: 60.0 * 24.0 * 3600.0,
+            ..Default::default()
+        };
+        let trace = WorkloadGenerator::new(cfg.clone()).trace();
+        let half = cfg.duration_s / 2.0;
+        let share = |pred: &dyn Fn(&Job) -> bool| {
+            let (mut early, mut late, mut ne, mut nl) = (0.0, 0.0, 0.0, 0.0);
+            for j in &trace {
+                if j.arrival_s < half {
+                    ne += 1.0;
+                    if pred(j) {
+                        early += 1.0;
+                    }
+                } else {
+                    nl += 1.0;
+                    if pred(j) {
+                        late += 1.0;
+                    }
+                }
+            }
+            (early / ne, late / nl)
+        };
+        let (xl_early, xl_late) = share(&|j| j.size_class() == SizeClass::ExtraLarge);
+        assert!(xl_late > xl_early * 1.5, "{xl_early} -> {xl_late}");
+        let (pw_early, pw_late) = share(&|j| j.framework.is_pathways());
+        assert!(pw_late > pw_early * 1.5, "{pw_early} -> {pw_late}");
+    }
+
+    #[test]
+    fn medium_shapes_fit_inside_pod() {
+        for pod in [[4, 4, 4], [8, 4, 2], [8, 4, 4]] {
+            for s in medium_shapes(pod) {
+                assert!(s[0] <= pod[0] && s[1] <= pod[1] && s[2] <= pod[2], "{s:?}");
+                assert!(s.iter().product::<u32>() > 8);
+            }
+        }
+    }
+
+    #[test]
+    fn serving_jobs_are_critical_priority() {
+        let cfg = GeneratorConfig {
+            phase_mix: MixDrift::constant([0.0, 1.0, 0.0]),
+            duration_s: 86400.0,
+            ..Default::default()
+        };
+        let trace = WorkloadGenerator::new(cfg).trace();
+        assert!(!trace.is_empty());
+        assert!(trace.iter().all(|j| j.priority == Priority::Critical));
+    }
+
+    #[test]
+    fn step_profiles_in_valid_ranges() {
+        let cfg = GeneratorConfig { duration_s: 5.0 * 86400.0, ..Default::default() };
+        for j in WorkloadGenerator::new(cfg).trace() {
+            assert!(j.step.base_efficiency > 0.0 && j.step.base_efficiency < 1.0);
+            assert!(j.step.comm_fraction >= 0.0 && j.step.comm_fraction <= 0.7);
+            assert!(j.step.host_fraction >= 0.0 && j.step.host_fraction <= 0.6);
+            assert!(j.work_s > 0.0);
+            assert!(j.startup_s > 0.0);
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! Job model: everything the scheduler, runtime layer, and MPG accounting
+//! need to know about one workload.
+
+use crate::fleet::ChipGeneration;
+
+pub type JobId = u64;
+
+/// ML-lifecycle phase (paper §3.5 / Fig. 15 segmentation axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Training,
+    Serving,
+    BulkInference,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 3] = [Phase::Training, Phase::Serving, Phase::BulkInference];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Training => "training",
+            Phase::Serving => "serving",
+            Phase::BulkInference => "bulk-inference",
+        }
+    }
+}
+
+/// Framework/runtime stack (paper §3.4 / Fig. 6 / Fig. 14 segmentation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Framework {
+    /// JAX on the Pathways single-client runtime (sharded dataflow,
+    /// asynchronous dispatch) — the stack the paper reports growing RG for.
+    JaxPathways,
+    /// JAX multi-client (one client per host, bulk-synchronous).
+    JaxMultiClient,
+    /// TensorFlow multi-client (TF1-style in-graph or TF2 DistStrategy).
+    TfMultiClient,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 3] =
+        [Framework::JaxPathways, Framework::JaxMultiClient, Framework::TfMultiClient];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::JaxPathways => "jax-pathways",
+            Framework::JaxMultiClient => "jax-multiclient",
+            Framework::TfMultiClient => "tf-multiclient",
+        }
+    }
+
+    pub fn is_pathways(self) -> bool {
+        matches!(self, Framework::JaxPathways)
+    }
+}
+
+/// Model architecture class — drives the step profile (compute- vs
+/// communication-bound) and which compiler passes help (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelArch {
+    /// Dense transformer LM.
+    Transformer,
+    /// Mixture-of-experts (communication-heavy all-to-all).
+    MoE,
+    /// Embedding-dominated recommender (SparseCore-style workloads).
+    Recommender,
+    /// Convolutional vision model.
+    Vision,
+}
+
+impl ModelArch {
+    pub const ALL: [ModelArch; 4] =
+        [ModelArch::Transformer, ModelArch::MoE, ModelArch::Recommender, ModelArch::Vision];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelArch::Transformer => "transformer",
+            ModelArch::MoE => "moe",
+            ModelArch::Recommender => "recommender",
+            ModelArch::Vision => "vision",
+        }
+    }
+}
+
+/// Paper Fig. 4 size buckets, by requested chip count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SizeClass {
+    Small,      // 1..=8 chips
+    Medium,     // 9..=64 chips (within one pod)
+    Large,      // 1..=4 whole pods
+    ExtraLarge, // >4 pods (multipod)
+}
+
+impl SizeClass {
+    pub const ALL: [SizeClass; 4] =
+        [SizeClass::Small, SizeClass::Medium, SizeClass::Large, SizeClass::ExtraLarge];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SizeClass::Small => "small",
+            SizeClass::Medium => "medium",
+            SizeClass::Large => "large",
+            SizeClass::ExtraLarge => "extra-large",
+        }
+    }
+}
+
+/// Borg-style priority bands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Priority {
+    /// Preemptible batch work.
+    Batch = 0,
+    /// Standard production.
+    Prod = 1,
+    /// Latency-critical serving; effectively never evicted.
+    Critical = 2,
+}
+
+/// Checkpointing behaviour (Runtime Goodput lever, §5.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Seconds of progress between checkpoints.
+    pub interval_s: f64,
+    /// Seconds the accelerators stall per checkpoint write (synchronous
+    /// cost; ~0 when async checkpointing is enabled).
+    pub write_stall_s: f64,
+    /// Seconds to restore from a checkpoint at (re)start.
+    pub restore_s: f64,
+}
+
+impl CheckpointPolicy {
+    pub fn synchronous() -> Self {
+        CheckpointPolicy { interval_s: 900.0, write_stall_s: 45.0, restore_s: 60.0 }
+    }
+
+    /// Asynchronous checkpointing: the snapshot is staged to host memory and
+    /// drained in the background (Maurya et al. / DeepFreeze-style), so the
+    /// accelerator stall is tiny.
+    pub fn asynchronous() -> Self {
+        CheckpointPolicy { interval_s: 900.0, write_stall_s: 2.0, restore_s: 60.0 }
+    }
+}
+
+/// Per-step compute profile — what Program Goodput measures against.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepProfile {
+    /// Useful FLOPs per step per chip, from the *unoptimized* HLO graph
+    /// (the paper's compiler-decision-agnostic ideal, §4.3).
+    pub ideal_flops_per_chip: f64,
+    /// Fraction of peak actually achieved by generated code before any
+    /// fleet-level compiler passes are applied (program quality).
+    pub base_efficiency: f64,
+    /// Fraction of the step on the critical path that is communication
+    /// (exposed, i.e. not overlapped). Comm-bound jobs benefit from the
+    /// §5.1 overlap pass.
+    pub comm_fraction: f64,
+    /// Fraction of the step that is host-side (input pipeline etc.);
+    /// host-bound jobs don't speed up from device compiler wins (Table 2).
+    pub host_fraction: f64,
+}
+
+impl StepProfile {
+    /// Actual step seconds on `gen` given the current efficiency
+    /// multipliers (compiler passes, software maturity).
+    pub fn step_seconds(
+        &self,
+        gen: ChipGeneration,
+        efficiency_multiplier: f64,
+        comm_multiplier: f64,
+    ) -> f64 {
+        let spec = gen.spec();
+        let ideal = spec.ideal_seconds_bf16(self.ideal_flops_per_chip);
+        let eff = (self.base_efficiency * efficiency_multiplier).clamp(0.01, 1.0);
+        let device_compute = ideal / eff;
+        let comm = device_compute * self.comm_fraction * comm_multiplier
+            / (1.0 - self.comm_fraction).max(0.05);
+        let device = device_compute + comm;
+        // Host work overlaps partially; the exposed part extends the step.
+        let host = device * self.host_fraction / (1.0 - self.host_fraction).max(0.05);
+        device + host
+    }
+
+    /// Ideal step seconds (roofline numerator) on `gen`.
+    pub fn ideal_seconds(&self, gen: ChipGeneration) -> f64 {
+        gen.spec().ideal_seconds_bf16(self.ideal_flops_per_chip)
+    }
+}
+
+/// A workload submitted to the fleet.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    /// Simulation second of submission.
+    pub arrival_s: f64,
+    pub phase: Phase,
+    pub framework: Framework,
+    pub arch: ModelArch,
+    pub priority: Priority,
+    /// Requested accelerator generation.
+    pub gen: ChipGeneration,
+    /// Requested topology. `pods = 0`: sub-pod cuboid `slice_shape`.
+    /// `pods > 0`: that many whole pods (Large / ExtraLarge jobs).
+    pub slice_shape: [u32; 3],
+    pub pods: u32,
+    /// Productive chip-seconds of work to complete (training/bulk-inference)
+    /// or wall-clock lifetime (serving).
+    pub work_s: f64,
+    pub step: StepProfile,
+    pub ckpt: CheckpointPolicy,
+    /// Runtime-layer startup cost before the first step after every
+    /// (re)scheduling: program load + compile (or compile-cache hit).
+    pub startup_s: f64,
+}
+
+impl Job {
+    pub fn chips(&self) -> u32 {
+        if self.pods > 0 {
+            self.pods * self.gen.spec().chips_per_pod()
+        } else {
+            self.slice_shape.iter().product()
+        }
+    }
+
+    pub fn size_class(&self) -> SizeClass {
+        let chips = self.chips();
+        let per_pod = self.gen.spec().chips_per_pod();
+        if self.pods > 4 {
+            SizeClass::ExtraLarge
+        } else if self.pods >= 1 || chips > per_pod {
+            SizeClass::Large
+        } else if chips > 8 {
+            SizeClass::Medium
+        } else {
+            SizeClass::Small
+        }
+    }
+
+    /// Eviction cost heuristic the scheduler minimizes (§5.3): large jobs
+    /// have enormous restart overhead (startup + checkpoint restore +
+    /// expected lost work), so evicting them cascades; prefer medium.
+    pub fn eviction_cost(&self) -> f64 {
+        let restart = self.startup_s + self.ckpt.restore_s + self.ckpt.interval_s / 2.0;
+        restart * self.chips() as f64 * (1.0 + self.priority as u32 as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(slice: [u32; 3], pods: u32) -> Job {
+        Job {
+            id: 1,
+            arrival_s: 0.0,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC, // 64-chip pods
+            slice_shape: slice,
+            pods,
+            work_s: 3600.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.2,
+                host_fraction: 0.05,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 300.0,
+        }
+    }
+
+    #[test]
+    fn size_classes_match_paper_buckets() {
+        assert_eq!(job([1, 1, 1], 0).size_class(), SizeClass::Small);
+        assert_eq!(job([2, 2, 2], 0).size_class(), SizeClass::Small);
+        assert_eq!(job([4, 4, 2], 0).size_class(), SizeClass::Medium);
+        assert_eq!(job([0, 0, 0], 2).size_class(), SizeClass::Large);
+        assert_eq!(job([0, 0, 0], 8).size_class(), SizeClass::ExtraLarge);
+    }
+
+    #[test]
+    fn chips_counts_pods() {
+        assert_eq!(job([0, 0, 0], 2).chips(), 128);
+        assert_eq!(job([4, 2, 1], 0).chips(), 8);
+    }
+
+    #[test]
+    fn step_time_decreases_with_efficiency() {
+        let j = job([4, 4, 4], 0);
+        let slow = j.step.step_seconds(j.gen, 1.0, 1.0);
+        let fast = j.step.step_seconds(j.gen, 1.3, 1.0);
+        assert!(fast < slow);
+        // And overlap (comm multiplier < 1) helps too.
+        let overlapped = j.step.step_seconds(j.gen, 1.0, 0.4);
+        assert!(overlapped < slow);
+    }
+
+    #[test]
+    fn ideal_below_actual_always() {
+        let j = job([4, 4, 4], 0);
+        assert!(j.step.ideal_seconds(j.gen) < j.step.step_seconds(j.gen, 1.0, 1.0));
+    }
+
+    #[test]
+    fn eviction_cost_scales_with_size() {
+        let small = job([1, 1, 1], 0);
+        let xl = job([0, 0, 0], 8);
+        assert!(xl.eviction_cost() > 100.0 * small.eviction_cost());
+    }
+}

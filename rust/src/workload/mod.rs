@@ -1,0 +1,14 @@
+//! Workload layer (paper §3.5): job specifications, the ML-lifecycle phases
+//! (training / real-time serving / bulk inference), framework/runtime
+//! choices, and generators with distribution drift for the Fig. 4 / Fig. 6
+//! population-shift studies.
+
+pub mod generator;
+pub mod job;
+pub mod trace;
+
+pub use generator::{GeneratorConfig, MixDrift, WorkloadGenerator};
+pub use job::{
+    CheckpointPolicy, Framework, Job, JobId, ModelArch, Phase, Priority, SizeClass,
+    StepProfile,
+};

@@ -1,0 +1,255 @@
+//! Workload trace serialization: export generated (or captured) job
+//! arrival traces to JSON and replay them through the simulator.
+//!
+//! Traces make experiments portable and diffable — the same trace can be
+//! replayed against different scheduler policies / runtime configurations
+//! (the §5 playbook's controlled-comparison workflow), and regression
+//! traces can be checked into a repo. Format: a versioned JSON object with
+//! one record per job; field names are stable API.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fleet::ChipGeneration;
+use crate::util::Json;
+
+use super::job::{CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile};
+
+pub const TRACE_VERSION: u64 = 1;
+
+/// Serialize jobs to the versioned JSON trace format.
+pub fn to_json(jobs: &[Job]) -> Json {
+    let records: Vec<Json> = jobs.iter().map(job_to_json).collect();
+    Json::obj(vec![
+        ("version", Json::num(TRACE_VERSION as f64)),
+        ("job_count", Json::num(jobs.len() as f64)),
+        ("jobs", Json::Arr(records)),
+    ])
+}
+
+/// Parse a trace back into jobs. Rejects unknown versions and malformed
+/// records with positional context.
+pub fn from_json(j: &Json) -> Result<Vec<Job>> {
+    let version = j.get("version").as_u64().ok_or_else(|| anyhow!("missing version"))?;
+    if version != TRACE_VERSION {
+        bail!("unsupported trace version {version} (supported: {TRACE_VERSION})");
+    }
+    let jobs_json = j.get("jobs").as_arr().ok_or_else(|| anyhow!("missing jobs"))?;
+    let mut jobs = Vec::with_capacity(jobs_json.len());
+    for (i, rec) in jobs_json.iter().enumerate() {
+        jobs.push(job_from_json(rec).map_err(|e| anyhow!("job[{i}]: {e}"))?);
+    }
+    Ok(jobs)
+}
+
+pub fn save(jobs: &[Job], path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(jobs).to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<Job>> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    from_json(&j)
+}
+
+fn job_to_json(job: &Job) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(job.id as f64)),
+        ("arrival_s", Json::num(job.arrival_s)),
+        ("phase", Json::str(job.phase.name())),
+        ("framework", Json::str(job.framework.name())),
+        ("arch", Json::str(job.arch.name())),
+        ("priority", Json::str(priority_name(job.priority))),
+        ("gen", Json::str(job.gen.name())),
+        (
+            "slice_shape",
+            Json::arr(job.slice_shape.iter().map(|&d| Json::num(d as f64))),
+        ),
+        ("pods", Json::num(job.pods as f64)),
+        ("work_s", Json::num(job.work_s)),
+        ("startup_s", Json::num(job.startup_s)),
+        (
+            "step",
+            Json::obj(vec![
+                ("ideal_flops_per_chip", Json::num(job.step.ideal_flops_per_chip)),
+                ("base_efficiency", Json::num(job.step.base_efficiency)),
+                ("comm_fraction", Json::num(job.step.comm_fraction)),
+                ("host_fraction", Json::num(job.step.host_fraction)),
+            ]),
+        ),
+        (
+            "ckpt",
+            Json::obj(vec![
+                ("interval_s", Json::num(job.ckpt.interval_s)),
+                ("write_stall_s", Json::num(job.ckpt.write_stall_s)),
+                ("restore_s", Json::num(job.ckpt.restore_s)),
+            ]),
+        ),
+    ])
+}
+
+fn job_from_json(j: &Json) -> Result<Job> {
+    let f64_of = |key: &str| -> Result<f64> {
+        j.get(key).as_f64().ok_or_else(|| anyhow!("missing {key}"))
+    };
+    let str_of = |key: &str| -> Result<&str> {
+        j.get(key).as_str().ok_or_else(|| anyhow!("missing {key}"))
+    };
+    let shape_json = j.get("slice_shape").as_arr().ok_or_else(|| anyhow!("missing slice_shape"))?;
+    if shape_json.len() != 3 {
+        bail!("slice_shape must have 3 dims");
+    }
+    let mut slice_shape = [0u32; 3];
+    for (i, d) in shape_json.iter().enumerate() {
+        slice_shape[i] = d.as_u64().ok_or_else(|| anyhow!("bad dim"))? as u32;
+    }
+    let step = j.get("step");
+    let ckpt = j.get("ckpt");
+    let sub_f64 = |obj: &Json, key: &str| -> Result<f64> {
+        obj.get(key).as_f64().ok_or_else(|| anyhow!("missing step/ckpt {key}"))
+    };
+    Ok(Job {
+        id: f64_of("id")? as u64,
+        arrival_s: f64_of("arrival_s")?,
+        phase: phase_from(str_of("phase")?)?,
+        framework: framework_from(str_of("framework")?)?,
+        arch: arch_from(str_of("arch")?)?,
+        priority: priority_from(str_of("priority")?)?,
+        gen: ChipGeneration::from_name(str_of("gen")?)
+            .ok_or_else(|| anyhow!("unknown gen"))?,
+        slice_shape,
+        pods: f64_of("pods")? as u32,
+        work_s: f64_of("work_s")?,
+        startup_s: f64_of("startup_s")?,
+        step: StepProfile {
+            ideal_flops_per_chip: sub_f64(step, "ideal_flops_per_chip")?,
+            base_efficiency: sub_f64(step, "base_efficiency")?,
+            comm_fraction: sub_f64(step, "comm_fraction")?,
+            host_fraction: sub_f64(step, "host_fraction")?,
+        },
+        ckpt: CheckpointPolicy {
+            interval_s: sub_f64(ckpt, "interval_s")?,
+            write_stall_s: sub_f64(ckpt, "write_stall_s")?,
+            restore_s: sub_f64(ckpt, "restore_s")?,
+        },
+    })
+}
+
+fn priority_name(p: Priority) -> &'static str {
+    match p {
+        Priority::Batch => "batch",
+        Priority::Prod => "prod",
+        Priority::Critical => "critical",
+    }
+}
+
+fn priority_from(s: &str) -> Result<Priority> {
+    Ok(match s {
+        "batch" => Priority::Batch,
+        "prod" => Priority::Prod,
+        "critical" => Priority::Critical,
+        other => bail!("unknown priority: {other}"),
+    })
+}
+
+fn phase_from(s: &str) -> Result<Phase> {
+    Phase::ALL
+        .iter()
+        .copied()
+        .find(|p| p.name() == s)
+        .ok_or_else(|| anyhow!("unknown phase: {s}"))
+}
+
+fn framework_from(s: &str) -> Result<Framework> {
+    Framework::ALL
+        .iter()
+        .copied()
+        .find(|f| f.name() == s)
+        .ok_or_else(|| anyhow!("unknown framework: {s}"))
+}
+
+fn arch_from(s: &str) -> Result<ModelArch> {
+    ModelArch::ALL
+        .iter()
+        .copied()
+        .find(|a| a.name() == s)
+        .ok_or_else(|| anyhow!("unknown arch: {s}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{GeneratorConfig, WorkloadGenerator};
+
+    fn sample_jobs(n_hours: f64) -> Vec<Job> {
+        let cfg = GeneratorConfig {
+            duration_s: n_hours * 3600.0,
+            arrivals_per_hour: 30.0,
+            ..Default::default()
+        };
+        WorkloadGenerator::new(cfg).trace()
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let jobs = sample_jobs(12.0);
+        assert!(!jobs.is_empty());
+        let j = to_json(&jobs);
+        let back = from_json(&j).unwrap();
+        assert_eq!(jobs.len(), back.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrival_s, b.arrival_s);
+            assert_eq!(a.phase, b.phase);
+            assert_eq!(a.framework, b.framework);
+            assert_eq!(a.arch, b.arch);
+            assert_eq!(a.priority, b.priority);
+            assert_eq!(a.gen, b.gen);
+            assert_eq!(a.slice_shape, b.slice_shape);
+            assert_eq!(a.pods, b.pods);
+            assert_eq!(a.work_s, b.work_s);
+            assert_eq!(a.startup_s, b.startup_s);
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.ckpt, b.ckpt);
+        }
+    }
+
+    #[test]
+    fn text_roundtrip_through_parser() {
+        let jobs = sample_jobs(2.0);
+        let text = to_json(&jobs).to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = from_json(&parsed).unwrap();
+        assert_eq!(jobs.len(), back.len());
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = Json::obj(vec![("version", Json::num(99.0)), ("jobs", Json::Arr(vec![]))]);
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_record_with_position() {
+        let mut good = to_json(&sample_jobs(1.0));
+        if let Json::Obj(ref mut o) = good {
+            if let Some(Json::Arr(ref mut jobs)) = o.get_mut("jobs") {
+                jobs[0] = Json::obj(vec![("id", Json::num(1.0))]); // missing fields
+            }
+        }
+        let err = from_json(&good).unwrap_err().to_string();
+        assert!(err.contains("job[0]"), "{err}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let jobs = sample_jobs(1.0);
+        let path = std::env::temp_dir().join("tpufleet_trace_test.json");
+        save(&jobs, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(jobs.len(), back.len());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,337 @@
+//! Compiler layer model (paper §3.3, §5.1): fleet-wide XLA optimization
+//! passes, their per-workload effects, and the fixed benchmark suite used
+//! to track Program Goodput across compiler changes (Fig. 12).
+//!
+//! Passes are modeled as multiplicative effects on a job's `StepProfile`:
+//!   * efficiency multiplier  — device compute runs closer to roofline
+//!   * communication multiplier — exposed-communication time shrinks
+//!
+//! Magnitudes are calibrated to the paper's reported numbers: collective
+//! overlap gives up to 1.38× throughput on communication-bound LLMs (Wang
+//! et al.), algebraic simplification produces a visible step on the
+//! 150-workload benchmark while staying small fleet-wide, and XTAT-style
+//! autotuning yields single-digit-% speedups over already-optimized XLA.
+
+use crate::fleet::ChipGeneration;
+use crate::util::Rng;
+use crate::workload::{ModelArch, StepProfile};
+
+/// A fleet-wide compiler optimization, enabled at a scenario time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pass {
+    /// Graph-level algebraic simplification (the Fig. 12 code change).
+    AlgebraicSimplification,
+    /// Operator fusion improvements.
+    Fusion,
+    /// Decompose collectives + dependent compute to overlap communication
+    /// (Wang et al. 2022, §5.1).
+    CollectiveOverlap,
+    /// XTAT-style autotuning of layouts/tiles/fusion decisions.
+    Autotune,
+}
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::AlgebraicSimplification => "algebraic-simplification",
+            Pass::Fusion => "fusion",
+            Pass::CollectiveOverlap => "collective-overlap",
+            Pass::Autotune => "autotune",
+        }
+    }
+
+    /// (efficiency multiplier, communication multiplier) for a workload.
+    /// Deterministic per (pass, workload signature): the same program gets
+    /// the same codegen outcome every time it's compiled.
+    pub fn effect(self, arch: ModelArch, profile: &StepProfile, signature: u64) -> (f64, f64) {
+        let mut rng = Rng::new(signature ^ (self as u64).wrapping_mul(0x9E37_79B9));
+        match self {
+            Pass::AlgebraicSimplification => {
+                // Helps everything a little; redundant-op-heavy graphs more.
+                let base = rng.range_f64(1.03, 1.10);
+                (base, 1.0)
+            }
+            Pass::Fusion => {
+                // Memory-bound programs (low base efficiency) gain most.
+                let headroom = (0.6 - profile.base_efficiency).max(0.0);
+                (1.0 + headroom * rng.range_f64(0.15, 0.35), 1.0)
+            }
+            Pass::CollectiveOverlap => {
+                // Only communication-bound programs benefit; at
+                // comm_fraction ≈ 0.45 (500B-LLM-like) the end-to-end gain
+                // approaches the paper's 1.38×.
+                if profile.comm_fraction >= 0.25 {
+                    // Decomposition hides most of the transfer latency.
+                    (1.0, rng.range_f64(0.10, 0.35))
+                } else {
+                    (1.0, rng.range_f64(0.85, 1.0))
+                }
+            }
+            Pass::Autotune => {
+                // Per-workload tuned; MoE/Recommender layouts have more
+                // headroom than the hand-tuned dense transformers.
+                let hi = match arch {
+                    ModelArch::Transformer => 1.08,
+                    ModelArch::MoE => 1.12,
+                    ModelArch::Recommender => 1.15,
+                    ModelArch::Vision => 1.10,
+                };
+                (rng.range_f64(1.01, hi), 1.0)
+            }
+        }
+    }
+}
+
+/// A deployed pass: enabled fleet-wide at `enable_s` (scenario seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Deployment {
+    pub pass: Pass,
+    pub enable_s: f64,
+}
+
+/// The fleet's compiler stack over scenario time.
+#[derive(Clone, Debug, Default)]
+pub struct CompilerStack {
+    pub deployments: Vec<Deployment>,
+}
+
+impl CompilerStack {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn deploy(&mut self, pass: Pass, enable_s: f64) {
+        self.deployments.push(Deployment { pass, enable_s });
+    }
+
+    /// Combined (efficiency, communication) multipliers for a workload
+    /// compiled at scenario time `t_s`.
+    pub fn multipliers(
+        &self,
+        t_s: f64,
+        arch: ModelArch,
+        profile: &StepProfile,
+        signature: u64,
+    ) -> (f64, f64) {
+        let mut eff = 1.0;
+        let mut comm = 1.0;
+        for d in &self.deployments {
+            if t_s >= d.enable_s {
+                let (e, c) = d.pass.effect(arch, profile, signature);
+                eff *= e;
+                comm *= c;
+            }
+        }
+        (eff, comm)
+    }
+
+    /// Program Goodput of one workload on `gen` at scenario time `t_s`
+    /// under this stack (maturity: software-maturity factor from the
+    /// fleet-evolution model; 1.0 = fully mature toolchain).
+    pub fn pg(
+        &self,
+        t_s: f64,
+        gen: ChipGeneration,
+        arch: ModelArch,
+        profile: &StepProfile,
+        signature: u64,
+        maturity: f64,
+    ) -> f64 {
+        let (eff, comm) = self.multipliers(t_s, arch, profile, signature);
+        let ideal = profile.ideal_seconds(gen);
+        let actual = profile.step_seconds(gen, eff * maturity, comm);
+        (ideal / actual).clamp(0.0, 1.0)
+    }
+}
+
+/// One entry in the fixed top-N benchmark (Fig. 12's "top 150 most costly
+/// workloads in the fleet").
+#[derive(Clone, Debug)]
+pub struct BenchWorkload {
+    pub signature: u64,
+    pub arch: ModelArch,
+    pub gen: ChipGeneration,
+    pub profile: StepProfile,
+}
+
+/// The fixed benchmark suite PG is tracked against across compiler changes.
+#[derive(Clone, Debug)]
+pub struct BenchmarkSuite {
+    pub workloads: Vec<BenchWorkload>,
+}
+
+impl BenchmarkSuite {
+    /// Build the deterministic top-N suite (N=150 reproduces Fig. 12).
+    pub fn top_n(n: usize, seed: u64) -> BenchmarkSuite {
+        let mut rng = Rng::new(seed);
+        let archs = ModelArch::ALL;
+        let gens =
+            [ChipGeneration::TpuB, ChipGeneration::TpuC, ChipGeneration::TpuD];
+        let workloads = (0..n)
+            .map(|i| {
+                let arch = archs[rng.weighted(&[0.45, 0.2, 0.2, 0.15])];
+                let (eff_lo, eff_hi, comm, host) = match arch {
+                    ModelArch::Transformer => (0.35, 0.62, 0.25, 0.05),
+                    ModelArch::MoE => (0.30, 0.50, 0.45, 0.05),
+                    ModelArch::Recommender => (0.20, 0.40, 0.15, 0.30),
+                    ModelArch::Vision => (0.40, 0.65, 0.10, 0.12),
+                };
+                BenchWorkload {
+                    signature: 0xBEEF_0000 + i as u64,
+                    arch,
+                    gen: gens[rng.below(3) as usize],
+                    profile: StepProfile {
+                        ideal_flops_per_chip: rng.log_normal(27.5, 0.7),
+                        base_efficiency: rng.range_f64(eff_lo, eff_hi),
+                        comm_fraction: (comm * rng.range_f64(0.6, 1.4)).min(0.7),
+                        host_fraction: (host * rng.range_f64(0.5, 1.5)).min(0.6),
+                    },
+                }
+            })
+            .collect();
+        BenchmarkSuite { workloads }
+    }
+
+    /// Mean benchmark PG at scenario time `t_s` under `stack`.
+    pub fn mean_pg(&self, stack: &CompilerStack, t_s: f64) -> f64 {
+        let sum: f64 = self
+            .workloads
+            .iter()
+            .map(|w| stack.pg(t_s, w.gen, w.arch, &w.profile, w.signature, 1.0))
+            .sum();
+        sum / self.workloads.len() as f64
+    }
+
+    /// Per-workload PGs (for distribution-shift plots).
+    pub fn pgs(&self, stack: &CompilerStack, t_s: f64) -> Vec<f64> {
+        self.workloads
+            .iter()
+            .map(|w| stack.pg(t_s, w.gen, w.arch, &w.profile, w.signature, 1.0))
+            .collect()
+    }
+}
+
+/// §5.1 headline check: end-to-end throughput gain of the overlap pass on a
+/// comm-bound profile (500B-LLM-like), as step_time(before)/step_time(after),
+/// plus achieved FLOPs utilization after the pass.
+pub fn overlap_case_study(gen: ChipGeneration) -> (f64, f64) {
+    // 500B-LLM-like: well-tuned dense matmuls (high base efficiency) whose
+    // step is ~40% exposed communication before the pass — the regime in
+    // which Wang et al. report 1.38× end-to-end and 72% FLOPs utilization.
+    let profile = StepProfile {
+        ideal_flops_per_chip: 5e13,
+        base_efficiency: 0.80,
+        comm_fraction: 0.40,
+        host_fraction: 0.02,
+    };
+    let mut stack = CompilerStack::new();
+    let before = profile.step_seconds(gen, 1.0, 1.0);
+    stack.deploy(Pass::CollectiveOverlap, 0.0);
+    let (eff, comm) = stack.multipliers(1.0, ModelArch::Transformer, &profile, 0x500B);
+    let after = profile.step_seconds(gen, eff, comm);
+    let speedup = before / after;
+    let util = profile.ideal_seconds(gen) / after;
+    (speedup, util)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(comm: f64) -> StepProfile {
+        StepProfile {
+            ideal_flops_per_chip: 1e13,
+            base_efficiency: 0.5,
+            comm_fraction: comm,
+            host_fraction: 0.05,
+        }
+    }
+
+    #[test]
+    fn effects_are_deterministic_per_signature() {
+        let p = profile(0.4);
+        let a = Pass::Autotune.effect(ModelArch::MoE, &p, 42);
+        let b = Pass::Autotune.effect(ModelArch::MoE, &p, 42);
+        assert_eq!(a, b);
+        let c = Pass::Autotune.effect(ModelArch::MoE, &p, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn overlap_only_helps_comm_bound() {
+        let comm_bound = profile(0.45);
+        let compute_bound = profile(0.05);
+        let (_, c1) = Pass::CollectiveOverlap.effect(ModelArch::Transformer, &comm_bound, 1);
+        let (_, c2) =
+            Pass::CollectiveOverlap.effect(ModelArch::Transformer, &compute_bound, 1);
+        assert!(c1 < 0.5);
+        assert!(c2 > 0.8);
+    }
+
+    #[test]
+    fn stack_composes_multiplicatively() {
+        let p = profile(0.4);
+        let mut stack = CompilerStack::new();
+        stack.deploy(Pass::AlgebraicSimplification, 100.0);
+        stack.deploy(Pass::CollectiveOverlap, 200.0);
+        let (e0, c0) = stack.multipliers(50.0, ModelArch::Transformer, &p, 7);
+        assert_eq!((e0, c0), (1.0, 1.0));
+        let (e1, c1) = stack.multipliers(150.0, ModelArch::Transformer, &p, 7);
+        assert!(e1 > 1.0 && (c1 - 1.0).abs() < 1e-12);
+        let (e2, c2) = stack.multipliers(250.0, ModelArch::Transformer, &p, 7);
+        assert_eq!(e2, e1);
+        assert!(c2 < 1.0);
+    }
+
+    #[test]
+    fn pg_improves_when_pass_lands() {
+        let p = profile(0.3);
+        let mut stack = CompilerStack::new();
+        stack.deploy(Pass::AlgebraicSimplification, 1000.0);
+        let g = ChipGeneration::TpuC;
+        let before = stack.pg(999.0, g, ModelArch::Transformer, &p, 9, 1.0);
+        let after = stack.pg(1001.0, g, ModelArch::Transformer, &p, 9, 1.0);
+        assert!(after > before, "{before} -> {after}");
+        assert!((0.0..=1.0).contains(&after));
+    }
+
+    #[test]
+    fn fig12_benchmark_shows_step_change() {
+        let suite = BenchmarkSuite::top_n(150, 0xF16_12);
+        let mut stack = CompilerStack::new();
+        stack.deploy(Pass::AlgebraicSimplification, 500.0);
+        let before = suite.mean_pg(&stack, 0.0);
+        let after = suite.mean_pg(&stack, 1000.0);
+        assert!(after > before * 1.02, "step too small: {before} -> {after}");
+        assert!(after < before * 1.15, "step implausibly large");
+    }
+
+    #[test]
+    fn overlap_case_study_matches_paper_band() {
+        // Paper: up to 1.38× throughput, 72% FLOPs utilization on the 500B
+        // LLM. Accept a band around those.
+        let (speedup, util) = overlap_case_study(ChipGeneration::TpuC);
+        assert!(speedup > 1.2 && speedup < 1.55, "speedup={speedup}");
+        assert!(util > 0.60 && util < 0.80, "util={util}");
+    }
+
+    #[test]
+    fn maturity_lowers_pg() {
+        let p = profile(0.2);
+        let stack = CompilerStack::new();
+        let g = ChipGeneration::TpuE;
+        let mature = stack.pg(0.0, g, ModelArch::Transformer, &p, 3, 1.0);
+        let fresh = stack.pg(0.0, g, ModelArch::Transformer, &p, 3, 0.6);
+        assert!(fresh < mature);
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let a = BenchmarkSuite::top_n(50, 7);
+        let b = BenchmarkSuite::top_n(50, 7);
+        for (x, y) in a.workloads.iter().zip(&b.workloads) {
+            assert_eq!(x.signature, y.signature);
+            assert_eq!(x.profile.base_efficiency, y.profile.base_efficiency);
+        }
+    }
+}

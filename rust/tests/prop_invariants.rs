@@ -1,0 +1,298 @@
+//! Property tests on coordinator invariants (in-tree testkit; the offline
+//! build has no proptest — see DESIGN.md §9).
+
+use tpufleet::fleet::{pod::axis_permutations, ChipGeneration, Fleet, Pod, SliceId};
+use tpufleet::metrics::goodput;
+use tpufleet::metrics::{JobMeta, Ledger, TimeClass};
+use tpufleet::runtime_model::{EraEffects, RuntimeModel, WindowEnd};
+use tpufleet::scheduler::{Scheduler, SchedulerPolicy};
+use tpufleet::testkit::check;
+use tpufleet::util::{Json, Rng};
+use tpufleet::workload::{
+    CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+};
+
+fn random_job(rng: &mut Rng, id: u64, gen: ChipGeneration) -> Job {
+    let pod = gen.spec().pod_shape;
+    let (slice_shape, pods) = if rng.chance(0.25) {
+        ([0, 0, 0], rng.range_u64(1, 3) as u32)
+    } else {
+        let s = [
+            rng.range_u64(1, pod[0] as u64) as u32,
+            rng.range_u64(1, pod[1] as u64) as u32,
+            rng.range_u64(1, pod[2] as u64) as u32,
+        ];
+        (s, 0)
+    };
+    let phases = [Phase::Training, Phase::Serving, Phase::BulkInference];
+    let prios = [Priority::Batch, Priority::Prod, Priority::Critical];
+    Job {
+        id,
+        arrival_s: rng.range_f64(0.0, 1000.0),
+        phase: phases[rng.below(3) as usize],
+        framework: Framework::ALL[rng.below(3) as usize],
+        arch: ModelArch::ALL[rng.below(4) as usize],
+        priority: prios[rng.below(3) as usize],
+        gen,
+        slice_shape,
+        pods,
+        work_s: rng.range_f64(100.0, 20_000.0),
+        step: StepProfile {
+            ideal_flops_per_chip: rng.range_f64(1e10, 1e13),
+            base_efficiency: rng.range_f64(0.1, 0.9),
+            comm_fraction: rng.range_f64(0.0, 0.7),
+            host_fraction: rng.range_f64(0.0, 0.6),
+        },
+        ckpt: if rng.chance(0.5) {
+            CheckpointPolicy::synchronous()
+        } else {
+            CheckpointPolicy::asynchronous()
+        },
+        startup_s: rng.range_f64(10.0, 600.0),
+    }
+}
+
+/// Scheduler never double-books a chip and conserves capacity across an
+/// arbitrary sequence of submit / schedule / complete / evict / defrag ops.
+#[test]
+fn prop_scheduler_never_double_books() {
+    check(60, 0xA11C, |rng| {
+        let gen = ChipGeneration::TpuC;
+        let mut fleet = Fleet::new();
+        fleet.add_pods(gen, rng.range_u64(2, 6) as u32);
+        let total = fleet.total_chips();
+        let mut sched = Scheduler::new(SchedulerPolicy {
+            min_runtime_before_evict_s: 0.0,
+            ..Default::default()
+        });
+        let mut next_id = 1u64;
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..rng.range_u64(10, 60) {
+            let now = step as f64 * 100.0;
+            match rng.below(10) {
+                0..=4 => {
+                    let job = random_job(rng, next_id, gen);
+                    live.push(next_id);
+                    next_id += 1;
+                    sched.submit(job);
+                }
+                5..=6 => {
+                    sched.schedule(&mut fleet, now);
+                }
+                7 => {
+                    if !live.is_empty() {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(idx);
+                        sched.complete(&mut fleet, id);
+                    }
+                }
+                8 => {
+                    if !live.is_empty() {
+                        let idx = rng.below(live.len() as u64) as usize;
+                        sched.evict(&mut fleet, live[idx]);
+                    }
+                }
+                _ => {
+                    sched.defrag(&mut fleet, now, 2);
+                }
+            }
+            sched.check_invariants(&fleet).unwrap();
+            // Capacity conservation: allocated + free == total.
+            let allocated: u64 =
+                sched.running_jobs().map(|(_, a)| a.chips() as u64).sum();
+            let free = fleet.cell(gen).unwrap().free_chips();
+            assert_eq!(allocated + free, total, "capacity leak at step {step}");
+        }
+    });
+}
+
+/// Slice carving: any claimed slice's chips are within pod bounds, and two
+/// simultaneously claimed slices never overlap.
+#[test]
+fn prop_torus_slices_never_overlap() {
+    check(100, 0x70F0, |rng| {
+        let mut pod = Pod::new(0, ChipGeneration::TpuC);
+        let mut claimed: Vec<SliceId> = Vec::new();
+        for id in 1..rng.range_u64(2, 20) {
+            let shape = [
+                rng.range_u64(1, 4) as u32,
+                rng.range_u64(1, 4) as u32,
+                rng.range_u64(1, 4) as u32,
+            ];
+            if let Some(slice) = pod.find_slice(shape) {
+                pod.claim(slice, id);
+                claimed.push(slice);
+            }
+        }
+        // Overlap check via explicit coordinate sets.
+        let cells = |s: &SliceId| -> Vec<[u32; 3]> {
+            let mut v = Vec::new();
+            for z in s.origin[2]..s.origin[2] + s.shape[2] {
+                for y in s.origin[1]..s.origin[1] + s.shape[1] {
+                    for x in s.origin[0]..s.origin[0] + s.shape[0] {
+                        v.push([x, y, z]);
+                    }
+                }
+            }
+            v
+        };
+        let mut seen = std::collections::HashSet::new();
+        for s in &claimed {
+            for c in cells(s) {
+                assert!(c[0] < 4 && c[1] < 4 && c[2] < 4, "out of bounds {c:?}");
+                assert!(seen.insert(c), "overlap at {c:?}");
+            }
+        }
+    });
+}
+
+/// axis_permutations always yields shapes with identical volume, all unique.
+#[test]
+fn prop_axis_permutations_preserve_volume() {
+    check(200, 0xAAA, |rng| {
+        let s = [
+            rng.range_u64(1, 16) as u32,
+            rng.range_u64(1, 16) as u32,
+            rng.range_u64(1, 16) as u32,
+        ];
+        let vol: u32 = s.iter().product();
+        let perms = axis_permutations(s);
+        assert!(!perms.is_empty() && perms.len() <= 6);
+        for p in &perms {
+            assert_eq!(p.iter().product::<u32>(), vol);
+        }
+        let unique: std::collections::HashSet<_> = perms.iter().collect();
+        assert_eq!(unique.len(), perms.len());
+    });
+}
+
+/// Runtime-model accounting conserves time: pieces sum to the window (or
+/// less, only when completed early), and saved work never decreases or
+/// exceeds the job's total.
+#[test]
+fn prop_runtime_accounting_conserves_time() {
+    check(300, 0xACC7, |rng| {
+        let rm = RuntimeModel::default();
+        let job = random_job(rng, 1, ChipGeneration::TpuC);
+        let work_done = rng.range_f64(0.0, job.work_s);
+        let window = rng.range_f64(0.0, 3.0 * job.work_s + 2.0 * job.startup_s);
+        let end = if rng.chance(0.5) { WindowEnd::Evicted } else { WindowEnd::Completed };
+        let era = EraEffects {
+            stall_mult: rng.range_f64(0.2, 5.0),
+            restore_mult: rng.range_f64(0.2, 5.0),
+        };
+        let acct = rm.account(&job, rng.chance(0.5), work_done, window, end, &era);
+        let total: f64 = acct.pieces.iter().map(|(_, d)| d).sum();
+        assert!(total <= window + 1e-6, "pieces exceed window: {total} > {window}");
+        if !acct.completed {
+            assert!(
+                (total - window).abs() < 1e-6,
+                "uncompleted window must be fully classified: {total} vs {window}"
+            );
+        }
+        assert!(acct.work_done_after >= work_done - 1e-9, "work regressed");
+        assert!(acct.work_done_after <= job.work_s + 1e-9, "work overshoot");
+        for (_, d) in &acct.pieces {
+            assert!(*d >= -1e-12, "negative piece {d}");
+        }
+    });
+}
+
+/// Goodput reduction: SG/RG/PG always in [0,1] and MPG multiplies, under
+/// arbitrary ledgers and windows.
+#[test]
+fn prop_goodput_bounded_under_arbitrary_ledgers() {
+    check(150, 0x60D0, |rng| {
+        let mut ledger = Ledger::new();
+        ledger.set_capacity(0.0, rng.range_u64(100, 10_000));
+        let n_jobs = rng.range_u64(1, 12);
+        for id in 1..=n_jobs {
+            let job = random_job(rng, id, ChipGeneration::TpuC);
+            ledger.ensure_job(JobMeta::of(&job));
+            let mut t = rng.range_f64(0.0, 100.0);
+            for _ in 0..rng.range_u64(0, 10) {
+                let dur = rng.range_f64(0.1, 500.0);
+                let class = TimeClass::ALL[rng.below(7) as usize];
+                let chips = job.chips();
+                ledger.add_span(id, t, t + dur, chips, class);
+                if class == TimeClass::Productive {
+                    ledger.add_pg_sample(id, t, t + dur, chips, rng.range_f64(0.0, 1.0));
+                }
+                t += dur;
+            }
+        }
+        let end = ledger.end_time().max(1.0);
+        for _ in 0..5 {
+            let w0 = rng.range_f64(0.0, end);
+            let w1 = rng.range_f64(0.0, end);
+            let r = goodput::report(&ledger, w0.min(w1), w0.max(w1), |_| true);
+            for v in [r.sg, r.rg, r.pg] {
+                assert!((0.0..=1.0).contains(&v), "out of range: {v}");
+            }
+            assert!((r.mpg() - r.sg * r.rg * r.pg).abs() < 1e-12);
+        }
+    });
+}
+
+/// JSON round-trip fuzz: random values survive serialize -> parse.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let len = rng.below(12);
+                let s: String =
+                    (0..len).map(|_| (rng.below(95) as u8 + 32) as char).collect();
+                Json::Str(s)
+            }
+            4 => {
+                let n = rng.below(4);
+                Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4);
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    check(300, 0x150_u64, |rng| {
+        let v = random_json(rng, 3);
+        let compact = Json::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, compact);
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(v, pretty);
+    });
+}
+
+/// Simulator determinism: identical configs (any seed) produce identical
+/// results and goodput decompositions.
+#[test]
+fn prop_sim_deterministic_any_seed() {
+    use tpufleet::sim::{SimConfig, Simulation};
+    check(6, 0xDE7, |rng| {
+        let mut cfg = SimConfig {
+            seed: rng.next_u64(),
+            duration_s: 36.0 * 3600.0,
+            ..Default::default()
+        };
+        cfg.generator.arrivals_per_hour = rng.range_f64(4.0, 16.0);
+        cfg.static_fleet = vec![(ChipGeneration::TpuC, rng.range_u64(8, 24) as u32)];
+        cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+        let mut a = Simulation::new(cfg.clone());
+        let ra = a.run();
+        let mut b = Simulation::new(cfg.clone());
+        let rb = b.run();
+        assert_eq!(ra.completed_jobs, rb.completed_jobs);
+        assert_eq!(ra.preemptions, rb.preemptions);
+        let ga = goodput::report(&a.ledger, 0.0, cfg.duration_s, |_| true);
+        let gb = goodput::report(&b.ledger, 0.0, cfg.duration_s, |_| true);
+        assert_eq!(ga, gb);
+    });
+}

@@ -1,0 +1,168 @@
+//! Integration: the paper's figure "shapes" hold on the full simulator
+//! (the per-figure expected shapes are indexed in DESIGN.md §6).
+
+use tpufleet::report::figures;
+use tpufleet::workload::SizeClass;
+
+#[test]
+fn fig14_shape_pathways_training_leads_rg_speedup() {
+    let fig = figures::fig14_rg_segments(0x14_14);
+    let series: std::collections::HashMap<&str, &Vec<f64>> = fig
+        .series
+        .iter()
+        .map(|(label, v)| (label.as_str(), v))
+        .collect();
+    let last = |label: &str| -> f64 {
+        let v = series[label];
+        // Last full week with data.
+        *v.iter().rev().find(|&&x| x > 0.0).unwrap_or(&0.0)
+    };
+    let first = |label: &str| -> f64 {
+        *series[label].iter().find(|&&x| x > 0.0).unwrap_or(&0.0)
+    };
+    // Every segment ends at or above its start (the quarter deployed
+    // improvements, not regressions)...
+    for (label, _) in &fig.series {
+        assert!(
+            last(label) >= first(label) * 0.95,
+            "{label}: {} -> {}",
+            first(label),
+            last(label)
+        );
+    }
+    // ...and the Pathways training segment holds the highest RG level week
+    // after week (the paper's Fig. 14 observation: "training workloads
+    // running JAX with Pathways tend to have a higher RG"). Its *speedup*
+    // is smaller exactly because it starts with less stall to remove.
+    let a = series["A: training+pathways"];
+    let b = series["B: training+multi-client"];
+    let weeks_a_leads = a
+        .iter()
+        .zip(b.iter())
+        .filter(|&(&x, &y)| x > 0.0 && y > 0.0 && x >= y)
+        .count();
+    let weeks_with_data = a
+        .iter()
+        .zip(b.iter())
+        .filter(|&(&x, &y)| x > 0.0 && y > 0.0)
+        .count();
+    assert!(
+        weeks_a_leads * 10 >= weeks_with_data * 8,
+        "pathways training should lead RG most weeks: {weeks_a_leads}/{weeks_with_data}"
+    );
+}
+
+#[test]
+fn fig15_shape_bulk_inference_dips_in_months_3_to_6() {
+    let fig = figures::fig15_rg_phase(0x15_15);
+    let bulk: Vec<f64> = fig.rg.iter().map(|r| r[2]).collect();
+    let train: Vec<f64> = fig.rg.iter().map(|r| r[0]).collect();
+    // Months 0..3 healthy vs months 3..6 dipped.
+    let early = (bulk[0] + bulk[1] + bulk[2]) / 3.0;
+    let late = (bulk[3] + bulk[4] + bulk[5]) / 3.0;
+    assert!(late < early * 0.93, "bulk RG must dip: {early:.3} -> {late:.3}");
+    // Training stays comparatively stable and above bulk in the dip.
+    let train_late = (train[3] + train[4] + train[5]) / 3.0;
+    assert!(train_late > late, "training {train_late:.3} vs bulk {late:.3}");
+    let train_early = (train[0] + train[1] + train[2]) / 3.0;
+    assert!(
+        (train_late - train_early).abs() < 0.15 * train_early.max(1e-9),
+        "training should be stable: {train_early:.3} -> {train_late:.3}"
+    );
+}
+
+#[test]
+fn fig16_shape_sg_u_curve_and_95_percent_floor() {
+    let fig = figures::fig16_sg_jobsize(0x16_16);
+    let sg = |size: SizeClass| -> f64 {
+        fig.sg_by_size.iter().find(|&&(s, _)| s == size).map(|&(_, v)| v).unwrap()
+    };
+    let small = sg(SizeClass::Small);
+    let medium = sg(SizeClass::Medium);
+    let large = sg(SizeClass::Large);
+    let xl = sg(SizeClass::ExtraLarge);
+    eprintln!("SG by size: small={small:.4} medium={medium:.4} large={large:.4} xl={xl:.4}");
+    // Paper: SG > 95% for all size classes.
+    for (label, v) in [("small", small), ("medium", medium), ("large", large), ("xl", xl)] {
+        assert!(v > 0.95, "{label} SG {v} below the paper's 95% floor");
+    }
+    // U-shape: small and XL at least match the middle classes.
+    let mid = medium.min(large);
+    assert!(small >= mid, "small {small} < mid {mid}");
+    assert!(xl >= mid * 0.995, "xl {xl} substantially below mid {mid}");
+}
+
+#[test]
+fn overlap_case_study_reproduces_paper_band() {
+    let (speedup, util) =
+        tpufleet::xlaopt::overlap_case_study(tpufleet::fleet::ChipGeneration::TpuC);
+    assert!(speedup > 1.2 && speedup < 1.6, "speedup={speedup}");
+    assert!((util - 0.72).abs() < 0.1, "util={util} (paper: 0.72)");
+}
+
+#[test]
+fn year_scale_workload_population_drifts_like_fig4_and_fig6() {
+    let f4 = figures::fig4_job_sizes(0x44);
+    assert!(f4.quarters[3][3] > f4.quarters[0][3] * 1.3, "XL demand share grows");
+    let f6 = figures::fig6_pathways(0x66);
+    // Adoption is an S-curve: strictly higher at end, monotone-ish.
+    let (first, last) = (f6.monthly_share[0], f6.monthly_share[11]);
+    assert!(last > first + 0.25);
+    let increasing_pairs = f6
+        .monthly_share
+        .windows(2)
+        .filter(|w| w[1] >= w[0] - 0.05)
+        .count();
+    assert!(increasing_pairs >= 9, "adoption should be near-monotone");
+}
+
+#[test]
+fn trace_replay_is_deterministic_and_matches_generator_run() {
+    use tpufleet::sim::{SimConfig, Simulation};
+    use tpufleet::workload::{trace, WorkloadGenerator};
+    let mut cfg = SimConfig { seed: 0x7A, duration_s: 2.0 * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 8.0;
+    // Generator-driven run.
+    let mut direct = Simulation::new(cfg.clone());
+    let r_direct = direct.run();
+    // Same jobs exported + replayed through the trace path.
+    let mut gcfg = cfg.generator.clone();
+    gcfg.duration_s = cfg.duration_s;
+    let jobs = WorkloadGenerator::new(gcfg).trace();
+    let json = trace::to_json(&jobs);
+    let restored = trace::from_json(&json).unwrap();
+    let mut cfg2 = cfg.clone();
+    cfg2.trace_jobs = Some(restored);
+    let mut replay = Simulation::new(cfg2.clone());
+    let r_replay = replay.run();
+    assert_eq!(r_direct.arrived_jobs, r_replay.arrived_jobs);
+    assert_eq!(r_direct.completed_jobs, r_replay.completed_jobs);
+    assert_eq!(r_direct.preemptions, r_replay.preemptions);
+    // And replaying twice is identical.
+    let mut replay2 = Simulation::new(cfg2);
+    let r_replay2 = replay2.run();
+    assert_eq!(r_replay.completed_jobs, r_replay2.completed_jobs);
+}
+
+#[test]
+fn ablations_have_paper_consistent_directions() {
+    let ab = figures::ablations(0xAB1A);
+    let row = |name: &str| ab.rows.iter().find(|r| r.name == name).unwrap();
+    // Async checkpointing strictly beats sync on RG (same trace).
+    assert!(
+        row("async-ckpt-all").rg > row("sync-ckpt-only").rg,
+        "async {} vs sync {}",
+        row("async-ckpt-all").rg,
+        row("sync-ckpt-only").rg
+    );
+    // Disabling preemption collapses preemption counts (failures remain).
+    assert!(row("no-preemption").preemptions < row("baseline").preemptions / 5);
+    // Headroom trades throughput (completions) for stability.
+    assert!(row("headroom-15%").completed < row("baseline").completed);
+    // Every variant still yields bounded goodputs.
+    for r in &ab.rows {
+        for v in [r.sg, r.rg, r.pg, r.mpg] {
+            assert!((0.0..=1.0).contains(&v), "{}: {v}", r.name);
+        }
+    }
+}
