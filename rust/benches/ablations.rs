@@ -1,13 +1,26 @@
 //! Bench: design-choice ablation matrix (DESIGN.md §6) — 8 variant
-//! simulations replaying one 7-day trace.
+//! simulations replaying one 7-day trace, executed as a parallel scenario
+//! sweep. Times the serial (1-worker) and pooled (all-core) paths so the
+//! sweep speedup is visible next to the figure itself.
 use tpufleet::report::figures;
 use tpufleet::util::bench::Bench;
+use tpufleet::util::pool;
 
 fn main() {
     let ab = figures::ablations(0xAB1A);
     println!("{}", ab.table.to_ascii());
     let _ = ab.table.save_csv("bench_out", "ablations");
-    Bench::new("ablations/8_variants_7_days").iters(1).run(|| figures::ablations(0xAB1A));
+    let serial = Bench::new("ablations/8_variants_serial")
+        .iters(1)
+        .run(|| figures::ablations_with_workers(0xAB1A, 1));
+    let pooled = Bench::new("ablations/8_variants_pooled")
+        .iters(1)
+        .run(|| figures::ablations_with_workers(0xAB1A, 0));
+    println!(
+        "sweep speedup: {:.2}x on {} cores",
+        serial.median_s / pooled.median_s.max(1e-9),
+        pool::default_workers()
+    );
     let row = |name: &str| ab.rows.iter().find(|r| r.name == name).unwrap();
     let ok = row("async-ckpt-all").rg > row("sync-ckpt-only").rg
         && row("no-preemption").preemptions < row("baseline").preemptions / 5;

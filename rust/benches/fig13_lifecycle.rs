@@ -1,4 +1,6 @@
-//! Bench: Fig. 13 — PG vs allocation over a chip lifecycle.
+//! Bench: Fig. 13 — PG vs allocation over a chip lifecycle. The per-month
+//! evaluations run on the util::pool worker pool; the serial path is timed
+//! alongside for the speedup.
 use tpufleet::report::figures;
 use tpufleet::util::bench::Bench;
 
@@ -6,7 +8,12 @@ fn main() {
     let fig = figures::fig13_lifecycle(0xF16_13);
     println!("{}", fig.table.to_ascii());
     let _ = fig.table.save_csv("bench_out", "fig13");
-    Bench::new("fig13/lifecycle_44_months").iters(10).run(|| figures::fig13_lifecycle(0xF16_13));
+    Bench::new("fig13/lifecycle_44_months_serial")
+        .iters(10)
+        .run(|| figures::fig13_lifecycle_with_workers(0xF16_13, 1));
+    Bench::new("fig13/lifecycle_44_months_pooled")
+        .iters(10)
+        .run(|| figures::fig13_lifecycle_with_workers(0xF16_13, 0));
     let at = |m: i32| fig.mean_pg[fig.months.iter().position(|&x| x == m).unwrap()];
     println!("shape: PG intro {:.3} < maturity {:.3} > post-decom {:.3} ... {}",
         at(5), at(25), at(40),

@@ -11,7 +11,7 @@ fn main() {
     let first = &fig.shares[0];
     let last = &fig.shares[fig.shares.len() - 1];
     let dom = |s: &Vec<(tpufleet::fleet::ChipGeneration, f64)>| {
-        s.iter().cloned().max_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0
+        s.iter().cloned().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0
     };
     println!("shape: dominant {} -> {} ... {}", dom(first).name(), dom(last).name(),
         if dom(first) != dom(last) { "OK (churn)" } else { "UNEXPECTED" });

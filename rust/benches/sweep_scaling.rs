@@ -1,0 +1,77 @@
+//! Bench: parallel scenario-sweep scaling — a 16-variant policy/fleet/
+//! failure grid run serially (1 worker) and on the full worker pool, with
+//! the speedup written to BENCH_sweep_scaling.json (the ISSUE-1 acceptance
+//! record: >=3x on >=4 cores).
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::sim::{sweep, SimConfig, SweepRunner, SweepSpec};
+use tpufleet::util::bench::fmt_dur;
+use tpufleet::util::{pool, Json};
+
+fn grid() -> SweepSpec {
+    let mut spec = SweepSpec::new();
+    // Named presets come from the shared table in sim::sweep, so the bench
+    // always measures the same variants the `sweep` CLI exposes.
+    let policies = ["baseline", "no-preemption", "no-defrag", "headroom-15"];
+    let fleets: [(&str, u32); 2] = [("fleet-20", 20), ("fleet-32", 32)];
+    let fail_mults = [0.0, 2.0];
+    for pname in policies {
+        for (fname, pods) in fleets {
+            for fm in fail_mults {
+                let mut cfg = SimConfig {
+                    duration_s: 4.0 * 24.0 * 3600.0,
+                    static_fleet: vec![(ChipGeneration::TpuC, pods)],
+                    ..Default::default()
+                };
+                cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+                cfg.generator.arrivals_per_hour = 10.0;
+                cfg.failure_rate_mult = fm;
+                if fm == 0.0 {
+                    cfg.failures = false;
+                }
+                assert!(sweep::apply_policy_preset(&mut cfg, pname), "unknown preset {pname}");
+                spec.push_derived_seed(format!("{pname}+{fname}+fail{fm}"), cfg, 0x5CA1E);
+            }
+        }
+    }
+    spec
+}
+
+fn time_run(workers: usize) -> (f64, Vec<tpufleet::sim::SimResult>) {
+    let t0 = std::time::Instant::now();
+    let results = SweepRunner::results(grid().workers(workers));
+    (t0.elapsed().as_secs_f64(), results)
+}
+
+fn main() {
+    let cores = pool::default_workers();
+    let n = grid().len();
+    println!("sweep scaling: {n} variants, {cores} cores");
+    let (serial_s, serial_results) = time_run(1);
+    println!("serial   (1 worker): {}", fmt_dur(serial_s));
+    let (pooled_s, pooled_results) = time_run(0);
+    println!("pooled ({cores} workers): {}", fmt_dur(pooled_s));
+    let speedup = serial_s / pooled_s.max(1e-9);
+    println!("speedup: {speedup:.2}x");
+    assert_eq!(serial_results, pooled_results, "sweep must be bit-identical to serial");
+    println!("bit-identical results across worker counts ... OK");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("sweep_scaling")),
+        ("variants", Json::num(n as f64)),
+        ("cores", Json::num(cores as f64)),
+        ("serial_seconds", Json::num(serial_s)),
+        ("pooled_seconds", Json::num(pooled_s)),
+        ("speedup", Json::num(speedup)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    let path = "BENCH_sweep_scaling.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("writing {path} failed: {e}"),
+    }
+    let target_ok = cores < 4 || speedup >= 3.0;
+    println!(
+        "shape: >=3x speedup on >=4 cores ... {}",
+        if target_ok { "OK" } else { "UNEXPECTED" }
+    );
+}

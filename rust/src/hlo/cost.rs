@@ -203,7 +203,7 @@ impl<'m> CostAnalysis<'m> {
                 }
                 if let Some(max) = branch_costs
                     .iter()
-                    .max_by(|a, b| a.flops.partial_cmp(&b.flops).unwrap())
+                    .max_by(|a, b| a.flops.total_cmp(&b.flops))
                 {
                     cost.absorb(max, 1.0);
                 }

@@ -14,7 +14,7 @@ use tpufleet::metrics::goodput;
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
-use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::sim::{SimConfig, Simulation, SweepRunner, SweepSpec};
 use tpufleet::util::cli::Args;
 use tpufleet::util::Rng;
 use tpufleet::xlaopt;
@@ -35,7 +35,16 @@ COMMANDS:
              execute an artifact; report step time + measured PG vs roofline
   hlo-cost   <file.hlo.txt>   FLOP/byte cost analysis of an HLO module
   overlap    print the §5.1 collective-overlap case-study numbers
-  ablate     [--seed S] one-design-choice-at-a-time ablation matrix
+  ablate     [--seed S] [--workers W] one-design-choice-at-a-time ablation
+             matrix (runs as a parallel sweep; W=0 means one per core)
+  sweep      [--days N] [--seed S] [--workers W] [--arrivals-per-hour R]
+             [--policies a,b,..] [--fleets a,b,..] [--job-mixes a,b,..]
+             [--failure-mults 0,1,3] [--out FILE]
+             run a policy x fleet x job-size x failure-rate grid on a
+             worker pool; print the summary table and emit one JSON report
+             (policies: default no-preemption no-defrag no-anti-thrash
+             headroom-15; fleets: default small large c-only; job-mixes:
+             default xl-heavy small-heavy)
   trace      generate <out.json> [--hours H] | replay <in.json> [--days N]
 ";
 
@@ -55,6 +64,7 @@ fn main() {
         "hlo-cost" => cmd_hlo_cost(&args),
         "overlap" => cmd_overlap(),
         "ablate" => cmd_ablate(&args),
+        "sweep" => cmd_sweep(&args),
         "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -239,7 +249,7 @@ fn run_model(dir: &std::path::Path, name: &str, iters: usize) -> anyhow::Result<
         let (_out, dt) = engine.execute_timed(name, &inputs)?;
         times.push(dt);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(|a, b| a.total_cmp(b));
     let median = times[times.len() / 2];
     let cost = engine.module_cost(name)?;
     let cpu = ChipGeneration::Cpu.spec();
@@ -276,7 +286,7 @@ fn cmd_hlo_cost(args: &Args) -> i32 {
                 );
             }
             let mut ops: Vec<(&String, &f64)> = cost.by_opcode.iter().collect();
-            ops.sort_by(|a, b| b.1.partial_cmp(a.1).unwrap());
+            ops.sort_by(|a, b| b.1.total_cmp(a.1));
             println!("top opcodes by FLOPs:");
             for (op, f) in ops.iter().take(8) {
                 println!("  {op:<22} {f:.4e}");
@@ -292,9 +302,177 @@ fn cmd_hlo_cost(args: &Args) -> i32 {
 
 fn cmd_ablate(args: &Args) -> i32 {
     let seed = args.get_u64("seed", 0xAB1A);
-    eprintln!("running 8 variant simulations on one 7-day trace...");
-    let ab = figures::ablations(seed);
+    let workers = args.get_usize("workers", 0);
+    eprintln!("running 8 variant simulations on one 7-day trace (sweep)...");
+    let ab = figures::ablations_with_workers(seed, workers);
     println!("{}", ab.table.to_ascii());
+    0
+}
+
+/// Named policy variants for the sweep grid (shared preset table).
+fn sweep_policy(cfg: &mut SimConfig, name: &str) -> bool {
+    tpufleet::sim::sweep::apply_policy_preset(cfg, name)
+}
+
+/// Named fleet mixes for the sweep grid.
+fn sweep_fleet(cfg: &mut SimConfig, name: &str) -> bool {
+    use tpufleet::fleet::ChipGeneration as G;
+    cfg.static_fleet = match name {
+        "default" => return true,
+        "small" => vec![(G::TpuB, 12), (G::TpuC, 16), (G::TpuD, 10)],
+        "large" => vec![(G::TpuB, 48), (G::TpuC, 64), (G::TpuD, 40)],
+        "c-only" => {
+            cfg.generator.gen_mix = vec![(G::TpuC, 1.0)];
+            vec![(G::TpuC, 40)]
+        }
+        _ => return false,
+    };
+    true
+}
+
+/// Named job-size mixes for the sweep grid.
+fn sweep_job_mix(cfg: &mut SimConfig, name: &str) -> bool {
+    use tpufleet::workload::MixDrift;
+    match name {
+        "default" => {}
+        "xl-heavy" => {
+            cfg.generator.size_mix = MixDrift::constant([0.20, 0.25, 0.25, 0.30]);
+            cfg.generator.xl_pods = (5, 8);
+        }
+        "small-heavy" => {
+            cfg.generator.size_mix = MixDrift::constant([0.60, 0.25, 0.10, 0.05]);
+        }
+        _ => return false,
+    }
+    true
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    use tpufleet::util::Json;
+
+    let days = args.get_f64("days", 3.0);
+    let seed = args.get_u64("seed", 0x5EE9);
+    let workers = args.get_usize("workers", 0);
+    let arrivals = args.get_f64("arrivals-per-hour", 8.0);
+    let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
+    let list = |key: &str, default: &str| -> Vec<String> {
+        args.get(key)
+            .unwrap_or(default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let policies = list("policies", "default,no-preemption,headroom-15");
+    let fleets = list("fleets", "default,small");
+    let job_mixes = list("job-mixes", "default");
+    let mut fail_mults: Vec<f64> = Vec::new();
+    for s in list("failure-mults", "1") {
+        match s.parse::<f64>() {
+            Ok(m) if m >= 0.0 => fail_mults.push(m),
+            _ => {
+                eprintln!("bad failure multiplier: {s}");
+                return 2;
+            }
+        }
+    }
+
+    let mut spec = SweepSpec::new().workers(workers);
+    for pol in &policies {
+        for fl in &fleets {
+            for jm in &job_mixes {
+                for &fm in &fail_mults {
+                    let mut cfg = SimConfig {
+                        duration_s: days * 24.0 * 3600.0,
+                        ..Default::default()
+                    };
+                    cfg.generator.arrivals_per_hour = arrivals;
+                    if !sweep_policy(&mut cfg, pol) {
+                        eprintln!("unknown policy variant: {pol}");
+                        return 2;
+                    }
+                    if !sweep_fleet(&mut cfg, fl) {
+                        eprintln!("unknown fleet variant: {fl}");
+                        return 2;
+                    }
+                    if !sweep_job_mix(&mut cfg, jm) {
+                        eprintln!("unknown job-mix variant: {jm}");
+                        return 2;
+                    }
+                    cfg.failure_rate_mult = fm;
+                    if fm == 0.0 {
+                        cfg.failures = false;
+                    }
+                    let name = format!("{pol}+{fl}+{jm}+fail{fm}");
+                    spec.push_derived_seed(name, cfg, seed);
+                }
+            }
+        }
+    }
+    let total = spec.len();
+    eprintln!(
+        "sweeping {total} variants x {days} days on {} workers (seed {seed:#x})...",
+        if workers == 0 { "auto".to_string() } else { workers.to_string() }
+    );
+    let t0 = std::time::Instant::now();
+    let runs = SweepRunner::run(spec);
+    let wall_s = t0.elapsed().as_secs_f64();
+    eprintln!("done in {wall_s:.2}s");
+
+    let mut table = report::Table::new(
+        "Scenario sweep — fleet goodputs per variant",
+        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures"],
+    );
+    let mut variants_json = Vec::new();
+    for run in &runs {
+        let end = run.sim.cfg.duration_s;
+        let g = goodput::report(&run.sim.ledger, 0.0, end, |_| true);
+        table.row(vec![
+            run.name.clone(),
+            format!("{:.3}", g.sg),
+            format!("{:.3}", g.rg),
+            format!("{:.3}", g.pg),
+            format!("{:.3}", g.mpg()),
+            run.result.completed_jobs.to_string(),
+            run.result.preemptions.to_string(),
+            run.result.failures_injected.to_string(),
+        ]);
+        variants_json.push(Json::obj(vec![
+            ("name", Json::str(&run.name)),
+            ("seed", Json::str(&format!("{:#x}", run.sim.cfg.seed))),
+            ("arrived_jobs", Json::num(run.result.arrived_jobs as f64)),
+            ("completed_jobs", Json::num(run.result.completed_jobs as f64)),
+            ("rejected_jobs", Json::num(run.result.rejected_jobs as f64)),
+            ("preemptions", Json::num(run.result.preemptions as f64)),
+            ("failures_injected", Json::num(run.result.failures_injected as f64)),
+            ("defrag_migrations", Json::num(run.result.defrag_migrations as f64)),
+            ("sg", Json::num(g.sg)),
+            ("rg", Json::num(g.rg)),
+            ("pg", Json::num(g.pg)),
+            ("mpg", Json::num(g.mpg())),
+        ]));
+    }
+    println!("{}", table.to_ascii());
+
+    let report_json = Json::obj(vec![
+        (
+            "spec",
+            Json::obj(vec![
+                ("days", Json::num(days)),
+                ("seed", Json::str(&format!("{seed:#x}"))),
+                ("workers", Json::num(workers as f64)),
+                ("arrivals_per_hour", Json::num(arrivals)),
+                ("variant_count", Json::num(total as f64)),
+                ("wall_seconds", Json::num(wall_s)),
+            ]),
+        ),
+        ("variants", Json::Arr(variants_json)),
+    ]);
+    if let Err(e) = std::fs::write(&out_path, report_json.to_string_pretty()) {
+        eprintln!("writing {out_path} failed: {e}");
+        return 1;
+    }
+    eprintln!("wrote {out_path}");
     0
 }
 

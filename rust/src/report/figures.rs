@@ -8,7 +8,8 @@ use crate::fleet::{ChipGeneration, EvolutionModel, Lifecycle};
 use crate::metrics::goodput::{self, Axis};
 use crate::metrics::{Ledger, TimeClass, TimeSeries};
 use crate::runtime_model::EraEffects;
-use crate::sim::{EraRule, SimConfig, Simulation};
+use crate::sim::{EraRule, SimConfig, SweepRunner, SweepSpec};
+use crate::util::pool;
 use crate::workload::{Framework, GeneratorConfig, Phase, SizeClass, WorkloadGenerator};
 use crate::xlaopt::{BenchmarkSuite, CompilerStack, Pass};
 
@@ -185,6 +186,13 @@ pub struct Fig13 {
 }
 
 pub fn fig13_lifecycle(seed: u64) -> Fig13 {
+    fig13_lifecycle_with_workers(seed, 0)
+}
+
+/// Fig. 13 with an explicit pool width (1 = serial reference; the default
+/// entry point fans the per-month evaluations out over all cores). Results
+/// are bit-identical for any worker count.
+pub fn fig13_lifecycle_with_workers(seed: u64, workers: usize) -> Fig13 {
     // A full in-scenario lifecycle: intro month 4, decommission month 30.
     let lc = Lifecycle {
         gen: ChipGeneration::TpuE,
@@ -196,26 +204,30 @@ pub fn fig13_lifecycle(seed: u64) -> Fig13 {
     };
     let suite = BenchmarkSuite::top_n(60, seed);
     let stack = CompilerStack::new();
+    let rows: Vec<(i32, u32, f64)> =
+        pool::parallel_map((0..44).collect(), workers, |_, m: i32| {
+            let p = lc.pods_at(m);
+            let maturity = lc.software_maturity(m);
+            let pg = if p == 0 {
+                0.0
+            } else {
+                let sum: f64 = suite
+                    .workloads
+                    .iter()
+                    .map(|w| {
+                        stack.pg(0.0, lc.gen, w.arch, &w.profile, w.signature, maturity)
+                    })
+                    .sum();
+                sum / suite.workloads.len() as f64
+            };
+            (m, p, pg)
+        });
     let mut table = Table::new(
         "Fig. 13 — PG vs allocation over a chip lifecycle (tpu-e)",
         &["month", "pods", "mean-PG"],
     );
     let (mut months, mut pods, mut pgs) = (Vec::new(), Vec::new(), Vec::new());
-    for m in 0..44 {
-        let p = lc.pods_at(m);
-        let maturity = lc.software_maturity(m);
-        let pg = if p == 0 {
-            0.0
-        } else {
-            let sum: f64 = suite
-                .workloads
-                .iter()
-                .map(|w| {
-                    stack.pg(0.0, lc.gen, w.arch, &w.profile, w.signature, maturity)
-                })
-                .sum();
-            sum / suite.workloads.len() as f64
-        };
+    for (m, p, pg) in rows {
         table.row(vec![m.to_string(), p.to_string(), f(pg, 4)]);
         months.push(m);
         pods.push(p);
@@ -262,8 +274,7 @@ pub fn fig14_rg_segments(seed: u64) -> Fig14 {
     });
     // Async checkpointing adoption is high in this quarter's cohort.
     cfg.generator.async_ckpt_fraction = 0.5;
-    let mut sim = Simulation::new(cfg.clone());
-    sim.run();
+    let sim = SweepRunner::run_single("fig14", cfg).sim;
 
     let week = 7.0 * DAY_S;
     let mk = |label: &str, filt: Box<dyn Fn(&crate::metrics::JobMeta) -> bool>| {
@@ -331,8 +342,7 @@ pub fn fig15_rg_phase(seed: u64) -> Fig15 {
         phase: Some(Phase::BulkInference),
         effects: EraEffects { stall_mult: 6.0, restore_mult: 4.0 },
     });
-    let mut sim = Simulation::new(cfg);
-    sim.run();
+    let sim = SweepRunner::run_single("fig15", cfg).sim;
 
     let mut table = Table::new(
         "Fig. 15 — Runtime Goodput by phase (monthly)",
@@ -380,8 +390,7 @@ pub fn fig16_sg_jobsize(seed: u64) -> Fig16 {
     cfg.generator.xl_pods = (5, 8);
     cfg.defrag_tick_s = 1800.0;
     cfg.defrag_max_migrations = 8;
-    let mut sim = Simulation::new(cfg);
-    sim.run();
+    let sim = SweepRunner::run_single("fig16", cfg).sim;
 
     let mut table = Table::new(
         "Fig. 16 — Scheduling Goodput by job size (demand-relative)",
@@ -602,7 +611,17 @@ pub struct Ablations {
 ///   * headroom-15%        — the paper's deliberate underutilization
 ///   * sync-ckpt-only / async-ckpt-all — checkpoint strategy extremes
 pub fn ablations(seed: u64) -> Ablations {
-    let days = 7.0;
+    ablations_with_workers(seed, 0)
+}
+
+/// Ablations with an explicit sweep width (1 = serial reference path; the
+/// default entry point runs all variants in parallel). Per-variant results
+/// are bit-identical for any worker count.
+pub fn ablations_with_workers(seed: u64, workers: usize) -> Ablations {
+    ablations_impl(seed, workers, 7.0)
+}
+
+fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     let mut base = SimConfig { seed, duration_s: days * DAY_S, ..Default::default() };
     base.generator.arrivals_per_hour = 10.0;
     // One fixed trace for every variant.
@@ -660,17 +679,22 @@ pub fn ablations(seed: u64) -> Ablations {
         variants.push(("async-ckpt-all".into(), c));
     }
 
+    // Every variant replays the same trace independently, so the whole
+    // matrix runs as one parallel sweep.
+    let mut spec = SweepSpec::new().workers(workers);
+    for (name, cfg) in variants {
+        spec.push(name, cfg);
+    }
     let mut table = Table::new(
         "Ablations — one design choice at a time, same 7-day trace",
         &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt"],
     );
     let mut rows = Vec::new();
-    for (name, cfg) in variants {
-        let mut sim = Simulation::new(cfg.clone());
-        let res = sim.run();
-        let r = goodput::report(&sim.ledger, 0.0, cfg.duration_s, |_| true);
+    for run in SweepRunner::run(spec) {
+        let res = run.result;
+        let r = goodput::report(&run.sim.ledger, 0.0, run.sim.cfg.duration_s, |_| true);
         table.row(vec![
-            name.clone(),
+            run.name.clone(),
             f(r.sg, 3),
             f(r.rg, 3),
             f(r.pg, 3),
@@ -679,7 +703,7 @@ pub fn ablations(seed: u64) -> Ablations {
             res.preemptions.to_string(),
         ]);
         rows.push(AblationRow {
-            name,
+            name: run.name,
             sg: r.sg,
             rg: r.rg,
             pg: r.pg,
@@ -789,6 +813,35 @@ mod tests {
         };
         assert!(pods_at(14) > pods_at(5));
         assert!(pods_at(40) < pods_at(20));
+    }
+
+    #[test]
+    fn fig13_pooled_matches_serial_bitwise() {
+        let serial = fig13_lifecycle_with_workers(0xF16_13, 1);
+        let pooled = fig13_lifecycle_with_workers(0xF16_13, 4);
+        assert_eq!(serial.months, pooled.months);
+        assert_eq!(serial.allocation_pods, pooled.allocation_pods);
+        assert_eq!(serial.mean_pg.len(), pooled.mean_pg.len());
+        for (s, p) in serial.mean_pg.iter().zip(&pooled.mean_pg) {
+            assert_eq!(s.to_bits(), p.to_bits(), "PG must match bitwise");
+        }
+    }
+
+    #[test]
+    fn ablations_sweep_matches_serial_bitwise() {
+        // Short horizon: the point is serial-vs-parallel equality per
+        // variant, not the 7-day figure itself.
+        let serial = ablations_impl(0xAB1A, 1, 1.0);
+        let par = ablations_impl(0xAB1A, 4, 1.0);
+        assert_eq!(serial.rows.len(), par.rows.len());
+        for (s, p) in serial.rows.iter().zip(&par.rows) {
+            assert_eq!(s.name, p.name, "sweep must preserve variant order");
+            assert_eq!(s.completed, p.completed, "{}", s.name);
+            assert_eq!(s.preemptions, p.preemptions, "{}", s.name);
+            for (a, b) in [(s.sg, p.sg), (s.rg, p.rg), (s.pg, p.pg), (s.mpg, p.mpg)] {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: goodputs must match", s.name);
+            }
+        }
     }
 
     #[test]

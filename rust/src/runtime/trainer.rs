@@ -187,7 +187,7 @@ impl Trainer {
                 let pred = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i as i32)
                     .unwrap();
                 if pred == toks[bi * s + si + 1] {

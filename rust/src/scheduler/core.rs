@@ -90,11 +90,12 @@ struct QEntry {
 
 impl QEntry {
     /// Sort key: higher priority first, then FIFO by arrival, then id.
+    /// total_cmp keeps a NaN arrival time from panicking queue inserts.
     fn key_cmp(&self, other: &QEntry) -> std::cmp::Ordering {
         other
             .prio
             .cmp(&self.prio)
-            .then(self.arrival_s.partial_cmp(&other.arrival_s).unwrap())
+            .then(self.arrival_s.total_cmp(&other.arrival_s))
             .then(self.id.cmp(&other.id))
     }
 }
@@ -402,7 +403,16 @@ impl Scheduler {
                 Some((cost, id))
             })
             .collect();
-        candidates.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        // A NaN eviction cost (poisoned job profile) sorts last — the
+        // worst candidate — instead of panicking the victim search. The
+        // is_nan key first: bare total_cmp would sort the sign-negative
+        // NaN real arithmetic produces FIRST, i.e. best.
+        candidates.sort_by(|a, b| {
+            a.0.is_nan()
+                .cmp(&b.0.is_nan())
+                .then(a.0.total_cmp(&b.0))
+                .then(a.1.cmp(&b.1))
+        });
         candidates.truncate(32); // bounded lookahead
 
         // Simulate evictions on a scratch fleet (only the job's cell —
@@ -591,6 +601,32 @@ mod tests {
         assert!(s.allocation(2).is_some());
         assert!(s.allocation(1).is_none());
         assert_eq!(s.queue_len(), 1); // job 1 requeued
+        s.check_invariants(&f).unwrap();
+    }
+
+    #[test]
+    fn nan_eviction_cost_does_not_panic_victim_search() {
+        // Regression: the candidate sort used partial_cmp().unwrap(), so a
+        // single NaN-cost victim aborted every preempting schedule pass.
+        let mut f = fleet(1);
+        let mut s = Scheduler::new(SchedulerPolicy {
+            min_runtime_before_evict_s: 0.0,
+            ..Default::default()
+        });
+        let mut poisoned = mkjob(1, Priority::Batch, [4, 4, 2], 0);
+        // Sign-negative NaN — the encoding x86 arithmetic produces.
+        poisoned.startup_s = -f64::NAN; // eviction_cost becomes NaN
+        s.submit(poisoned);
+        s.submit(mkjob(2, Priority::Batch, [4, 4, 2], 0));
+        s.schedule(&mut f, 0.0);
+        // The pod is full; a critical job must run the victim search over
+        // both candidates (one with NaN cost) without panicking — and the
+        // NaN-cost victim must rank last, so the finite one is evicted
+        // first.
+        s.submit(mkjob(3, Priority::Critical, [4, 4, 2], 0));
+        let out = s.schedule(&mut f, 100.0);
+        assert_eq!(out.placed, vec![3]);
+        assert_eq!(out.preempted, vec![2], "finite-cost victim preferred");
         s.check_invariants(&f).unwrap();
     }
 

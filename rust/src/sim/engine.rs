@@ -52,6 +52,10 @@ pub struct SimConfig {
     pub repair_s: f64,
     /// Failure detection delay: the gang sits Partial before eviction.
     pub fail_detect_s: f64,
+    /// Scales the fleet-wide machine failure rate (1.0 = the per-gen MTBF
+    /// from the chip specs; 0.0 = no failures). Sweep axis for failure
+    /// sensitivity studies.
+    pub failure_rate_mult: f64,
 }
 
 impl Default for SimConfig {
@@ -77,6 +81,7 @@ impl Default for SimConfig {
             failures: true,
             repair_s: 4.0 * 3600.0,
             fail_detect_s: 120.0,
+            failure_rate_mult: 1.0,
         }
     }
 }
@@ -101,7 +106,9 @@ struct Event {
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+        // Bitwise time equality keeps Eq consistent with the total_cmp Ord
+        // below even for NaN timestamps.
+        self.t.to_bits() == other.t.to_bits() && self.seq == other.seq
     }
 }
 impl Eq for Event {}
@@ -113,11 +120,16 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // Min-heap via reverse: earlier time first, then insertion order.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap()
-            .then_with(|| other.seq.cmp(&self.seq))
+        // NaN timestamps (from a poisoned config or cost model) explicitly
+        // order after every real time — for BOTH NaN signs; bare total_cmp
+        // would sort the sign-negative NaN x86 arithmetic produces first —
+        // so the run loop drains real events and then stops, instead of
+        // panicking or silently ending at t=0.
+        let ascending = match (self.t.is_nan(), other.t.is_nan()) {
+            (a, b) if a != b => a.cmp(&b), // NaN after any real time
+            _ => self.t.total_cmp(&other.t),
+        };
+        ascending.reverse().then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -139,7 +151,7 @@ struct JobState {
     evictions: u32,
 }
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SimResult {
     pub completed_jobs: u64,
     pub arrived_jobs: u64,
@@ -168,12 +180,12 @@ pub struct Simulation {
 }
 
 impl Simulation {
-    pub fn new(cfg: SimConfig) -> Simulation {
-        let mut fleet = Fleet::new();
+    pub fn new(mut cfg: SimConfig) -> Simulation {
         let mut gcfg = cfg.generator.clone();
         gcfg.duration_s = cfg.duration_s;
-        let trace = cfg.trace_jobs.clone().map(|mut t| {
-            t.sort_by(|a, b| b.arrival_s.partial_cmp(&a.arrival_s).unwrap());
+        // Take (not clone) the replay trace; it lives on the simulation.
+        let trace = cfg.trace_jobs.take().map(|mut t| {
+            t.sort_by(|a, b| b.arrival_s.total_cmp(&a.arrival_s));
             t
         });
         let mut sim = Simulation {
@@ -191,18 +203,21 @@ impl Simulation {
             fleet: Fleet::new(),
             cfg,
         };
-        // Initial fleet.
-        if let Some(ev) = sim.cfg.evolution.clone() {
+        // Initial fleet. Take/restore the evolution model and static fleet
+        // instead of cloning them (apply_evolution needs &mut self).
+        if let Some(ev) = sim.cfg.evolution.take() {
             sim.apply_evolution(&ev, 0);
             let months = (sim.cfg.duration_s / MONTH_S).ceil() as i32;
             for m in 1..=months {
                 sim.push(m as f64 * MONTH_S, EventKind::EvolutionTick { month: m });
             }
+            sim.cfg.evolution = Some(ev);
         } else {
-            for &(gen, pods) in &sim.cfg.static_fleet.clone() {
-                fleet.add_pods(gen, pods);
+            let static_fleet = std::mem::take(&mut sim.cfg.static_fleet);
+            for &(gen, pods) in &static_fleet {
+                sim.fleet.add_pods(gen, pods);
             }
-            sim.fleet = fleet;
+            sim.cfg.static_fleet = static_fleet;
         }
         sim.ledger.set_capacity(0.0, sim.fleet.healthy_chips());
 
@@ -230,7 +245,10 @@ impl Simulation {
     /// Run to completion; returns the result summary (ledger stays on self).
     pub fn run(&mut self) -> SimResult {
         while let Some(ev) = self.events.pop() {
-            if ev.t > self.cfg.duration_s {
+            // Negated <= so a NaN timestamp also ends the run instead of
+            // advancing the clock to NaN (and looping on NaN-relative ticks
+            // forever). total_cmp ordering pops NaN events last.
+            if !(ev.t <= self.cfg.duration_s) {
                 break;
             }
             self.now = ev.t;
@@ -258,8 +276,11 @@ impl Simulation {
                     self.capacity_changed();
                 }
                 EventKind::EvolutionTick { month } => {
-                    if let Some(ev) = self.cfg.evolution.clone() {
+                    // Take/restore instead of cloning the whole model on
+                    // every tick (apply_evolution needs &mut self).
+                    if let Some(ev) = self.cfg.evolution.take() {
                         self.apply_evolution(&ev, month);
+                        self.cfg.evolution = Some(ev);
                     }
                 }
             }
@@ -287,7 +308,7 @@ impl Simulation {
         self.result.preemptions = self.scheduler.stats.preemptions;
         self.result.defrag_migrations = self.scheduler.stats.defrag_migrations;
         self.result.sim_end_s = self.cfg.duration_s;
-        self.result.clone()
+        self.result
     }
 
     // ------------------------------------------------------------------
@@ -415,6 +436,7 @@ impl Simulation {
                 rate_per_s += pod.machine_count() as f64 / mtbf_s;
             }
         }
+        rate_per_s *= self.cfg.failure_rate_mult;
         if rate_per_s <= 0.0 {
             return;
         }
@@ -590,6 +612,40 @@ mod tests {
 
     fn gen_only_c(cfg: &mut SimConfig) {
         cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+    }
+
+    #[test]
+    fn nan_event_times_order_last_instead_of_panicking() {
+        // Regression: Event::cmp used partial_cmp().unwrap(), so one NaN
+        // timestamp anywhere in the heap aborted the whole simulation.
+        // Both NaN signs: x86 arithmetic (e.g. 0.0/0.0) produces the
+        // sign-negative quiet NaN, which bare total_cmp would sort FIRST.
+        let mut heap = BinaryHeap::new();
+        heap.push(Event { t: f64::NAN, seq: 1, kind: EventKind::ScheduleTick });
+        heap.push(Event { t: 1.0, seq: 2, kind: EventKind::ScheduleTick });
+        heap.push(Event { t: -f64::NAN, seq: 3, kind: EventKind::ScheduleTick });
+        heap.push(Event { t: 0.5, seq: 4, kind: EventKind::ScheduleTick });
+        assert_eq!(heap.pop().unwrap().t, 0.5);
+        assert_eq!(heap.pop().unwrap().t, 1.0);
+        assert!(heap.pop().unwrap().t.is_nan());
+        assert!(heap.pop().unwrap().t.is_nan());
+        assert!(heap.pop().is_none());
+    }
+
+    #[test]
+    fn nan_trace_arrival_does_not_panic_run() {
+        // A poisoned arrival time must neither panic the trace sort nor
+        // hang the event loop (the run-loop duration check is NaN-aware).
+        let mut cfg = small_cfg();
+        gen_only_c(&mut cfg);
+        cfg.failures = false;
+        let mut gcfg = cfg.generator.clone();
+        gcfg.duration_s = cfg.duration_s;
+        let mut jobs = crate::workload::WorkloadGenerator::new(gcfg).trace();
+        jobs[0].arrival_s = f64::NAN;
+        cfg.trace_jobs = Some(jobs);
+        let res = Simulation::new(cfg).run();
+        assert!(res.arrived_jobs > 0, "{res:?}");
     }
 
     #[test]

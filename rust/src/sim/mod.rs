@@ -7,6 +7,8 @@
 
 pub mod engine;
 pub mod scenario;
+pub mod sweep;
 
 pub use engine::{SimConfig, SimResult, Simulation};
 pub use scenario::{EraRule, EraSchedule};
+pub use sweep::{SweepRun, SweepRunner, SweepSpec, SweepVariant};

@@ -1,0 +1,202 @@
+//! Parallel scenario sweeps: the scale-out substrate for every "run the
+//! simulator across many fleet configurations" study (the paper's Figs.
+//! 12–16 / Table 2 workload shape).
+//!
+//! A `SweepSpec` is an ordered list of named `SimConfig` variants plus a
+//! worker count; `SweepRunner::run` executes every variant on a
+//! `util::pool` worker pool and returns the finished simulations **in
+//! input order**. Each variant's simulation is fully self-contained (own
+//! RNG streams seeded from its config), so results are bit-identical to
+//! running the same configs serially — same seed ⇒ same `SimResult` and
+//! ledger, regardless of worker count. That contract is what lets the
+//! figure generators, benches, and the `sweep` CLI share one code path.
+
+use crate::util::{pool, rng};
+
+use super::{SimConfig, SimResult, Simulation};
+
+/// One named configuration in a sweep.
+#[derive(Clone, Debug)]
+pub struct SweepVariant {
+    pub name: String,
+    pub cfg: SimConfig,
+}
+
+/// An ordered set of variants plus the execution width.
+#[derive(Clone, Debug, Default)]
+pub struct SweepSpec {
+    pub variants: Vec<SweepVariant>,
+    /// Worker threads: 0 = one per available core, 1 = serial (inline).
+    pub workers: usize,
+}
+
+impl SweepSpec {
+    pub fn new() -> SweepSpec {
+        SweepSpec::default()
+    }
+
+    pub fn workers(mut self, workers: usize) -> SweepSpec {
+        self.workers = workers;
+        self
+    }
+
+    /// Append a named variant (builder-style; returns &mut for chaining).
+    pub fn push(&mut self, name: impl Into<String>, cfg: SimConfig) -> &mut SweepSpec {
+        self.variants.push(SweepVariant { name: name.into(), cfg });
+        self
+    }
+
+    /// Append a variant whose sim seed is derived from `(base_seed, variant
+    /// index)` — decorrelated streams for grid sweeps, reproducible from
+    /// the base seed alone.
+    pub fn push_derived_seed(
+        &mut self,
+        name: impl Into<String>,
+        mut cfg: SimConfig,
+        base_seed: u64,
+    ) -> &mut SweepSpec {
+        cfg.seed = rng::derive_seed(base_seed, self.variants.len() as u64);
+        self.push(name, cfg)
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+}
+
+/// Apply a named scheduler-policy preset to a config — the single source
+/// of truth for variant names shared by the `sweep` CLI and the scaling
+/// bench (so "no-defrag" always means the same thing everywhere). Returns
+/// false for an unknown name.
+pub fn apply_policy_preset(cfg: &mut SimConfig, name: &str) -> bool {
+    match name {
+        "default" | "baseline" => {}
+        "no-preemption" => cfg.policy.preemption = false,
+        "no-defrag" => cfg.defrag_tick_s = 0.0,
+        "no-anti-thrash" => cfg.policy.min_runtime_before_evict_s = 0.0,
+        "headroom-15" => cfg.policy.headroom_fraction = 0.15,
+        _ => return false,
+    }
+    true
+}
+
+/// One finished variant: its summary plus the whole post-run simulation
+/// (the ledger stays available for goodput reduction).
+pub struct SweepRun {
+    pub name: String,
+    pub result: SimResult,
+    pub sim: Simulation,
+}
+
+/// Executes sweeps. Stateless — the spec carries everything.
+pub struct SweepRunner;
+
+impl SweepRunner {
+    /// Run every variant; results return in spec order.
+    pub fn run(spec: SweepSpec) -> Vec<SweepRun> {
+        let workers = spec.workers;
+        pool::parallel_map(spec.variants, workers, |_, v| {
+            let mut sim = Simulation::new(v.cfg);
+            let result = sim.run();
+            SweepRun { name: v.name, result, sim }
+        })
+    }
+
+    /// Convenience: run and keep only the result summaries.
+    pub fn results(spec: SweepSpec) -> Vec<SimResult> {
+        Self::run(spec).into_iter().map(|r| r.result).collect()
+    }
+
+    /// Run a single variant through the sweep path (the figure generators
+    /// use this so serial figures and parallel sweeps share one code path).
+    pub fn run_single(name: impl Into<String>, cfg: SimConfig) -> SweepRun {
+        let mut spec = SweepSpec::new().workers(1);
+        spec.push(name, cfg);
+        Self::run(spec).into_iter().next().expect("one variant in, one run out")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::metrics::goodput;
+
+    fn quick_cfg(seed: u64) -> SimConfig {
+        let mut cfg = SimConfig {
+            seed,
+            duration_s: 12.0 * 3600.0,
+            static_fleet: vec![(ChipGeneration::TpuC, 12)],
+            ..Default::default()
+        };
+        cfg.generator.arrivals_per_hour = 10.0;
+        cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+        cfg
+    }
+
+    fn spec(workers: usize) -> SweepSpec {
+        let mut spec = SweepSpec::new().workers(workers);
+        for (i, seed) in [3u64, 5, 7, 11, 13, 17].iter().enumerate() {
+            let mut cfg = quick_cfg(*seed);
+            if i % 2 == 0 {
+                cfg.policy.preemption = false;
+            }
+            spec.push(format!("variant-{i}"), cfg);
+        }
+        spec
+    }
+
+    #[test]
+    fn parallel_results_bit_identical_to_serial() {
+        let serial = SweepRunner::run(spec(1));
+        let par = SweepRunner::run(spec(4));
+        assert_eq!(serial.len(), par.len());
+        for (s, p) in serial.iter().zip(&par) {
+            assert_eq!(s.name, p.name, "input order must be preserved");
+            assert_eq!(s.result, p.result, "{}: summaries must match bitwise", s.name);
+            let end = s.sim.cfg.duration_s;
+            let gs = goodput::report(&s.sim.ledger, 0.0, end, |_| true);
+            let gp = goodput::report(&p.sim.ledger, 0.0, end, |_| true);
+            assert_eq!(gs, gp, "{}: ledgers must reduce identically", s.name);
+        }
+    }
+
+    #[test]
+    fn run_single_matches_direct_simulation() {
+        let cfg = quick_cfg(42);
+        let direct = Simulation::new(cfg.clone()).run();
+        let run = SweepRunner::run_single("solo", cfg);
+        assert_eq!(direct, run.result);
+        assert_eq!(run.name, "solo");
+    }
+
+    #[test]
+    fn policy_presets_apply_and_reject_unknown() {
+        let mut cfg = SimConfig::default();
+        assert!(apply_policy_preset(&mut cfg, "no-preemption"));
+        assert!(!cfg.policy.preemption);
+        assert!(apply_policy_preset(&mut cfg, "headroom-15"));
+        assert_eq!(cfg.policy.headroom_fraction, 0.15);
+        assert!(apply_policy_preset(&mut cfg, "default"));
+        assert!(!apply_policy_preset(&mut cfg, "not-a-preset"));
+    }
+
+    #[test]
+    fn derived_seeds_are_reproducible_and_distinct() {
+        let mut a = SweepSpec::new();
+        let mut b = SweepSpec::new();
+        for i in 0..4 {
+            a.push_derived_seed(format!("v{i}"), quick_cfg(0), 0xBA5E);
+            b.push_derived_seed(format!("v{i}"), quick_cfg(0), 0xBA5E);
+        }
+        let seeds: Vec<u64> = a.variants.iter().map(|v| v.cfg.seed).collect();
+        let seeds_b: Vec<u64> = b.variants.iter().map(|v| v.cfg.seed).collect();
+        assert_eq!(seeds, seeds_b, "same base seed must derive the same grid");
+        let unique: std::collections::HashSet<u64> = seeds.iter().copied().collect();
+        assert_eq!(unique.len(), seeds.len(), "variants must get distinct seeds");
+    }
+}

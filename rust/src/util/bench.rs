@@ -46,7 +46,7 @@ impl Bench {
             std::hint::black_box(f());
             times.push(t0.elapsed().as_secs_f64());
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let res = BenchResult {
             min_s: times[0],
             median_s: times[times.len() / 2],

@@ -1,0 +1,119 @@
+//! Tiny scoped worker-pool primitive (the offline build has no rayon).
+//!
+//! `parallel_map` fans a work list out over `std::thread::scope` workers
+//! pulling indices from a shared atomic counter, and collects results **in
+//! input order** — the contract the scenario-sweep subsystem builds on.
+//! Each item is processed exactly once by exactly one worker, so a
+//! deterministic per-item computation yields bit-identical output for any
+//! worker count (including 1, which runs inline on the caller's thread).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count used when the caller passes `workers == 0`: one per
+/// available hardware thread (1 if that cannot be determined).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on `workers` threads; results come back in input
+/// order. `workers == 0` means [`default_workers`]; `workers == 1` (or a
+/// single item) runs inline with no threads spawned. `f` receives the
+/// item's input index alongside the item. Panics in `f` propagate to the
+/// caller once all workers have stopped.
+pub fn parallel_map<T, R, F>(items: Vec<T>, workers: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let workers = if workers == 0 { default_workers() } else { workers };
+    if workers <= 1 || items.len() <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let n = items.len();
+    // Items move into per-slot mutexes so workers can take ownership of
+    // arbitrary slots; results land in matching slots, preserving order.
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("item taken twice");
+                let out = f(i, item);
+                *results[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker skipped a slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(items, 4, |i, x| {
+            assert_eq!(i, x);
+            x * 10
+        });
+        assert_eq!(out, (0..100).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_counts_agree() {
+        let work = |_, x: u64| {
+            // Non-trivial deterministic computation.
+            let mut acc = x;
+            for _ in 0..1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            }
+            acc
+        };
+        let serial = parallel_map((0..32).collect(), 1, work);
+        let par = parallel_map((0..32).collect(), 8, work);
+        let auto = parallel_map((0..32).collect(), 0, work);
+        assert_eq!(serial, par);
+        assert_eq!(serial, auto);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(empty, 4, |_, x: u32| x).is_empty());
+        assert_eq!(parallel_map(vec![7], 4, |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let out = parallel_map(vec![1, 2, 3], 64, |_, x| x * 2);
+        assert_eq!(out, vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map((0..8).collect::<Vec<i32>>(), 4, |_, x| {
+                assert!(x != 5, "boom");
+                x
+            })
+        });
+        assert!(caught.is_err(), "panic in a worker must reach the caller");
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
+    }
+}

@@ -19,6 +19,14 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Derive a decorrelated child seed from `(seed, stream)` — a stateless
+/// splitmix64 mix, so sweep variants get independent but reproducible
+/// seeds from (base seed, variant index).
+pub fn derive_seed(seed: u64, stream: u64) -> u64 {
+    let mut sm = seed ^ stream.wrapping_mul(0x9E3779B97F4A7C15);
+    splitmix64(&mut sm)
+}
+
 impl Rng {
     /// Seed the generator. Any u64 (including 0) is a valid seed.
     pub fn new(seed: u64) -> Self {

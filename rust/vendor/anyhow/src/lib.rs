@@ -1,0 +1,139 @@
+//! Minimal in-tree substitute for the `anyhow` crate.
+//!
+//! The offline build resolves no crates.io dependencies, so this crate
+//! provides exactly the slice of the anyhow API the repository uses:
+//! `Error`, `Result<T>`, the `anyhow!` / `bail!` / `ensure!` macros, and
+//! the `Context` extension trait. Errors are a single flattened message
+//! string — context wraps as `"context: cause"` — which is all the
+//! diagnostics our callers print.
+
+use std::fmt;
+
+/// A flattened error message. Unlike real anyhow there is no source chain
+/// or backtrace; `Display` and `Debug` both print the full message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversion from any std error (io::Error, ParseIntError, ...).
+// `Error` itself deliberately does not implement `std::error::Error`, so
+// this blanket impl cannot overlap the identity `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a failing `Result` (the anyhow extension trait).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/anyhow-shim-test")
+            .context("reading test file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn context_wraps_message() {
+        let err = io_fail().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.starts_with("reading test file: "), "{msg}");
+        // Alternate formatting must also render (callers use {e:#}).
+        assert!(!format!("{err:#}").is_empty());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn inner(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through with {x}"))
+        }
+        assert_eq!(format!("{}", inner(12).unwrap_err()), "x too big: 12");
+        assert_eq!(format!("{}", inner(3).unwrap_err()), "three is right out");
+        assert_eq!(format!("{}", inner(1).unwrap_err()), "fell through with 1");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(format!("{err}"), "missing value");
+    }
+}

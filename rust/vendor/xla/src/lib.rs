@@ -1,0 +1,254 @@
+//! Stub of the `xla` crate's API surface (offline build).
+//!
+//! The real build links PJRT and executes AOT-compiled HLO artifacts; this
+//! container has no XLA toolchain, so the runtime layer compiles against
+//! this stub instead. `Literal` is a real in-memory tensor (shape + typed
+//! buffer) so literal construction, reshape, and readback all behave, while
+//! every PJRT entry point (`PjRtClient::cpu`, compile, execute) returns a
+//! clear "backend unavailable" error. `Engine::new` therefore fails fast at
+//! client creation, and every caller already gates on that (the runtime
+//! integration tests skip when `make artifacts` hasn't produced artifacts).
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT backend unavailable in this offline build (link the real xla crate)"
+    )))
+}
+
+/// Element dtypes (the slice of XLA's PrimitiveType the repo touches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+/// Scalar types storable in a `Literal`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn into_data(v: Vec<Self>) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn into_data(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn into_data(v: Vec<i32>) -> Data {
+        Data::S32(v)
+    }
+    fn from_data(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dimensions of an array literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An in-memory tensor: typed buffer + dims (rank 0 = scalar).
+#[derive(Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::into_data(vec![v]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::into_data(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| Error(format!("to_vec: literal is {:?}, not {:?}", self.ty(), T::TY)))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element: empty literal".to_string()))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::S32(_) => ElementType::S32,
+        })
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (execution
+    /// is unavailable), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("to_tuple")
+    }
+}
+
+/// Parsed HLO module handle (opaque; parsing requires the real backend).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({path})"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let square = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(square.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(square.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(square.ty().unwrap(), ElementType::F32);
+        assert_eq!(square.get_first_element::<f32>().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn literal_scalar_i32() {
+        let lit = Literal::scalar(7i32);
+        assert!(lit.array_shape().unwrap().dims().is_empty());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(lit.to_vec::<f32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn reshape_size_mismatch_errors() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn pjrt_entry_points_error_cleanly() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{err}").contains("unavailable"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
