@@ -1,13 +1,22 @@
 //! Bench: parallel scenario-sweep scaling — a 16-variant policy/fleet/
 //! failure grid run serially (1 worker) and on the full worker pool, with
 //! the speedup written to BENCH_sweep_scaling.json (the ISSUE-1 acceptance
-//! record: >=3x on >=4 cores).
+//! record: >=3x on >=4 cores), plus a cold/warm pass through the on-disk
+//! sweep cache (warm must be all hits and bit-identical).
+//!
+//! `SWEEP_BENCH_DAYS` caps the per-variant horizon (default 4.0); CI's
+//! bench-smoke step sets it to a fraction of a day so the whole bench
+//! finishes in seconds.
 use tpufleet::fleet::ChipGeneration;
-use tpufleet::sim::{sweep, SimConfig, SweepRunner, SweepSpec};
+use tpufleet::sim::{sweep, SimConfig, SweepCache, SweepRunner, SweepSpec, SweepSummary};
 use tpufleet::util::bench::fmt_dur;
 use tpufleet::util::{pool, Json};
 
-fn grid() -> SweepSpec {
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn grid(days: f64) -> SweepSpec {
     let mut spec = SweepSpec::new();
     // Named presets come from the shared table in sim::sweep, so the bench
     // always measures the same variants the `sweep` CLI exposes.
@@ -18,7 +27,7 @@ fn grid() -> SweepSpec {
         for (fname, pods) in fleets {
             for fm in fail_mults {
                 let mut cfg = SimConfig {
-                    duration_s: 4.0 * 24.0 * 3600.0,
+                    duration_s: days * 24.0 * 3600.0,
                     static_fleet: vec![(ChipGeneration::TpuC, pods)],
                     ..Default::default()
                 };
@@ -36,32 +45,70 @@ fn grid() -> SweepSpec {
     spec
 }
 
-fn time_run(workers: usize) -> (f64, Vec<tpufleet::sim::SimResult>) {
+fn time_run(days: f64, workers: usize) -> (f64, Vec<tpufleet::sim::SimResult>) {
     let t0 = std::time::Instant::now();
-    let results = SweepRunner::results(grid().workers(workers));
+    let results = SweepRunner::results(grid(days).workers(workers));
     (t0.elapsed().as_secs_f64(), results)
 }
 
+fn time_summaries(days: f64, cache: &SweepCache) -> (f64, Vec<SweepSummary>) {
+    let t0 = std::time::Instant::now();
+    let mut out = Vec::new();
+    SweepRunner::run_streaming_summaries(grid(days).workers(0), Some(cache), |s| out.push(s));
+    (t0.elapsed().as_secs_f64(), out)
+}
+
 fn main() {
+    let days = env_f64("SWEEP_BENCH_DAYS", 4.0);
     let cores = pool::default_workers();
-    let n = grid().len();
-    println!("sweep scaling: {n} variants, {cores} cores");
-    let (serial_s, serial_results) = time_run(1);
+    let n = grid(days).len();
+    println!("sweep scaling: {n} variants x {days} days, {cores} cores");
+    let (serial_s, serial_results) = time_run(days, 1);
     println!("serial   (1 worker): {}", fmt_dur(serial_s));
-    let (pooled_s, pooled_results) = time_run(0);
+    let (pooled_s, pooled_results) = time_run(days, 0);
     println!("pooled ({cores} workers): {}", fmt_dur(pooled_s));
     let speedup = serial_s / pooled_s.max(1e-9);
     println!("speedup: {speedup:.2}x");
     assert_eq!(serial_results, pooled_results, "sweep must be bit-identical to serial");
     println!("bit-identical results across worker counts ... OK");
 
+    // Cache passes: cold populates .sweep-cache-bench, warm must serve
+    // every variant from it with bit-identical summaries — the contract
+    // that makes skipping already-simulated variants safe.
+    let cache = SweepCache::new("target/sweep-cache-bench");
+    cache.clear().expect("clearing bench cache");
+    let (cold_s, cold) = time_summaries(days, &cache);
+    let (warm_s, warm) = time_summaries(days, &cache);
+    let hits = warm.iter().filter(|s| s.cached).count();
+    assert_eq!(hits, warm.len(), "warm pass must be all cache hits");
+    assert_eq!(cold.len(), warm.len());
+    for (c, w) in cold.iter().zip(&warm) {
+        assert_eq!(c.name, w.name, "cache must preserve spec order");
+        assert_eq!(c.result, w.result, "{}", c.name);
+        assert_eq!(c.goodput, w.goodput, "{}: cached goodput must be exact", c.name);
+    }
+    for (c, r) in cold.iter().zip(&pooled_results) {
+        assert_eq!(c.result, *r, "{}: summaries must match the plain sweep", c.name);
+    }
+    println!(
+        "cache: cold {}  warm {}  ({hits}/{} hits, bit-identical) ... OK",
+        fmt_dur(cold_s),
+        fmt_dur(warm_s),
+        warm.len()
+    );
+    cache.clear().expect("removing bench cache");
+
     let report = Json::obj(vec![
         ("bench", Json::str("sweep_scaling")),
         ("variants", Json::num(n as f64)),
+        ("days", Json::num(days)),
         ("cores", Json::num(cores as f64)),
         ("serial_seconds", Json::num(serial_s)),
         ("pooled_seconds", Json::num(pooled_s)),
         ("speedup", Json::num(speedup)),
+        ("cache_cold_seconds", Json::num(cold_s)),
+        ("cache_warm_seconds", Json::num(warm_s)),
+        ("cache_hits", Json::num(hits as f64)),
         ("bit_identical", Json::Bool(true)),
     ]);
     let path = "BENCH_sweep_scaling.json";

@@ -14,9 +14,9 @@ use tpufleet::metrics::goodput;
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
-use tpufleet::sim::{SimConfig, Simulation, SweepRunner, SweepSpec};
+use tpufleet::sim::{SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec};
 use tpufleet::util::cli::Args;
-use tpufleet::util::Rng;
+use tpufleet::util::{pool, Rng};
 use tpufleet::xlaopt;
 
 const USAGE: &str = "\
@@ -28,7 +28,9 @@ COMMANDS:
   simulate   [--days N] [--seed S] [--arrivals-per-hour R] [--no-failures]
              run the fleet simulator; print the MPG decomposition by segment
   figures    <fig1|fig4|fig6|fig12|fig13|fig14|fig15|fig16|table2|all>
-             [--csv DIR] [--seed S]   regenerate paper figures/tables
+             [--csv DIR] [--seed S] [--workers W]
+             regenerate paper figures/tables; `all` fans the independent
+             generators out over the worker pool and streams them in order
   train      [--steps N] [--lr X] [--seed S] [--artifacts DIR]
              end-to-end training of the AOT transformer via PJRT (L3->L1)
   run-model  <artifact> [--iters N] [--artifacts DIR]
@@ -39,9 +41,13 @@ COMMANDS:
              matrix (runs as a parallel sweep; W=0 means one per core)
   sweep      [--days N] [--seed S] [--workers W] [--arrivals-per-hour R]
              [--policies a,b,..] [--fleets a,b,..] [--job-mixes a,b,..]
-             [--failure-mults 0,1,3] [--out FILE]
+             [--failure-mults 0,1,3] [--out FILE] [--progress]
+             [--no-cache] [--cache-dir DIR]
              run a policy x fleet x job-size x failure-rate grid on a
-             worker pool; print the summary table and emit one JSON report
+             worker pool, streaming rows into one JSON report as variants
+             finish (memory stays O(workers)); --progress reports n/total
+             + ETA on stderr; results persist under .sweep-cache/ so a
+             repeated grid is served from cache bit-identically
              (policies: default no-preemption no-defrag no-anti-thrash
              headroom-15; fleets: default small large c-only; job-mixes:
              default xl-heavy small-heavy)
@@ -117,46 +123,47 @@ fn cmd_figures(args: &Args) -> i32 {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let seed = args.get_u64("seed", 0xF1EE7);
     let csv_dir = args.get("csv");
-    let mut tables: Vec<(String, report::Table)> = Vec::new();
-    let mut emit = |name: &str, t: report::Table| tables.push((name.to_string(), t));
-
-    match which {
-        "fig1" => emit("fig1", figures::fig1_fleet_mix().table),
-        "fig4" => emit("fig4", figures::fig4_job_sizes(seed).table),
-        "fig6" => emit("fig6", figures::fig6_pathways(seed).table),
-        "fig12" => emit("fig12", figures::fig12_algsimp(seed).table),
-        "fig13" => emit("fig13", figures::fig13_lifecycle(seed).table),
-        "fig14" => emit("fig14", figures::fig14_rg_segments(seed).table),
-        "fig15" => emit("fig15", figures::fig15_rg_phase(seed).table),
-        "fig16" => emit("fig16", figures::fig16_sg_jobsize(seed).table),
-        "table2" => emit("table2", figures::table2_matrix().table),
-        "all" => {
-            emit("fig1", figures::fig1_fleet_mix().table);
-            emit("fig4", figures::fig4_job_sizes(seed).table);
-            emit("fig6", figures::fig6_pathways(seed).table);
-            emit("fig12", figures::fig12_algsimp(seed).table);
-            emit("fig13", figures::fig13_lifecycle(seed).table);
-            emit("fig14", figures::fig14_rg_segments(seed).table);
-            emit("fig15", figures::fig15_rg_phase(seed).table);
-            emit("fig16", figures::fig16_sg_jobsize(seed).table);
-            emit("table2", figures::table2_matrix().table);
-        }
-        other => {
-            eprintln!("unknown figure: {other}");
-            return 2;
-        }
-    }
-    for (name, t) in &tables {
-        println!("{}", t.to_ascii());
-        if let Some(dir) = csv_dir {
-            if let Err(e) = t.save_csv(dir, name) {
-                eprintln!("csv write failed: {e}");
-                return 1;
+    let workers = args.get_usize("workers", 0);
+    let names: Vec<&str> =
+        if which == "all" { figures::FIGURE_NAMES.to_vec() } else { vec![which] };
+    // When several figures fan out below, the outer pool is the only
+    // parallelism: inner pools (fig13's per-month fan) run serial so a
+    // `--workers` bound actually bounds total threads. A standalone
+    // figure instead gives the user's bound to the inner pool directly
+    // (the outer pool inlines its single item).
+    let inner_workers = if names.len() > 1 { 1 } else { workers };
+    let mut gens: Vec<(&str, figures::FigureGen)> = Vec::new();
+    for name in names {
+        match figures::generator(name, seed, inner_workers) {
+            Some(g) => gens.push((name, g)),
+            None => {
+                eprintln!("unknown figure: {name}");
+                return 2;
             }
-            eprintln!("wrote {dir}/{name}.csv");
         }
     }
-    0
+    // The generators are independent, so `figures all` fans them out over
+    // the sweep/pool substrate and streams the tables back in paper
+    // order: fig1 prints first even when table2 finishes earlier, and
+    // output is identical to the serial path for any worker count.
+    let mut code = 0;
+    pool::parallel_map_streaming(
+        gens,
+        workers,
+        |_, (name, gen)| (name, gen()),
+        |_, (name, t)| {
+            println!("{}", t.to_ascii());
+            if let Some(dir) = csv_dir {
+                if let Err(e) = t.save_csv(dir, name) {
+                    eprintln!("csv write failed: {e}");
+                    code = 1;
+                } else {
+                    eprintln!("wrote {dir}/{name}.csv");
+                }
+            }
+        },
+    );
+    code
 }
 
 fn cmd_train(args: &Args) -> i32 {
@@ -348,6 +355,7 @@ fn sweep_job_mix(cfg: &mut SimConfig, name: &str) -> bool {
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
+    use std::io::Write;
     use tpufleet::util::Json;
 
     let days = args.get_f64("days", 3.0);
@@ -355,6 +363,12 @@ fn cmd_sweep(args: &Args) -> i32 {
     let workers = args.get_usize("workers", 0);
     let arrivals = args.get_f64("arrivals-per-hour", 8.0);
     let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
+    let progress = args.has_flag("progress");
+    let cache = if args.has_flag("no-cache") {
+        None
+    } else {
+        Some(args.get("cache-dir").map(SweepCache::new).unwrap_or_else(SweepCache::default_dir))
+    };
     let list = |key: &str, default: &str| -> Vec<String> {
         args.get(key)
             .unwrap_or(default)
@@ -366,10 +380,31 @@ fn cmd_sweep(args: &Args) -> i32 {
     let policies = list("policies", "default,no-preemption,headroom-15");
     let fleets = list("fleets", "default,small");
     let job_mixes = list("job-mixes", "default");
+    let fail_strs = list("failure-mults", "1");
+    // Repeated axis values would produce duplicate variant names (which
+    // SweepSpec rejects) and ambiguous report rows — fail fast instead.
+    for (axis, vals) in
+        [("policies", &policies), ("fleets", &fleets), ("job-mixes", &job_mixes)]
+    {
+        if let Some(dup) = vals.iter().enumerate().find_map(|(i, s)| {
+            vals[..i].contains(s).then_some(s)
+        }) {
+            eprintln!("duplicate value in --{axis}: {dup}");
+            return 2;
+        }
+    }
     let mut fail_mults: Vec<f64> = Vec::new();
-    for s in list("failure-mults", "1") {
+    for s in &fail_strs {
         match s.parse::<f64>() {
-            Ok(m) if m >= 0.0 => fail_mults.push(m),
+            // Dedup on the PARSED value: "1" and "1.0" would collide as
+            // the same variant name even though the strings differ.
+            Ok(m) if m >= 0.0 => {
+                if fail_mults.contains(&m) {
+                    eprintln!("duplicate value in --failure-mults: {s}");
+                    return 2;
+                }
+                fail_mults.push(m);
+            }
             _ => {
                 eprintln!("bad failure multiplier: {s}");
                 return 2;
@@ -411,68 +446,123 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
     let total = spec.len();
     eprintln!(
-        "sweeping {total} variants x {days} days on {} workers (seed {seed:#x})...",
-        if workers == 0 { "auto".to_string() } else { workers.to_string() }
+        "sweeping {total} variants x {days} days on {} workers (seed {seed:#x}, cache {})...",
+        if workers == 0 { "auto".to_string() } else { workers.to_string() },
+        match &cache {
+            Some(c) => c.dir().display().to_string(),
+            None => "off".to_string(),
+        }
     );
     let t0 = std::time::Instant::now();
-    let runs = SweepRunner::run(spec);
-    let wall_s = t0.elapsed().as_secs_f64();
-    eprintln!("done in {wall_s:.2}s");
+
+    // Stream the report: the spec header goes out first, then one compact
+    // row per variant as it finishes, in spec order. Nothing grid-sized
+    // is held in memory (each worker drops its Simulation after reducing
+    // it), and the bytes are a pure function of the grid — a warm re-run
+    // served from the cache writes a bit-identical file. Wall-clock goes
+    // to stderr only, for exactly that reason.
+    let file = match std::fs::File::create(&out_path) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("creating {out_path} failed: {e}");
+            return 1;
+        }
+    };
+    let mut out = std::io::BufWriter::new(file);
+    let spec_json = Json::obj(vec![
+        ("days", Json::num(days)),
+        ("seed", Json::str(&format!("{seed:#x}"))),
+        ("workers", Json::num(workers as f64)),
+        ("arrivals_per_hour", Json::num(arrivals)),
+        ("variant_count", Json::num(total as f64)),
+    ]);
+    let mut io_err: Option<std::io::Error> = None;
+    if let Err(e) = write!(out, "{{\n\"spec\": {},\n\"variants\": [", spec_json.to_string_compact())
+    {
+        io_err = Some(e);
+    }
 
     let mut table = report::Table::new(
         "Scenario sweep — fleet goodputs per variant",
-        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures"],
+        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures", "src"],
     );
-    let mut variants_json = Vec::new();
-    for run in &runs {
-        let end = run.sim.cfg.duration_s;
-        let g = goodput::report(&run.sim.ledger, 0.0, end, |_| true);
+    let mut done = 0usize;
+    let mut hits = 0usize;
+    SweepRunner::run_streaming_summaries(spec, cache.as_ref(), |s| {
+        let g = &s.goodput;
         table.row(vec![
-            run.name.clone(),
+            s.name.clone(),
             format!("{:.3}", g.sg),
             format!("{:.3}", g.rg),
             format!("{:.3}", g.pg),
             format!("{:.3}", g.mpg()),
-            run.result.completed_jobs.to_string(),
-            run.result.preemptions.to_string(),
-            run.result.failures_injected.to_string(),
+            s.result.completed_jobs.to_string(),
+            s.result.preemptions.to_string(),
+            s.result.failures_injected.to_string(),
+            if s.cached { "cache".to_string() } else { "sim".to_string() },
         ]);
-        variants_json.push(Json::obj(vec![
-            ("name", Json::str(&run.name)),
-            ("seed", Json::str(&format!("{:#x}", run.sim.cfg.seed))),
-            ("arrived_jobs", Json::num(run.result.arrived_jobs as f64)),
-            ("completed_jobs", Json::num(run.result.completed_jobs as f64)),
-            ("rejected_jobs", Json::num(run.result.rejected_jobs as f64)),
-            ("preemptions", Json::num(run.result.preemptions as f64)),
-            ("failures_injected", Json::num(run.result.failures_injected as f64)),
-            ("defrag_migrations", Json::num(run.result.defrag_migrations as f64)),
+        let row = Json::obj(vec![
+            ("name", Json::str(&s.name)),
+            ("seed", Json::str(&format!("{:#x}", s.seed))),
+            ("arrived_jobs", Json::num(s.result.arrived_jobs as f64)),
+            ("completed_jobs", Json::num(s.result.completed_jobs as f64)),
+            ("rejected_jobs", Json::num(s.result.rejected_jobs as f64)),
+            ("preemptions", Json::num(s.result.preemptions as f64)),
+            ("failures_injected", Json::num(s.result.failures_injected as f64)),
+            ("defrag_migrations", Json::num(s.result.defrag_migrations as f64)),
             ("sg", Json::num(g.sg)),
             ("rg", Json::num(g.rg)),
             ("pg", Json::num(g.pg)),
             ("mpg", Json::num(g.mpg())),
-        ]));
-    }
+        ]);
+        if io_err.is_none() {
+            let sep = if done == 0 { "" } else { "," };
+            if let Err(e) = write!(out, "{sep}\n  {}", row.to_string_compact()) {
+                // Surface it NOW (the grid keeps running — with the cache
+                // on, every finished variant still persists, so a re-run
+                // after fixing the disk is all hits; ctrl-C is safe).
+                eprintln!("report write failed, continuing grid: {e}");
+                io_err = Some(e);
+            }
+        }
+        done += 1;
+        if s.cached {
+            hits += 1;
+        }
+        if progress {
+            let elapsed = t0.elapsed().as_secs_f64();
+            // Rate from *simulated* variants only: cache hits stream back
+            // near-instantly and would make the ETA wildly optimistic on
+            // a partially warm cache.
+            let simmed = done - hits;
+            let eta = if simmed > 0 {
+                elapsed / simmed as f64 * (total - done) as f64
+            } else {
+                0.0
+            };
+            eprintln!(
+                "progress: {done}/{total} ({:.0}%) elapsed {elapsed:.1}s eta {eta:.1}s \
+                 ({hits} cached) {}",
+                done as f64 / total.max(1) as f64 * 100.0,
+                s.name
+            );
+        }
+    });
+    // The summary table prints even when the report file failed — the
+    // grid still ran to completion and stdout is all the user has left.
     println!("{}", table.to_ascii());
-
-    let report_json = Json::obj(vec![
-        (
-            "spec",
-            Json::obj(vec![
-                ("days", Json::num(days)),
-                ("seed", Json::str(&format!("{seed:#x}"))),
-                ("workers", Json::num(workers as f64)),
-                ("arrivals_per_hour", Json::num(arrivals)),
-                ("variant_count", Json::num(total as f64)),
-                ("wall_seconds", Json::num(wall_s)),
-            ]),
-        ),
-        ("variants", Json::Arr(variants_json)),
-    ]);
-    if let Err(e) = std::fs::write(&out_path, report_json.to_string_pretty()) {
+    let finish = match io_err {
+        Some(e) => Err(e),
+        None => write!(out, "\n]\n}}\n").and_then(|()| out.flush()),
+    };
+    if let Err(e) = finish {
         eprintln!("writing {out_path} failed: {e}");
         return 1;
     }
-    eprintln!("wrote {out_path}");
+    eprintln!(
+        "done in {:.2}s ({hits}/{total} cache hits); wrote {out_path}",
+        t0.elapsed().as_secs_f64()
+    );
     0
 }
 
@@ -518,7 +608,7 @@ fn cmd_trace(args: &Args) -> i32 {
                 ..Default::default()
             };
             eprintln!("replaying {} jobs over {days} days...", jobs.len());
-            cfg.trace_jobs = Some(jobs);
+            cfg.trace_jobs = Some(std::sync::Arc::new(jobs));
             let mut sim = Simulation::new(cfg.clone());
             let res = sim.run();
             eprintln!("{res:?}");

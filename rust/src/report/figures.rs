@@ -624,13 +624,15 @@ pub fn ablations_with_workers(seed: u64, workers: usize) -> Ablations {
 fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     let mut base = SimConfig { seed, duration_s: days * DAY_S, ..Default::default() };
     base.generator.arrivals_per_hour = 10.0;
-    // One fixed trace for every variant.
+    // One fixed trace for every variant — Arc'd, so the eight config
+    // clones below (and any hundred-variant grid built the same way)
+    // share a single allocation instead of cloning every `Job`.
     let trace = {
         let mut gcfg = base.generator.clone();
         gcfg.duration_s = base.duration_s;
         crate::workload::WorkloadGenerator::new(gcfg).trace()
     };
-    base.trace_jobs = Some(trace);
+    base.trace_jobs = Some(std::sync::Arc::new(trace));
 
     let mut variants: Vec<(String, SimConfig)> = vec![("baseline".into(), base.clone())];
     {
@@ -661,9 +663,11 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     {
         let mut c = base.clone();
         c.generator.async_ckpt_fraction = 0.0;
-        // ckpt policy is baked into the trace jobs; rewrite them.
+        // ckpt policy is baked into the trace jobs; rewrite them. The
+        // copy-on-write `make_mut` clones the shared trace only for the
+        // variants that actually edit it.
         if let Some(tr) = c.trace_jobs.as_mut() {
-            for j in tr.iter_mut() {
+            for j in std::sync::Arc::make_mut(tr).iter_mut() {
                 j.ckpt = crate::workload::CheckpointPolicy::synchronous();
             }
         }
@@ -672,7 +676,7 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     {
         let mut c = base.clone();
         if let Some(tr) = c.trace_jobs.as_mut() {
-            for j in tr.iter_mut() {
+            for j in std::sync::Arc::make_mut(tr).iter_mut() {
                 j.ckpt = crate::workload::CheckpointPolicy::asynchronous();
             }
         }
@@ -713,6 +717,43 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
         });
     }
     Ablations { rows, table }
+}
+
+// ---------------------------------------------------------------------------
+// Figure registry — the `figures` CLI fan-out
+// ---------------------------------------------------------------------------
+
+/// Every figure/table generator name, in the paper's order. `figures all`
+/// fans exactly this list out over the `util::pool` substrate.
+pub const FIGURE_NAMES: [&str; 9] =
+    ["fig1", "fig4", "fig6", "fig12", "fig13", "fig14", "fig15", "fig16", "table2"];
+
+/// A deferred figure generator — the unit of work the `figures` CLI
+/// streams through the worker pool (boxed so a heterogeneous set fans out
+/// through one call).
+pub type FigureGen = Box<dyn FnOnce() -> Table + Send>;
+
+/// Look up one generator by name; None for an unknown name. Each closure
+/// is independent and deterministic given `seed`, so `figures all` can
+/// run them concurrently and still print identical tables in order.
+/// `inner_workers` bounds any pool a generator spawns internally (only
+/// fig13 has one): pass 1 when fanning several figures out so the outer
+/// pool is the only source of parallelism, 0 for a standalone figure.
+pub fn generator(name: &str, seed: u64, inner_workers: usize) -> Option<FigureGen> {
+    Some(match name {
+        "fig1" => Box::new(move || fig1_fleet_mix().table),
+        "fig4" => Box::new(move || fig4_job_sizes(seed).table),
+        "fig6" => Box::new(move || fig6_pathways(seed).table),
+        "fig12" => Box::new(move || fig12_algsimp(seed).table),
+        "fig13" => {
+            Box::new(move || fig13_lifecycle_with_workers(seed, inner_workers).table)
+        }
+        "fig14" => Box::new(move || fig14_rg_segments(seed).table),
+        "fig15" => Box::new(move || fig15_rg_phase(seed).table),
+        "fig16" => Box::new(move || fig16_sg_jobsize(seed).table),
+        "table2" => Box::new(move || table2_matrix().table),
+        _ => return None,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -842,6 +883,14 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{}: goodputs must match", s.name);
             }
         }
+    }
+
+    #[test]
+    fn figure_registry_resolves_every_name() {
+        for name in FIGURE_NAMES {
+            assert!(generator(name, 1, 1).is_some(), "{name} must resolve");
+        }
+        assert!(generator("fig99", 1, 1).is_none());
     }
 
     #[test]

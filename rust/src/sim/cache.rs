@@ -1,0 +1,652 @@
+//! On-disk sweep result cache: `(stable config hash, seed)` ⇒ cached
+//! `SimResult` + fleet goodput report.
+//!
+//! The simulator's determinism contract — same config + seed gives a
+//! bit-identical result for any worker count (enforced by the
+//! `parallel_results_bit_identical_to_serial` test family) — is what
+//! makes persisting results across CLI invocations and bench runs safe:
+//! a hit is *exactly* what re-simulating would produce. Entries live as
+//! one JSON file per key under `.sweep-cache/` (see [`DEFAULT_DIR`]);
+//! f64s are stored as bit-pattern hex so a round trip is bit-exact.
+//! Corrupt, truncated, or version-skewed entries simply read as misses
+//! and the variant is re-simulated.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::fleet::{EvolutionModel, Lifecycle};
+use crate::metrics::goodput::GoodputReport;
+use crate::runtime_model::{EraEffects, RuntimeModel};
+use crate::scheduler::SchedulerPolicy;
+use crate::util::Json;
+use crate::workload::{CheckpointPolicy, GeneratorConfig, Job, MixDrift, StepProfile};
+use crate::xlaopt::{CompilerStack, Deployment};
+
+use super::scenario::{EraRule, EraSchedule};
+use super::{SimConfig, SimResult};
+
+/// Bumped whenever the entry format OR anything hashed by [`config_hash`]
+/// changes meaning; old entries then read as misses instead of serving
+/// stale results.
+pub const CACHE_VERSION: u64 = 1;
+
+/// Simulator behavior fingerprint, mixed into every config hash. A cached
+/// entry is only valid for the engine that produced it, so **any PR that
+/// changes simulation behavior** (engine event ordering, scheduler
+/// policy semantics, runtime accounting, workload generation, compiler
+/// effects, RNG streams, ...) MUST bump this — otherwise a warm
+/// `.sweep-cache/` silently reproduces pre-change numbers. The crate
+/// version is hashed alongside as a second, release-grade invalidator.
+pub const SIM_BEHAVIOR_VERSION: u64 = 1;
+
+/// Default cache directory, relative to the working directory.
+pub const DEFAULT_DIR: &str = ".sweep-cache";
+
+// ---------------------------------------------------------------------------
+// Stable field-wise hashing
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit, fed field by field. Unlike `std::hash`, the output is
+/// stable across platforms, compiler versions, and process runs — a hard
+/// requirement for an on-disk key. Floats hash by bit pattern.
+#[derive(Clone, Debug)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher { state: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_u64(x as u64);
+    }
+
+    pub fn write_i32(&mut self, x: i32) {
+        self.write_u64(x as u32 as u64);
+    }
+
+    pub fn write_bool(&mut self, x: bool) {
+        self.write_u64(x as u64);
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// Stable hash of everything that determines a simulation's outcome
+/// EXCEPT the sim seed (the seed is the cache key's second component, so
+/// seed sweeps over one config share a hash). Every struct in the config
+/// tree — `SimConfig` itself and each nested type — is destructured
+/// exhaustively in its own helper below, so adding a field ANYWHERE in
+/// the tree without updating this hash is a compile error: the guard
+/// against silently-ambiguous cache keys.
+pub fn config_hash(cfg: &SimConfig) -> u64 {
+    let SimConfig {
+        seed: _, // key component, not part of the config hash
+        duration_s,
+        schedule_tick_s,
+        defrag_tick_s,
+        defrag_max_migrations,
+        static_fleet,
+        evolution,
+        policy,
+        runtime,
+        generator,
+        compiler,
+        eras,
+        trace_jobs,
+        failures,
+        repair_s,
+        fail_detect_s,
+        failure_rate_mult,
+    } = cfg;
+    let mut h = StableHasher::new();
+    h.write_u64(CACHE_VERSION);
+    h.write_u64(SIM_BEHAVIOR_VERSION);
+    for b in env!("CARGO_PKG_VERSION").bytes() {
+        h.write_u64(b as u64);
+    }
+    h.write_f64(*duration_s);
+    h.write_f64(*schedule_tick_s);
+    h.write_f64(*defrag_tick_s);
+    h.write_u32(*defrag_max_migrations);
+
+    h.write_usize(static_fleet.len());
+    for &(gen, pods) in static_fleet {
+        h.write_usize(gen.index());
+        h.write_u32(pods);
+    }
+
+    h.write_bool(evolution.is_some());
+    if let Some(ev) = evolution {
+        let EvolutionModel { lifecycles } = ev;
+        h.write_usize(lifecycles.len());
+        for lc in lifecycles {
+            hash_lifecycle(&mut h, lc);
+        }
+    }
+
+    hash_policy(&mut h, policy);
+    hash_runtime(&mut h, runtime);
+    hash_generator(&mut h, generator);
+
+    let CompilerStack { deployments } = compiler;
+    h.write_usize(deployments.len());
+    for d in deployments {
+        let Deployment { pass, enable_s } = d;
+        h.write_u64(*pass as u64);
+        h.write_f64(*enable_s);
+    }
+
+    let EraSchedule { rules } = eras;
+    h.write_usize(rules.len());
+    for r in rules {
+        hash_era_rule(&mut h, r);
+    }
+
+    h.write_bool(trace_jobs.is_some());
+    if let Some(jobs) = trace_jobs {
+        h.write_usize(jobs.len());
+        for job in jobs.iter() {
+            hash_job(&mut h, job);
+        }
+    }
+
+    h.write_bool(*failures);
+    h.write_f64(*repair_s);
+    h.write_f64(*fail_detect_s);
+    h.write_f64(*failure_rate_mult);
+    h.finish()
+}
+
+fn hash_lifecycle(h: &mut StableHasher, lc: &Lifecycle) {
+    let Lifecycle { gen, intro_month, ramp_months, peak_pods, decom_month, drain_months } =
+        lc;
+    h.write_usize(gen.index());
+    h.write_i32(*intro_month);
+    h.write_i32(*ramp_months);
+    h.write_u32(*peak_pods);
+    h.write_i32(*decom_month);
+    h.write_i32(*drain_months);
+}
+
+fn hash_policy(h: &mut StableHasher, p: &SchedulerPolicy) {
+    let SchedulerPolicy {
+        preemption,
+        victim_bias,
+        min_runtime_before_evict_s,
+        headroom_fraction,
+    } = p;
+    h.write_bool(*preemption);
+    h.write_f64(*victim_bias);
+    h.write_f64(*min_runtime_before_evict_s);
+    h.write_f64(*headroom_fraction);
+}
+
+fn hash_runtime(h: &mut StableHasher, r: &RuntimeModel) {
+    let RuntimeModel {
+        multiclient_stall_frac,
+        pathways_stall_frac,
+        aot_cache_startup_mult,
+        aot_cache_enabled,
+    } = r;
+    h.write_f64(*multiclient_stall_frac);
+    h.write_f64(*pathways_stall_frac);
+    h.write_f64(*aot_cache_startup_mult);
+    h.write_bool(*aot_cache_enabled);
+}
+
+fn hash_mix<const N: usize>(h: &mut StableHasher, m: &MixDrift<N>) {
+    let MixDrift { start, end } = m;
+    for &x in start.iter().chain(end) {
+        h.write_f64(x);
+    }
+}
+
+fn hash_generator(h: &mut StableHasher, g: &GeneratorConfig) {
+    let GeneratorConfig {
+        seed,
+        arrivals_per_hour,
+        duration_s,
+        size_mix,
+        framework_mix,
+        phase_mix,
+        arch_mix,
+        gen_mix,
+        async_ckpt_fraction,
+        xl_pods,
+    } = g;
+    h.write_u64(*seed);
+    h.write_f64(*arrivals_per_hour);
+    h.write_f64(*duration_s);
+    hash_mix(h, size_mix);
+    hash_mix(h, framework_mix);
+    hash_mix(h, phase_mix);
+    hash_mix(h, arch_mix);
+    h.write_usize(gen_mix.len());
+    for &(gen, w) in gen_mix {
+        h.write_usize(gen.index());
+        h.write_f64(w);
+    }
+    h.write_f64(*async_ckpt_fraction);
+    h.write_u32(xl_pods.0);
+    h.write_u32(xl_pods.1);
+}
+
+fn hash_era_rule(h: &mut StableHasher, r: &EraRule) {
+    let EraRule { t0, t1, phase, effects } = r;
+    h.write_f64(*t0);
+    h.write_f64(*t1);
+    h.write_bool(phase.is_some());
+    if let Some(p) = phase {
+        h.write_u64(*p as u64);
+    }
+    let EraEffects { stall_mult, restore_mult } = effects;
+    h.write_f64(*stall_mult);
+    h.write_f64(*restore_mult);
+}
+
+fn hash_job(h: &mut StableHasher, job: &Job) {
+    let Job {
+        id,
+        arrival_s,
+        phase,
+        framework,
+        arch,
+        priority,
+        gen,
+        slice_shape,
+        pods,
+        work_s,
+        step,
+        ckpt,
+        startup_s,
+    } = job;
+    h.write_u64(*id);
+    h.write_f64(*arrival_s);
+    h.write_u64(*phase as u64);
+    h.write_u64(*framework as u64);
+    h.write_u64(*arch as u64);
+    h.write_u64(*priority as u64);
+    h.write_usize(gen.index());
+    for &d in slice_shape {
+        h.write_u32(d);
+    }
+    h.write_u32(*pods);
+    h.write_f64(*work_s);
+    let StepProfile { ideal_flops_per_chip, base_efficiency, comm_fraction, host_fraction } =
+        step;
+    h.write_f64(*ideal_flops_per_chip);
+    h.write_f64(*base_efficiency);
+    h.write_f64(*comm_fraction);
+    h.write_f64(*host_fraction);
+    let CheckpointPolicy { interval_s, write_stall_s, restore_s } = ckpt;
+    h.write_f64(*interval_s);
+    h.write_f64(*write_stall_s);
+    h.write_f64(*restore_s);
+    h.write_f64(*startup_s);
+}
+
+// ---------------------------------------------------------------------------
+// Keys and entries
+// ---------------------------------------------------------------------------
+
+/// Cache key: stable config hash x sim seed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    pub cfg_hash: u64,
+    pub seed: u64,
+}
+
+impl CacheKey {
+    pub fn of(cfg: &SimConfig) -> CacheKey {
+        CacheKey { cfg_hash: config_hash(cfg), seed: cfg.seed }
+    }
+
+    /// Entry file name under the cache dir.
+    pub fn file_name(&self) -> String {
+        format!("{:016x}-{:016x}.json", self.cfg_hash, self.seed)
+    }
+}
+
+/// What a hit returns: the result summary plus the fleet goodput report
+/// over the variant's full horizon — everything the streaming sweep
+/// reducers consume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedRun {
+    pub result: SimResult,
+    pub goodput: GoodputReport,
+}
+
+// ---------------------------------------------------------------------------
+// The cache proper
+// ---------------------------------------------------------------------------
+
+/// A directory of cached sweep results, one JSON file per key.
+#[derive(Clone, Debug)]
+pub struct SweepCache {
+    dir: PathBuf,
+}
+
+impl SweepCache {
+    pub fn new(dir: impl Into<PathBuf>) -> SweepCache {
+        SweepCache { dir: dir.into() }
+    }
+
+    /// The conventional per-repo cache at [`DEFAULT_DIR`].
+    pub fn default_dir() -> SweepCache {
+        SweepCache::new(DEFAULT_DIR)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Read an entry. Every failure mode — missing file, truncated or
+    /// corrupt JSON, version skew, key mismatch (a hash collision on the
+    /// file name with different embedded key) — degrades to a miss so the
+    /// caller falls back to re-simulation.
+    pub fn lookup(&self, key: &CacheKey) -> Option<CachedRun> {
+        let text = std::fs::read_to_string(self.dir.join(key.file_name())).ok()?;
+        decode(&Json::parse(&text).ok()?, key)
+    }
+
+    /// Persist an entry; returns false (and leaves no partial file
+    /// visible) on any I/O failure — a read-only or full disk degrades
+    /// the cache to a no-op, never breaks the sweep. The write goes to a
+    /// unique temp file first and is renamed into place, so concurrent
+    /// writers/readers see an old entry, no entry, or a complete new one,
+    /// never a torn file.
+    pub fn store(&self, key: &CacheKey, run: &CachedRun) -> bool {
+        if std::fs::create_dir_all(&self.dir).is_err() {
+            return false;
+        }
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        if std::fs::write(&tmp, encode(key, run).to_string_pretty()).is_err() {
+            let _ = std::fs::remove_file(&tmp);
+            return false;
+        }
+        std::fs::rename(&tmp, self.dir.join(key.file_name())).is_ok()
+    }
+
+    /// Remove the whole cache directory (missing is fine) — `rm -rf
+    /// .sweep-cache` as a method, for tests and cache-busting.
+    pub fn clear(&self) -> std::io::Result<()> {
+        match std::fs::remove_dir_all(&self.dir) {
+            Err(e) if e.kind() != std::io::ErrorKind::NotFound => Err(e),
+            _ => Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry (de)serialization
+// ---------------------------------------------------------------------------
+
+/// f64 as bit-pattern hex: bit-exact round trip including -0.0/NaN/inf
+/// (which bare JSON numbers cannot represent at all).
+fn bits(x: f64) -> Json {
+    Json::str(&format!("{:016x}", x.to_bits()))
+}
+
+fn unbits(j: &Json) -> Option<f64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+fn hex64(x: u64) -> Json {
+    Json::str(&format!("{x:016x}"))
+}
+
+fn unhex64(j: &Json) -> Option<u64> {
+    let s = j.as_str()?;
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn encode(key: &CacheKey, run: &CachedRun) -> Json {
+    let r = &run.result;
+    let g = &run.goodput;
+    Json::obj(vec![
+        ("version", Json::num(CACHE_VERSION as f64)),
+        ("cfg_hash", hex64(key.cfg_hash)),
+        ("seed", hex64(key.seed)),
+        (
+            "result",
+            Json::obj(vec![
+                ("completed_jobs", Json::num(r.completed_jobs as f64)),
+                ("arrived_jobs", Json::num(r.arrived_jobs as f64)),
+                ("rejected_jobs", Json::num(r.rejected_jobs as f64)),
+                ("failures_injected", Json::num(r.failures_injected as f64)),
+                ("preemptions", Json::num(r.preemptions as f64)),
+                ("defrag_migrations", Json::num(r.defrag_migrations as f64)),
+                ("sim_end_s", bits(r.sim_end_s)),
+            ]),
+        ),
+        (
+            "goodput",
+            Json::obj(vec![
+                ("sg", bits(g.sg)),
+                ("rg", bits(g.rg)),
+                ("pg", bits(g.pg)),
+                ("capacity_cs", bits(g.capacity_cs)),
+                ("all_allocated_cs", bits(g.all_allocated_cs)),
+                ("productive_cs", bits(g.productive_cs)),
+                ("lost_cs", bits(g.lost_cs)),
+                ("startup_cs", bits(g.startup_cs)),
+                ("stall_cs", bits(g.stall_cs)),
+                ("partial_cs", bits(g.partial_cs)),
+                ("job_count", Json::num(g.job_count as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn decode(j: &Json, key: &CacheKey) -> Option<CachedRun> {
+    if j.get("version").as_u64()? != CACHE_VERSION {
+        return None;
+    }
+    if unhex64(j.get("cfg_hash"))? != key.cfg_hash || unhex64(j.get("seed"))? != key.seed {
+        return None;
+    }
+    let r = j.get("result");
+    let result = SimResult {
+        completed_jobs: r.get("completed_jobs").as_u64()?,
+        arrived_jobs: r.get("arrived_jobs").as_u64()?,
+        rejected_jobs: r.get("rejected_jobs").as_u64()?,
+        failures_injected: r.get("failures_injected").as_u64()?,
+        preemptions: r.get("preemptions").as_u64()?,
+        defrag_migrations: r.get("defrag_migrations").as_u64()?,
+        sim_end_s: unbits(r.get("sim_end_s"))?,
+    };
+    let g = j.get("goodput");
+    let goodput = GoodputReport {
+        sg: unbits(g.get("sg"))?,
+        rg: unbits(g.get("rg"))?,
+        pg: unbits(g.get("pg"))?,
+        capacity_cs: unbits(g.get("capacity_cs"))?,
+        all_allocated_cs: unbits(g.get("all_allocated_cs"))?,
+        productive_cs: unbits(g.get("productive_cs"))?,
+        lost_cs: unbits(g.get("lost_cs"))?,
+        startup_cs: unbits(g.get("startup_cs"))?,
+        stall_cs: unbits(g.get("stall_cs"))?,
+        partial_cs: unbits(g.get("partial_cs"))?,
+        job_count: g.get("job_count").as_u64()? as usize,
+    };
+    Some(CachedRun { result, goodput })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::workload::WorkloadGenerator;
+    use std::sync::Arc;
+
+    fn temp_cache(tag: &str) -> SweepCache {
+        let dir = std::env::temp_dir()
+            .join(format!("tpufleet-cache-unit-{}-{tag}", std::process::id()));
+        let cache = SweepCache::new(dir);
+        cache.clear().expect("clearing temp cache");
+        cache
+    }
+
+    fn sample_run() -> CachedRun {
+        CachedRun {
+            result: SimResult {
+                completed_jobs: 101,
+                arrived_jobs: 140,
+                rejected_jobs: 2,
+                failures_injected: 3,
+                preemptions: 17,
+                defrag_migrations: 5,
+                sim_end_s: 86400.0,
+            },
+            goodput: GoodputReport {
+                sg: 0.912345678901,
+                rg: 0.87,
+                pg: 0.4499999999999999,
+                capacity_cs: 1.23e9,
+                all_allocated_cs: 1.1e9,
+                productive_cs: 9.9e8,
+                lost_cs: 1.0e7,
+                startup_cs: 2.5e7,
+                stall_cs: 3.5e7,
+                partial_cs: 1.5e6,
+                job_count: 140,
+            },
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_seed_independent() {
+        let cfg = SimConfig::default();
+        assert_eq!(config_hash(&cfg), config_hash(&cfg.clone()));
+        let mut reseeded = cfg.clone();
+        reseeded.seed = cfg.seed.wrapping_add(1);
+        assert_eq!(
+            config_hash(&cfg),
+            config_hash(&reseeded),
+            "seed is a key component, not part of the config hash"
+        );
+    }
+
+    #[test]
+    fn hash_distinguishes_config_changes() {
+        let base = SimConfig::default();
+        let h0 = config_hash(&base);
+        let mut c = base.clone();
+        c.failure_rate_mult = 3.0;
+        assert_ne!(h0, config_hash(&c), "failure_rate_mult");
+        let mut c = base.clone();
+        c.policy.preemption = false;
+        assert_ne!(h0, config_hash(&c), "policy");
+        let mut c = base.clone();
+        c.generator.arrivals_per_hour += 1.0;
+        assert_ne!(h0, config_hash(&c), "generator");
+        let mut c = base.clone();
+        c.static_fleet.push((ChipGeneration::TpuE, 4));
+        assert_ne!(h0, config_hash(&c), "static fleet");
+    }
+
+    #[test]
+    fn hash_covers_replay_trace_contents() {
+        let mut base = SimConfig::default();
+        let mut gcfg = base.generator.clone();
+        gcfg.duration_s = 6.0 * 3600.0;
+        let jobs = WorkloadGenerator::new(gcfg).trace();
+        base.trace_jobs = Some(Arc::new(jobs.clone()));
+        let h0 = config_hash(&base);
+        let mut edited = jobs;
+        edited[0].work_s += 1.0;
+        let mut c = base.clone();
+        c.trace_jobs = Some(Arc::new(edited));
+        assert_ne!(h0, config_hash(&c), "a one-job trace edit must change the hash");
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let cache = temp_cache("roundtrip");
+        let key = CacheKey { cfg_hash: 0xDEAD_BEEF_0123_4567, seed: 42 };
+        let run = sample_run();
+        assert!(cache.store(&key, &run), "store must succeed in temp dir");
+        let hit = cache.lookup(&key).expect("stored entry must hit");
+        assert_eq!(run.result, hit.result);
+        assert_eq!(run.goodput, hit.goodput);
+        assert_eq!(
+            run.goodput.pg.to_bits(),
+            hit.goodput.pg.to_bits(),
+            "floats must round-trip bitwise"
+        );
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn missing_and_mismatched_keys_miss() {
+        let cache = temp_cache("miss");
+        let key = CacheKey { cfg_hash: 1, seed: 2 };
+        assert!(cache.lookup(&key).is_none(), "empty cache must miss");
+        cache.store(&key, &sample_run());
+        let other = CacheKey { cfg_hash: 1, seed: 3 };
+        assert!(cache.lookup(&other).is_none(), "different seed must miss");
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn corrupt_entries_read_as_misses() {
+        let cache = temp_cache("corrupt");
+        let key = CacheKey { cfg_hash: 7, seed: 7 };
+        cache.store(&key, &sample_run());
+        let path = cache.dir().join(key.file_name());
+
+        // Truncated JSON (a crashed writer without the atomic rename).
+        let full = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(cache.lookup(&key).is_none(), "truncated entry must miss");
+
+        // Valid JSON, wrong version.
+        let skewed = full.replace("\"version\": 1", "\"version\": 999");
+        std::fs::write(&path, skewed).unwrap();
+        assert!(cache.lookup(&key).is_none(), "version skew must miss");
+
+        // Valid JSON, embedded key disagrees with the file name.
+        let forged = full.replace(&format!("{:016x}", 7u64), &format!("{:016x}", 8u64));
+        std::fs::write(&path, forged).unwrap();
+        assert!(cache.lookup(&key).is_none(), "key mismatch must miss");
+        cache.clear().unwrap();
+    }
+}

@@ -10,6 +10,7 @@
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
 
 use crate::fleet::{ChipGeneration, EvolutionModel, Fleet, PodId};
 use crate::metrics::{JobMeta, Ledger, TimeClass};
@@ -44,8 +45,10 @@ pub struct SimConfig {
     pub eras: EraSchedule,
     /// Replay this exact job trace instead of sampling from `generator`
     /// (controlled comparisons; see workload::trace). Arrivals past
-    /// `duration_s` are ignored.
-    pub trace_jobs: Option<Vec<Job>>,
+    /// `duration_s` are ignored. `Arc`'d so a hundred-variant ablation
+    /// grid shares ONE trace allocation: cloning a config for the next
+    /// sweep variant bumps a refcount instead of copying every `Job`.
+    pub trace_jobs: Option<Arc<Vec<Job>>>,
     /// Inject machine failures (Poisson over machines, per-gen MTBF).
     pub failures: bool,
     /// Machine repair time, seconds.
@@ -169,8 +172,10 @@ pub struct Simulation {
     pub ledger: Ledger,
     rng: Rng,
     gen: WorkloadGenerator,
-    /// Remaining trace arrivals when replaying (reversed; pop from back).
-    trace: Option<Vec<Job>>,
+    /// Replay cursor into the shared `cfg.trace_jobs`: indices sorted by
+    /// arrival time, reversed (pop from back). Jobs are cloned one at a
+    /// time on arrival, so the trace itself is never copied per variant.
+    trace_order: Option<Vec<u32>>,
     events: BinaryHeap<Event>,
     seq: u64,
     jobs: HashMap<JobId, JobState>,
@@ -180,18 +185,24 @@ pub struct Simulation {
 }
 
 impl Simulation {
-    pub fn new(mut cfg: SimConfig) -> Simulation {
+    pub fn new(cfg: SimConfig) -> Simulation {
         let mut gcfg = cfg.generator.clone();
         gcfg.duration_s = cfg.duration_s;
-        // Take (not clone) the replay trace; it lives on the simulation.
-        let trace = cfg.trace_jobs.take().map(|mut t| {
-            t.sort_by(|a, b| b.arrival_s.total_cmp(&a.arrival_s));
-            t
+        // Sort replay *indices*, not the jobs: the Arc'd trace stays
+        // shared (and untouched) across every sweep variant. The stable
+        // sort on the same comparator yields the identical replay order
+        // the owned-Vec path produced.
+        let trace_order = cfg.trace_jobs.as_ref().map(|jobs| {
+            let mut order: Vec<u32> = (0..jobs.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                jobs[b as usize].arrival_s.total_cmp(&jobs[a as usize].arrival_s)
+            });
+            order
         });
         let mut sim = Simulation {
             rng: Rng::new(cfg.seed ^ 0x51D),
             gen: WorkloadGenerator::new(gcfg),
-            trace,
+            trace_order,
             events: BinaryHeap::new(),
             seq: 0,
             jobs: HashMap::new(),
@@ -315,16 +326,18 @@ impl Simulation {
     // Event handlers
     // ------------------------------------------------------------------
 
-    /// Next arrival from the trace (when replaying) or the generator.
+    /// Next arrival from the shared trace (when replaying) or the
+    /// generator.
     fn pull_arrival(&mut self) -> Option<Job> {
-        match self.trace.as_mut() {
-            Some(t) => loop {
-                let job = t.pop()?;
-                if job.arrival_s < self.cfg.duration_s {
-                    return Some(job);
+        let horizon = self.cfg.duration_s;
+        match (&self.cfg.trace_jobs, self.trace_order.as_mut()) {
+            (Some(jobs), Some(order)) => loop {
+                let job = &jobs[order.pop()? as usize];
+                if job.arrival_s < horizon {
+                    return Some(job.clone());
                 }
             },
-            None => self.gen.next_job(),
+            _ => self.gen.next_job(),
         }
     }
 
@@ -643,9 +656,38 @@ mod tests {
         gcfg.duration_s = cfg.duration_s;
         let mut jobs = crate::workload::WorkloadGenerator::new(gcfg).trace();
         jobs[0].arrival_s = f64::NAN;
-        cfg.trace_jobs = Some(jobs);
+        cfg.trace_jobs = Some(Arc::new(jobs));
         let res = Simulation::new(cfg).run();
         assert!(res.arrived_jobs > 0, "{res:?}");
+    }
+
+    #[test]
+    fn shared_trace_replay_matches_across_variants() {
+        // Two sims replaying the SAME Arc'd trace (one allocation) under
+        // different policies must consume it independently and the
+        // baseline must match a sim given its own private copy.
+        let mut cfg = small_cfg();
+        gen_only_c(&mut cfg);
+        cfg.failures = false;
+        let mut gcfg = cfg.generator.clone();
+        gcfg.duration_s = cfg.duration_s;
+        let jobs = crate::workload::WorkloadGenerator::new(gcfg).trace();
+        let shared = Arc::new(jobs.clone());
+
+        let mut base = cfg.clone();
+        base.trace_jobs = Some(Arc::clone(&shared));
+        let mut nopreempt = cfg.clone();
+        nopreempt.policy.preemption = false;
+        nopreempt.trace_jobs = Some(Arc::clone(&shared));
+        let mut private = cfg;
+        private.trace_jobs = Some(Arc::new(jobs));
+
+        let r_base = Simulation::new(base).run();
+        let r_nop = Simulation::new(nopreempt).run();
+        let r_priv = Simulation::new(private).run();
+        assert_eq!(r_base, r_priv, "shared vs private trace must be identical");
+        assert_eq!(r_nop.preemptions, 0);
+        assert_eq!(r_base.arrived_jobs, r_nop.arrived_jobs);
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! the runtime-layer accounting model, the compiler stack, and failure
 //! injection, writing every classified chip-second into the MPG ledger.
 
+pub mod cache;
 pub mod engine;
 pub mod scenario;
 pub mod sweep;
 
+pub use cache::{CacheKey, CachedRun, SweepCache};
 pub use engine::{SimConfig, SimResult, Simulation};
 pub use scenario::{EraRule, EraSchedule};
-pub use sweep::{SweepRun, SweepRunner, SweepSpec, SweepVariant};
+pub use sweep::{SweepRun, SweepRunner, SweepSpec, SweepSummary, SweepVariant};

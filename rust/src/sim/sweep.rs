@@ -10,9 +10,19 @@
 //! running the same configs serially — same seed ⇒ same `SimResult` and
 //! ledger, regardless of worker count. That contract is what lets the
 //! figure generators, benches, and the `sweep` CLI share one code path.
+//!
+//! For grids too large to collect, `run_streaming` delivers each finished
+//! `SweepRun` to a callback in spec order as it completes (the caller
+//! reduces it and drops the `Simulation`, keeping memory at O(workers)),
+//! and `run_streaming_summaries` additionally reduces each run to its
+//! [`SweepSummary`] inside the worker and consults the on-disk
+//! [`SweepCache`](super::cache::SweepCache) — a cache hit skips the
+//! simulation entirely, which the bit-identical contract makes safe.
 
+use crate::metrics::goodput::{self, GoodputReport};
 use crate::util::{pool, rng};
 
+use super::cache::{CacheKey, CachedRun, SweepCache};
 use super::{SimConfig, SimResult, Simulation};
 
 /// One named configuration in a sweep.
@@ -41,8 +51,18 @@ impl SweepSpec {
     }
 
     /// Append a named variant (builder-style; returns &mut for chaining).
+    ///
+    /// Panics on a duplicate variant name: names identify report rows and
+    /// cached results, and a silently-duplicated name would make both
+    /// ambiguous. The linear scan is fine at sweep scale (hundreds of
+    /// variants, push-once construction).
     pub fn push(&mut self, name: impl Into<String>, cfg: SimConfig) -> &mut SweepSpec {
-        self.variants.push(SweepVariant { name: name.into(), cfg });
+        let name = name.into();
+        assert!(
+            !self.variants.iter().any(|v| v.name == name),
+            "duplicate sweep variant name: {name:?}"
+        );
+        self.variants.push(SweepVariant { name, cfg });
         self
     }
 
@@ -92,18 +112,99 @@ pub struct SweepRun {
     pub sim: Simulation,
 }
 
+/// One finished variant reduced to its reportable numbers — what the
+/// streaming CLI/bench paths keep per grid cell. The `Simulation` behind
+/// it is dropped inside the worker, so a hundred-variant grid never holds
+/// more than O(workers) simulations alive.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSummary {
+    pub name: String,
+    /// The variant's sim seed (cache-key component, echoed into reports).
+    pub seed: u64,
+    pub result: SimResult,
+    /// Fleet-wide goodput over the variant's full horizon.
+    pub goodput: GoodputReport,
+    /// Served from the on-disk sweep cache without simulating.
+    pub cached: bool,
+}
+
 /// Executes sweeps. Stateless — the spec carries everything.
 pub struct SweepRunner;
 
 impl SweepRunner {
+    /// Simulate one variant to completion — the shared single-variant
+    /// path: `run`, `run_streaming`, and `run_single` all funnel through
+    /// here, so a serial figure and a parallel grid execute identical
+    /// code.
+    fn run_variant(v: SweepVariant) -> SweepRun {
+        let mut sim = Simulation::new(v.cfg);
+        let result = sim.run();
+        SweepRun { name: v.name, result, sim }
+    }
+
     /// Run every variant; results return in spec order.
     pub fn run(spec: SweepSpec) -> Vec<SweepRun> {
         let workers = spec.workers;
-        pool::parallel_map(spec.variants, workers, |_, v| {
-            let mut sim = Simulation::new(v.cfg);
-            let result = sim.run();
-            SweepRun { name: v.name, result, sim }
-        })
+        pool::parallel_map(spec.variants, workers, |_, v| Self::run_variant(v))
+    }
+
+    /// Stream finished runs to `on_run` in spec order as they complete,
+    /// instead of collecting them at the end: the callback reduces each
+    /// run (goodput report, figure row, JSON record) and drops the
+    /// `Simulation`, so peak memory stays O(workers), not O(grid). The
+    /// delivered sequence is exactly what [`SweepRunner::run`] would
+    /// return, in the same order.
+    pub fn run_streaming(spec: SweepSpec, mut on_run: impl FnMut(SweepRun)) {
+        let workers = spec.workers;
+        pool::parallel_map_streaming(
+            spec.variants,
+            workers,
+            |_, v| Self::run_variant(v),
+            |_, run| on_run(run),
+        );
+    }
+
+    /// Streaming reduction to [`SweepSummary`] with optional on-disk
+    /// caching. A cache hit skips the simulation entirely — safe because
+    /// results are bit-identical for a given (config, seed) — while a
+    /// miss simulates, reduces, and populates the cache for the next
+    /// invocation. The reduction happens inside the worker, so even an
+    /// all-miss grid holds only O(workers) simulations.
+    pub fn run_streaming_summaries(
+        spec: SweepSpec,
+        cache: Option<&SweepCache>,
+        mut on_summary: impl FnMut(SweepSummary),
+    ) {
+        let workers = spec.workers;
+        pool::parallel_map_streaming(
+            spec.variants,
+            workers,
+            |_, v| Self::summarize_variant(v, cache),
+            |_, s| on_summary(s),
+        );
+    }
+
+    fn summarize_variant(v: SweepVariant, cache: Option<&SweepCache>) -> SweepSummary {
+        let key = cache.map(|c| (c, CacheKey::of(&v.cfg)));
+        if let Some((c, k)) = &key {
+            if let Some(hit) = c.lookup(k) {
+                return SweepSummary {
+                    name: v.name,
+                    seed: k.seed,
+                    result: hit.result,
+                    goodput: hit.goodput,
+                    cached: true,
+                };
+            }
+        }
+        let seed = v.cfg.seed;
+        let run = Self::run_variant(v);
+        let end = run.sim.cfg.duration_s;
+        let goodput = goodput::report(&run.sim.ledger, 0.0, end, |_| true);
+        if let Some((c, k)) = &key {
+            c.store(k, &CachedRun { result: run.result, goodput });
+        }
+        SweepSummary { name: run.name, seed, result: run.result, goodput, cached: false }
     }
 
     /// Convenience: run and keep only the result summaries.
@@ -111,12 +212,11 @@ impl SweepRunner {
         Self::run(spec).into_iter().map(|r| r.result).collect()
     }
 
-    /// Run a single variant through the sweep path (the figure generators
-    /// use this so serial figures and parallel sweeps share one code path).
+    /// Run a single variant through the shared sweep path (the figure
+    /// generators use this so serial figures and parallel sweeps share
+    /// one code path) — directly, with no throwaway one-element spec.
     pub fn run_single(name: impl Into<String>, cfg: SimConfig) -> SweepRun {
-        let mut spec = SweepSpec::new().workers(1);
-        spec.push(name, cfg);
-        Self::run(spec).into_iter().next().expect("one variant in, one run out")
+        Self::run_variant(SweepVariant { name: name.into(), cfg })
     }
 }
 
@@ -150,6 +250,16 @@ mod tests {
         spec
     }
 
+    /// Fresh, empty cache under the OS temp dir (unique per process+tag
+    /// so parallel `cargo test` threads never collide).
+    fn temp_cache(tag: &str) -> SweepCache {
+        let dir = std::env::temp_dir()
+            .join(format!("tpufleet-sweep-cache-{}-{tag}", std::process::id()));
+        let cache = SweepCache::new(dir);
+        cache.clear().expect("clearing temp cache");
+        cache
+    }
+
     #[test]
     fn parallel_results_bit_identical_to_serial() {
         let serial = SweepRunner::run(spec(1));
@@ -163,6 +273,94 @@ mod tests {
             let gp = goodput::report(&p.sim.ledger, 0.0, end, |_| true);
             assert_eq!(gs, gp, "{}: ledgers must reduce identically", s.name);
         }
+    }
+
+    #[test]
+    fn streaming_delivers_same_ordered_results_as_run() {
+        let collected = SweepRunner::run(spec(4));
+        let mut streamed: Vec<SweepRun> = Vec::new();
+        SweepRunner::run_streaming(spec(4), |run| streamed.push(run));
+        assert_eq!(collected.len(), streamed.len());
+        for (c, s) in collected.iter().zip(&streamed) {
+            assert_eq!(c.name, s.name, "streaming must preserve spec order");
+            assert_eq!(c.result, s.result, "{}: summaries must match bitwise", c.name);
+            let end = c.sim.cfg.duration_s;
+            let gc = goodput::report(&c.sim.ledger, 0.0, end, |_| true);
+            let gs = goodput::report(&s.sim.ledger, 0.0, end, |_| true);
+            assert_eq!(gc, gs, "{}: ledgers must reduce identically", c.name);
+        }
+    }
+
+    #[test]
+    fn streaming_summaries_match_collected_runs() {
+        let runs = SweepRunner::run(spec(1));
+        let mut summaries: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries(spec(4), None, |s| summaries.push(s));
+        assert_eq!(runs.len(), summaries.len());
+        for (r, s) in runs.iter().zip(&summaries) {
+            assert_eq!(r.name, s.name);
+            assert_eq!(r.result, s.result, "{}", r.name);
+            assert!(!s.cached, "{}: no cache was configured", s.name);
+            let end = r.sim.cfg.duration_s;
+            let g = goodput::report(&r.sim.ledger, 0.0, end, |_| true);
+            assert_eq!(g, s.goodput, "{}", r.name);
+        }
+    }
+
+    #[test]
+    fn cache_warm_pass_hits_and_matches_cold_bitwise() {
+        let cache = temp_cache("warm-pass");
+        let mut cold: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries(spec(2), Some(&cache), |s| cold.push(s));
+        assert!(cold.iter().all(|s| !s.cached), "first pass must simulate");
+        let mut warm: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries(spec(2), Some(&cache), |s| warm.push(s));
+        assert!(warm.iter().all(|s| s.cached), "second pass must be all hits");
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.name, w.name);
+            assert_eq!(c.seed, w.seed);
+            assert_eq!(c.result, w.result, "{}", c.name);
+            assert_eq!(c.goodput, w.goodput, "{}: cached goodput must be exact", c.name);
+        }
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn cache_misses_on_config_or_seed_change() {
+        let cache = temp_cache("miss");
+        let run_one = |cfg: SimConfig| {
+            let mut spec = SweepSpec::new().workers(1);
+            spec.push("solo", cfg);
+            let mut out = Vec::new();
+            SweepRunner::run_streaming_summaries(spec, Some(&cache), |s| out.push(s));
+            out.remove(0)
+        };
+        let base = quick_cfg(11);
+        assert!(!run_one(base.clone()).cached, "cold start must miss");
+        assert!(run_one(base.clone()).cached, "identical config must hit");
+        let mut reseeded = base.clone();
+        reseeded.seed = 12;
+        assert!(!run_one(reseeded).cached, "new seed must miss");
+        let mut tweaked = base;
+        tweaked.policy.preemption = false;
+        assert!(!run_one(tweaked).cached, "changed config must miss");
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sweep variant name")]
+    fn duplicate_variant_names_rejected() {
+        let mut spec = SweepSpec::new();
+        spec.push("twin", quick_cfg(1));
+        spec.push("twin", quick_cfg(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sweep variant name")]
+    fn duplicate_derived_seed_names_rejected() {
+        let mut spec = SweepSpec::new();
+        spec.push_derived_seed("twin", quick_cfg(0), 0xBA5E);
+        spec.push_derived_seed("twin", quick_cfg(0), 0xBA5E);
     }
 
     #[test]

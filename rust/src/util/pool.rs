@@ -6,9 +6,16 @@
 //! Each item is processed exactly once by exactly one worker, so a
 //! deterministic per-item computation yields bit-identical output for any
 //! worker count (including 1, which runs inline on the caller's thread).
+//!
+//! `parallel_map_streaming` is the ordered-channel variant: results are
+//! handed to a consumer callback in input order *as they become ready*,
+//! through a bounded reorder window, so the peak number of undelivered
+//! results is O(workers) no matter how long the input is. This is what
+//! lets grid sweeps scale to hundreds of variants without collecting
+//! every finished simulation first.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Worker count used when the caller passes `workers == 0`: one per
 /// available hardware thread (1 if that cannot be determined).
@@ -55,6 +62,132 @@ where
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("worker skipped a slot"))
         .collect()
+}
+
+/// Shared state of the streaming reorder window.
+struct StreamState<R> {
+    /// Finished-but-undelivered results, indexed by `i % ring.len()`.
+    ring: Vec<Option<R>>,
+    /// Results `0..delivered` have been handed to the consumer.
+    delivered: usize,
+    /// Set when any thread unwinds, so nobody blocks on a result that
+    /// will never arrive.
+    panicked: bool,
+}
+
+/// On-unwind breaker: flips `panicked` and wakes every waiter. Armed for
+/// the duration of each worker loop and the consumer loop; disarmed on
+/// normal exit, so it only fires when a panic unwinds past it.
+struct Bail<'a, R> {
+    state: &'a Mutex<StreamState<R>>,
+    space: &'a Condvar,
+    ready: &'a Condvar,
+    armed: bool,
+}
+
+impl<R> Drop for Bail<'_, R> {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Ok(mut st) = self.state.lock() {
+                st.panicked = true;
+            }
+            self.space.notify_all();
+            self.ready.notify_all();
+        }
+    }
+}
+
+/// Map `f` over `items` on `workers` threads, delivering each result to
+/// `consume` **in input order, as it becomes ready** — the ordered-channel
+/// mode the streaming sweep runner builds on. A bounded reorder window
+/// (2 x workers) applies backpressure: no worker starts an item more than
+/// a window ahead of the oldest undelivered result, so at most O(workers)
+/// results are ever alive at once, regardless of input length.
+///
+/// Determinism contract is identical to [`parallel_map`]: `consume` sees
+/// exactly the `(index, result)` pairs a serial run would produce, in the
+/// same order, for any worker count. `workers == 0` means
+/// [`default_workers`]; `workers == 1` (or a single item) runs inline on
+/// the caller's thread. Panics in `f` propagate to the caller.
+pub fn parallel_map_streaming<T, R, F, C>(items: Vec<T>, workers: usize, f: F, mut consume: C)
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+    C: FnMut(usize, R),
+{
+    let workers = if workers == 0 { default_workers() } else { workers };
+    if workers <= 1 || items.len() <= 1 {
+        for (i, x) in items.into_iter().enumerate() {
+            let out = f(i, x);
+            consume(i, out);
+        }
+        return;
+    }
+    let n = items.len();
+    let window = (2 * workers).min(n);
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let state = Mutex::new(StreamState {
+        ring: (0..window).map(|_| None).collect(),
+        delivered: 0,
+        panicked: false,
+    });
+    let space = Condvar::new(); // consumer -> workers: window advanced
+    let ready = Condvar::new(); // workers -> consumer: a slot was filled
+    let next = AtomicUsize::new(0);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(n) {
+            scope.spawn(|| {
+                let mut bail =
+                    Bail { state: &state, space: &space, ready: &ready, armed: true };
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // Backpressure: stay inside the reorder window.
+                    {
+                        let mut st = state.lock().unwrap();
+                        while !st.panicked && i >= st.delivered + window {
+                            st = space.wait(st).unwrap();
+                        }
+                        if st.panicked {
+                            break;
+                        }
+                    }
+                    let item =
+                        slots[i].lock().unwrap().take().expect("item taken twice");
+                    let out = f(i, item);
+                    state.lock().unwrap().ring[i % window] = Some(out);
+                    ready.notify_all();
+                }
+                bail.armed = false;
+            });
+        }
+
+        // The caller's thread is the consumer: deliver in input order.
+        let mut bail = Bail { state: &state, space: &space, ready: &ready, armed: true };
+        for i in 0..n {
+            let out = {
+                let mut st = state.lock().unwrap();
+                loop {
+                    if let Some(out) = st.ring[i % window].take() {
+                        st.delivered = i + 1;
+                        break out;
+                    }
+                    assert!(!st.panicked, "worker panicked during streaming map");
+                    st = ready.wait(st).unwrap();
+                }
+            };
+            space.notify_all();
+            // Outside the lock: the callback may do slow work (reduce a
+            // simulation, write a report row) without stalling workers.
+            consume(i, out);
+        }
+        bail.armed = false;
+    });
 }
 
 #[cfg(test)]
@@ -115,5 +248,78 @@ mod tests {
     #[test]
     fn default_workers_positive() {
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn streaming_matches_collected_order() {
+        let work = |i: usize, x: u64| x.wrapping_mul(31).wrapping_add(i as u64);
+        let items: Vec<u64> = (0..100).collect();
+        let expect = parallel_map(items.clone(), 4, work);
+        let mut got = Vec::new();
+        parallel_map_streaming(items, 4, work, |i, r| {
+            assert_eq!(i, got.len(), "delivery must be in input order");
+            got.push(r);
+        });
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn streaming_inline_and_empty_inputs() {
+        let mut got = Vec::new();
+        parallel_map_streaming((0..5).collect::<Vec<u32>>(), 1, |_, x| x * 2, |_, r| {
+            got.push(r)
+        });
+        assert_eq!(got, vec![0, 2, 4, 6, 8]);
+        parallel_map_streaming(Vec::<u32>::new(), 4, |_, x| x, |_, _| {
+            panic!("no items, no deliveries")
+        });
+    }
+
+    #[test]
+    fn streaming_backpressure_bounds_inflight() {
+        // Item 0 is slow; without the reorder window, fast workers would
+        // race far ahead and buffer ~all results. With it, no item may
+        // start more than `2 * workers` past the delivered watermark.
+        // This mirror of the watermark updates in the consume callback,
+        // one step AFTER the internal counter advances, so the observable
+        // bound is window + 1 (and it only grows, so reading it after
+        // the gate is safe).
+        let workers = 2;
+        let window = 2 * workers;
+        let delivered = AtomicUsize::new(0);
+        parallel_map_streaming(
+            (0..64).collect::<Vec<usize>>(),
+            workers,
+            |i, x| {
+                assert!(
+                    i < delivered.load(Ordering::SeqCst) + window + 1,
+                    "item {i} started beyond the reorder window"
+                );
+                if i == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+                x
+            },
+            |i, _| {
+                delivered.store(i + 1, Ordering::SeqCst);
+            },
+        );
+        assert_eq!(delivered.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn streaming_worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_map_streaming(
+                (0..32).collect::<Vec<i32>>(),
+                4,
+                |_, x| {
+                    assert!(x != 9, "boom");
+                    x
+                },
+                |_, _| {},
+            )
+        });
+        assert!(caught.is_err(), "panic in a streaming worker must reach the caller");
     }
 }
