@@ -1,0 +1,66 @@
+//! Bench: shard hand-off overhead — the coordinator-side cost of turning
+//! a grid into manifests, the worker-side cost of parsing them, and the
+//! full config JSON round trip, so the fixed per-shard tax stays visibly
+//! tiny next to the simulations it parallelizes. Writes
+//! BENCH_shard_manifest.json in the house bench-report format.
+
+use tpufleet::sim::{shard, SimConfig, SweepSpec};
+use tpufleet::util::bench::Bench;
+use tpufleet::util::Json;
+
+/// A 64-variant grid with per-variant knob diversity (so configs don't
+/// trivially share encoded bytes).
+fn grid() -> SweepSpec {
+    let mut spec = SweepSpec::new().workers(1);
+    for i in 0..64u64 {
+        let mut cfg = SimConfig::default();
+        cfg.policy.preemption = i % 2 == 0;
+        cfg.policy.headroom_fraction = (i % 5) as f64 * 0.05;
+        cfg.failure_rate_mult = 1.0 + (i % 7) as f64 * 0.5;
+        cfg.generator.arrivals_per_hour = 6.0 + i as f64;
+        spec.push_derived_seed(format!("v{i}"), cfg, 0x5AAD);
+    }
+    spec
+}
+
+fn main() {
+    let spec = grid();
+    let n = spec.len();
+    println!("shard manifest overhead: {n}-variant grid");
+
+    let roundtrip = Bench::new("config_json_text_roundtrip").iters(50).run(|| {
+        let text = shard::config_to_json(&spec.variants[0].cfg).to_string_pretty();
+        shard::config_from_json(&Json::parse(&text).unwrap()).unwrap()
+    });
+
+    let manifests = Bench::new("shard_manifests_x8").iters(20).run(|| {
+        shard::shard_manifests(&spec, 8)
+    });
+
+    let parse = {
+        let encoded: Vec<String> = shard::shard_manifests(&spec, 8)
+            .iter()
+            .map(|m| m.to_string_pretty())
+            .collect();
+        Bench::new("parse_8_manifests").iters(20).run(|| {
+            encoded
+                .iter()
+                .map(|text| shard::parse_manifest(&Json::parse(text).unwrap()).unwrap())
+                .map(|task| task.variants.len())
+                .sum::<usize>()
+        })
+    };
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("shard_manifest")),
+        ("variants", Json::num(n as f64)),
+        ("config_roundtrip_s", Json::num(roundtrip.median_s)),
+        ("shard_manifests_x8_s", Json::num(manifests.median_s)),
+        ("parse_8_manifests_s", Json::num(parse.median_s)),
+    ]);
+    let path = "BENCH_shard_manifest.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("writing {path} failed: {e}"),
+    }
+}

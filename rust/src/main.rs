@@ -14,7 +14,8 @@ use tpufleet::metrics::goodput;
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
-use tpufleet::sim::{SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec};
+use tpufleet::sim::cache::SIM_BEHAVIOR_VERSION;
+use tpufleet::sim::{shard, SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec};
 use tpufleet::util::cli::Args;
 use tpufleet::util::{pool, Rng};
 use tpufleet::xlaopt;
@@ -42,16 +43,26 @@ COMMANDS:
   sweep      [--days N] [--seed S] [--workers W] [--arrivals-per-hour R]
              [--policies a,b,..] [--fleets a,b,..] [--job-mixes a,b,..]
              [--failure-mults 0,1,3] [--out FILE] [--progress]
-             [--no-cache] [--cache-dir DIR]
+             [--no-cache] [--cache-dir DIR] [--cache-max-mb N]
+             [--cache-stats] [--shards N] [--shard-cmd CMD]
              run a policy x fleet x job-size x failure-rate grid on a
              worker pool, streaming rows into one JSON report as variants
              finish (memory stays O(workers)); --progress reports n/total
              + ETA on stderr; results persist under .sweep-cache/ so a
-             repeated grid is served from cache bit-identically
+             repeated grid is served from cache bit-identically;
+             --cache-max-mb caps the cache (LRU eviction) and
+             --cache-stats reports hits/misses/bytes/age after the run;
+             --shards N partitions the grid across N worker subprocesses
+             (sharing one cache; merged report is byte-identical to the
+             single-process run) and --shard-cmd overrides how workers
+             are launched (default: this binary)
              (policies: default no-preemption no-defrag no-anti-thrash
              headroom-15; fleets: default small large c-only; job-mixes:
              default xl-heavy small-heavy)
   trace      generate <out.json> [--hours H] | replay <in.json> [--days N]
+
+(`sweep-worker` is the internal subcommand `sweep --shards` spawns; it
+runs one shard manifest and writes a shard report for the coordinator.)
 ";
 
 fn main() {
@@ -71,6 +82,7 @@ fn main() {
         "overlap" => cmd_overlap(),
         "ablate" => cmd_ablate(&args),
         "sweep" => cmd_sweep(&args),
+        "sweep-worker" => cmd_sweep_worker(&args),
         "trace" => cmd_trace(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -354,21 +366,76 @@ fn sweep_job_mix(cfg: &mut SimConfig, name: &str) -> bool {
     true
 }
 
-fn cmd_sweep(args: &Args) -> i32 {
-    use std::io::Write;
-    use tpufleet::util::Json;
+const SWEEP_DEFAULT_DAYS: f64 = 3.0;
+const SWEEP_DEFAULT_SEED: u64 = 0x5EE9;
+const SWEEP_DEFAULT_ARRIVALS: f64 = 8.0;
 
-    let days = args.get_f64("days", 3.0);
-    let seed = args.get_u64("seed", 0x5EE9);
+/// Shared cache wiring for `sweep`, its coordinator, and `sweep-worker`:
+/// `--no-cache` disables, `--cache-dir` relocates, `--cache-max-mb` caps
+/// the footprint with LRU eviction. A malformed cap is an error (exit
+/// code in `Err`), not a silently uncapped cache.
+fn sweep_cache_from_args(args: &Args) -> Result<Option<SweepCache>, i32> {
+    if args.has_flag("no-cache") {
+        return Ok(None);
+    }
+    let dir = args.get("cache-dir");
+    let cache = dir.map(SweepCache::new).unwrap_or_else(SweepCache::default_dir);
+    if args.has_flag("cache-max-mb") {
+        eprintln!("bad --cache-max-mb value: the flag requires an integer MiB count");
+        return Err(2);
+    }
+    match args.get("cache-max-mb") {
+        None => Ok(Some(cache)),
+        Some(s) => match s.parse::<u64>() {
+            Ok(mb) => Ok(Some(cache.with_max_bytes(mb.saturating_mul(1024 * 1024)))),
+            Err(_) => {
+                eprintln!("bad --cache-max-mb value: {s} (want an integer MiB count)");
+                Err(2)
+            }
+        },
+    }
+}
+
+/// The report's `spec` header — shared by the serial writer and the shard
+/// coordinator so both emit identical bytes. Embeds the simulation
+/// behavior version: a report is only comparable to runs of the same
+/// engine behavior.
+fn sweep_spec_json(args: &Args, total: usize) -> tpufleet::util::Json {
+    use tpufleet::util::Json;
+    Json::obj(vec![
+        ("days", Json::num(args.get_f64("days", SWEEP_DEFAULT_DAYS))),
+        ("seed", Json::str(&format!("{:#x}", args.get_u64("seed", SWEEP_DEFAULT_SEED)))),
+        ("workers", Json::num(args.get_usize("workers", 0) as f64)),
+        (
+            "arrivals_per_hour",
+            Json::num(args.get_f64("arrivals-per-hour", SWEEP_DEFAULT_ARRIVALS)),
+        ),
+        ("behavior_version", Json::num(SIM_BEHAVIOR_VERSION as f64)),
+        ("variant_count", Json::num(total as f64)),
+    ])
+}
+
+fn print_cache_stats(cache: &SweepCache, hits: u64, misses: u64) {
+    let st = cache.stats();
+    eprintln!(
+        "cache stats: {hits} hits / {misses} misses this run; {} entries, {:.2} MiB \
+         in {}, entry age {:.0}s-{:.0}s; {} evicted by this process",
+        st.entries,
+        st.bytes as f64 / (1024.0 * 1024.0),
+        cache.dir().display(),
+        st.newest_age_s,
+        st.oldest_age_s,
+        st.evictions,
+    );
+}
+
+/// Build the sweep grid from the CLI axes. Prints the offending flag and
+/// returns the exit code on bad input.
+fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
+    let days = args.get_f64("days", SWEEP_DEFAULT_DAYS);
+    let seed = args.get_u64("seed", SWEEP_DEFAULT_SEED);
     let workers = args.get_usize("workers", 0);
-    let arrivals = args.get_f64("arrivals-per-hour", 8.0);
-    let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
-    let progress = args.has_flag("progress");
-    let cache = if args.has_flag("no-cache") {
-        None
-    } else {
-        Some(args.get("cache-dir").map(SweepCache::new).unwrap_or_else(SweepCache::default_dir))
-    };
+    let arrivals = args.get_f64("arrivals-per-hour", SWEEP_DEFAULT_ARRIVALS);
     let list = |key: &str, default: &str| -> Vec<String> {
         args.get(key)
             .unwrap_or(default)
@@ -390,7 +457,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             vals[..i].contains(s).then_some(s)
         }) {
             eprintln!("duplicate value in --{axis}: {dup}");
-            return 2;
+            return Err(2);
         }
     }
     let mut fail_mults: Vec<f64> = Vec::new();
@@ -401,13 +468,13 @@ fn cmd_sweep(args: &Args) -> i32 {
             Ok(m) if m >= 0.0 => {
                 if fail_mults.contains(&m) {
                     eprintln!("duplicate value in --failure-mults: {s}");
-                    return 2;
+                    return Err(2);
                 }
                 fail_mults.push(m);
             }
             _ => {
                 eprintln!("bad failure multiplier: {s}");
-                return 2;
+                return Err(2);
             }
         }
     }
@@ -424,15 +491,15 @@ fn cmd_sweep(args: &Args) -> i32 {
                     cfg.generator.arrivals_per_hour = arrivals;
                     if !sweep_policy(&mut cfg, pol) {
                         eprintln!("unknown policy variant: {pol}");
-                        return 2;
+                        return Err(2);
                     }
                     if !sweep_fleet(&mut cfg, fl) {
                         eprintln!("unknown fleet variant: {fl}");
-                        return 2;
+                        return Err(2);
                     }
                     if !sweep_job_mix(&mut cfg, jm) {
                         eprintln!("unknown job-mix variant: {jm}");
-                        return 2;
+                        return Err(2);
                     }
                     cfg.failure_rate_mult = fm;
                     if fm == 0.0 {
@@ -444,6 +511,44 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
     }
+    Ok(spec)
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let spec = match build_sweep_spec(args) {
+        Ok(spec) => spec,
+        Err(code) => return code,
+    };
+    // A bare `--shards` (no value) parses as a flag; running serially
+    // would silently ignore the operator's intent to shard — reject it.
+    if args.has_flag("shards") {
+        eprintln!("bad --shards value: the flag requires an integer >= 1");
+        return 2;
+    }
+    match args.get("shards") {
+        None => cmd_sweep_serial(args, spec),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => cmd_sweep_coordinator(args, spec, n),
+            _ => {
+                eprintln!("bad --shards value: {s} (want an integer >= 1)");
+                2
+            }
+        },
+    }
+}
+
+fn cmd_sweep_serial(args: &Args, spec: SweepSpec) -> i32 {
+    use std::io::Write;
+
+    let days = args.get_f64("days", SWEEP_DEFAULT_DAYS);
+    let seed = args.get_u64("seed", SWEEP_DEFAULT_SEED);
+    let workers = args.get_usize("workers", 0);
+    let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
+    let progress = args.has_flag("progress");
+    let cache = match sweep_cache_from_args(args) {
+        Ok(cache) => cache,
+        Err(code) => return code,
+    };
     let total = spec.len();
     eprintln!(
         "sweeping {total} variants x {days} days on {} workers (seed {seed:#x}, cache {})...",
@@ -469,16 +574,9 @@ fn cmd_sweep(args: &Args) -> i32 {
         }
     };
     let mut out = std::io::BufWriter::new(file);
-    let spec_json = Json::obj(vec![
-        ("days", Json::num(days)),
-        ("seed", Json::str(&format!("{seed:#x}"))),
-        ("workers", Json::num(workers as f64)),
-        ("arrivals_per_hour", Json::num(arrivals)),
-        ("variant_count", Json::num(total as f64)),
-    ]);
+    let spec_json = sweep_spec_json(args, total);
     let mut io_err: Option<std::io::Error> = None;
-    if let Err(e) = write!(out, "{{\n\"spec\": {},\n\"variants\": [", spec_json.to_string_compact())
-    {
+    if let Err(e) = shard::write_report_header(&mut out, &spec_json) {
         io_err = Some(e);
     }
 
@@ -501,23 +599,9 @@ fn cmd_sweep(args: &Args) -> i32 {
             s.result.failures_injected.to_string(),
             if s.cached { "cache".to_string() } else { "sim".to_string() },
         ]);
-        let row = Json::obj(vec![
-            ("name", Json::str(&s.name)),
-            ("seed", Json::str(&format!("{:#x}", s.seed))),
-            ("arrived_jobs", Json::num(s.result.arrived_jobs as f64)),
-            ("completed_jobs", Json::num(s.result.completed_jobs as f64)),
-            ("rejected_jobs", Json::num(s.result.rejected_jobs as f64)),
-            ("preemptions", Json::num(s.result.preemptions as f64)),
-            ("failures_injected", Json::num(s.result.failures_injected as f64)),
-            ("defrag_migrations", Json::num(s.result.defrag_migrations as f64)),
-            ("sg", Json::num(g.sg)),
-            ("rg", Json::num(g.rg)),
-            ("pg", Json::num(g.pg)),
-            ("mpg", Json::num(g.mpg())),
-        ]);
+        let row = shard::summary_row_json(&s);
         if io_err.is_none() {
-            let sep = if done == 0 { "" } else { "," };
-            if let Err(e) = write!(out, "{sep}\n  {}", row.to_string_compact()) {
+            if let Err(e) = shard::write_report_row(&mut out, done, &row) {
                 // Surface it NOW (the grid keeps running — with the cache
                 // on, every finished variant still persists, so a re-run
                 // after fixing the disk is all hits; ctrl-C is safe).
@@ -553,7 +637,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     println!("{}", table.to_ascii());
     let finish = match io_err {
         Some(e) => Err(e),
-        None => write!(out, "\n]\n}}\n").and_then(|()| out.flush()),
+        None => shard::write_report_footer(&mut out).and_then(|()| out.flush()),
     };
     if let Err(e) = finish {
         eprintln!("writing {out_path} failed: {e}");
@@ -563,6 +647,278 @@ fn cmd_sweep(args: &Args) -> i32 {
         "done in {:.2}s ({hits}/{total} cache hits); wrote {out_path}",
         t0.elapsed().as_secs_f64()
     );
+    if args.has_flag("cache-stats") {
+        match &cache {
+            Some(c) => print_cache_stats(c, hits as u64, (total - hits) as u64),
+            None => eprintln!("cache stats: cache disabled (--no-cache)"),
+        }
+    }
+    0
+}
+
+/// The shard coordinator behind `sweep --shards N`: write one manifest
+/// per shard, spawn `sweep-worker` subprocesses (or whatever
+/// `--shard-cmd` names — an ssh wrapper makes this span machines), stream
+/// their progress into one aggregated stderr feed, and merge the shard
+/// reports into a file byte-identical to the single-process run. All
+/// shards share one `.sweep-cache/`, which doubles as the resume point:
+/// if a worker dies, every variant it finished is already persisted, so
+/// re-running the same command re-derives only the cold entries.
+fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
+    use std::io::Write;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use tpufleet::util::subproc;
+
+    let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
+    let progress = args.has_flag("progress");
+    let cache = match sweep_cache_from_args(args) {
+        Ok(cache) => cache,
+        Err(code) => return code,
+    };
+    let total = spec.len();
+    let spec_json = sweep_spec_json(args, total);
+
+    let shard_dir = std::path::PathBuf::from(format!("{out_path}.shards"));
+    if let Err(e) = std::fs::create_dir_all(&shard_dir) {
+        eprintln!("creating {} failed: {e}", shard_dir.display());
+        return 1;
+    }
+    if args.has_flag("shard-cmd") {
+        eprintln!("bad --shard-cmd value: the flag requires a worker command string");
+        return 2;
+    }
+    let base: Vec<String> = match args.get("shard-cmd") {
+        Some(s) => {
+            let v: Vec<String> = s.split_whitespace().map(String::from).collect();
+            if v.is_empty() {
+                eprintln!("empty --shard-cmd");
+                return 2;
+            }
+            v
+        }
+        None => match std::env::current_exe() {
+            Ok(p) => vec![p.display().to_string()],
+            Err(e) => {
+                eprintln!("cannot locate own binary to spawn workers: {e}");
+                return 1;
+            }
+        },
+    };
+    let report_path = |k: usize| shard_dir.join(format!("shard-{k}.report.json"));
+    let mut cmds: Vec<Vec<String>> = Vec::with_capacity(shards);
+    for (k, m) in shard::shard_manifests(&spec, shards).iter().enumerate() {
+        let mpath = shard_dir.join(format!("shard-{k}.manifest.json"));
+        if let Err(e) = shard::write_json_file(&mpath, m) {
+            eprintln!("{e:#}");
+            return 1;
+        }
+        let mut argv = base.clone();
+        argv.push("sweep-worker".to_string());
+        argv.push("--manifest".to_string());
+        argv.push(mpath.display().to_string());
+        argv.push("--out".to_string());
+        argv.push(report_path(k).display().to_string());
+        match &cache {
+            Some(c) => {
+                argv.push("--cache-dir".to_string());
+                argv.push(c.dir().display().to_string());
+                if let Some(mb) = args.get("cache-max-mb") {
+                    argv.push("--cache-max-mb".to_string());
+                    argv.push(mb.to_string());
+                }
+            }
+            None => argv.push("--no-cache".to_string()),
+        }
+        cmds.push(argv);
+    }
+
+    eprintln!(
+        "sweeping {total} variants across {shards} shard processes (cache {})...",
+        match &cache {
+            Some(c) => c.dir().display().to_string(),
+            None => "off".to_string(),
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let done = AtomicUsize::new(0);
+    let hits = AtomicUsize::new(0);
+    // Workers speak the per-variant progress protocol on stdout; anything
+    // else they print is forwarded tagged with the shard index. The
+    // aggregate ETA mirrors the serial path: rate from simulated variants
+    // only, so a partially warm cache doesn't fake a wildly optimistic
+    // finish time.
+    let statuses =
+        subproc::run_all_streaming(&cmds, |k, line| match shard::parse_progress_line(line) {
+            Some((cached, name)) => {
+                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                if cached {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }
+                if progress {
+                    let h = hits.load(Ordering::Relaxed);
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    let simmed = d.saturating_sub(h);
+                    let eta = if simmed > 0 {
+                        elapsed / simmed as f64 * total.saturating_sub(d) as f64
+                    } else {
+                        0.0
+                    };
+                    eprintln!(
+                        "progress: {d}/{total} ({:.0}%) elapsed {elapsed:.1}s \
+                         eta {eta:.1}s ({h} cached) [shard {k}] {name}",
+                        d as f64 / total.max(1) as f64 * 100.0
+                    );
+                }
+            }
+            None => eprintln!("[shard {k}] {line}"),
+        });
+    let mut failed = false;
+    for (k, st) in statuses.iter().enumerate() {
+        match st {
+            Ok(s) if s.success() => {}
+            Ok(s) => {
+                let hint = if cache.is_some() {
+                    "finished variants persist in the cache — re-run the same \
+                     command to resume"
+                } else {
+                    "cache is off (--no-cache), so a re-run recomputes its variants"
+                };
+                eprintln!("shard {k} failed ({s}); {hint}");
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("shard {k} failed to start: {e}");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        return 1;
+    }
+    let mut reports = Vec::with_capacity(shards);
+    for k in 0..shards {
+        match shard::read_json_file(&report_path(k)) {
+            Ok(j) => reports.push(j),
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        }
+    }
+    let rows = match shard::merge_shard_reports(&reports, total) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("merging shard reports failed: {e:#}");
+            return 1;
+        }
+    };
+    let write_merged = || -> std::io::Result<()> {
+        let file = std::fs::File::create(&out_path)?;
+        let mut out = std::io::BufWriter::new(file);
+        shard::write_report_header(&mut out, &spec_json)?;
+        for (i, r) in rows.iter().enumerate() {
+            shard::write_report_row(&mut out, i, &r.row)?;
+        }
+        shard::write_report_footer(&mut out)?;
+        out.flush()
+    };
+    if let Err(e) = write_merged() {
+        eprintln!("writing {out_path} failed: {e}");
+        return 1;
+    }
+    // Same stdout summary table as the serial path, rebuilt from the
+    // merged rows.
+    let mut table = report::Table::new(
+        "Scenario sweep — fleet goodputs per variant",
+        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures", "src"],
+    );
+    for r in &rows {
+        let f = |key: &str| r.row.get(key).as_f64().unwrap_or(f64::NAN);
+        let u = |key: &str| r.row.get(key).as_u64().unwrap_or(0);
+        table.row(vec![
+            r.row.get("name").as_str().unwrap_or("?").to_string(),
+            format!("{:.3}", f("sg")),
+            format!("{:.3}", f("rg")),
+            format!("{:.3}", f("pg")),
+            format!("{:.3}", f("mpg")),
+            u("completed_jobs").to_string(),
+            u("preemptions").to_string(),
+            u("failures_injected").to_string(),
+            if r.cached { "cache".to_string() } else { "sim".to_string() },
+        ]);
+    }
+    println!("{}", table.to_ascii());
+    let cache_hits = rows.iter().filter(|r| r.cached).count();
+    eprintln!(
+        "done in {:.2}s ({cache_hits}/{total} cache hits across {shards} shards); \
+         wrote {out_path}",
+        t0.elapsed().as_secs_f64()
+    );
+    if args.has_flag("cache-stats") {
+        match &cache {
+            Some(c) => print_cache_stats(c, cache_hits as u64, (total - cache_hits) as u64),
+            None => eprintln!("cache stats: cache disabled (--no-cache)"),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&shard_dir);
+    0
+}
+
+/// Internal: run one shard manifest and write the shard report the
+/// coordinator merges. Per-variant progress goes to stdout in the
+/// `sim::shard` line protocol (flushed per line — it feeds a pipe).
+fn cmd_sweep_worker(args: &Args) -> i32 {
+    use std::io::Write;
+    use tpufleet::util::Json;
+
+    const WORKER_USAGE: &str =
+        "usage: tpufleet sweep-worker --manifest FILE --out FILE \
+         [--cache-dir DIR | --no-cache] [--cache-max-mb N]";
+    let Some(manifest_path) = args.get("manifest") else {
+        eprintln!("{WORKER_USAGE}");
+        return 2;
+    };
+    let Some(out_path) = args.get("out") else {
+        eprintln!("{WORKER_USAGE}");
+        return 2;
+    };
+    let cache = match sweep_cache_from_args(args) {
+        Ok(cache) => cache,
+        Err(code) => return code,
+    };
+    let task = match shard::read_json_file(std::path::Path::new(manifest_path))
+        .and_then(|j| shard::parse_manifest(&j))
+    {
+        Ok(task) => task,
+        Err(e) => {
+            eprintln!("sweep-worker: {e:#}");
+            return 2;
+        }
+    };
+    // Test hook: exit abruptly after N variants, simulating a worker
+    // killed mid-run. Finished variants are already in the shared cache,
+    // so the coordinator's re-run resumes instead of recomputing.
+    let fail_after: Option<usize> = std::env::var("TPUFLEET_SHARD_FAIL_AFTER")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let indices: Vec<usize> = task.variants.iter().map(|(i, _)| *i).collect();
+    let mut rows: Vec<(usize, bool, Json)> = Vec::new();
+    let stdout = std::io::stdout();
+    SweepRunner::run_streaming_summaries(task.spec(), cache.as_ref(), |s| {
+        let k = rows.len();
+        rows.push((indices[k], s.cached, shard::summary_row_json(&s)));
+        let mut lock = stdout.lock();
+        let _ = writeln!(lock, "{}", shard::progress_line(s.cached, &s.name));
+        let _ = lock.flush();
+        if fail_after.is_some_and(|n| rows.len() >= n) {
+            std::process::exit(86);
+        }
+    });
+    let report = shard::shard_report(&task, &rows);
+    if let Err(e) = shard::write_json_file(std::path::Path::new(out_path), &report) {
+        eprintln!("sweep-worker: {e:#}");
+        return 1;
+    }
     0
 }
 

@@ -13,6 +13,8 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::SystemTime;
 
 use crate::fleet::{EvolutionModel, Lifecycle};
 use crate::metrics::goodput::GoodputReport;
@@ -346,15 +348,75 @@ pub struct CachedRun {
 // The cache proper
 // ---------------------------------------------------------------------------
 
+/// Per-handle tallies, shared (via `Arc`) across in-process clones of
+/// one `SweepCache` — e.g. the sweep pool's worker closures. They are
+/// process-local: a sharded run's worker *subprocesses* each keep their
+/// own (the coordinator aggregates hit counts from shard rows instead).
+#[derive(Debug)]
+struct CacheCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    /// Running estimate of the on-disk entry bytes, maintained only when
+    /// a size cap is set so stores don't rescan the directory each time.
+    /// [`UNSEEDED`] until the first capped store seeds it with one scan;
+    /// resynced to ground truth whenever the cap trips.
+    approx_bytes: AtomicU64,
+}
+
+/// Sentinel for "no directory scan has seeded `approx_bytes` yet".
+const UNSEEDED: u64 = u64::MAX;
+
+impl Default for CacheCounters {
+    fn default() -> Self {
+        CacheCounters {
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            approx_bytes: AtomicU64::new(UNSEEDED),
+        }
+    }
+}
+
+/// Point-in-time cache report: on-disk footprint (from a directory scan)
+/// plus this process's lookup counters — what `sweep --cache-stats`
+/// prints.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    pub entries: u64,
+    pub bytes: u64,
+    /// Age of the least-recently-used entry, seconds (0 when empty).
+    pub oldest_age_s: f64,
+    /// Age of the most-recently-used entry, seconds (0 when empty).
+    pub newest_age_s: f64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
 /// A directory of cached sweep results, one JSON file per key.
 #[derive(Clone, Debug)]
 pub struct SweepCache {
     dir: PathBuf,
+    /// Size cap: after a store pushes the directory past this many bytes,
+    /// least-recently-used entries are evicted (None = unbounded).
+    max_bytes: Option<u64>,
+    counters: Arc<CacheCounters>,
 }
 
 impl SweepCache {
     pub fn new(dir: impl Into<PathBuf>) -> SweepCache {
-        SweepCache { dir: dir.into() }
+        SweepCache { dir: dir.into(), max_bytes: None, counters: Arc::default() }
+    }
+
+    /// Cap the on-disk footprint: once a store pushes the directory past
+    /// `cap` bytes, least-recently-used entries (by mtime — lookups
+    /// refresh it) are evicted until the cap holds again. The entry just
+    /// written is never the victim, so a sweep always keeps its own most
+    /// recent result even under a too-small cap.
+    pub fn with_max_bytes(mut self, cap: u64) -> SweepCache {
+        self.max_bytes = Some(cap);
+        self
     }
 
     /// The conventional per-repo cache at [`DEFAULT_DIR`].
@@ -369,10 +431,24 @@ impl SweepCache {
     /// Read an entry. Every failure mode — missing file, truncated or
     /// corrupt JSON, version skew, key mismatch (a hash collision on the
     /// file name with different embedded key) — degrades to a miss so the
-    /// caller falls back to re-simulation.
+    /// caller falls back to re-simulation. Hits refresh the entry's mtime
+    /// (best-effort) so LRU eviction under [`Self::with_max_bytes`]
+    /// prefers genuinely cold entries.
     pub fn lookup(&self, key: &CacheKey) -> Option<CachedRun> {
-        let text = std::fs::read_to_string(self.dir.join(key.file_name())).ok()?;
-        decode(&Json::parse(&text).ok()?, key)
+        let path = self.dir.join(key.file_name());
+        let hit = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| decode(&j, key));
+        if hit.is_some() {
+            self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            if let Ok(f) = std::fs::File::open(&path) {
+                let _ = f.set_modified(SystemTime::now());
+            }
+        } else {
+            self.counters.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
     }
 
     /// Persist an entry; returns false (and leaves no partial file
@@ -391,11 +467,130 @@ impl SweepCache {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        if std::fs::write(&tmp, encode(key, run).to_string_pretty()).is_err() {
+        let payload = encode(key, run).to_string_pretty();
+        let payload_len = payload.len() as u64;
+        if std::fs::write(&tmp, payload).is_err() {
             let _ = std::fs::remove_file(&tmp);
             return false;
         }
-        std::fs::rename(&tmp, self.dir.join(key.file_name())).is_ok()
+        let file_name = key.file_name();
+        let ok = std::fs::rename(&tmp, self.dir.join(&file_name)).is_ok();
+        if ok {
+            if let Some(cap) = self.max_bytes {
+                if self.note_stored_bytes(payload_len) > cap {
+                    self.evict_lru(&file_name);
+                }
+            }
+        }
+        ok
+    }
+
+    /// Fold a freshly stored entry into the running footprint estimate,
+    /// returning the new total. The first capped store pays one full
+    /// directory scan to seed the estimate (which already includes the
+    /// new entry); after that, stores are O(1) and only a tripped cap
+    /// rescans. The estimate may drift high (overwrites count twice) or
+    /// low (other processes writing to a shared cache) — both are safe:
+    /// high just triggers an early resync, low means the cap is enforced
+    /// on the next scan instead of this one.
+    fn note_stored_bytes(&self, len: u64) -> u64 {
+        let approx = &self.counters.approx_bytes;
+        let prev = approx.load(Ordering::Relaxed);
+        if prev == UNSEEDED {
+            let total = self.scan_entry_bytes();
+            approx.store(total, Ordering::Relaxed);
+            total
+        } else {
+            approx.fetch_add(len, Ordering::Relaxed).saturating_add(len)
+        }
+    }
+
+    /// Total bytes of `.json` entries currently in the directory.
+    fn scan_entry_bytes(&self) -> u64 {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return 0 };
+        rd.flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".json"))
+            .filter_map(|e| e.metadata().ok())
+            .map(|md| md.len())
+            .sum()
+    }
+
+    /// Enforce the size cap: delete oldest-mtime entries until the
+    /// directory fits, never touching `keep` (the entry just written) or
+    /// in-flight `.tmp-*` files. Racing evictors/readers are safe: a
+    /// concurrently deleted entry simply reads as a miss elsewhere, and
+    /// the cache never serves wrong data — only less of it.
+    fn evict_lru(&self, keep: &str) {
+        let Some(cap) = self.max_bytes else { return };
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return };
+        let mut entries: Vec<(SystemTime, u64, PathBuf)> = Vec::new();
+        let mut total: u64 = 0;
+        for e in rd.flatten() {
+            let name = e.file_name();
+            if !name.to_string_lossy().ends_with(".json") {
+                continue;
+            }
+            let Ok(md) = e.metadata() else { continue };
+            total += md.len();
+            let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            entries.push((mtime, md.len(), e.path()));
+        }
+        if total <= cap {
+            // The estimate had drifted high; resync it to ground truth.
+            self.counters.approx_bytes.store(total, Ordering::Relaxed);
+            return;
+        }
+        // Oldest first; path as tie-break so racing evictors converge on
+        // the same victim order.
+        entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.2.cmp(&b.2)));
+        for (_, len, path) in entries {
+            if total <= cap {
+                break;
+            }
+            if path.file_name().is_some_and(|n| n == keep) {
+                continue;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                total = total.saturating_sub(len);
+                self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.counters.approx_bytes.store(total, Ordering::Relaxed);
+    }
+
+    /// Scan the directory and report its footprint plus this handle's
+    /// hit/miss/eviction counters (`sweep --cache-stats`). Entry ages are
+    /// relative to `now` = the scan instant; a missing directory reads as
+    /// an empty cache.
+    pub fn stats(&self) -> CacheStats {
+        let mut st = CacheStats {
+            hits: self.counters.hits.load(Ordering::Relaxed),
+            misses: self.counters.misses.load(Ordering::Relaxed),
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            ..CacheStats::default()
+        };
+        let now = SystemTime::now();
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return st };
+        let mut oldest: Option<f64> = None;
+        let mut newest: Option<f64> = None;
+        for e in rd.flatten() {
+            if !e.file_name().to_string_lossy().ends_with(".json") {
+                continue;
+            }
+            let Ok(md) = e.metadata() else { continue };
+            st.entries += 1;
+            st.bytes += md.len();
+            let age = md
+                .modified()
+                .ok()
+                .and_then(|m| now.duration_since(m).ok())
+                .map_or(0.0, |d| d.as_secs_f64());
+            oldest = Some(oldest.map_or(age, |o: f64| o.max(age)));
+            newest = Some(newest.map_or(age, |n: f64| n.min(age)));
+        }
+        st.oldest_age_s = oldest.unwrap_or(0.0);
+        st.newest_age_s = newest.unwrap_or(0.0);
+        st
     }
 
     /// Remove the whole cache directory (missing is fine) — `rm -rf
@@ -413,29 +608,23 @@ impl SweepCache {
 // ---------------------------------------------------------------------------
 
 /// f64 as bit-pattern hex: bit-exact round trip including -0.0/NaN/inf
-/// (which bare JSON numbers cannot represent at all).
+/// (which bare JSON numbers cannot represent at all). Thin aliases over
+/// the shared `util::json` codec so the cache format and the shard
+/// manifest format stay byte-compatible by construction.
 fn bits(x: f64) -> Json {
-    Json::str(&format!("{:016x}", x.to_bits()))
+    Json::f64b(x)
 }
 
 fn unbits(j: &Json) -> Option<f64> {
-    let s = j.as_str()?;
-    if s.len() != 16 {
-        return None;
-    }
-    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+    j.as_f64b()
 }
 
 fn hex64(x: u64) -> Json {
-    Json::str(&format!("{x:016x}"))
+    Json::u64_hex(x)
 }
 
 fn unhex64(j: &Json) -> Option<u64> {
-    let s = j.as_str()?;
-    if s.len() != 16 {
-        return None;
-    }
-    u64::from_str_radix(s, 16).ok()
+    j.as_u64_hex()
 }
 
 fn encode(key: &CacheKey, run: &CachedRun) -> Json {
@@ -623,6 +812,80 @@ mod tests {
         cache.store(&key, &sample_run());
         let other = CacheKey { cfg_hash: 1, seed: 3 };
         assert!(cache.lookup(&other).is_none(), "different seed must miss");
+        cache.clear().unwrap();
+    }
+
+    fn set_age(cache: &SweepCache, key: &CacheKey, age_s: u64) {
+        let path = cache.dir().join(key.file_name());
+        let f = std::fs::File::open(&path).expect("entry must exist");
+        f.set_modified(SystemTime::now() - std::time::Duration::from_secs(age_s))
+            .expect("set_modified");
+    }
+
+    #[test]
+    fn lru_eviction_enforces_cap_and_spares_fresh_write() {
+        let probe = temp_cache("lru-probe");
+        let k = |seed| CacheKey { cfg_hash: 0xA11CE, seed };
+        probe.store(&k(0), &sample_run());
+        let probe_path = probe.dir().join(k(0).file_name());
+        let entry_len = std::fs::metadata(probe_path).unwrap().len();
+        probe.clear().unwrap();
+
+        // Cap fits two entries (plus slack), not three.
+        let cache = temp_cache("lru").with_max_bytes(entry_len * 2 + entry_len / 2);
+        cache.store(&k(1), &sample_run());
+        cache.store(&k(2), &sample_run());
+        set_age(&cache, &k(1), 1000);
+        set_age(&cache, &k(2), 500);
+        // Third store exceeds the cap: the oldest entry (k1) must go, the
+        // just-written entry must survive even though eviction runs.
+        cache.store(&k(3), &sample_run());
+        assert!(cache.lookup(&k(1)).is_none(), "LRU entry must be evicted");
+        assert!(cache.lookup(&k(2)).is_some(), "warmer entry must survive");
+        assert!(cache.lookup(&k(3)).is_some(), "fresh write must never be the victim");
+        assert_eq!(cache.stats().evictions, 1);
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn lookup_hit_refreshes_recency() {
+        let probe = temp_cache("touch-probe");
+        let k = |seed| CacheKey { cfg_hash: 0xBEE, seed };
+        probe.store(&k(0), &sample_run());
+        let probe_path = probe.dir().join(k(0).file_name());
+        let entry_len = std::fs::metadata(probe_path).unwrap().len();
+        probe.clear().unwrap();
+
+        let cache = temp_cache("touch").with_max_bytes(entry_len * 2 + entry_len / 2);
+        cache.store(&k(1), &sample_run());
+        cache.store(&k(2), &sample_run());
+        set_age(&cache, &k(1), 1000);
+        set_age(&cache, &k(2), 500);
+        // Touch k1: the hit refreshes its mtime, making k2 the LRU victim.
+        assert!(cache.lookup(&k(1)).is_some());
+        cache.store(&k(3), &sample_run());
+        assert!(cache.lookup(&k(1)).is_some(), "touched entry must survive");
+        assert!(cache.lookup(&k(2)).is_none(), "untouched entry must be evicted");
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn stats_report_footprint_and_counters() {
+        let cache = temp_cache("stats");
+        let empty = cache.stats();
+        assert_eq!((empty.entries, empty.bytes), (0, 0));
+        let k1 = CacheKey { cfg_hash: 1, seed: 1 };
+        let k2 = CacheKey { cfg_hash: 1, seed: 2 };
+        cache.store(&k1, &sample_run());
+        cache.store(&k2, &sample_run());
+        assert!(cache.lookup(&k1).is_some());
+        assert!(cache.lookup(&CacheKey { cfg_hash: 9, seed: 9 }).is_none());
+        // Counters are shared across clones (coordinator + workers).
+        let st = cache.clone().stats();
+        assert_eq!(st.entries, 2);
+        assert!(st.bytes > 0);
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 1, 0));
+        assert!(st.oldest_age_s >= st.newest_age_s);
         cache.clear().unwrap();
     }
 

@@ -8,9 +8,11 @@
 pub mod cache;
 pub mod engine;
 pub mod scenario;
+pub mod shard;
 pub mod sweep;
 
-pub use cache::{CacheKey, CachedRun, SweepCache};
+pub use cache::{CacheKey, CacheStats, CachedRun, SweepCache};
 pub use engine::{SimConfig, SimResult, Simulation};
 pub use scenario::{EraRule, EraSchedule};
+pub use shard::{MergedRow, ShardTask};
 pub use sweep::{SweepRun, SweepRunner, SweepSpec, SweepSummary, SweepVariant};

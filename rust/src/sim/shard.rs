@@ -1,0 +1,1152 @@
+//! Multi-process sharded sweep execution: partition a [`SweepSpec`] into
+//! deterministic shards, hand each shard to a worker subprocess as a JSON
+//! manifest (full `SimConfig` per variant, bit-exact floats), and merge
+//! the per-shard reports back into one report that is **byte-identical**
+//! to the single-process `sweep` output.
+//!
+//! The layering mirrors the paper's fleet-scale methodology: grids that
+//! exceed one process's cores/memory stripe across processes (and, via
+//! `--shard-cmd`, across machines), while the shared on-disk
+//! [`SweepCache`](super::cache::SweepCache) makes the whole arrangement
+//! crash-tolerant — every finished variant persists as a cache entry, so
+//! a killed run restarts and re-derives only the cold entries.
+//!
+//! Contract chain:
+//!   1. [`config_to_json`]/[`config_from_json`] round-trip every
+//!      `SimConfig` knob bit-exactly (scalar floats as bit-pattern hex;
+//!      adding a field without updating the codec is a compile error,
+//!      mirroring `sim::cache`'s StableHasher exhaustiveness guard), and
+//!      shared replay traces are interned once per manifest.
+//!   2. Striped partitioning ([`shard_manifests`]) is a pure function of
+//!      (spec, shard count); every variant keeps its spec index.
+//!   3. Workers run their slice through the same `SweepRunner` path as a
+//!      single-process sweep, so per-variant rows are bit-identical.
+//!   4. [`merge_shard_reports`] reassembles rows by spec index and
+//!      refuses to mix behavior versions ([`check_version_header`]), and
+//!      the shared report writers emit the exact byte layout of the
+//!      serial path.
+
+use std::io::{self, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fleet::{ChipGeneration, EvolutionModel, Lifecycle};
+use crate::metrics::goodput::GoodputReport;
+use crate::runtime_model::{EraEffects, RuntimeModel};
+use crate::scheduler::SchedulerPolicy;
+use crate::util::Json;
+use crate::workload::{trace, GeneratorConfig, MixDrift, Phase};
+use crate::xlaopt::{CompilerStack, Deployment, Pass};
+
+use super::cache::{CACHE_VERSION, SIM_BEHAVIOR_VERSION};
+use super::scenario::{EraRule, EraSchedule};
+use super::sweep::{SweepSpec, SweepSummary, SweepVariant};
+use super::SimConfig;
+
+/// Bumped when the manifest / shard-report layout itself changes shape.
+/// Behavior compatibility is carried separately by
+/// [`SIM_BEHAVIOR_VERSION`] in every header.
+pub const SHARD_FORMAT_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// SimConfig <-> JSON (bit-exact, exhaustive)
+// ---------------------------------------------------------------------------
+
+/// Serialize a full `SimConfig` for shard hand-off. Every struct in the
+/// config tree is destructured exhaustively, so adding a field ANYWHERE
+/// without extending the codec is a compile error — a shard hand-off can
+/// never silently drop a knob. Every scalar f64 knob is encoded as
+/// bit-pattern hex ([`Json::f64b`]): NaN/inf/-0.0 survive, and a decoded
+/// config hashes to the same `sim::cache` key as the original.
+///
+/// Exception: `trace_jobs` reuses the versioned `workload::trace` format,
+/// whose floats are plain JSON numbers — exact for every finite value
+/// (shortest-roundtrip `Display`), which generated traces always are. A
+/// non-finite float smuggled into a hand-edited trace serializes as
+/// `null` and the worker REFUSES the manifest (decode error), rather than
+/// silently running an altered config.
+pub fn config_to_json(cfg: &SimConfig) -> Json {
+    let SimConfig {
+        seed,
+        duration_s,
+        schedule_tick_s,
+        defrag_tick_s,
+        defrag_max_migrations,
+        static_fleet,
+        evolution,
+        policy,
+        runtime,
+        generator,
+        compiler,
+        eras,
+        trace_jobs,
+        failures,
+        repair_s,
+        fail_detect_s,
+        failure_rate_mult,
+    } = cfg;
+    Json::obj(vec![
+        ("seed", Json::u64_hex(*seed)),
+        ("duration_s", Json::f64b(*duration_s)),
+        ("schedule_tick_s", Json::f64b(*schedule_tick_s)),
+        ("defrag_tick_s", Json::f64b(*defrag_tick_s)),
+        ("defrag_max_migrations", Json::num(*defrag_max_migrations as f64)),
+        (
+            "static_fleet",
+            Json::arr(static_fleet.iter().map(|&(gen, pods)| {
+                Json::arr([Json::str(gen.name()), Json::num(pods as f64)])
+            })),
+        ),
+        (
+            "evolution",
+            match evolution {
+                None => Json::Null,
+                Some(ev) => evolution_to_json(ev),
+            },
+        ),
+        ("policy", policy_to_json(policy)),
+        ("runtime", runtime_to_json(runtime)),
+        ("generator", generator_to_json(generator)),
+        ("compiler", compiler_to_json(compiler)),
+        ("eras", eras_to_json(eras)),
+        (
+            "trace_jobs",
+            match trace_jobs {
+                None => Json::Null,
+                // Reuse the versioned workload-trace format (its decoder
+                // constructs `Job` exhaustively, preserving the
+                // compile-breaking guarantee for job fields too).
+                Some(jobs) => trace::to_json(jobs),
+            },
+        ),
+        ("failures", Json::Bool(*failures)),
+        ("repair_s", Json::f64b(*repair_s)),
+        ("fail_detect_s", Json::f64b(*fail_detect_s)),
+        ("failure_rate_mult", Json::f64b(*failure_rate_mult)),
+    ])
+}
+
+/// Decode [`config_to_json`]. Strict: every field must be present and
+/// well-typed (a shard must never run a config with silently-defaulted
+/// knobs).
+pub fn config_from_json(j: &Json) -> Result<SimConfig> {
+    let fleet = j.get("static_fleet");
+    let fleet_json = fleet.as_arr().ok_or_else(|| anyhow!("missing static_fleet"))?;
+    let mut static_fleet = Vec::with_capacity(fleet_json.len());
+    for (i, entry) in fleet_json.iter().enumerate() {
+        let gen = gen_from(entry.idx(0))?;
+        let pods = u32_from(entry.idx(1)).map_err(|e| anyhow!("static_fleet[{i}]: {e}"))?;
+        static_fleet.push((gen, pods));
+    }
+    let evolution = match j.get("evolution") {
+        Json::Null => None,
+        ev => Some(evolution_from_json(ev)?),
+    };
+    let trace_jobs = match j.get("trace_jobs") {
+        Json::Null => None,
+        t => Some(Arc::new(trace::from_json(t)?)),
+    };
+    Ok(SimConfig {
+        seed: u64_of(j, "seed")?,
+        duration_s: f64_of(j, "duration_s")?,
+        schedule_tick_s: f64_of(j, "schedule_tick_s")?,
+        defrag_tick_s: f64_of(j, "defrag_tick_s")?,
+        defrag_max_migrations: u32_from(j.get("defrag_max_migrations"))
+            .map_err(|e| anyhow!("defrag_max_migrations: {e}"))?,
+        static_fleet,
+        evolution,
+        policy: policy_from_json(j.get("policy"))?,
+        runtime: runtime_from_json(j.get("runtime"))?,
+        generator: generator_from_json(j.get("generator"))?,
+        compiler: compiler_from_json(j.get("compiler"))?,
+        eras: eras_from_json(j.get("eras"))?,
+        trace_jobs,
+        failures: bool_of(j, "failures")?,
+        repair_s: f64_of(j, "repair_s")?,
+        fail_detect_s: f64_of(j, "fail_detect_s")?,
+        failure_rate_mult: f64_of(j, "failure_rate_mult")?,
+    })
+}
+
+// -- field decode helpers ---------------------------------------------------
+
+fn f64_of(j: &Json, key: &str) -> Result<f64> {
+    j.get(key).as_f64b().ok_or_else(|| anyhow!("missing/invalid f64 field {key}"))
+}
+
+fn u64_of(j: &Json, key: &str) -> Result<u64> {
+    j.get(key).as_u64_hex().ok_or_else(|| anyhow!("missing/invalid u64 field {key}"))
+}
+
+fn bool_of(j: &Json, key: &str) -> Result<bool> {
+    j.get(key).as_bool().ok_or_else(|| anyhow!("missing/invalid bool field {key}"))
+}
+
+fn u32_from(j: &Json) -> Result<u32> {
+    let x = j.as_u64().ok_or_else(|| anyhow!("expected unsigned integer"))?;
+    u32::try_from(x).map_err(|_| anyhow!("integer {x} out of u32 range"))
+}
+
+fn i32_from(j: &Json) -> Result<i32> {
+    let x = j.as_f64().ok_or_else(|| anyhow!("expected integer"))?;
+    if x.fract() != 0.0 || x < i32::MIN as f64 || x > i32::MAX as f64 {
+        bail!("{x} is not an i32");
+    }
+    Ok(x as i32)
+}
+
+fn gen_from(j: &Json) -> Result<ChipGeneration> {
+    let name = j.as_str().ok_or_else(|| anyhow!("expected generation name"))?;
+    ChipGeneration::from_name(name).ok_or_else(|| anyhow!("unknown generation: {name}"))
+}
+
+// -- nested structs ---------------------------------------------------------
+
+fn evolution_to_json(ev: &EvolutionModel) -> Json {
+    let EvolutionModel { lifecycles } = ev;
+    Json::obj(vec![(
+        "lifecycles",
+        Json::arr(lifecycles.iter().map(|lc| {
+            let Lifecycle {
+                gen,
+                intro_month,
+                ramp_months,
+                peak_pods,
+                decom_month,
+                drain_months,
+            } = lc;
+            Json::obj(vec![
+                ("gen", Json::str(gen.name())),
+                ("intro_month", Json::num(*intro_month as f64)),
+                ("ramp_months", Json::num(*ramp_months as f64)),
+                ("peak_pods", Json::num(*peak_pods as f64)),
+                ("decom_month", Json::num(*decom_month as f64)),
+                ("drain_months", Json::num(*drain_months as f64)),
+            ])
+        })),
+    )])
+}
+
+fn evolution_from_json(j: &Json) -> Result<EvolutionModel> {
+    let lcs = j.get("lifecycles").as_arr().ok_or_else(|| anyhow!("missing lifecycles"))?;
+    let mut lifecycles = Vec::with_capacity(lcs.len());
+    for (i, lc) in lcs.iter().enumerate() {
+        let parse = || -> Result<Lifecycle> {
+            Ok(Lifecycle {
+                gen: gen_from(lc.get("gen"))?,
+                intro_month: i32_from(lc.get("intro_month"))?,
+                ramp_months: i32_from(lc.get("ramp_months"))?,
+                peak_pods: u32_from(lc.get("peak_pods"))?,
+                decom_month: i32_from(lc.get("decom_month"))?,
+                drain_months: i32_from(lc.get("drain_months"))?,
+            })
+        };
+        lifecycles.push(parse().map_err(|e| anyhow!("lifecycle[{i}]: {e}"))?);
+    }
+    Ok(EvolutionModel { lifecycles })
+}
+
+fn policy_to_json(p: &SchedulerPolicy) -> Json {
+    let SchedulerPolicy {
+        preemption,
+        victim_bias,
+        min_runtime_before_evict_s,
+        headroom_fraction,
+    } = p;
+    Json::obj(vec![
+        ("preemption", Json::Bool(*preemption)),
+        ("victim_bias", Json::f64b(*victim_bias)),
+        ("min_runtime_before_evict_s", Json::f64b(*min_runtime_before_evict_s)),
+        ("headroom_fraction", Json::f64b(*headroom_fraction)),
+    ])
+}
+
+fn policy_from_json(j: &Json) -> Result<SchedulerPolicy> {
+    Ok(SchedulerPolicy {
+        preemption: bool_of(j, "preemption")?,
+        victim_bias: f64_of(j, "victim_bias")?,
+        min_runtime_before_evict_s: f64_of(j, "min_runtime_before_evict_s")?,
+        headroom_fraction: f64_of(j, "headroom_fraction")?,
+    })
+}
+
+fn runtime_to_json(r: &RuntimeModel) -> Json {
+    let RuntimeModel {
+        multiclient_stall_frac,
+        pathways_stall_frac,
+        aot_cache_startup_mult,
+        aot_cache_enabled,
+    } = r;
+    Json::obj(vec![
+        ("multiclient_stall_frac", Json::f64b(*multiclient_stall_frac)),
+        ("pathways_stall_frac", Json::f64b(*pathways_stall_frac)),
+        ("aot_cache_startup_mult", Json::f64b(*aot_cache_startup_mult)),
+        ("aot_cache_enabled", Json::Bool(*aot_cache_enabled)),
+    ])
+}
+
+fn runtime_from_json(j: &Json) -> Result<RuntimeModel> {
+    Ok(RuntimeModel {
+        multiclient_stall_frac: f64_of(j, "multiclient_stall_frac")?,
+        pathways_stall_frac: f64_of(j, "pathways_stall_frac")?,
+        aot_cache_startup_mult: f64_of(j, "aot_cache_startup_mult")?,
+        aot_cache_enabled: bool_of(j, "aot_cache_enabled")?,
+    })
+}
+
+fn mix_to_json<const N: usize>(m: &MixDrift<N>) -> Json {
+    let MixDrift { start, end } = m;
+    Json::obj(vec![
+        ("start", Json::arr(start.iter().map(|&x| Json::f64b(x)))),
+        ("end", Json::arr(end.iter().map(|&x| Json::f64b(x)))),
+    ])
+}
+
+fn mix_from_json<const N: usize>(j: &Json) -> Result<MixDrift<N>> {
+    let arr_of = |key: &str| -> Result<[f64; N]> {
+        let a = j.get(key).as_arr().ok_or_else(|| anyhow!("missing mix {key}"))?;
+        if a.len() != N {
+            bail!("mix {key}: expected {N} weights, got {}", a.len());
+        }
+        let mut out = [0.0; N];
+        for (i, v) in a.iter().enumerate() {
+            out[i] = v.as_f64b().ok_or_else(|| anyhow!("mix {key}[{i}]: bad f64"))?;
+        }
+        Ok(out)
+    };
+    Ok(MixDrift { start: arr_of("start")?, end: arr_of("end")? })
+}
+
+fn generator_to_json(g: &GeneratorConfig) -> Json {
+    let GeneratorConfig {
+        seed,
+        arrivals_per_hour,
+        duration_s,
+        size_mix,
+        framework_mix,
+        phase_mix,
+        arch_mix,
+        gen_mix,
+        async_ckpt_fraction,
+        xl_pods,
+    } = g;
+    Json::obj(vec![
+        ("seed", Json::u64_hex(*seed)),
+        ("arrivals_per_hour", Json::f64b(*arrivals_per_hour)),
+        ("duration_s", Json::f64b(*duration_s)),
+        ("size_mix", mix_to_json(size_mix)),
+        ("framework_mix", mix_to_json(framework_mix)),
+        ("phase_mix", mix_to_json(phase_mix)),
+        ("arch_mix", mix_to_json(arch_mix)),
+        (
+            "gen_mix",
+            Json::arr(gen_mix.iter().map(|&(gen, w)| {
+                Json::arr([Json::str(gen.name()), Json::f64b(w)])
+            })),
+        ),
+        ("async_ckpt_fraction", Json::f64b(*async_ckpt_fraction)),
+        (
+            "xl_pods",
+            Json::arr([Json::num(xl_pods.0 as f64), Json::num(xl_pods.1 as f64)]),
+        ),
+    ])
+}
+
+fn generator_from_json(j: &Json) -> Result<GeneratorConfig> {
+    let mix_json = j.get("gen_mix").as_arr().ok_or_else(|| anyhow!("missing gen_mix"))?;
+    let mut gen_mix = Vec::with_capacity(mix_json.len());
+    for (i, entry) in mix_json.iter().enumerate() {
+        let gen = gen_from(entry.idx(0))?;
+        let w = entry
+            .idx(1)
+            .as_f64b()
+            .ok_or_else(|| anyhow!("gen_mix[{i}]: bad weight"))?;
+        gen_mix.push((gen, w));
+    }
+    let xl = j.get("xl_pods");
+    let xl_pods = (
+        u32_from(xl.idx(0)).map_err(|e| anyhow!("xl_pods.0: {e}"))?,
+        u32_from(xl.idx(1)).map_err(|e| anyhow!("xl_pods.1: {e}"))?,
+    );
+    Ok(GeneratorConfig {
+        seed: u64_of(j, "seed")?,
+        arrivals_per_hour: f64_of(j, "arrivals_per_hour")?,
+        duration_s: f64_of(j, "duration_s")?,
+        size_mix: mix_from_json(j.get("size_mix"))?,
+        framework_mix: mix_from_json(j.get("framework_mix"))?,
+        phase_mix: mix_from_json(j.get("phase_mix"))?,
+        arch_mix: mix_from_json(j.get("arch_mix"))?,
+        gen_mix,
+        async_ckpt_fraction: f64_of(j, "async_ckpt_fraction")?,
+        xl_pods,
+    })
+}
+
+fn compiler_to_json(c: &CompilerStack) -> Json {
+    let CompilerStack { deployments } = c;
+    Json::obj(vec![(
+        "deployments",
+        Json::arr(deployments.iter().map(|d| {
+            let Deployment { pass, enable_s } = d;
+            Json::obj(vec![
+                ("pass", Json::str(pass.name())),
+                ("enable_s", Json::f64b(*enable_s)),
+            ])
+        })),
+    )])
+}
+
+fn compiler_from_json(j: &Json) -> Result<CompilerStack> {
+    let ds = j.get("deployments").as_arr().ok_or_else(|| anyhow!("missing deployments"))?;
+    let mut deployments = Vec::with_capacity(ds.len());
+    for (i, d) in ds.iter().enumerate() {
+        let name = d
+            .get("pass")
+            .as_str()
+            .ok_or_else(|| anyhow!("deployment[{i}]: missing pass"))?;
+        let pass = Pass::from_name(name)
+            .ok_or_else(|| anyhow!("deployment[{i}]: unknown pass {name}"))?;
+        let enable_s = d
+            .get("enable_s")
+            .as_f64b()
+            .ok_or_else(|| anyhow!("deployment[{i}]: bad enable_s"))?;
+        deployments.push(Deployment { pass, enable_s });
+    }
+    Ok(CompilerStack { deployments })
+}
+
+fn eras_to_json(e: &EraSchedule) -> Json {
+    let EraSchedule { rules } = e;
+    Json::obj(vec![(
+        "rules",
+        Json::arr(rules.iter().map(|r| {
+            let EraRule { t0, t1, phase, effects } = r;
+            let EraEffects { stall_mult, restore_mult } = effects;
+            Json::obj(vec![
+                ("t0", Json::f64b(*t0)),
+                ("t1", Json::f64b(*t1)),
+                (
+                    "phase",
+                    match phase {
+                        None => Json::Null,
+                        Some(p) => Json::str(p.name()),
+                    },
+                ),
+                ("stall_mult", Json::f64b(*stall_mult)),
+                ("restore_mult", Json::f64b(*restore_mult)),
+            ])
+        })),
+    )])
+}
+
+fn eras_from_json(j: &Json) -> Result<EraSchedule> {
+    let rs = j.get("rules").as_arr().ok_or_else(|| anyhow!("missing rules"))?;
+    let mut rules = Vec::with_capacity(rs.len());
+    for (i, r) in rs.iter().enumerate() {
+        let phase = match r.get("phase") {
+            Json::Null => None,
+            p => {
+                let name = p.as_str().ok_or_else(|| anyhow!("rule[{i}]: bad phase"))?;
+                let phase = Phase::from_name(name)
+                    .ok_or_else(|| anyhow!("rule[{i}]: unknown phase {name}"))?;
+                Some(phase)
+            }
+        };
+        let parse = || -> Result<EraRule> {
+            Ok(EraRule {
+                t0: f64_of(r, "t0")?,
+                t1: f64_of(r, "t1")?,
+                phase,
+                effects: EraEffects {
+                    stall_mult: f64_of(r, "stall_mult")?,
+                    restore_mult: f64_of(r, "restore_mult")?,
+                },
+            })
+        };
+        rules.push(parse().map_err(|e| anyhow!("rule[{i}]: {e}"))?);
+    }
+    Ok(EraSchedule { rules })
+}
+
+// ---------------------------------------------------------------------------
+// Version headers
+// ---------------------------------------------------------------------------
+
+/// The version fields stamped into every shard manifest and shard report.
+/// Coordinator and workers refuse to exchange artifacts across a
+/// simulation-behavior (or format/cache/crate) version skew: a merged
+/// report must never mix rows produced by engines that could disagree.
+fn version_header() -> Vec<(&'static str, Json)> {
+    vec![
+        ("format", Json::num(SHARD_FORMAT_VERSION as f64)),
+        ("behavior_version", Json::num(SIM_BEHAVIOR_VERSION as f64)),
+        ("cache_version", Json::num(CACHE_VERSION as f64)),
+        ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
+    ]
+}
+
+/// Validate a manifest / shard report against THIS binary's versions.
+pub fn check_version_header(j: &Json, what: &str) -> Result<()> {
+    for (key, expect) in version_header() {
+        let got = j.get(key);
+        if *got != expect {
+            bail!(
+                "{what}: {key} mismatch (ours {}, theirs {}) — \
+                 refusing to mix simulation behavior versions",
+                expect.to_string_compact(),
+                got.to_string_compact()
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shard manifests
+// ---------------------------------------------------------------------------
+
+/// One worker's slice of the grid, decoded from a shard manifest.
+pub struct ShardTask {
+    pub shard_index: usize,
+    pub shard_count: usize,
+    /// Length of the FULL spec (for validation and report assembly).
+    pub spec_len: usize,
+    /// Worker-pool width inside this worker process.
+    pub workers: usize,
+    /// (spec index, variant) pairs in spec order.
+    pub variants: Vec<(usize, SweepVariant)>,
+}
+
+impl ShardTask {
+    /// Rebuild the runnable spec for this shard's slice.
+    pub fn spec(&self) -> SweepSpec {
+        let mut spec = SweepSpec::new().workers(self.workers);
+        for (_, v) in &self.variants {
+            spec.push(v.name.clone(), v.cfg.clone());
+        }
+        spec
+    }
+}
+
+/// Deterministic striped partition: shard `k` of `n` owns every variant
+/// whose spec index `i` satisfies `i % n == k`. Striding (rather than
+/// contiguous chunks) balances grids whose simulation cost varies
+/// monotonically along an axis (e.g. increasing fleet size), and is a
+/// pure function of the spec — the same grid always shards identically.
+///
+/// Replay traces are interned per manifest: variants sharing one `Arc`'d
+/// trace (the ablation-grid pattern) encode it ONCE in the manifest's
+/// `traces` table and reference it by index, so the hand-off stays
+/// O(traces), not O(variants x trace) — and [`parse_manifest`] restores
+/// the sharing, so a worker's hundred-variant slice still holds a single
+/// trace allocation.
+pub fn shard_manifests(spec: &SweepSpec, shard_count: usize) -> Vec<Json> {
+    assert!(shard_count >= 1, "shard_count must be >= 1");
+    (0..shard_count)
+        .map(|k| {
+            let variants = spec.variants.iter().enumerate().filter(|(i, _)| i % shard_count == k);
+            let mut traces: Vec<Json> = Vec::new();
+            let mut seen: Vec<*const Vec<crate::workload::Job>> = Vec::new();
+            let mut rows: Vec<Json> = Vec::new();
+            for (i, v) in variants {
+                rows.push(Json::obj(vec![
+                    ("spec_index", Json::num(i as f64)),
+                    ("name", Json::str(&v.name)),
+                    ("cfg", intern_trace(&v.cfg, &mut traces, &mut seen)),
+                ]));
+            }
+            let mut fields = version_header();
+            fields.push(("shard_index", Json::num(k as f64)));
+            fields.push(("shard_count", Json::num(shard_count as f64)));
+            fields.push(("spec_len", Json::num(spec.len() as f64)));
+            fields.push(("workers", Json::num(spec.workers as f64)));
+            fields.push(("traces", Json::Arr(traces)));
+            fields.push(("variants", Json::Arr(rows)));
+            Json::obj(fields)
+        })
+        .collect()
+}
+
+/// Encode one variant's config for a manifest, routing its replay trace
+/// (if any) through the manifest's `traces` interning table: the config's
+/// `trace_jobs` field becomes `{"shared_trace": idx}`. Distinctness is by
+/// `Arc` identity — the grid-construction idiom clones one config per
+/// variant, so shared traces share a pointer.
+fn intern_trace(
+    cfg: &SimConfig,
+    traces: &mut Vec<Json>,
+    seen: &mut Vec<*const Vec<crate::workload::Job>>,
+) -> Json {
+    let Some(jobs) = &cfg.trace_jobs else { return config_to_json(cfg) };
+    let ptr = Arc::as_ptr(jobs);
+    let idx = match seen.iter().position(|&p| p == ptr) {
+        Some(idx) => idx,
+        None => {
+            traces.push(trace::to_json(jobs));
+            seen.push(ptr);
+            traces.len() - 1
+        }
+    };
+    // Encode the config without its trace, then splice in the reference.
+    let mut stripped = cfg.clone();
+    stripped.trace_jobs = None;
+    let mut cfg_json = config_to_json(&stripped);
+    if let Json::Obj(ref mut o) = cfg_json {
+        let trace_ref = Json::obj(vec![("shared_trace", Json::num(idx as f64))]);
+        o.insert("trace_jobs".to_string(), trace_ref);
+    }
+    cfg_json
+}
+
+/// Decode and validate one shard manifest (worker side).
+pub fn parse_manifest(j: &Json) -> Result<ShardTask> {
+    check_version_header(j, "shard manifest")?;
+    let usize_of = |key: &str| -> Result<usize> {
+        j.get(key)
+            .as_u64()
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("manifest: missing {key}"))
+    };
+    let shard_index = usize_of("shard_index")?;
+    let shard_count = usize_of("shard_count")?;
+    let spec_len = usize_of("spec_len")?;
+    let workers = usize_of("workers")?;
+    if shard_count == 0 || shard_index >= shard_count {
+        bail!("manifest: shard {shard_index}/{shard_count} is out of range");
+    }
+    // Interned replay traces: decoded once, then shared (same `Arc`)
+    // across every variant that references them — restoring the
+    // allocation sharing the coordinator's spec had.
+    let traces: Vec<Arc<Vec<crate::workload::Job>>> = match j.get("traces") {
+        Json::Null => Vec::new(),
+        t => {
+            let arr = t.as_arr().ok_or_else(|| anyhow!("manifest: bad traces table"))?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (n, tj) in arr.iter().enumerate() {
+                let jobs = trace::from_json(tj).map_err(|e| anyhow!("traces[{n}]: {e}"))?;
+                out.push(Arc::new(jobs));
+            }
+            out
+        }
+    };
+    let vs = j.get("variants").as_arr().ok_or_else(|| anyhow!("manifest: missing variants"))?;
+    let mut variants = Vec::with_capacity(vs.len());
+    let mut prev: Option<usize> = None;
+    for (n, v) in vs.iter().enumerate() {
+        let i = v
+            .get("spec_index")
+            .as_u64()
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("variant[{n}]: missing spec_index"))?;
+        if i >= spec_len || i % shard_count != shard_index {
+            bail!("variant[{n}]: spec index {i} is not shard {shard_index}/{shard_count}'s");
+        }
+        if prev.is_some_and(|p| p >= i) {
+            bail!("variant[{n}]: spec indices must be strictly increasing");
+        }
+        prev = Some(i);
+        let name = v
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("variant[{n}]: missing name"))?
+            .to_string();
+        let cfg = variant_cfg_from_json(v.get("cfg"), &traces)
+            .map_err(|e| anyhow!("variant[{n}] ({name}): {e}"))?;
+        variants.push((i, SweepVariant { name, cfg }));
+    }
+    Ok(ShardTask { shard_index, shard_count, spec_len, workers, variants })
+}
+
+/// Decode a manifest variant's config, resolving a `{"shared_trace": i}`
+/// reference against the manifest's interned trace table. Configs whose
+/// `trace_jobs` is inline (or null) decode exactly as [`config_from_json`].
+fn variant_cfg_from_json(
+    cfg_json: &Json,
+    traces: &[Arc<Vec<crate::workload::Job>>],
+) -> Result<SimConfig> {
+    let trace_ref = cfg_json.get("trace_jobs").get("shared_trace").as_u64();
+    let Some(idx) = trace_ref else { return config_from_json(cfg_json) };
+    let idx = idx as usize;
+    let arc = traces
+        .get(idx)
+        .ok_or_else(|| anyhow!("shared_trace {idx} out of range ({} traces)", traces.len()))?;
+    let mut stripped = cfg_json.clone();
+    if let Json::Obj(ref mut o) = stripped {
+        o.insert("trace_jobs".to_string(), Json::Null);
+    }
+    let mut cfg = config_from_json(&stripped)?;
+    cfg.trace_jobs = Some(arc.clone());
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------------
+// Report rows and shard reports
+// ---------------------------------------------------------------------------
+
+/// The per-variant JSON record of the `sweep` report — the single
+/// definition shared by the serial path, the worker, and the merge, which
+/// is what makes the merged report byte-identical to the serial one.
+pub fn summary_row_json(s: &SweepSummary) -> Json {
+    let g: &GoodputReport = &s.goodput;
+    Json::obj(vec![
+        ("name", Json::str(&s.name)),
+        ("seed", Json::str(&format!("{:#x}", s.seed))),
+        ("arrived_jobs", Json::num(s.result.arrived_jobs as f64)),
+        ("completed_jobs", Json::num(s.result.completed_jobs as f64)),
+        ("rejected_jobs", Json::num(s.result.rejected_jobs as f64)),
+        ("preemptions", Json::num(s.result.preemptions as f64)),
+        ("failures_injected", Json::num(s.result.failures_injected as f64)),
+        ("defrag_migrations", Json::num(s.result.defrag_migrations as f64)),
+        ("sg", Json::num(g.sg)),
+        ("rg", Json::num(g.rg)),
+        ("pg", Json::num(g.pg)),
+        ("mpg", Json::num(g.mpg())),
+    ])
+}
+
+/// Assemble one worker's finished rows into its shard report.
+/// `rows` is (spec index, served-from-cache, row record) in spec order.
+pub fn shard_report(task: &ShardTask, rows: &[(usize, bool, Json)]) -> Json {
+    let mut fields = version_header();
+    fields.push(("shard_index", Json::num(task.shard_index as f64)));
+    fields.push(("shard_count", Json::num(task.shard_count as f64)));
+    fields.push(("spec_len", Json::num(task.spec_len as f64)));
+    fields.push((
+        "rows",
+        Json::arr(rows.iter().map(|(i, cached, row)| {
+            Json::obj(vec![
+                ("spec_index", Json::num(*i as f64)),
+                ("cached", Json::Bool(*cached)),
+                ("row", row.clone()),
+            ])
+        })),
+    ));
+    Json::obj(fields)
+}
+
+/// One reassembled report row.
+#[derive(Clone, Debug)]
+pub struct MergedRow {
+    pub spec_index: usize,
+    /// Served from the shared cache inside the worker (telemetry only —
+    /// the row bytes are identical either way).
+    pub cached: bool,
+    pub row: Json,
+}
+
+/// Merge per-shard reports back into spec order. Refuses version skew,
+/// duplicate rows, out-of-range indices, and incomplete coverage — a
+/// merged report either represents the entire grid exactly once, or the
+/// merge fails loudly (a killed shard surfaces here; re-running the
+/// coordinator re-derives only cold entries thanks to the shared cache).
+pub fn merge_shard_reports(reports: &[Json], expect_total: usize) -> Result<Vec<MergedRow>> {
+    let mut slots: Vec<Option<MergedRow>> = (0..expect_total).map(|_| None).collect();
+    for rep in reports {
+        check_version_header(rep, "shard report")?;
+        let spec_len = rep
+            .get("spec_len")
+            .as_u64()
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow!("shard report: missing spec_len"))?;
+        if spec_len != expect_total {
+            bail!("shard report covers a {spec_len}-variant grid, expected {expect_total}");
+        }
+        let rows = rep
+            .get("rows")
+            .as_arr()
+            .ok_or_else(|| anyhow!("shard report: missing rows"))?;
+        for r in rows {
+            let i = r
+                .get("spec_index")
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| anyhow!("shard row: missing spec_index"))?;
+            if i >= expect_total {
+                bail!("shard row spec index {i} out of range (grid has {expect_total})");
+            }
+            if slots[i].is_some() {
+                bail!("duplicate shard row for spec index {i}");
+            }
+            let cached = r
+                .get("cached")
+                .as_bool()
+                .ok_or_else(|| anyhow!("shard row {i}: missing cached flag"))?;
+            let row = r.get("row").clone();
+            if row.as_obj().is_none() {
+                bail!("shard row {i}: missing row record");
+            }
+            slots[i] = Some(MergedRow { spec_index: i, cached, row });
+        }
+    }
+    slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.ok_or_else(|| {
+                anyhow!(
+                    "missing row for spec index {i} \
+                     (did a shard die? re-run to resume from cache)"
+                )
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Report byte layout (shared serial/merged writer)
+// ---------------------------------------------------------------------------
+
+/// Write the report opening: spec header + variants array opener. The
+/// exact byte layout of the single-process `sweep` report lives in these
+/// three functions and nowhere else.
+pub fn write_report_header(out: &mut impl Write, spec_json: &Json) -> io::Result<()> {
+    write!(out, "{{\n\"spec\": {},\n\"variants\": [", spec_json.to_string_compact())
+}
+
+/// Write one variant row. `row_index` is the 0-based position in the
+/// report (first row carries no leading comma).
+pub fn write_report_row(out: &mut impl Write, row_index: usize, row: &Json) -> io::Result<()> {
+    let sep = if row_index == 0 { "" } else { "," };
+    write!(out, "{sep}\n  {}", row.to_string_compact())
+}
+
+pub fn write_report_footer(out: &mut impl Write) -> io::Result<()> {
+    // writeln! appends the final newline: bytes are exactly "\n]\n}\n",
+    // matching what the pre-shard serial writer emitted.
+    writeln!(out, "\n]\n}}")
+}
+
+// ---------------------------------------------------------------------------
+// Worker progress protocol
+// ---------------------------------------------------------------------------
+
+/// Per-variant progress line a worker prints to stdout as each variant
+/// finishes; the coordinator aggregates these into one fleet-wide
+/// `progress:` stream (n/total + ETA, cache-hit-aware).
+pub fn progress_line(cached: bool, name: &str) -> String {
+    format!("SHARD_VARIANT {} {name}", cached as u8)
+}
+
+/// Parse [`progress_line`]; returns (served-from-cache, variant name).
+/// Non-protocol lines return None and should be passed through.
+pub fn parse_progress_line(line: &str) -> Option<(bool, &str)> {
+    let rest = line.strip_prefix("SHARD_VARIANT ")?;
+    let (flag, name) = rest.split_once(' ')?;
+    match flag {
+        "0" => Some((false, name)),
+        "1" => Some((true, name)),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// File helpers (manifests and shard reports are small one-shot files)
+// ---------------------------------------------------------------------------
+
+pub fn write_json_file(path: &Path, j: &Json) -> Result<()> {
+    std::fs::write(path, j.to_string_pretty())
+        .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+}
+
+pub fn read_json_file(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cache::config_hash;
+    use crate::sim::SweepRunner;
+    use crate::workload::WorkloadGenerator;
+
+    /// A config with every scalar knob off its default and every optional
+    /// branch populated — the codec must carry all of it.
+    fn exotic_cfg() -> SimConfig {
+        let mut cfg = SimConfig {
+            seed: 0xDEAD_BEEF_1234_5678,
+            duration_s: 5.5 * 24.0 * 3600.0,
+            schedule_tick_s: 45.0,
+            defrag_tick_s: 1800.0,
+            defrag_max_migrations: 7,
+            static_fleet: vec![(ChipGeneration::TpuB, 11), (ChipGeneration::TpuE, 3)],
+            evolution: Some(EvolutionModel::default()),
+            failures: false,
+            repair_s: 7200.0,
+            fail_detect_s: 33.0,
+            failure_rate_mult: 2.25,
+            ..Default::default()
+        };
+        cfg.policy.preemption = false;
+        cfg.policy.victim_bias = 0.75;
+        cfg.policy.min_runtime_before_evict_s = 120.0;
+        cfg.policy.headroom_fraction = 0.12;
+        cfg.runtime.multiclient_stall_frac = 0.11;
+        cfg.runtime.pathways_stall_frac = 0.03;
+        cfg.runtime.aot_cache_startup_mult = 0.5;
+        cfg.runtime.aot_cache_enabled = true;
+        cfg.generator.seed = 0xFFFF_FFFF_FFFF_FF01; // above 2^53: u64_hex territory
+        cfg.generator.arrivals_per_hour = 17.5;
+        cfg.generator.gen_mix = vec![(ChipGeneration::TpuE, 0.25), (ChipGeneration::TpuB, 0.75)];
+        cfg.generator.async_ckpt_fraction = 0.45;
+        cfg.generator.xl_pods = (3, 9);
+        cfg.compiler.deploy(Pass::AlgebraicSimplification, 1000.0);
+        cfg.compiler.deploy(Pass::CollectiveOverlap, 2000.0);
+        cfg.eras.add(EraRule {
+            t0: 100.0,
+            t1: 5000.0,
+            phase: Some(Phase::BulkInference),
+            effects: EraEffects { stall_mult: 3.0, restore_mult: 2.0 },
+        });
+        cfg.eras.add(EraRule {
+            t0: 0.0,
+            t1: 50.0,
+            phase: None,
+            effects: EraEffects { stall_mult: 1.5, restore_mult: 1.0 },
+        });
+        let mut gcfg = cfg.generator.clone();
+        gcfg.duration_s = 2.0 * 3600.0;
+        cfg.trace_jobs = Some(Arc::new(WorkloadGenerator::new(gcfg).trace()));
+        cfg
+    }
+
+    /// Equality via the cache's exhaustive stable hash (which covers every
+    /// outcome-determining field except the seed) plus the seed itself.
+    fn assert_configs_equal(a: &SimConfig, b: &SimConfig) {
+        assert_eq!(a.seed, b.seed, "seed must round-trip");
+        assert_eq!(
+            config_hash(a),
+            config_hash(b),
+            "configs must hash identically after a JSON round trip"
+        );
+    }
+
+    #[test]
+    fn config_roundtrips_through_json_text() {
+        let cfg = exotic_cfg();
+        let text = config_to_json(&cfg).to_string_pretty();
+        let back = config_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_configs_equal(&cfg, &back);
+        // Spot-check a few fields directly (the hash equality above is the
+        // exhaustive check; these make failures readable).
+        assert_eq!(cfg.duration_s, back.duration_s);
+        assert_eq!(cfg.generator.seed, back.generator.seed);
+        assert_eq!(cfg.compiler.deployments.len(), back.compiler.deployments.len());
+        assert_eq!(
+            cfg.trace_jobs.as_ref().unwrap().len(),
+            back.trace_jobs.as_ref().unwrap().len()
+        );
+    }
+
+    #[test]
+    fn config_roundtrip_preserves_nonfinite_floats_bitwise() {
+        let cfg = SimConfig {
+            repair_s: f64::NAN,
+            fail_detect_s: f64::INFINITY,
+            failure_rate_mult: -0.0,
+            ..Default::default()
+        };
+        let text = config_to_json(&cfg).to_string_compact();
+        let back = config_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.repair_s.is_nan());
+        assert_eq!(cfg.repair_s.to_bits(), back.repair_s.to_bits());
+        assert_eq!(back.fail_detect_s, f64::INFINITY);
+        assert_eq!(cfg.failure_rate_mult.to_bits(), back.failure_rate_mult.to_bits());
+    }
+
+    #[test]
+    fn config_decode_rejects_missing_fields() {
+        let mut j = config_to_json(&SimConfig::default());
+        if let Json::Obj(ref mut o) = j {
+            o.remove("failure_rate_mult");
+        }
+        let err = config_from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("failure_rate_mult"), "{err}");
+    }
+
+    fn tiny_spec(n: usize) -> SweepSpec {
+        let mut spec = SweepSpec::new().workers(1);
+        for i in 0..n {
+            let mut cfg = SimConfig {
+                seed: 100 + i as u64,
+                duration_s: 6.0 * 3600.0,
+                static_fleet: vec![(ChipGeneration::TpuC, 10)],
+                ..Default::default()
+            };
+            cfg.generator.arrivals_per_hour = 8.0;
+            cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+            spec.push(format!("v{i}"), cfg);
+        }
+        spec
+    }
+
+    #[test]
+    fn manifests_stripe_every_variant_exactly_once() {
+        let spec = tiny_spec(7);
+        for shards in [1usize, 2, 3, 5, 9] {
+            let manifests = shard_manifests(&spec, shards);
+            assert_eq!(manifests.len(), shards);
+            let mut seen = vec![false; spec.len()];
+            for m in &manifests {
+                let task = parse_manifest(m).expect("manifest must parse");
+                assert_eq!(task.spec_len, spec.len());
+                for (i, v) in &task.variants {
+                    assert!(!seen[*i], "spec index {i} assigned twice");
+                    seen[*i] = true;
+                    assert_eq!(v.name, spec.variants[*i].name);
+                    assert_configs_equal(&v.cfg, &spec.variants[*i].cfg);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{shards} shards must cover the grid");
+        }
+    }
+
+    #[test]
+    fn manifests_intern_shared_traces_once_and_restore_sharing() {
+        let gcfg = GeneratorConfig { duration_s: 3600.0, ..Default::default() };
+        let jobs = Arc::new(WorkloadGenerator::new(gcfg).trace());
+        assert!(!jobs.is_empty());
+        let mut spec = SweepSpec::new().workers(1);
+        for i in 0..3u64 {
+            let cfg = SimConfig {
+                seed: 1000 + i,
+                trace_jobs: Some(jobs.clone()),
+                ..Default::default()
+            };
+            spec.push(format!("replay-{i}"), cfg);
+        }
+        spec.push("fresh", SimConfig::default());
+        let m = shard_manifests(&spec, 1).remove(0);
+        assert_eq!(m.get("traces").as_arr().unwrap().len(), 1, "one Arc, one table entry");
+        let text = m.to_string_pretty();
+        // The trace body appears exactly once in the manifest text, not
+        // once per referencing variant.
+        assert_eq!(text.matches("\"job_count\"").count(), 1);
+        let task = parse_manifest(&Json::parse(&text).unwrap()).unwrap();
+        let arcs: Vec<_> = task
+            .variants
+            .iter()
+            .filter_map(|(_, v)| v.cfg.trace_jobs.clone())
+            .collect();
+        assert_eq!(arcs.len(), 3);
+        assert!(
+            Arc::ptr_eq(&arcs[0], &arcs[1]) && Arc::ptr_eq(&arcs[1], &arcs[2]),
+            "decoded variants must share ONE trace allocation"
+        );
+        for (i, v) in &task.variants {
+            assert_configs_equal(&v.cfg, &spec.variants[*i].cfg);
+        }
+    }
+
+    #[test]
+    fn manifest_version_skew_is_refused() {
+        let spec = tiny_spec(2);
+        let mut m = shard_manifests(&spec, 1).remove(0);
+        if let Json::Obj(ref mut o) = m {
+            o.insert("behavior_version".into(), Json::num(999.0));
+        }
+        let err = parse_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("behavior_version"), "{err}");
+    }
+
+    /// The heart of the acceptance criterion, in-process: running the grid
+    /// through manifests + per-shard execution + merge produces the exact
+    /// bytes of the serial streaming path, for 1, 2, and 5 shards.
+    #[test]
+    fn sharded_merge_is_byte_identical_to_serial_report() {
+        let spec = tiny_spec(6);
+        let spec_json = Json::obj(vec![("grid", Json::str("unit-test"))]);
+
+        // Serial reference bytes.
+        let mut serial: Vec<u8> = Vec::new();
+        write_report_header(&mut serial, &spec_json).unwrap();
+        let mut n = 0usize;
+        SweepRunner::run_streaming_summaries(tiny_spec(6), None, |s| {
+            write_report_row(&mut serial, n, &summary_row_json(&s)).unwrap();
+            n += 1;
+        });
+        write_report_footer(&mut serial).unwrap();
+
+        for shards in [1usize, 2, 5] {
+            // Worker side: each manifest round-trips through JSON text,
+            // runs its slice, and emits a shard report (also through
+            // text, as the coordinator would read it from disk).
+            let mut reports = Vec::new();
+            for m in shard_manifests(&spec, shards) {
+                let text = m.to_string_pretty();
+                let task = parse_manifest(&Json::parse(&text).unwrap()).unwrap();
+                let mut rows = Vec::new();
+                let mut k = 0usize;
+                let indices: Vec<usize> = task.variants.iter().map(|(i, _)| *i).collect();
+                SweepRunner::run_streaming_summaries(task.spec(), None, |s| {
+                    rows.push((indices[k], s.cached, summary_row_json(&s)));
+                    k += 1;
+                });
+                let rep = shard_report(&task, &rows);
+                reports.push(Json::parse(&rep.to_string_pretty()).unwrap());
+            }
+            let merged = merge_shard_reports(&reports, spec.len()).unwrap();
+            let mut out: Vec<u8> = Vec::new();
+            write_report_header(&mut out, &spec_json).unwrap();
+            for (idx, row) in merged.iter().enumerate() {
+                assert_eq!(row.spec_index, idx, "merge must restore spec order");
+                write_report_row(&mut out, idx, &row.row).unwrap();
+            }
+            write_report_footer(&mut out).unwrap();
+            assert_eq!(
+                String::from_utf8(serial.clone()).unwrap(),
+                String::from_utf8(out).unwrap(),
+                "{shards}-shard merge must be byte-identical to serial"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_duplicate_and_skewed_reports() {
+        let spec = tiny_spec(4);
+        let manifests = shard_manifests(&spec, 2);
+        let mut reports = Vec::new();
+        for m in &manifests {
+            let task = parse_manifest(m).unwrap();
+            let mut rows = Vec::new();
+            let mut k = 0usize;
+            let indices: Vec<usize> = task.variants.iter().map(|(i, _)| *i).collect();
+            SweepRunner::run_streaming_summaries(task.spec(), None, |s| {
+                rows.push((indices[k], s.cached, summary_row_json(&s)));
+                k += 1;
+            });
+            reports.push(shard_report(&task, &rows));
+        }
+        assert!(merge_shard_reports(&reports, spec.len()).is_ok());
+
+        // A missing shard (killed worker) must fail with a resume hint.
+        let err = merge_shard_reports(&reports[..1], spec.len()).unwrap_err().to_string();
+        assert!(err.contains("missing row"), "{err}");
+
+        // The same shard twice must be rejected.
+        let doubled = vec![reports[0].clone(), reports[0].clone(), reports[1].clone()];
+        let err = merge_shard_reports(&doubled, spec.len()).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+
+        // Behavior-version skew must be rejected.
+        let mut skewed = reports.clone();
+        if let Json::Obj(ref mut o) = skewed[1] {
+            o.insert("behavior_version".into(), Json::num(999.0));
+        }
+        let err = merge_shard_reports(&skewed, spec.len()).unwrap_err().to_string();
+        assert!(err.contains("behavior_version"), "{err}");
+    }
+
+    #[test]
+    fn progress_lines_roundtrip() {
+        assert_eq!(
+            parse_progress_line(&progress_line(true, "pol+fleet+mix+fail1")),
+            Some((true, "pol+fleet+mix+fail1"))
+        );
+        assert_eq!(parse_progress_line(&progress_line(false, "v0")), Some((false, "v0")));
+        assert_eq!(parse_progress_line("random worker chatter"), None);
+    }
+}

@@ -126,6 +126,36 @@ impl Json {
         Json::Num(x)
     }
 
+    /// f64 encoded as its bit pattern in hex: a bit-exact round trip for
+    /// EVERY value — NaN payloads, both infinities, -0.0 — which bare
+    /// JSON numbers cannot represent (the writer downgrades non-finite
+    /// [`Json::Num`]s to `null`). This is the encoding config hand-off
+    /// (shard manifests) and the sweep cache use for anything where a
+    /// silently-altered float would poison determinism.
+    pub fn f64b(x: f64) -> Json {
+        Json::Str(format!("{:016x}", x.to_bits()))
+    }
+
+    /// Decode [`Json::f64b`]. Strict: exactly 16 hex digits.
+    pub fn as_f64b(&self) -> Option<f64> {
+        self.as_u64_hex().map(f64::from_bits)
+    }
+
+    /// u64 as a fixed-width hex string (JSON numbers are f64 and lose
+    /// precision above 2^53 — hashes and seeds must not).
+    pub fn u64_hex(x: u64) -> Json {
+        Json::Str(format!("{x:016x}"))
+    }
+
+    /// Decode [`Json::u64_hex`]. Strict: exactly 16 hex digits.
+    pub fn as_u64_hex(&self) -> Option<u64> {
+        let s = self.as_str()?;
+        if s.len() != 16 {
+            return None;
+        }
+        u64::from_str_radix(s, 16).ok()
+    }
+
     // -- serialization -----------------------------------------------------
 
     pub fn to_string_pretty(&self) -> String {
@@ -153,7 +183,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity literals; emitting them
+                    // bare would make the document unparseable (including
+                    // by our own parser). Values that must survive
+                    // non-finite go through `Json::f64b` instead.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{x}"));
@@ -430,6 +466,49 @@ mod tests {
         let inp = v.get("inputs").idx(0);
         assert_eq!(inp.get("dtype").as_str(), Some("float32"));
         assert_eq!(inp.get("shape").idx(1).as_u64(), Some(128));
+    }
+
+    #[test]
+    fn nonfinite_numbers_write_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::num(x).to_string_compact();
+            assert_eq!(text, "null", "{x} must not produce invalid JSON");
+            assert_eq!(Json::parse(&text).unwrap(), Json::Null);
+        }
+        let arr = Json::arr([Json::num(1.0), Json::num(f64::NAN)]);
+        assert_eq!(arr.to_string_compact(), "[1,null]");
+    }
+
+    #[test]
+    fn f64b_roundtrips_every_value_bitwise() {
+        let specials = [
+            0.0,
+            -0.0,
+            1.5,
+            -2.5e300,
+            f64::MIN_POSITIVE,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::from_bits(0x7ff8_0000_dead_beef), // NaN with payload
+        ];
+        for x in specials {
+            let j = Json::f64b(x);
+            let text = j.to_string_compact();
+            let back = Json::parse(&text).unwrap().as_f64b().unwrap();
+            assert_eq!(x.to_bits(), back.to_bits(), "{x} must round-trip bitwise");
+        }
+        assert!(Json::str("not-hex").as_f64b().is_none());
+        assert!(Json::str("123").as_f64b().is_none(), "wrong width must be rejected");
+    }
+
+    #[test]
+    fn u64_hex_roundtrips_above_f64_precision() {
+        for x in [0u64, 1, u64::MAX, (1 << 53) + 1, 0xdead_beef_cafe_f00d] {
+            let back = Json::u64_hex(x).as_u64_hex().unwrap();
+            assert_eq!(x, back);
+        }
+        assert!(Json::num(5.0).as_u64_hex().is_none());
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod subproc;
 
 pub use json::Json;
 pub use rng::Rng;

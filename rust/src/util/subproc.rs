@@ -1,0 +1,104 @@
+//! Subprocess plumbing for the shard coordinator (the offline build has
+//! no tokio): spawn a set of worker commands concurrently, stream each
+//! worker's stdout back line by line, and collect exit statuses.
+//!
+//! One scoped reader thread per child keeps the model simple and the
+//! worker count is small (shards, not jobs), so threads-per-child is the
+//! right trade. stderr is inherited — workers' diagnostics flow straight
+//! to the operator's terminal, while stdout carries the line-oriented
+//! progress protocol (`sim::shard::progress_line`).
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, ExitStatus, Stdio};
+
+/// Build a `Command` from an argv-style vector (`argv[0]` is the
+/// program). Panics on an empty argv — an empty worker command is a
+/// caller bug, not a runtime condition.
+pub fn command(argv: &[String]) -> Command {
+    assert!(!argv.is_empty(), "empty subprocess argv");
+    let mut cmd = Command::new(&argv[0]);
+    cmd.args(&argv[1..]);
+    cmd
+}
+
+/// Run every command concurrently with stdout piped; `on_line` receives
+/// `(command index, line)` for each stdout line as it arrives (called
+/// from per-child reader threads — keep it cheap and thread-safe).
+/// Returns one result per command, in input order: spawn failures land in
+/// their slot instead of aborting the whole fleet, so the caller can
+/// report exactly which worker never started.
+pub fn run_all_streaming<F>(cmds: &[Vec<String>], on_line: F) -> Vec<std::io::Result<ExitStatus>>
+where
+    F: Fn(usize, &str) + Sync,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = cmds
+            .iter()
+            .enumerate()
+            .map(|(i, argv)| {
+                let on_line = &on_line;
+                scope.spawn(move || run_one(i, argv, on_line))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("subprocess reader thread panicked"))
+            .collect()
+    })
+}
+
+fn run_one<F>(i: usize, argv: &[String], on_line: &F) -> std::io::Result<ExitStatus>
+where
+    F: Fn(usize, &str) + Sync,
+{
+    let mut child = command(argv).stdout(Stdio::piped()).spawn()?;
+    // The pipe closes when the child exits (or dies), ending this loop;
+    // read errors are treated as end-of-stream, not failures — the exit
+    // status below is the authoritative outcome.
+    if let Some(stdout) = child.stdout.take() {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => on_line(i, &l),
+                Err(_) => break,
+            }
+        }
+    }
+    child.wait()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn streams_lines_and_collects_statuses() {
+        let cmds: Vec<Vec<String>> = vec![
+            vec!["sh".into(), "-c".into(), "echo a0; echo a1".into()],
+            vec!["sh".into(), "-c".into(), "echo b0".into()],
+        ];
+        let lines: Mutex<Vec<(usize, String)>> = Mutex::new(Vec::new());
+        let statuses = run_all_streaming(&cmds, |i, l| {
+            lines.lock().unwrap().push((i, l.to_string()));
+        });
+        assert_eq!(statuses.len(), 2);
+        for st in &statuses {
+            assert!(st.as_ref().unwrap().success());
+        }
+        let mut lines = lines.into_inner().unwrap();
+        lines.sort();
+        let want = vec![(0, "a0".to_string()), (0, "a1".to_string()), (1, "b0".to_string())];
+        assert_eq!(lines, want);
+    }
+
+    #[test]
+    fn nonzero_exit_and_spawn_failure_are_reported_per_slot() {
+        let cmds: Vec<Vec<String>> = vec![
+            vec!["sh".into(), "-c".into(), "exit 3".into()],
+            vec!["/definitely/not/a/binary".into()],
+        ];
+        let statuses = run_all_streaming(&cmds, |_, _| {});
+        assert_eq!(statuses[0].as_ref().unwrap().code(), Some(3));
+        assert!(statuses[1].is_err(), "spawn failure must land in its slot");
+    }
+}

@@ -23,6 +23,10 @@ impl Phase {
             Phase::BulkInference => "bulk-inference",
         }
     }
+
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
 }
 
 /// Framework/runtime stack (paper §3.4 / Fig. 6 / Fig. 14 segmentation).

@@ -155,11 +155,7 @@ fn priority_from(s: &str) -> Result<Priority> {
 }
 
 fn phase_from(s: &str) -> Result<Phase> {
-    Phase::ALL
-        .iter()
-        .copied()
-        .find(|p| p.name() == s)
-        .ok_or_else(|| anyhow!("unknown phase: {s}"))
+    Phase::from_name(s).ok_or_else(|| anyhow!("unknown phase: {s}"))
 }
 
 fn framework_from(s: &str) -> Result<Framework> {

@@ -31,6 +31,17 @@ pub enum Pass {
 }
 
 impl Pass {
+    pub const ALL: [Pass; 4] = [
+        Pass::AlgebraicSimplification,
+        Pass::Fusion,
+        Pass::CollectiveOverlap,
+        Pass::Autotune,
+    ];
+
+    pub fn from_name(s: &str) -> Option<Pass> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Pass::AlgebraicSimplification => "algebraic-simplification",
@@ -237,6 +248,14 @@ pub fn overlap_case_study(gen: ChipGeneration) -> (f64, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pass_names_roundtrip() {
+        for p in Pass::ALL {
+            assert_eq!(Pass::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Pass::from_name("not-a-pass"), None);
+    }
 
     fn profile(comm: f64) -> StepProfile {
         StepProfile {

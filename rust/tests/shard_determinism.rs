@@ -1,0 +1,195 @@
+//! End-to-end determinism suite for `sweep --shards`: the merged report
+//! of a multi-process sharded run must be byte-identical to the
+//! single-process report for the same grid — cold cache, warm cache, and
+//! after a shard is killed mid-run and the sweep re-run (resume from the
+//! shared cache).
+//!
+//! These tests drive the real `tpufleet` binary (Cargo builds it for
+//! integration tests and exposes the path via `CARGO_BIN_EXE_tpufleet`),
+//! so the coordinator/worker subprocess plumbing, the manifest hand-off,
+//! and the merge all run exactly as they do for an operator.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tpufleet")
+}
+
+/// Fresh scratch dir under the OS temp dir (unique per process + tag so
+/// parallel `cargo test` threads never collide).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("tpufleet-shard-determinism-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir
+}
+
+/// A tiny 6-variant grid (3 policies x 2 fleets x 1 x 1) over ~1.2
+/// simulated hours: large enough to exercise every merge path, small
+/// enough that the whole suite stays in CI-smoke territory.
+fn sweep_args(out: &Path, cache: &Path) -> Vec<String> {
+    let fixed = ["sweep", "--days", "0.05", "--seed", "77", "--workers", "1"];
+    let mut args: Vec<String> = fixed.iter().map(|s| s.to_string()).collect();
+    args.push("--arrivals-per-hour".to_string());
+    args.push("8".to_string());
+    args.push("--out".to_string());
+    args.push(out.display().to_string());
+    args.push("--cache-dir".to_string());
+    args.push(cache.display().to_string());
+    args
+}
+
+fn run(args: &[String], envs: &[(&str, &str)]) -> Output {
+    let mut cmd = Command::new(bin());
+    cmd.args(args);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.output().expect("spawning tpufleet")
+}
+
+fn stderr_of(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+#[test]
+fn sharded_reports_byte_identical_to_serial_cold_and_warm() {
+    let dir = scratch("byteident");
+    let serial_out = dir.join("serial.json");
+    let serial_cache = dir.join("cache-serial");
+    let st = run(&sweep_args(&serial_out, &serial_cache), &[]);
+    assert!(st.status.success(), "serial sweep failed: {}", stderr_of(&st));
+    let reference = read(&serial_out);
+    assert!(reference.contains("\"variants\""), "report must have rows");
+
+    for shards in [1usize, 2, 5] {
+        let out = dir.join(format!("sharded-{shards}.json"));
+        let cache = dir.join(format!("cache-{shards}"));
+        let mut args = sweep_args(&out, &cache);
+        args.push("--shards".to_string());
+        args.push(shards.to_string());
+
+        // Cold: every variant simulated inside worker subprocesses.
+        let cold = run(&args, &[]);
+        assert!(
+            cold.status.success(),
+            "{shards}-shard cold sweep failed: {}",
+            stderr_of(&cold)
+        );
+        assert_eq!(
+            reference,
+            read(&out),
+            "{shards}-shard cold merged report must be byte-identical to serial"
+        );
+        let shard_dir = dir.join(format!("sharded-{shards}.json.shards"));
+        assert!(
+            !shard_dir.exists(),
+            "scratch shard dir must be cleaned up after success"
+        );
+
+        // Warm: same command again, now all cache hits — and the exact
+        // same bytes (wall-clock and hit/miss telemetry live on stderr).
+        let warm = run(&args, &[]);
+        assert!(
+            warm.status.success(),
+            "{shards}-shard warm sweep failed: {}",
+            stderr_of(&warm)
+        );
+        assert_eq!(
+            reference,
+            read(&out),
+            "{shards}-shard warm merged report must be byte-identical to serial"
+        );
+        assert!(
+            stderr_of(&warm).contains("(6/6 cache hits"),
+            "warm re-run must be served entirely from the cache: {}",
+            stderr_of(&warm)
+        );
+    }
+}
+
+#[test]
+fn shards_share_one_cache_with_serial_runs() {
+    let dir = scratch("sharedcache");
+    let cache = dir.join("cache");
+    // Warm the cache with a plain serial run...
+    let serial_out = dir.join("serial.json");
+    let st = run(&sweep_args(&serial_out, &cache), &[]);
+    assert!(st.status.success(), "serial sweep failed: {}", stderr_of(&st));
+    // ...then the sharded run over the same grid must be all hits.
+    let out = dir.join("sharded.json");
+    let mut args = sweep_args(&out, &cache);
+    args.push("--shards".to_string());
+    args.push("2".to_string());
+    let sharded = run(&args, &[]);
+    assert!(sharded.status.success(), "sharded sweep failed: {}", stderr_of(&sharded));
+    assert!(
+        stderr_of(&sharded).contains("(6/6 cache hits"),
+        "workers must hit the cache the serial run warmed: {}",
+        stderr_of(&sharded)
+    );
+    assert_eq!(read(&serial_out), read(&out));
+}
+
+#[test]
+fn killed_shard_run_resumes_from_cache() {
+    let dir = scratch("resume");
+    // Byte-identity reference.
+    let serial_out = dir.join("serial.json");
+    let st = run(&sweep_args(&serial_out, &dir.join("cache-serial")), &[]);
+    assert!(st.status.success(), "serial sweep failed: {}", stderr_of(&st));
+
+    let cache = dir.join("cache");
+    let out = dir.join("sharded.json");
+    let mut args = sweep_args(&out, &cache);
+    args.push("--shards".to_string());
+    args.push("2".to_string());
+
+    // Every worker dies after its first variant (the TPUFLEET_SHARD_FAIL_AFTER
+    // test hook): the coordinator must fail loudly...
+    let killed = run(&args, &[("TPUFLEET_SHARD_FAIL_AFTER", "1")]);
+    assert!(!killed.status.success(), "coordinator must fail when a shard dies");
+    assert!(
+        stderr_of(&killed).contains("re-run"),
+        "failure message must point at resume semantics: {}",
+        stderr_of(&killed)
+    );
+
+    // ...but each worker finished (and cached) exactly one variant first,
+    // so the re-run resumes: 2 hits, 4 fresh simulations, and a merged
+    // report byte-identical to the serial reference.
+    let resumed = run(&args, &[]);
+    assert!(resumed.status.success(), "resume run failed: {}", stderr_of(&resumed));
+    assert!(
+        stderr_of(&resumed).contains("(2/6 cache hits"),
+        "resume must reuse the killed run's cached variants: {}",
+        stderr_of(&resumed)
+    );
+    assert_eq!(
+        read(&serial_out),
+        read(&out),
+        "resumed merged report must be byte-identical to serial"
+    );
+}
+
+#[test]
+fn cache_stats_flag_reports_footprint() {
+    let dir = scratch("cachestats");
+    let out = dir.join("report.json");
+    let mut args = sweep_args(&out, &dir.join("cache"));
+    args.push("--cache-stats".to_string());
+    let st = run(&args, &[]);
+    assert!(st.status.success(), "sweep failed: {}", stderr_of(&st));
+    let err = stderr_of(&st);
+    assert!(
+        err.contains("cache stats:") && err.contains("6 entries"),
+        "--cache-stats must report the cache footprint: {err}"
+    );
+}
