@@ -1,0 +1,242 @@
+//! Bench: single-pass MPG reduction engine vs the naive per-class
+//! rescans, written to BENCH_goodput_reduce.json (the ISSUE-4 acceptance
+//! record: >=5x on the segmented/timeseries path at 1e5+ spans), plus the
+//! windowed-ledger memory counter (peak window cells vs retained spans)
+//! with a bit-identity cross-check between the two accounting modes.
+//!
+//! `GOODPUT_BENCH_SPANS` caps the largest synthetic ledger (default
+//! 200_000); `GOODPUT_BENCH_SIM_DAYS` caps the windowed-vs-full
+//! simulation horizon (default 2.0). CI's bench-smoke step shrinks both
+//! so the whole bench finishes in seconds.
+
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::metrics::goodput::{self, Axis};
+use tpufleet::metrics::{JobMeta, Ledger, TimeClass, TimeSeries};
+use tpufleet::sim::{sweep, SimConfig, Simulation};
+use tpufleet::util::bench::{fmt_dur, Bench};
+use tpufleet::util::{Json, Rng};
+use tpufleet::workload::{GeneratorConfig, WorkloadGenerator};
+
+const DAY_S: f64 = 24.0 * 3600.0;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Synthetic ledger: realistic job metadata from the workload generator,
+/// `total_spans` classified spans round-robined across the jobs (so every
+/// segment axis has spread), PG samples on the productive ones.
+fn build_ledger(total_spans: usize, seed: u64) -> Ledger {
+    let horizon = 30.0 * DAY_S;
+    let gcfg = GeneratorConfig {
+        seed,
+        arrivals_per_hour: 2.0,
+        duration_s: horizon,
+        ..Default::default()
+    };
+    let jobs = WorkloadGenerator::new(gcfg).trace();
+    let n_jobs = jobs.len().min(400).max(1);
+    let mut ledger = Ledger::new();
+    ledger.set_capacity(0.0, 100_000);
+    ledger.set_capacity(horizon / 2.0, 140_000);
+    let mut cursors = Vec::with_capacity(n_jobs);
+    for job in jobs.iter().take(n_jobs) {
+        ledger.ensure_job(JobMeta::of(job));
+        cursors.push(job.arrival_s);
+    }
+    let mut rng = Rng::new(seed ^ 0xBE9C);
+    for i in 0..total_spans {
+        let j = i % n_jobs;
+        let job = &jobs[j];
+        let t0 = cursors[j];
+        let dur = rng.range_f64(10.0, 1800.0);
+        let class = TimeClass::ALL[rng.below(7) as usize];
+        ledger.add_span(job.id, t0, t0 + dur, job.chips(), class);
+        if class == TimeClass::Productive {
+            let pg = rng.range_f64(0.05, 1.0);
+            ledger.add_pg_sample(job.id, t0, t0 + dur, job.chips(), pg);
+        }
+        cursors[j] = t0 + dur;
+    }
+    ledger
+}
+
+struct PathTiming {
+    naive_s: f64,
+    fast_s: f64,
+}
+
+impl PathTiming {
+    fn speedup(&self) -> f64 {
+        self.naive_s / self.fast_s.max(1e-12)
+    }
+
+    fn json(&self) -> Json {
+        Json::obj(vec![
+            ("naive_seconds", Json::num(self.naive_s)),
+            ("single_pass_seconds", Json::num(self.fast_s)),
+            ("speedup", Json::num(self.speedup())),
+        ])
+    }
+}
+
+fn median<T>(name: &str, f: impl FnMut() -> T) -> f64 {
+    Bench::new(name).warmup(1).iters(5).run(f).median_s
+}
+
+/// Time the three reduction paths (aggregate report / segmented /
+/// windowed time series), naive vs single-pass, on one ledger — asserting
+/// bit-identical outputs while at it.
+fn measure(ledger: &Ledger, spans: usize) -> (PathTiming, PathTiming, PathTiming) {
+    let horizon = 30.0 * DAY_S;
+    let tag = |path: &str| format!("{path}/{spans}-spans");
+
+    let report = PathTiming {
+        naive_s: median(&tag("report-naive"), || {
+            goodput::report_naive(ledger, 0.0, horizon, |_| true)
+        }),
+        fast_s: median(&tag("report-single-pass"), || {
+            goodput::report(ledger, 0.0, horizon, |_| true)
+        }),
+    };
+    assert_eq!(
+        goodput::report(ledger, 0.0, horizon, |_| true),
+        goodput::report_naive(ledger, 0.0, horizon, |_| true),
+        "single-pass report must be bit-identical to naive"
+    );
+
+    let segmented = PathTiming {
+        naive_s: median(&tag("segmented-naive"), || {
+            goodput::segmented_naive(ledger, 0.0, horizon, Axis::Phase)
+        }),
+        fast_s: median(&tag("segmented-single-pass"), || {
+            goodput::segmented(ledger, 0.0, horizon, Axis::Phase)
+        }),
+    };
+    let fast = goodput::segmented(ledger, 0.0, horizon, Axis::Phase);
+    let slow = goodput::segmented_naive(ledger, 0.0, horizon, Axis::Phase);
+    assert_eq!(fast.len(), slow.len());
+    for (f, s) in fast.iter().zip(&slow) {
+        assert_eq!(f.label, s.label);
+        assert_eq!(f.report, s.report, "{}: segment must be bit-identical", f.label);
+    }
+
+    let timeseries = PathTiming {
+        naive_s: median(&tag("timeseries-naive"), || {
+            TimeSeries::build_naive("b", ledger, 0.0, horizon, DAY_S, |_| true)
+        }),
+        fast_s: median(&tag("timeseries-single-pass"), || {
+            TimeSeries::build("b", ledger, 0.0, horizon, DAY_S, |_| true)
+        }),
+    };
+    let fast = TimeSeries::build("b", ledger, 0.0, horizon, DAY_S, |_| true);
+    let slow = TimeSeries::build_naive("b", ledger, 0.0, horizon, DAY_S, |_| true);
+    for (f, s) in fast.reports.iter().zip(&slow.reports) {
+        assert_eq!(f, s, "time-series window must be bit-identical");
+    }
+
+    (report, segmented, timeseries)
+}
+
+fn main() {
+    let max_spans = env_f64("GOODPUT_BENCH_SPANS", 200_000.0).max(1000.0) as usize;
+    let sizes = [max_spans / 10, max_spans / 3, max_spans];
+    println!("goodput reduce: spans-scaling series {sizes:?}, 30-day horizon");
+
+    let mut series_json = Vec::new();
+    let mut headline_seg = 1.0;
+    let mut headline_ts = 1.0;
+    let mut headline_rep = 1.0;
+    for &spans in &sizes {
+        let ledger = build_ledger(spans, 0x60D9);
+        let (rep, seg, ts) = measure(&ledger, spans);
+        println!(
+            "  {spans} spans: report {:.1}x  segmented {:.1}x  timeseries {:.1}x \
+             (naive {} -> single-pass {} on segmented)",
+            rep.speedup(),
+            seg.speedup(),
+            ts.speedup(),
+            fmt_dur(seg.naive_s),
+            fmt_dur(seg.fast_s),
+        );
+        headline_rep = rep.speedup();
+        headline_seg = seg.speedup();
+        headline_ts = ts.speedup();
+        series_json.push(Json::obj(vec![
+            ("spans", Json::num(spans as f64)),
+            ("report", rep.json()),
+            ("segmented", seg.json()),
+            ("timeseries", ts.json()),
+        ]));
+    }
+    println!("bit-identical naive vs single-pass outputs ... OK");
+
+    // Windowed-ledger memory: the same simulation accounted in streaming
+    // mode holds O(windows x jobs) cells instead of O(spans) spans, with
+    // a bit-identical whole-horizon report.
+    let days = env_f64("GOODPUT_BENCH_SIM_DAYS", 2.0);
+    let mut cfg = SimConfig {
+        seed: 0x60D,
+        duration_s: days * DAY_S,
+        static_fleet: vec![(ChipGeneration::TpuC, 16)],
+        ..Default::default()
+    };
+    cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+    cfg.generator.arrivals_per_hour = 10.0;
+    let mut full = Simulation::new(cfg.clone());
+    full.run();
+    let full_spans: usize = full
+        .ledger
+        .jobs
+        .values()
+        .map(|(_, jl)| jl.spans.len() + jl.pg_samples.len())
+        .sum();
+    let mut win = Simulation::with_ledger_mode(cfg, sweep::summary_ledger_mode());
+    win.run();
+    assert_eq!(
+        full.fleet_goodput(),
+        win.fleet_goodput(),
+        "windowed-mode report must be bit-identical to full-mode"
+    );
+    let wl = win.windowed().expect("windowed mode");
+    // Cells are never released, so cell_count() is also the peak.
+    let peak = wl.cell_count();
+    let bound = wl.window_count() * wl.job_count();
+    assert!(peak <= bound, "peak cells {peak} must be <= windows x jobs = {bound}");
+    println!(
+        "windowed ledger: {} retained items (full mode) -> peak {} window cells \
+         ({} windows x {} jobs bound {}), bit-identical report ... OK",
+        full_spans,
+        peak,
+        wl.window_count(),
+        wl.job_count(),
+        bound
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("goodput_reduce")),
+        ("max_spans", Json::num(max_spans as f64)),
+        ("series", Json::Arr(series_json)),
+        ("report_speedup", Json::num(headline_rep)),
+        ("segmented_speedup", Json::num(headline_seg)),
+        ("timeseries_speedup", Json::num(headline_ts)),
+        ("sim_days", Json::num(days)),
+        ("full_ledger_retained_items", Json::num(full_spans as f64)),
+        ("windowed_peak_cells", Json::num(peak as f64)),
+        ("windowed_window_count", Json::num(wl.window_count() as f64)),
+        ("windowed_job_count", Json::num(wl.job_count() as f64)),
+        ("windowed_cell_bound", Json::num(bound as f64)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    let path = "BENCH_goodput_reduce.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("writing {path} failed: {e}"),
+    }
+    let target_ok =
+        max_spans < 100_000 || (headline_seg >= 5.0 && headline_ts >= 5.0);
+    println!(
+        "shape: >=5x single-pass speedup on segmented+timeseries at 1e5+ spans ... {}",
+        if target_ok { "OK" } else { "UNEXPECTED" }
+    );
+}

@@ -15,7 +15,9 @@ use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
 use tpufleet::sim::cache::SIM_BEHAVIOR_VERSION;
-use tpufleet::sim::{shard, SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec};
+use tpufleet::sim::{
+    shard, LedgerMode, SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec,
+};
 use tpufleet::util::cli::Args;
 use tpufleet::util::{pool, Rng};
 use tpufleet::xlaopt;
@@ -45,17 +47,22 @@ COMMANDS:
              [--failure-mults 0,1,3] [--out FILE] [--progress]
              [--no-cache] [--cache-dir DIR] [--cache-max-mb N]
              [--cache-stats] [--shards N] [--shard-cmd CMD]
+             [--full-ledger]
              run a policy x fleet x job-size x failure-rate grid on a
              worker pool, streaming rows into one JSON report as variants
-             finish (memory stays O(workers)); --progress reports n/total
-             + ETA on stderr; results persist under .sweep-cache/ so a
-             repeated grid is served from cache bit-identically;
-             --cache-max-mb caps the cache (LRU eviction) and
-             --cache-stats reports hits/misses/bytes/age after the run;
-             --shards N partitions the grid across N worker subprocesses
-             (sharing one cache; merged report is byte-identical to the
-             single-process run) and --shard-cmd overrides how workers
-             are launched (default: this binary)
+             finish (memory stays O(workers)); each variant accounts into
+             the streaming windowed ledger (no span retention; per-variant
+             memory O(windows x jobs)) — --full-ledger forces full-span
+             accounting, which produces bit-identical reports, for
+             debugging; --progress reports n/total + ETA on stderr;
+             results persist under .sweep-cache/ so a repeated grid is
+             served from cache bit-identically; --cache-max-mb caps the
+             cache (LRU eviction) and --cache-stats reports
+             hits/misses/bytes/age after the run; --shards N partitions
+             the grid across N worker subprocesses (sharing one cache;
+             merged report is byte-identical to the single-process run)
+             and --shard-cmd overrides how workers are launched (default:
+             this binary)
              (policies: default no-preemption no-defrag no-anti-thrash
              headroom-15; fleets: default small large c-only; job-mixes:
              default xl-heavy small-heavy)
@@ -370,6 +377,17 @@ const SWEEP_DEFAULT_DAYS: f64 = 3.0;
 const SWEEP_DEFAULT_SEED: u64 = 0x5EE9;
 const SWEEP_DEFAULT_ARRIVALS: f64 = 8.0;
 
+/// Ledger mode for sweep variants: streaming windowed accounting unless
+/// `--full-ledger` forces span retention (bit-identical either way; the
+/// flag exists for debugging and the CI cross-mode `cmp`).
+fn sweep_ledger_mode(args: &Args) -> LedgerMode {
+    if args.has_flag("full-ledger") {
+        LedgerMode::Full
+    } else {
+        tpufleet::sim::sweep::summary_ledger_mode()
+    }
+}
+
 /// Shared cache wiring for `sweep`, its coordinator, and `sweep-worker`:
 /// `--no-cache` disables, `--cache-dir` relocates, `--cache-max-mb` caps
 /// the footprint with LRU eviction. A malformed cap is an error (exit
@@ -586,7 +604,8 @@ fn cmd_sweep_serial(args: &Args, spec: SweepSpec) -> i32 {
     );
     let mut done = 0usize;
     let mut hits = 0usize;
-    SweepRunner::run_streaming_summaries(spec, cache.as_ref(), |s| {
+    let mode = sweep_ledger_mode(args);
+    SweepRunner::run_streaming_summaries_with_mode(spec, cache.as_ref(), mode, |s| {
         let g = &s.goodput;
         table.row(vec![
             s.name.clone(),
@@ -728,6 +747,9 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
                 }
             }
             None => argv.push("--no-cache".to_string()),
+        }
+        if args.has_flag("full-ledger") {
+            argv.push("--full-ledger".to_string());
         }
         cmds.push(argv);
     }
@@ -873,7 +895,7 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
 
     const WORKER_USAGE: &str =
         "usage: tpufleet sweep-worker --manifest FILE --out FILE \
-         [--cache-dir DIR | --no-cache] [--cache-max-mb N]";
+         [--cache-dir DIR | --no-cache] [--cache-max-mb N] [--full-ledger]";
     let Some(manifest_path) = args.get("manifest") else {
         eprintln!("{WORKER_USAGE}");
         return 2;
@@ -904,7 +926,8 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
     let indices: Vec<usize> = task.variants.iter().map(|(i, _)| *i).collect();
     let mut rows: Vec<(usize, bool, Json)> = Vec::new();
     let stdout = std::io::stdout();
-    SweepRunner::run_streaming_summaries(task.spec(), cache.as_ref(), |s| {
+    let mode = sweep_ledger_mode(args);
+    SweepRunner::run_streaming_summaries_with_mode(task.spec(), cache.as_ref(), mode, |s| {
         let k = rows.len();
         rows.push((indices[k], s.cached, shard::summary_row_json(&s)));
         let mut lock = stdout.lock();

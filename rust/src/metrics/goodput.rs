@@ -1,6 +1,16 @@
 //! SG / RG / PG reduction over a ledger window, with segmentation.
+//!
+//! Both entry points ([`report`] and [`segmented`]) run on the
+//! single-pass engine in [`super::reduce`]: one walk of each job's spans
+//! fills every class bucket (and the PG reduction) for every requested
+//! segment simultaneously. The `_naive` variants keep the original
+//! one-scan-per-class shape as the reference implementation — the
+//! property tests assert the single-pass outputs are bit-identical
+//! (`f64::to_bits`) to them, and the `goodput_reduce` bench measures the
+//! speedup against them.
 
 use super::ledger::{JobMeta, Ledger, TimeClass};
+use super::reduce::fold_ledger;
 use crate::workload::{Framework, ModelArch, Phase, SizeClass};
 
 /// The MPG decomposition over some window and job population.
@@ -92,6 +102,26 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
     w1: f64,
     filter: F,
 ) -> GoodputReport {
+    let cells = fold_ledger(ledger, &[(w0, w1)], 1, |m, gs| {
+        if filter(m) {
+            gs.push(0);
+        }
+    });
+    cells[0][0].finalize(ledger.capacity_chip_seconds(w0, w1))
+}
+
+/// Reference implementation of [`report`]: one full ledger scan per
+/// `TimeClass` (7 per call) plus a PG/job-count pass — the
+/// pre-optimization shape. Same canonical summation order (per-job
+/// subtotals in span order, jobs in `BTreeMap` order), so its output is
+/// bit-identical to the single-pass path; retained for the property
+/// tests and as the `goodput_reduce` bench baseline.
+pub fn report_naive<F: Fn(&JobMeta) -> bool>(
+    ledger: &Ledger,
+    w0: f64,
+    w1: f64,
+    filter: F,
+) -> GoodputReport {
     let productive = ledger.class_chip_seconds(TimeClass::Productive, w0, w1, &filter);
     let startup = ledger.class_chip_seconds(TimeClass::Startup, w0, w1, &filter);
     let ckpt = ledger.class_chip_seconds(TimeClass::CkptStall, w0, w1, &filter);
@@ -101,7 +131,8 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
     let all_allocated = productive + startup + ckpt + rstall + lost;
     let capacity = ledger.capacity_chip_seconds(w0, w1);
 
-    // PG: productive-chip-second weighted mean of samples in the window.
+    // PG: productive-chip-second weighted mean of samples in the window,
+    // reduced per job then combined in job order (the canonical order).
     let (mut pg_w, mut pg_sum) = (0.0, 0.0);
     let mut job_count = 0;
     for (meta, jl) in ledger.jobs.values() {
@@ -112,6 +143,7 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
         if active {
             job_count += 1;
         }
+        let (mut jw, mut js) = (0.0, 0.0);
         for s in &jl.pg_samples {
             let lo = s.t0.max(w0);
             let hi = s.t1.min(w1);
@@ -120,9 +152,11 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
             }
             let frac = (hi - lo) / (s.t1 - s.t0);
             let w = s.chip_seconds * frac;
-            pg_w += w;
-            pg_sum += w * s.pg;
+            jw += w;
+            js += w * s.pg;
         }
+        pg_w += jw;
+        pg_sum += js;
     }
     let pg = if pg_w > 0.0 { pg_sum / pg_w } else { 0.0 };
 
@@ -142,13 +176,46 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
 }
 
 /// Segment-wise reports along an axis (plus the aggregate under "fleet").
+/// One single-pass fold fills the fleet cell and every segment cell
+/// simultaneously — each job's subtotal is merged into the fleet group
+/// and its own segment group, instead of one full rescan per segment.
 pub fn segmented(ledger: &Ledger, w0: f64, w1: f64, axis: Axis) -> Vec<SegmentReport> {
+    let values = axis.values();
+    let cells = fold_ledger(ledger, &[(w0, w1)], 1 + values.len(), |m, gs| {
+        gs.push(0); // the fleet aggregate
+        if let Some(i) = values.iter().position(|&v| v == axis.key(m)) {
+            gs.push(1 + i);
+        }
+    });
+    let capacity = ledger.capacity_chip_seconds(w0, w1);
     let mut out = vec![SegmentReport {
         label: "fleet".to_string(),
-        report: report(ledger, w0, w1, |_| true),
+        report: cells[0][0].finalize(capacity),
+    }];
+    for (i, value) in values.iter().enumerate() {
+        let r = cells[1 + i][0].finalize(capacity);
+        if r.all_allocated_cs > 0.0 || r.job_count > 0 {
+            out.push(SegmentReport { label: value.to_string(), report: r });
+        }
+    }
+    out
+}
+
+/// Reference implementation of [`segmented`]: one [`report_naive`] call
+/// per segment value plus the fleet row — O(segments) full rescans.
+/// Retained for the property tests and the `goodput_reduce` bench.
+pub fn segmented_naive(
+    ledger: &Ledger,
+    w0: f64,
+    w1: f64,
+    axis: Axis,
+) -> Vec<SegmentReport> {
+    let mut out = vec![SegmentReport {
+        label: "fleet".to_string(),
+        report: report_naive(ledger, w0, w1, |_| true),
     }];
     for value in axis.values() {
-        let r = report(ledger, w0, w1, |m| axis.key(m) == value);
+        let r = report_naive(ledger, w0, w1, |m| axis.key(m) == value);
         if r.all_allocated_cs > 0.0 || r.job_count > 0 {
             out.push(SegmentReport { label: value.to_string(), report: r });
         }
@@ -284,5 +351,36 @@ mod tests {
         assert_eq!(r.all_allocated_cs, 0.0);
         assert_eq!(r.rg, 0.0);
         assert_eq!(r.pg, 0.0);
+    }
+
+    use crate::testkit::assert_reports_bit_identical;
+
+    #[test]
+    fn single_pass_report_matches_naive_bitwise() {
+        let l = ledger();
+        for (w0, w1) in [(0.0, 100.0), (7.0, 93.0), (40.0, 60.0), (150.0, 200.0)] {
+            let fast = report(&l, w0, w1, |_| true);
+            let slow = report_naive(&l, w0, w1, |_| true);
+            assert_reports_bit_identical(&fast, &slow, &format!("[{w0}, {w1})"));
+            let filt = |m: &JobMeta| m.phase == Phase::Training;
+            let fast = report(&l, w0, w1, filt);
+            let slow = report_naive(&l, w0, w1, filt);
+            assert_reports_bit_identical(&fast, &slow, &format!("training [{w0}, {w1})"));
+        }
+    }
+
+    #[test]
+    fn single_pass_segmented_matches_naive_bitwise() {
+        let l = ledger();
+        for axis in [Axis::Phase, Axis::Framework, Axis::Arch, Axis::Generation, Axis::SizeClass]
+        {
+            let fast = segmented(&l, 0.0, 100.0, axis);
+            let slow = segmented_naive(&l, 0.0, 100.0, axis);
+            assert_eq!(fast.len(), slow.len(), "{axis:?}: segment rows");
+            for (f, s) in fast.iter().zip(&slow) {
+                assert_eq!(f.label, s.label, "{axis:?}");
+                assert_reports_bit_identical(&f.report, &s.report, &f.label);
+            }
+        }
     }
 }

@@ -140,6 +140,49 @@ pub struct Ledger {
     /// Piecewise-constant fleet capacity: (time, healthy accelerator chips)
     /// breakpoints; capacity integrates this over any window.
     capacity_steps: Vec<(f64, u64)>,
+    /// Max span end, tracked incrementally in [`Ledger::add_span`] so
+    /// `end_time` is O(1) instead of re-folding every span per call.
+    max_end: f64,
+}
+
+/// Append a capacity breakpoint to a time-ordered step list, deduplicating
+/// equal-chip steps — the one capacity-write rule, shared by [`Ledger`] and
+/// the windowed ledger so both integrate identical step sequences.
+pub(crate) fn push_capacity_step(steps: &mut Vec<(f64, u64)>, t: f64, chips: u64) {
+    if let Some(last) = steps.last() {
+        assert!(t >= last.0, "capacity steps must be time-ordered");
+        if last.1 == chips {
+            return;
+        }
+    }
+    steps.push((t, chips));
+}
+
+/// Integrated capacity chip-seconds over [w0, w1) for a time-ordered step
+/// list. Binary-searches the first step that can overlap the window
+/// instead of scanning from t=0 (this runs once per window per segment in
+/// every reduction); skipped steps contributed exactly nothing in the
+/// full scan, so the result is bit-identical.
+pub(crate) fn capacity_integral(steps: &[(f64, u64)], w0: f64, w1: f64) -> f64 {
+    if steps.is_empty() || w1 <= w0 {
+        return 0.0;
+    }
+    // Last step starting at or before w0: every earlier step's interval
+    // ends at or before w0 and cannot overlap the window.
+    let start = steps.partition_point(|&(t, _)| t <= w0).saturating_sub(1);
+    let mut total = 0.0;
+    for (i, &(t, chips)) in steps.iter().enumerate().skip(start) {
+        if t >= w1 {
+            break;
+        }
+        let next = steps.get(i + 1).map(|&(t2, _)| t2).unwrap_or(f64::INFINITY);
+        let lo = t.max(w0);
+        let hi = next.min(w1);
+        if hi > lo {
+            total += (hi - lo) * chips as f64;
+        }
+    }
+    total
 }
 
 impl Ledger {
@@ -158,6 +201,9 @@ impl Ledger {
         }
         let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
         entry.1.spans.push(Span { t0, t1, chips, class });
+        if t1 > self.max_end {
+            self.max_end = t1;
+        }
     }
 
     /// Record a PG sample over a productive span.
@@ -177,37 +223,22 @@ impl Ledger {
 
     /// Declare fleet capacity (healthy accelerator chips) from time `t` on.
     pub fn set_capacity(&mut self, t: f64, chips: u64) {
-        if let Some(last) = self.capacity_steps.last() {
-            assert!(t >= last.0, "capacity steps must be time-ordered");
-            if last.1 == chips {
-                return;
-            }
-        }
-        self.capacity_steps.push((t, chips));
+        push_capacity_step(&mut self.capacity_steps, t, chips);
     }
 
     /// Integrated capacity chip-seconds over [w0, w1).
     pub fn capacity_chip_seconds(&self, w0: f64, w1: f64) -> f64 {
-        if self.capacity_steps.is_empty() || w1 <= w0 {
-            return 0.0;
-        }
-        let mut total = 0.0;
-        for (i, &(t, chips)) in self.capacity_steps.iter().enumerate() {
-            let next = self
-                .capacity_steps
-                .get(i + 1)
-                .map(|&(t2, _)| t2)
-                .unwrap_or(f64::INFINITY);
-            let lo = t.max(w0);
-            let hi = next.min(w1);
-            if hi > lo {
-                total += (hi - lo) * chips as f64;
-            }
-        }
-        total
+        capacity_integral(&self.capacity_steps, w0, w1)
     }
 
     /// Sum of chip-seconds of `class` over [w0, w1), optionally filtered.
+    ///
+    /// Canonical summation order (shared by every reduction path — this
+    /// reference, the single-pass fold in `metrics::reduce`, and the
+    /// windowed ledger): each job's spans accumulate into a per-job
+    /// subtotal in insertion order, and job subtotals combine in
+    /// `BTreeMap` job-id order. All paths therefore produce bit-identical
+    /// floats.
     pub fn class_chip_seconds<F: Fn(&JobMeta) -> bool>(
         &self,
         class: TimeClass,
@@ -218,13 +249,24 @@ impl Ledger {
         self.jobs
             .values()
             .filter(|(meta, _)| filter(meta))
-            .flat_map(|(_, jl)| jl.spans.iter())
-            .filter(|s| s.class == class)
-            .map(|s| s.clipped(w0, w1))
+            .map(|(_, jl)| {
+                jl.spans
+                    .iter()
+                    .filter(|s| s.class == class)
+                    .map(|s| s.clipped(w0, w1))
+                    .sum::<f64>()
+            })
             .sum()
     }
 
+    /// Latest span end ever recorded (O(1); tracked in `add_span`).
     pub fn end_time(&self) -> f64 {
+        self.max_end
+    }
+
+    /// Reference `end_time`: re-fold every span. Kept for tests asserting
+    /// the incremental tracker never drifts from ground truth.
+    pub fn end_time_by_fold(&self) -> f64 {
         self.jobs
             .values()
             .flat_map(|(_, jl)| jl.spans.iter().map(|s| s.t1))
@@ -287,6 +329,70 @@ mod tests {
         l.set_capacity(0.0, 100);
         l.set_capacity(10.0, 100);
         assert_eq!(l.capacity_steps.len(), 1);
+    }
+
+    /// The binary-searched integral must equal a from-t=0 scan bitwise for
+    /// windows before, inside, straddling, and after the step list.
+    #[test]
+    fn capacity_binary_search_matches_full_scan() {
+        let scan = |steps: &[(f64, u64)], w0: f64, w1: f64| -> f64 {
+            if steps.is_empty() || w1 <= w0 {
+                return 0.0;
+            }
+            let mut total = 0.0;
+            for (i, &(t, chips)) in steps.iter().enumerate() {
+                let next = steps.get(i + 1).map(|&(t2, _)| t2).unwrap_or(f64::INFINITY);
+                let (lo, hi) = (t.max(w0), next.min(w1));
+                if hi > lo {
+                    total += (hi - lo) * chips as f64;
+                }
+            }
+            total
+        };
+        let steps = vec![(10.0, 100), (50.0, 0), (50.0, 200), (90.0, 150)];
+        let windows = [
+            (0.0, 5.0),    // entirely before the first step
+            (0.0, 20.0),   // straddles the first step
+            (55.0, 70.0),  // inside one step
+            (45.0, 95.0),  // straddles several (incl. a zero-width step)
+            (200.0, 300.0), // after the last step (open-ended tail)
+            (60.0, 60.0),  // empty window
+            (95.0, 40.0),  // inverted window
+        ];
+        for (w0, w1) in windows {
+            let fast = capacity_integral(&steps, w0, w1);
+            let slow = scan(&steps, w0, w1);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "[{w0}, {w1})");
+        }
+        assert_eq!(capacity_integral(&[], 0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn end_time_incremental_matches_span_fold() {
+        let mut l = Ledger::new();
+        assert_eq!(l.end_time(), 0.0);
+        l.ensure_job(meta(1));
+        l.ensure_job(meta(2));
+        l.add_span(1, 0.0, 30.0, 8, TimeClass::Productive);
+        l.add_span(2, 5.0, 12.0, 8, TimeClass::Queued);
+        l.add_span(1, 30.0, 31.5, 8, TimeClass::Lost);
+        l.add_span(2, 40.0, 40.0, 8, TimeClass::Productive); // ignored
+        assert_eq!(l.end_time(), 31.5);
+        assert_eq!(l.end_time(), l.end_time_by_fold());
+    }
+
+    #[test]
+    fn class_chip_seconds_per_job_grouping_matches_flat_on_exact_values() {
+        // Dyadic span lengths: per-job grouping and a flat fold agree
+        // exactly, so this pins the value, not just the grouping.
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        l.ensure_job(meta(2));
+        l.add_span(1, 0.0, 0.25, 4, TimeClass::Productive);
+        l.add_span(1, 0.25, 0.75, 4, TimeClass::Productive);
+        l.add_span(2, 1.0, 1.5, 8, TimeClass::Productive);
+        let got = l.class_chip_seconds(TimeClass::Productive, 0.0, 2.0, |_| true);
+        assert_eq!(got, 0.25 * 4.0 + 0.5 * 4.0 + 0.5 * 8.0);
     }
 
     #[test]

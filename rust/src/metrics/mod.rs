@@ -13,8 +13,11 @@
 
 pub mod goodput;
 pub mod ledger;
+pub mod reduce;
 pub mod series;
+pub mod windowed;
 
 pub use goodput::{GoodputReport, SegmentReport};
 pub use ledger::{JobMeta, Ledger, TimeClass};
 pub use series::{TimeSeries, Window};
+pub use windowed::WindowedLedger;

@@ -1,0 +1,276 @@
+//! Single-pass SG/RG/PG reduction engine.
+//!
+//! The naive reduction path re-scans the whole ledger once per
+//! `TimeClass` per window per segment — O(classes × segments × windows ×
+//! total spans), the dominant cost of `figures all` and long-horizon
+//! sweeps. [`fold_ledger`] replaces those rescans with ONE walk of each
+//! job's spans and PG samples, accumulating all seven class buckets, the
+//! PG numerator/denominator, and the active-job count for every
+//! (group, window) cell simultaneously.
+//!
+//! # Canonical summation order
+//!
+//! Floating-point addition is not associative, so the fold pins ONE
+//! summation order and every reduction path reproduces it exactly:
+//!
+//! 1. within a job, spans (and PG samples) accumulate into a per-job
+//!    subtotal in insertion order;
+//! 2. job subtotals combine into each (group, window) cell in `BTreeMap`
+//!    job-id order ([`CellAccum::merge_job`]).
+//!
+//! The naive references ([`super::goodput::report_naive`] and friends),
+//! this fold, and the streaming [`super::WindowedLedger`] all share that
+//! order, which is what makes their outputs bit-identical
+//! (`f64::to_bits`-equal) — the contract the sweep cache and shard-merge
+//! byte-identity guarantees rest on.
+
+use super::goodput::GoodputReport;
+use super::ledger::{JobMeta, Ledger, TimeClass};
+
+/// Number of [`TimeClass`] buckets every cell tracks.
+pub const N_CLASSES: usize = TimeClass::ALL.len();
+
+/// One reduction cell: all seven class chip-second buckets plus the PG
+/// sample reduction and the active-job count for one (group, window).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CellAccum {
+    /// Chip-seconds per class, indexed by `TimeClass as usize`
+    /// (declaration order == `TimeClass::ALL` order).
+    pub class_cs: [f64; N_CLASSES],
+    /// PG denominator: productive chip-seconds covered by samples.
+    pub pg_w: f64,
+    /// PG numerator: sample-weighted sum of per-sample PG.
+    pub pg_sum: f64,
+    /// Jobs with any positive chip-time overlap (meaningful on group
+    /// cells; always 0/1-free on per-job subtotals).
+    pub job_count: usize,
+}
+
+impl CellAccum {
+    /// Fold one clipped span piece into its class bucket.
+    #[inline]
+    pub fn add_piece(&mut self, class: TimeClass, chip_seconds: f64) {
+        self.class_cs[class as usize] += chip_seconds;
+    }
+
+    /// Fold one clipped PG-sample piece.
+    #[inline]
+    pub fn add_pg(&mut self, weight: f64, pg: f64) {
+        self.pg_w += weight;
+        self.pg_sum += weight * pg;
+    }
+
+    /// Did any span overlap this cell? Class sums are sums of positive
+    /// clipped pieces, so "some bucket > 0" is exactly the naive
+    /// `any(clipped > 0)` activity test.
+    pub fn touched(&self) -> bool {
+        self.class_cs.iter().any(|&c| c > 0.0)
+    }
+
+    /// Combine one job's subtotal cell into this group cell — the single
+    /// canonical cross-job step: each bucket receives exactly one
+    /// addition per job, of that job's insertion-order subtotal.
+    pub fn merge_job(&mut self, job: &CellAccum) {
+        for (acc, &c) in self.class_cs.iter_mut().zip(&job.class_cs) {
+            *acc += c;
+        }
+        self.pg_w += job.pg_w;
+        self.pg_sum += job.pg_sum;
+        if job.touched() {
+            self.job_count += 1;
+        }
+    }
+
+    /// Turn an accumulated cell into a [`GoodputReport`]. The expression
+    /// order matches the naive reference exactly (same `all_allocated`
+    /// addition chain, same guards), so finalized floats are bit-equal.
+    pub fn finalize(&self, capacity_cs: f64) -> GoodputReport {
+        let productive = self.class_cs[TimeClass::Productive as usize];
+        let startup = self.class_cs[TimeClass::Startup as usize];
+        let ckpt = self.class_cs[TimeClass::CkptStall as usize];
+        let rstall = self.class_cs[TimeClass::RuntimeStall as usize];
+        let lost = self.class_cs[TimeClass::Lost as usize];
+        let partial = self.class_cs[TimeClass::Partial as usize];
+        let all_allocated = productive + startup + ckpt + rstall + lost;
+        let pg = if self.pg_w > 0.0 { self.pg_sum / self.pg_w } else { 0.0 };
+        GoodputReport {
+            sg: if capacity_cs > 0.0 {
+                (all_allocated / capacity_cs).min(1.0)
+            } else {
+                0.0
+            },
+            rg: if all_allocated > 0.0 { productive / all_allocated } else { 0.0 },
+            pg,
+            capacity_cs,
+            all_allocated_cs: all_allocated,
+            productive_cs: productive,
+            lost_cs: lost,
+            startup_cs: startup,
+            stall_cs: ckpt + rstall,
+            partial_cs: partial,
+            job_count: self.job_count,
+        }
+    }
+}
+
+/// Walk every job's spans and PG samples exactly once, accumulating into
+/// `n_groups × windows.len()` cells.
+///
+/// `windows` must be sorted, non-overlapping half-open intervals
+/// (ascending). `groups_of` pushes the group indices a job belongs to
+/// into the scratch vec (pushing nothing skips the job — the filter).
+/// A job may belong to several groups (e.g. "fleet" plus its segment);
+/// its subtotal is merged into each.
+///
+/// Returns cells as `[group][window]`.
+pub fn fold_ledger(
+    ledger: &Ledger,
+    windows: &[(f64, f64)],
+    n_groups: usize,
+    mut groups_of: impl FnMut(&JobMeta, &mut Vec<usize>),
+) -> Vec<Vec<CellAccum>> {
+    let nw = windows.len();
+    let mut cells = vec![vec![CellAccum::default(); nw]; n_groups];
+    // Per-job subtotals, reused across jobs; only the touched index range
+    // is merged and reset, so a short job on a long series stays cheap.
+    let mut job_cells = vec![CellAccum::default(); nw];
+    let mut groups: Vec<usize> = Vec::with_capacity(n_groups);
+    for (meta, jl) in ledger.jobs.values() {
+        groups.clear();
+        groups_of(meta, &mut groups);
+        if groups.is_empty() {
+            continue;
+        }
+        let mut touched_lo = usize::MAX;
+        let mut touched_hi = 0usize;
+        for s in &jl.spans {
+            // First window whose end is past the span start; windows
+            // before it cannot overlap (they contributed exactly 0.0 in
+            // the naive scan, so skipping them is bit-identical).
+            let start = windows.partition_point(|&(_, w1)| w1 <= s.t0);
+            for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+                if w0 >= s.t1 {
+                    break;
+                }
+                job_cells[w].add_piece(s.class, s.clipped(w0, w1));
+                touched_lo = touched_lo.min(w);
+                touched_hi = touched_hi.max(w);
+            }
+        }
+        for s in &jl.pg_samples {
+            let start = windows.partition_point(|&(_, w1)| w1 <= s.t0);
+            for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+                if w0 >= s.t1 {
+                    break;
+                }
+                let lo = s.t0.max(w0);
+                let hi = s.t1.min(w1);
+                if hi <= lo {
+                    continue;
+                }
+                let frac = (hi - lo) / (s.t1 - s.t0);
+                job_cells[w].add_pg(s.chip_seconds * frac, s.pg);
+                touched_lo = touched_lo.min(w);
+                touched_hi = touched_hi.max(w);
+            }
+        }
+        if touched_lo == usize::MAX {
+            // No overlap with any window: the job's subtotal is all-zero
+            // and merging it would only add 0.0s (exact no-ops).
+            continue;
+        }
+        for w in touched_lo..=touched_hi {
+            let jc = job_cells[w];
+            for &g in &groups {
+                cells[g][w].merge_job(&jc);
+            }
+            job_cells[w] = CellAccum::default();
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::workload::{
+        CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+    };
+
+    fn meta(id: u64, phase: Phase) -> JobMeta {
+        JobMeta::of(&Job {
+            id,
+            arrival_s: 0.0,
+            phase,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        })
+    }
+
+    #[test]
+    fn class_indices_follow_declaration_order() {
+        for (i, c) in TimeClass::ALL.iter().enumerate() {
+            assert_eq!(*c as usize, i, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn fold_splits_spans_across_windows() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1, Phase::Training));
+        l.add_span(1, 5.0, 25.0, 4, TimeClass::Productive);
+        l.add_pg_sample(1, 5.0, 25.0, 4, 0.5);
+        let windows = [(0.0, 10.0), (10.0, 20.0), (20.0, 30.0)];
+        let cells = fold_ledger(&l, &windows, 1, |_, gs| gs.push(0));
+        let prod = |w: usize| cells[0][w].class_cs[TimeClass::Productive as usize];
+        assert_eq!(prod(0), 5.0 * 4.0);
+        assert_eq!(prod(1), 10.0 * 4.0);
+        assert_eq!(prod(2), 5.0 * 4.0);
+        // PG weight splits with the same fractions.
+        assert_eq!(cells[0][1].pg_w, 80.0 * 0.5);
+        assert!(cells[0].iter().all(|c| c.job_count == 1));
+    }
+
+    #[test]
+    fn fold_groups_jobs_by_membership() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1, Phase::Training));
+        l.ensure_job(meta(2, Phase::Serving));
+        l.add_span(1, 0.0, 10.0, 8, TimeClass::Productive);
+        l.add_span(2, 0.0, 10.0, 2, TimeClass::Lost);
+        // Group 0 = everyone, group 1 = serving only.
+        let cells = fold_ledger(&l, &[(0.0, 10.0)], 2, |m, gs| {
+            gs.push(0);
+            if m.phase == Phase::Serving {
+                gs.push(1);
+            }
+        });
+        assert_eq!(cells[0][0].job_count, 2);
+        assert_eq!(cells[1][0].job_count, 1);
+        assert_eq!(cells[1][0].class_cs[TimeClass::Lost as usize], 20.0);
+        assert_eq!(cells[1][0].class_cs[TimeClass::Productive as usize], 0.0);
+    }
+
+    #[test]
+    fn untouched_jobs_do_not_count() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1, Phase::Training));
+        l.add_span(1, 100.0, 110.0, 8, TimeClass::Productive);
+        let cells = fold_ledger(&l, &[(0.0, 10.0)], 1, |_, gs| gs.push(0));
+        assert_eq!(cells[0][0], CellAccum::default());
+    }
+}

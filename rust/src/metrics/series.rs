@@ -1,7 +1,14 @@
 //! Windowed time series of goodput reports — the Fig. 13/14/15 machinery.
+//!
+//! [`TimeSeries::build`] hands ALL its windows to one single-pass fold
+//! (`metrics::reduce`) instead of reducing the ledger once per window:
+//! each span is walked once and split across the windows it overlaps.
+//! [`TimeSeries::build_naive`] keeps the per-window shape as the
+//! bit-identical reference.
 
-use super::goodput::{report, GoodputReport};
+use super::goodput::{report_naive, GoodputReport};
 use super::ledger::{JobMeta, Ledger};
+use super::reduce::fold_ledger;
 
 /// A reporting window.
 #[derive(Clone, Copy, Debug)]
@@ -25,8 +32,25 @@ pub struct TimeSeries {
 }
 
 impl TimeSeries {
+    /// The windows of a series covering [t0, t1) at `width_s`. Built with
+    /// the same iterative boundary chain everywhere (each boundary is the
+    /// previous one plus `width_s`), so every consumer — this builder,
+    /// the naive reference, and the windowed ledger — clips spans at
+    /// bit-identical boundaries.
+    pub fn windows_for(t0: f64, t1: f64, width_s: f64) -> Vec<Window> {
+        assert!(width_s > 0.0);
+        let mut windows = Vec::new();
+        let mut w0 = t0;
+        while w0 < t1 {
+            let w1 = (w0 + width_s).min(t1);
+            windows.push(Window { t0: w0, t1: w1 });
+            w0 = w1;
+        }
+        windows
+    }
+
     /// Build a series by evaluating the ledger in consecutive windows of
-    /// `width_s` covering [t0, t1).
+    /// `width_s` covering [t0, t1) — all windows in ONE ledger pass.
     pub fn build<F: Fn(&JobMeta) -> bool>(
         label: &str,
         ledger: &Ledger,
@@ -35,16 +59,37 @@ impl TimeSeries {
         width_s: f64,
         filter: F,
     ) -> TimeSeries {
-        assert!(width_s > 0.0);
-        let mut windows = Vec::new();
-        let mut reports = Vec::new();
-        let mut w0 = t0;
-        while w0 < t1 {
-            let w1 = (w0 + width_s).min(t1);
-            windows.push(Window { t0: w0, t1: w1 });
-            reports.push(report(ledger, w0, w1, &filter));
-            w0 = w1;
-        }
+        let windows = Self::windows_for(t0, t1, width_s);
+        let spans: Vec<(f64, f64)> = windows.iter().map(|w| (w.t0, w.t1)).collect();
+        let cells = fold_ledger(ledger, &spans, 1, |m, gs| {
+            if filter(m) {
+                gs.push(0);
+            }
+        });
+        let reports = windows
+            .iter()
+            .zip(&cells[0])
+            .map(|(w, c)| c.finalize(ledger.capacity_chip_seconds(w.t0, w.t1)))
+            .collect();
+        TimeSeries { label: label.to_string(), windows, reports }
+    }
+
+    /// Reference implementation of [`build`]: one full ledger reduction
+    /// per window (the pre-optimization shape). Bit-identical to `build`;
+    /// retained for the property tests and the `goodput_reduce` bench.
+    pub fn build_naive<F: Fn(&JobMeta) -> bool>(
+        label: &str,
+        ledger: &Ledger,
+        t0: f64,
+        t1: f64,
+        width_s: f64,
+        filter: F,
+    ) -> TimeSeries {
+        let windows = Self::windows_for(t0, t1, width_s);
+        let reports = windows
+            .iter()
+            .map(|w| report_naive(ledger, w.t0, w.t1, &filter))
+            .collect();
         TimeSeries { label: label.to_string(), windows, reports }
     }
 
@@ -132,5 +177,26 @@ mod tests {
         assert!((rg[1] - 1.0).abs() < 1e-9);
         let norm = ts.normalized(&rg);
         assert!((norm[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_pass_series_matches_naive_bitwise() {
+        let mut l = Ledger::new();
+        l.set_capacity(0.0, 10);
+        l.set_capacity(40.0, 16);
+        l.ensure_job(meta(1));
+        l.ensure_job(meta(2));
+        // Spans deliberately straddle window boundaries.
+        l.add_span(1, 3.0, 47.0, 8, TimeClass::Productive);
+        l.add_span(1, 47.0, 55.0, 8, TimeClass::Lost);
+        l.add_span(2, 10.0, 90.0, 4, TimeClass::Productive);
+        l.add_pg_sample(1, 3.0, 47.0, 8, 0.7);
+        l.add_pg_sample(2, 10.0, 90.0, 4, 0.3);
+        let fast = TimeSeries::build("t", &l, 0.0, 100.0, 13.0, |_| true);
+        let slow = TimeSeries::build_naive("t", &l, 0.0, 100.0, 13.0, |_| true);
+        assert_eq!(fast.windows.len(), slow.windows.len());
+        for (i, (f, s)) in fast.reports.iter().zip(&slow.reports).enumerate() {
+            crate::testkit::assert_reports_bit_identical(f, s, &format!("window {i}"));
+        }
     }
 }

@@ -1,0 +1,414 @@
+//! Streaming windowed ledger: chip-time accounting that never retains raw
+//! spans.
+//!
+//! The full [`Ledger`](super::Ledger) keeps every classified `Span`, so a
+//! month-scale simulation holds O(spans) memory per variant until it is
+//! reduced. When the caller only ever needs windowed or whole-horizon
+//! aggregate reports — every sweep and ablation path — that retention is
+//! pure overhead. [`WindowedLedger`] folds each span into fixed-width
+//! window accumulators (plus one whole-horizon accumulator per job) at
+//! `add_span` time, cutting per-variant memory to O(windows × jobs
+//! touched), while [`JobMeta`] is retained per job so segmentation and
+//! meta filters still work.
+//!
+//! # Bit-identity contract
+//!
+//! Every report this ledger produces is bit-identical (`f64::to_bits`)
+//! to reducing the equivalent full-span ledger:
+//!
+//! * per-job accumulators receive span/sample pieces in insertion order
+//!   — the same within-job order the single-pass fold uses (interleaved
+//!   `add_span` calls across jobs land in per-job cells, so interleaving
+//!   is irrelevant);
+//! * reports combine per-job subtotals in `BTreeMap` job-id order via
+//!   the shared [`CellAccum::merge_job`];
+//! * window boundaries come from [`TimeSeries::windows_for`], the same
+//!   iterative chain `TimeSeries::build` clips against;
+//! * the whole-horizon accumulator adds each span ONCE, clipped to
+//!   [0, horizon) — exactly the single addition per span that
+//!   `goodput::report(ledger, 0, horizon, ..)` performs.
+//!
+//! That contract is what lets `sim::sweep` summaries run windowed while
+//! warm `.sweep-cache/` entries and shard merges stay byte-identical.
+
+use std::collections::BTreeMap;
+
+use crate::workload::JobId;
+
+use super::goodput::{Axis, GoodputReport, SegmentReport};
+use super::ledger::{capacity_integral, push_capacity_step, JobMeta, Span, TimeClass};
+use super::reduce::CellAccum;
+use super::series::{TimeSeries, Window};
+
+/// Per-job accumulator state: a dense run of window cells starting at
+/// `first_window`, plus the whole-horizon subtotal.
+#[derive(Clone, Debug, Default)]
+struct WindowedJob {
+    first_window: usize,
+    cells: Vec<CellAccum>,
+    total: CellAccum,
+}
+
+/// The streaming accounting book. API mirrors [`super::Ledger`]'s write
+/// side (`ensure_job` / `add_span` / `add_pg_sample` / `set_capacity`)
+/// so `sim::engine` writes to either through one dispatch.
+#[derive(Clone, Debug)]
+pub struct WindowedLedger {
+    horizon_s: f64,
+    width_s: f64,
+    /// Window boundaries, identical to `TimeSeries::windows_for(0,
+    /// horizon, width)`.
+    windows: Vec<(f64, f64)>,
+    jobs: BTreeMap<JobId, (JobMeta, WindowedJob)>,
+    capacity_steps: Vec<(f64, u64)>,
+    /// Window cells allocated across all jobs. Cells are never released,
+    /// so this is also the peak — the memory telemetry the
+    /// `goodput_reduce` bench records against the O(windows × jobs)
+    /// bound.
+    cells_allocated: usize,
+}
+
+impl WindowedLedger {
+    pub fn new(horizon_s: f64, width_s: f64) -> WindowedLedger {
+        assert!(width_s > 0.0, "window width must be positive");
+        let windows: Vec<(f64, f64)> = TimeSeries::windows_for(0.0, horizon_s, width_s)
+            .iter()
+            .map(|w| (w.t0, w.t1))
+            .collect();
+        WindowedLedger {
+            horizon_s,
+            width_s,
+            windows,
+            jobs: BTreeMap::new(),
+            capacity_steps: Vec::new(),
+            cells_allocated: 0,
+        }
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    pub fn width_s(&self) -> f64 {
+        self.width_s
+    }
+
+    pub fn window_count(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Window cells allocated across all jobs — also the peak, since
+    /// cells are never released; bounded by windows × jobs touched, the
+    /// O-bound the streaming mode exists to enforce.
+    pub fn cell_count(&self) -> usize {
+        self.cells_allocated
+    }
+
+    pub fn ensure_job(&mut self, meta: JobMeta) {
+        self.jobs.entry(meta.id).or_insert_with(|| (meta, WindowedJob::default()));
+    }
+
+    /// Declare fleet capacity from time `t` on (same rule as the full
+    /// ledger: time-ordered, equal-chip steps deduplicated).
+    pub fn set_capacity(&mut self, t: f64, chips: u64) {
+        push_capacity_step(&mut self.capacity_steps, t, chips);
+    }
+
+    /// Record a classified span: folded into the job's whole-horizon
+    /// subtotal (one addition, clipped to [0, horizon)) and split across
+    /// the window cells it overlaps. The raw span is NOT retained.
+    pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        let horizon = self.horizon_s;
+        let windows = &self.windows;
+        let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
+        let wj = &mut entry.1;
+        let span = Span { t0, t1, chips, class };
+        wj.total.add_piece(class, span.clipped(0.0, horizon));
+        let start = windows.partition_point(|&(_, w1)| w1 <= t0);
+        for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+            if w0 >= t1 {
+                break;
+            }
+            let cell = Self::cell_mut(wj, w, &mut self.cells_allocated);
+            cell.add_piece(class, span.clipped(w0, w1));
+        }
+    }
+
+    /// Record a PG sample over a productive span (same validity rules and
+    /// clipping arithmetic as the full ledger + single-pass fold).
+    pub fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        assert!((0.0..=1.0 + 1e-9).contains(&pg), "pg={pg}");
+        let horizon = self.horizon_s;
+        let windows = &self.windows;
+        let entry = self.jobs.get_mut(&id).expect("add_pg_sample before ensure_job");
+        let wj = &mut entry.1;
+        let chip_seconds = (t1 - t0) * chips as f64;
+        let (lo, hi) = (t0.max(0.0), t1.min(horizon));
+        if hi > lo {
+            let frac = (hi - lo) / (t1 - t0);
+            wj.total.add_pg(chip_seconds * frac, pg);
+        }
+        let start = windows.partition_point(|&(_, w1)| w1 <= t0);
+        for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+            if w0 >= t1 {
+                break;
+            }
+            let (lo, hi) = (t0.max(w0), t1.min(w1));
+            if hi <= lo {
+                continue;
+            }
+            let frac = (hi - lo) / (t1 - t0);
+            let cell = Self::cell_mut(wj, w, &mut self.cells_allocated);
+            cell.add_pg(chip_seconds * frac, pg);
+        }
+    }
+
+    /// The job's cell for window `w`, growing its dense run as needed.
+    fn cell_mut<'a>(
+        wj: &'a mut WindowedJob,
+        w: usize,
+        allocated: &mut usize,
+    ) -> &'a mut CellAccum {
+        if wj.cells.is_empty() {
+            wj.first_window = w;
+            wj.cells.push(CellAccum::default());
+            *allocated += 1;
+        } else if w < wj.first_window {
+            // Rare (spans arrive roughly time-ordered per job): extend the
+            // dense run backwards.
+            let grow = wj.first_window - w;
+            let mut grown = vec![CellAccum::default(); grow + wj.cells.len()];
+            grown[grow..].copy_from_slice(&wj.cells);
+            wj.cells = grown;
+            wj.first_window = w;
+            *allocated += grow;
+        } else if w >= wj.first_window + wj.cells.len() {
+            let grow = w - wj.first_window + 1 - wj.cells.len();
+            wj.cells.resize(wj.cells.len() + grow, CellAccum::default());
+            *allocated += grow;
+        }
+        &mut wj.cells[w - wj.first_window]
+    }
+
+    /// Whole-horizon report for jobs passing `filter` — bit-identical to
+    /// `goodput::report(&full_ledger, 0.0, horizon, filter)`.
+    pub fn report<F: Fn(&JobMeta) -> bool>(&self, filter: F) -> GoodputReport {
+        let mut cell = CellAccum::default();
+        for (meta, wj) in self.jobs.values() {
+            if filter(meta) {
+                cell.merge_job(&wj.total);
+            }
+        }
+        cell.finalize(capacity_integral(&self.capacity_steps, 0.0, self.horizon_s))
+    }
+
+    /// Per-window series for jobs passing `filter` — bit-identical to
+    /// `TimeSeries::build(label, &full_ledger, 0.0, horizon, width,
+    /// filter)`.
+    pub fn series<F: Fn(&JobMeta) -> bool>(&self, label: &str, filter: F) -> TimeSeries {
+        let mut cells = vec![CellAccum::default(); self.windows.len()];
+        for (meta, wj) in self.jobs.values() {
+            if !filter(meta) {
+                continue;
+            }
+            for (i, jc) in wj.cells.iter().enumerate() {
+                cells[wj.first_window + i].merge_job(jc);
+            }
+        }
+        let windows: Vec<Window> =
+            self.windows.iter().map(|&(t0, t1)| Window { t0, t1 }).collect();
+        let reports = windows
+            .iter()
+            .zip(&cells)
+            .map(|(w, c)| c.finalize(capacity_integral(&self.capacity_steps, w.t0, w.t1)))
+            .collect();
+        TimeSeries { label: label.to_string(), windows, reports }
+    }
+
+    /// Whole-horizon segment reports along `axis` (fleet row first) —
+    /// bit-identical to `goodput::segmented(&full_ledger, 0.0, horizon,
+    /// axis)`.
+    pub fn segmented(&self, axis: Axis) -> Vec<SegmentReport> {
+        let values = axis.values();
+        let mut cells = vec![CellAccum::default(); 1 + values.len()];
+        for (meta, wj) in self.jobs.values() {
+            cells[0].merge_job(&wj.total);
+            if let Some(i) = values.iter().position(|&v| v == axis.key(meta)) {
+                cells[1 + i].merge_job(&wj.total);
+            }
+        }
+        let capacity = capacity_integral(&self.capacity_steps, 0.0, self.horizon_s);
+        let mut out = vec![SegmentReport {
+            label: "fleet".to_string(),
+            report: cells[0].finalize(capacity),
+        }];
+        for (i, value) in values.iter().enumerate() {
+            let r = cells[1 + i].finalize(capacity);
+            if r.all_allocated_cs > 0.0 || r.job_count > 0 {
+                out.push(SegmentReport { label: value.to_string(), report: r });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::metrics::{goodput, Ledger};
+    use crate::util::Rng;
+    use crate::workload::{
+        CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+    };
+
+    fn meta(id: u64, phase: Phase) -> JobMeta {
+        JobMeta::of(&Job {
+            id,
+            arrival_s: 0.0,
+            phase,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        })
+    }
+
+    /// Mirror the same writes into a full and a windowed ledger.
+    fn twin_ledgers(horizon: f64, width: f64) -> (Ledger, WindowedLedger) {
+        (Ledger::new(), WindowedLedger::new(horizon, width))
+    }
+
+    use crate::testkit::assert_reports_bit_identical as assert_bitwise;
+
+    #[test]
+    fn windowed_matches_full_on_random_interleaved_writes() {
+        let horizon = 1000.0;
+        let width = 77.0; // deliberately not a divisor of the horizon
+        let mut rng = Rng::new(0x11ED6E);
+        let (mut full, mut win) = twin_ledgers(horizon, width);
+        full.set_capacity(0.0, 500);
+        win.set_capacity(0.0, 500);
+        full.set_capacity(400.0, 650);
+        win.set_capacity(400.0, 650);
+        let phases = [Phase::Training, Phase::Serving, Phase::BulkInference];
+        for id in 1..=10u64 {
+            let m = meta(id, phases[rng.below(3) as usize]);
+            full.ensure_job(m.clone());
+            win.ensure_job(m);
+        }
+        // Interleave spans across jobs (the engine's write pattern) with
+        // boundary-straddling and beyond-horizon spans.
+        for _ in 0..300 {
+            let id = 1 + rng.below(10);
+            let t0 = rng.range_f64(0.0, 1100.0);
+            let t1 = t0 + rng.range_f64(0.0, 200.0);
+            let chips = 1 + rng.below(16) as u32;
+            let class = TimeClass::ALL[rng.below(7) as usize];
+            full.add_span(id, t0, t1, chips, class);
+            win.add_span(id, t0, t1, chips, class);
+            if class == TimeClass::Productive {
+                let pg = rng.range_f64(0.0, 1.0);
+                full.add_pg_sample(id, t0, t1, chips, pg);
+                win.add_pg_sample(id, t0, t1, chips, pg);
+            }
+        }
+        // Whole-horizon report, filtered reports, segmentation, series:
+        // all bit-identical to the full-span reductions.
+        assert_bitwise(
+            &win.report(|_| true),
+            &goodput::report(&full, 0.0, horizon, |_| true),
+            "fleet",
+        );
+        for p in phases {
+            assert_bitwise(
+                &win.report(|m| m.phase == p),
+                &goodput::report(&full, 0.0, horizon, |m| m.phase == p),
+                p.name(),
+            );
+        }
+        let fast = win.segmented(Axis::Phase);
+        let slow = goodput::segmented(&full, 0.0, horizon, Axis::Phase);
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.label, s.label);
+            assert_bitwise(&f.report, &s.report, &f.label);
+        }
+        let ws = win.series("w", |_| true);
+        let fs = TimeSeries::build("w", &full, 0.0, horizon, width, |_| true);
+        assert_eq!(ws.windows.len(), fs.windows.len());
+        for (a, b) in ws.reports.iter().zip(&fs.reports) {
+            assert_bitwise(a, b, "series window");
+        }
+    }
+
+    #[test]
+    fn no_spans_are_retained_and_cell_count_is_bounded() {
+        let mut win = WindowedLedger::new(100.0, 10.0);
+        win.set_capacity(0.0, 64);
+        win.ensure_job(meta(1, Phase::Training));
+        for k in 0..50 {
+            let t = k as f64 * 2.0;
+            win.add_span(1, t, t + 2.0, 4, TimeClass::Productive);
+        }
+        // One job covering all 10 windows: exactly 10 cells, however many
+        // spans were folded in.
+        assert_eq!(win.window_count(), 10);
+        assert_eq!(win.cell_count(), 10);
+        let r = win.report(|_| true);
+        assert_eq!(r.productive_cs, 100.0 * 4.0);
+        assert_eq!(r.job_count, 1);
+    }
+
+    #[test]
+    fn out_of_order_spans_grow_the_run_backwards() {
+        let mut win = WindowedLedger::new(100.0, 10.0);
+        win.ensure_job(meta(1, Phase::Training));
+        win.add_span(1, 55.0, 58.0, 2, TimeClass::Productive);
+        win.add_span(1, 5.0, 8.0, 2, TimeClass::Lost);
+        assert_eq!(win.cell_count(), 6); // windows 0..=5
+        let r = win.report(|_| true);
+        assert_eq!(r.productive_cs, 6.0);
+        assert_eq!(r.lost_cs, 6.0);
+    }
+
+    #[test]
+    fn zero_and_invalid_spans_ignored_like_full_ledger() {
+        let mut win = WindowedLedger::new(100.0, 10.0);
+        win.ensure_job(meta(1, Phase::Training));
+        win.add_span(1, 5.0, 5.0, 4, TimeClass::Productive);
+        win.add_span(1, 9.0, 7.0, 4, TimeClass::Productive);
+        win.add_span(1, 5.0, 6.0, 0, TimeClass::Productive);
+        assert_eq!(win.cell_count(), 0);
+        assert_eq!(win.report(|_| true).all_allocated_cs, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pg=")]
+    fn pg_sample_out_of_range_panics() {
+        let mut win = WindowedLedger::new(100.0, 10.0);
+        win.ensure_job(meta(1, Phase::Training));
+        win.add_pg_sample(1, 0.0, 1.0, 8, 1.5);
+    }
+}

@@ -684,7 +684,10 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     }
 
     // Every variant replays the same trace independently, so the whole
-    // matrix runs as one parallel sweep.
+    // matrix runs as one parallel sweep — through the streaming-summary
+    // path, which accounts each variant in the windowed ledger (no span
+    // retention) and reduces it inside the worker. Reductions are
+    // bit-identical to the full-ledger path, so the table is unchanged.
     let mut spec = SweepSpec::new().workers(workers);
     for (name, cfg) in variants {
         spec.push(name, cfg);
@@ -694,11 +697,11 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
         &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt"],
     );
     let mut rows = Vec::new();
-    for run in SweepRunner::run(spec) {
-        let res = run.result;
-        let r = goodput::report(&run.sim.ledger, 0.0, run.sim.cfg.duration_s, |_| true);
+    SweepRunner::run_streaming_summaries(spec, None, |s| {
+        let res = s.result;
+        let r = s.goodput;
         table.row(vec![
-            run.name.clone(),
+            s.name.clone(),
             f(r.sg, 3),
             f(r.rg, 3),
             f(r.pg, 3),
@@ -707,7 +710,7 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
             res.preemptions.to_string(),
         ]);
         rows.push(AblationRow {
-            name: run.name,
+            name: s.name,
             sg: r.sg,
             rg: r.rg,
             pg: r.pg,
@@ -715,7 +718,7 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
             completed: res.completed_jobs,
             preemptions: res.preemptions,
         });
-    }
+    });
     Ablations { rows, table }
 }
 

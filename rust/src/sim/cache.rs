@@ -30,7 +30,14 @@ use super::{SimConfig, SimResult};
 /// Bumped whenever the entry format OR anything hashed by [`config_hash`]
 /// changes meaning; old entries then read as misses instead of serving
 /// stale results.
-pub const CACHE_VERSION: u64 = 1;
+///
+/// v2: the reduction engine pinned ONE canonical summation order (per-job
+/// subtotals combined in job order — see `metrics::reduce`). Simulation
+/// behavior is untouched (no `SIM_BEHAVIOR_VERSION` bump: same events,
+/// same `SimResult`, same ledger contents), but goodput floats derived by
+/// the pre-v2 flat summation can differ from the canonical order in the
+/// last ULP, so pre-v2 entries must not mix with canonical-order rows.
+pub const CACHE_VERSION: u64 = 2;
 
 /// Simulator behavior fingerprint, mixed into every config hash. A cached
 /// entry is only valid for the engine that produced it, so **any PR that
@@ -902,7 +909,8 @@ mod tests {
         assert!(cache.lookup(&key).is_none(), "truncated entry must miss");
 
         // Valid JSON, wrong version.
-        let skewed = full.replace("\"version\": 1", "\"version\": 999");
+        let skewed =
+            full.replace(&format!("\"version\": {CACHE_VERSION}"), "\"version\": 999");
         std::fs::write(&path, skewed).unwrap();
         assert!(cache.lookup(&key).is_none(), "version skew must miss");
 

@@ -13,7 +13,7 @@ use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::fleet::{ChipGeneration, EvolutionModel, Fleet, PodId};
-use crate::metrics::{JobMeta, Ledger, TimeClass};
+use crate::metrics::{goodput, GoodputReport, JobMeta, Ledger, TimeClass, WindowedLedger};
 use crate::runtime_model::{RuntimeModel, WindowAccount, WindowEnd};
 use crate::scheduler::{Scheduler, SchedulerPolicy};
 use crate::util::Rng;
@@ -23,6 +23,26 @@ use crate::xlaopt::CompilerStack;
 use super::scenario::EraSchedule;
 
 pub const MONTH_S: f64 = 30.0 * 24.0 * 3600.0;
+
+/// How the simulation stores its chip-time accounting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LedgerMode {
+    /// Retain every classified `Span` in a full [`Ledger`]: arbitrary
+    /// post-hoc windows and filters, O(spans) memory per variant. The
+    /// default, and what the figure generators need.
+    Full,
+    /// Fold spans into fixed-width window accumulators at `add_span`
+    /// time ([`WindowedLedger`]); raw spans are never retained, so
+    /// per-variant memory is O(windows × jobs touched) instead of
+    /// O(spans). Reports are limited to the fixed windows and the whole
+    /// horizon (any `JobMeta` filter/segmentation still works), and are
+    /// bit-identical to full-mode reductions — the sweep, ablation, and
+    /// shard-worker paths select this automatically.
+    Windowed {
+        /// Accumulation window width, seconds.
+        width_s: f64,
+    },
+}
 
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -169,7 +189,13 @@ pub struct Simulation {
     pub cfg: SimConfig,
     pub fleet: Fleet,
     pub scheduler: Scheduler,
+    /// Full-span accounting (stays empty when the simulation was built
+    /// with [`LedgerMode::Windowed`] — use [`Simulation::windowed`] /
+    /// [`Simulation::fleet_goodput`] there instead).
     pub ledger: Ledger,
+    /// Streaming accounting, populated instead of `ledger` in
+    /// [`LedgerMode::Windowed`].
+    windowed: Option<WindowedLedger>,
     rng: Rng,
     gen: WorkloadGenerator,
     /// Replay cursor into the shared `cfg.trace_jobs`: indices sorted by
@@ -186,6 +212,19 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig) -> Simulation {
+        Simulation::with_ledger_mode(cfg, LedgerMode::Full)
+    }
+
+    /// Construct with an explicit accounting mode (see [`LedgerMode`]).
+    /// Both modes run the identical event stream; only where classified
+    /// chip-time lands differs.
+    pub fn with_ledger_mode(cfg: SimConfig, mode: LedgerMode) -> Simulation {
+        let windowed = match mode {
+            LedgerMode::Full => None,
+            LedgerMode::Windowed { width_s } => {
+                Some(WindowedLedger::new(cfg.duration_s, width_s))
+            }
+        };
         let mut gcfg = cfg.generator.clone();
         gcfg.duration_s = cfg.duration_s;
         // Sort replay *indices*, not the jobs: the Arc'd trace stays
@@ -211,6 +250,7 @@ impl Simulation {
             result: SimResult::default(),
             scheduler: Scheduler::new(cfg.policy.clone()),
             ledger: Ledger::new(),
+            windowed,
             fleet: Fleet::new(),
             cfg,
         };
@@ -230,7 +270,8 @@ impl Simulation {
             }
             sim.cfg.static_fleet = static_fleet;
         }
-        sim.ledger.set_capacity(0.0, sim.fleet.healthy_chips());
+        let chips = sim.fleet.healthy_chips();
+        sim.record_capacity(0.0, chips);
 
         // Prime event streams.
         sim.next_arrival = sim.pull_arrival();
@@ -251,6 +292,55 @@ impl Simulation {
     fn push(&mut self, t: f64, kind: EventKind) {
         self.seq += 1;
         self.events.push(Event { t, seq: self.seq, kind });
+    }
+
+    // ------------------------------------------------------------------
+    // Accounting sink: every classified chip-second goes through these,
+    // landing in the full ledger or the windowed accumulators depending
+    // on the construction-time LedgerMode.
+    // ------------------------------------------------------------------
+
+    fn record_job(&mut self, meta: JobMeta) {
+        match &mut self.windowed {
+            Some(w) => w.ensure_job(meta),
+            None => self.ledger.ensure_job(meta),
+        }
+    }
+
+    fn record_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        match &mut self.windowed {
+            Some(w) => w.add_span(id, t0, t1, chips, class),
+            None => self.ledger.add_span(id, t0, t1, chips, class),
+        }
+    }
+
+    fn record_pg(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        match &mut self.windowed {
+            Some(w) => w.add_pg_sample(id, t0, t1, chips, pg),
+            None => self.ledger.add_pg_sample(id, t0, t1, chips, pg),
+        }
+    }
+
+    fn record_capacity(&mut self, t: f64, chips: u64) {
+        match &mut self.windowed {
+            Some(w) => w.set_capacity(t, chips),
+            None => self.ledger.set_capacity(t, chips),
+        }
+    }
+
+    /// The streaming ledger, when constructed with
+    /// [`LedgerMode::Windowed`].
+    pub fn windowed(&self) -> Option<&WindowedLedger> {
+        self.windowed.as_ref()
+    }
+
+    /// Fleet-wide goodput over the full horizon — works in either ledger
+    /// mode, and the two modes produce bit-identical reports.
+    pub fn fleet_goodput(&self) -> GoodputReport {
+        match &self.windowed {
+            Some(w) => w.report(|_| true),
+            None => goodput::report(&self.ledger, 0.0, self.cfg.duration_s, |_| true),
+        }
     }
 
     /// Run to completion; returns the result summary (ledger stays on self).
@@ -373,7 +463,7 @@ impl Simulation {
             return;
         }
 
-        self.ledger.ensure_job(JobMeta::of(&job));
+        self.record_job(JobMeta::of(&job));
         let state = JobState {
             job: job.clone(),
             work_done: 0.0,
@@ -428,7 +518,7 @@ impl Simulation {
                 let chips = st.job.chips();
                 let detect = self.cfg.fail_detect_s;
                 let (t0, t1) = (self.now, self.now + detect);
-                self.ledger.add_span(id, t0, t1, chips, TimeClass::Partial);
+                self.record_span(id, t0, t1, chips, TimeClass::Partial);
                 self.scheduler.evict(&mut self.fleet, id);
                 let st = self.jobs.get_mut(&id).unwrap();
                 st.queued_since = Some(self.now + detect);
@@ -513,7 +603,7 @@ impl Simulation {
         if let Some(q0) = st.queued_since.take() {
             let chips = st.job.chips();
             let (t0, t1) = (q0, self.now);
-            self.ledger.add_span(id, t0, t1, chips, TimeClass::Queued);
+            self.record_span(id, t0, t1, chips, TimeClass::Queued);
         }
     }
 
@@ -559,9 +649,9 @@ impl Simulation {
                 continue;
             }
             let t1 = t + dur;
-            self.ledger.add_span(job_id, t, t1, chips, class);
+            self.record_span(job_id, t, t1, chips, class);
             if class == TimeClass::Productive {
-                self.ledger.add_pg_sample(job_id, t, t1, chips, pg);
+                self.record_pg(job_id, t, t1, chips, pg);
             }
             t = t1;
         }
@@ -589,14 +679,23 @@ impl Simulation {
     fn capacity_changed(&mut self) {
         let t = self.now;
         let chips = self.fleet.healthy_chips();
-        self.ledger.set_capacity(t, chips);
+        self.record_capacity(t, chips);
         // Repairs / pod additions may unblock queued placements.
         self.scheduler.mark_dirty();
     }
 
     /// Queue demand chip-seconds (Queued + Partial + all-allocated) per
     /// filter — the denominator for demand-relative SG (Fig. 16).
+    ///
+    /// Requires [`LedgerMode::Full`]: arbitrary [w0, w1) windows need the
+    /// retained spans. Panics in windowed mode rather than silently
+    /// reading the (empty) full ledger as zero demand.
     pub fn demand_cs<F: Fn(&JobMeta) -> bool>(&self, w0: f64, w1: f64, filter: F) -> f64 {
+        assert!(
+            self.windowed.is_none(),
+            "demand_cs requires LedgerMode::Full (windowed accounting \
+             retains no spans for arbitrary windows)"
+        );
         let l = &self.ledger;
         TimeClass::ALL
             .iter()
@@ -769,6 +868,53 @@ mod tests {
         let mut sim = Simulation::new(cfg);
         let res = sim.run();
         assert_eq!(res.preemptions, 0);
+    }
+
+    #[test]
+    fn windowed_mode_matches_full_mode_bitwise() {
+        // The tentpole contract: the SAME simulation accounted through
+        // the streaming windowed ledger reduces bit-identically to the
+        // full-span ledger — failures (Partial spans past the horizon),
+        // preemptions, and queue spans included.
+        let mut cfg = small_cfg();
+        gen_only_c(&mut cfg);
+        cfg.generator.arrivals_per_hour = 16.0; // contention -> preemptions
+        let width = 6.0 * 3600.0;
+        let mut full = Simulation::new(cfg.clone());
+        let r_full = full.run();
+        let mut win = Simulation::with_ledger_mode(cfg, LedgerMode::Windowed { width_s: width });
+        let r_win = win.run();
+        assert_eq!(r_full, r_win, "event stream must be mode-independent");
+        assert!(full.windowed().is_none() && win.windowed().is_some());
+
+        crate::testkit::assert_reports_bit_identical(
+            &full.fleet_goodput(),
+            &win.fleet_goodput(),
+            "fleet goodput",
+        );
+
+        // Windowed series == TimeSeries::build over the full ledger.
+        let ws = win.windowed().unwrap().series("w", |_| true);
+        let fs = crate::metrics::TimeSeries::build(
+            "w",
+            &full.ledger,
+            0.0,
+            full.cfg.duration_s,
+            width,
+            |_| true,
+        );
+        assert_eq!(ws.windows.len(), fs.windows.len());
+        for (i, (wa, wb)) in ws.reports.iter().zip(&fs.reports).enumerate() {
+            crate::testkit::assert_reports_bit_identical(wa, wb, &format!("window {i}"));
+        }
+
+        // The memory contract: no spans retained, cells bounded by
+        // windows x jobs.
+        let wl = win.windowed().unwrap();
+        assert!(wl.cell_count() <= wl.window_count() * wl.job_count());
+        let full_spans: usize =
+            full.ledger.jobs.values().map(|(_, jl)| jl.spans.len()).sum();
+        assert!(full_spans > 0, "sanity: the full run did record spans");
     }
 
     #[test]

@@ -19,11 +19,23 @@
 //! [`SweepCache`](super::cache::SweepCache) — a cache hit skips the
 //! simulation entirely, which the bit-identical contract makes safe.
 
-use crate::metrics::goodput::{self, GoodputReport};
+use crate::metrics::GoodputReport;
 use crate::util::{pool, rng};
 
 use super::cache::{CacheKey, CachedRun, SweepCache};
-use super::{SimConfig, SimResult, Simulation};
+use super::{LedgerMode, SimConfig, SimResult, Simulation};
+
+/// Accumulation window width the summary paths run the streaming ledger
+/// at: one day, the paper's reporting granularity. Summaries only consume
+/// the whole-horizon report, so the width only bounds memory
+/// (O(windows × jobs)), never results.
+pub const SUMMARY_WINDOW_S: f64 = 24.0 * 3600.0;
+
+/// The ledger mode the sweep summary paths (CLI `sweep`, shard workers,
+/// benches) select automatically: streaming, at [`SUMMARY_WINDOW_S`].
+pub fn summary_ledger_mode() -> LedgerMode {
+    LedgerMode::Windowed { width_s: SUMMARY_WINDOW_S }
+}
 
 /// One named configuration in a sweep.
 #[derive(Clone, Debug)]
@@ -169,22 +181,48 @@ impl SweepRunner {
     /// results are bit-identical for a given (config, seed) — while a
     /// miss simulates, reduces, and populates the cache for the next
     /// invocation. The reduction happens inside the worker, so even an
-    /// all-miss grid holds only O(workers) simulations.
+    /// all-miss grid holds only O(workers) simulations — and each of
+    /// those runs the streaming [`LedgerMode::Windowed`] accounting
+    /// ([`summary_ledger_mode`]), so a month-scale variant never holds a
+    /// full span list either. Windowed reductions are bit-identical to
+    /// full-ledger ones, so cache entries written by either mode serve
+    /// the other.
     pub fn run_streaming_summaries(
         spec: SweepSpec,
         cache: Option<&SweepCache>,
+        on_summary: impl FnMut(SweepSummary),
+    ) {
+        Self::run_streaming_summaries_with_mode(
+            spec,
+            cache,
+            summary_ledger_mode(),
+            on_summary,
+        );
+    }
+
+    /// [`Self::run_streaming_summaries`] with an explicit ledger mode —
+    /// the `--full-ledger` CLI escape hatch and the cross-mode
+    /// bit-identity tests use this; everything else wants the default.
+    pub fn run_streaming_summaries_with_mode(
+        spec: SweepSpec,
+        cache: Option<&SweepCache>,
+        mode: LedgerMode,
         mut on_summary: impl FnMut(SweepSummary),
     ) {
         let workers = spec.workers;
         pool::parallel_map_streaming(
             spec.variants,
             workers,
-            |_, v| Self::summarize_variant(v, cache),
+            |_, v| Self::summarize_variant(v, cache, mode),
             |_, s| on_summary(s),
         );
     }
 
-    fn summarize_variant(v: SweepVariant, cache: Option<&SweepCache>) -> SweepSummary {
+    fn summarize_variant(
+        v: SweepVariant,
+        cache: Option<&SweepCache>,
+        mode: LedgerMode,
+    ) -> SweepSummary {
         let key = cache.map(|c| (c, CacheKey::of(&v.cfg)));
         if let Some((c, k)) = &key {
             if let Some(hit) = c.lookup(k) {
@@ -198,13 +236,13 @@ impl SweepRunner {
             }
         }
         let seed = v.cfg.seed;
-        let run = Self::run_variant(v);
-        let end = run.sim.cfg.duration_s;
-        let goodput = goodput::report(&run.sim.ledger, 0.0, end, |_| true);
+        let mut sim = Simulation::with_ledger_mode(v.cfg, mode);
+        let result = sim.run();
+        let goodput = sim.fleet_goodput();
         if let Some((c, k)) = &key {
-            c.store(k, &CachedRun { result: run.result, goodput });
+            c.store(k, &CachedRun { result, goodput });
         }
-        SweepSummary { name: run.name, seed, result: run.result, goodput, cached: false }
+        SweepSummary { name: v.name, seed, result, goodput, cached: false }
     }
 
     /// Convenience: run and keep only the result summaries.
@@ -321,6 +359,74 @@ mod tests {
             assert_eq!(c.seed, w.seed);
             assert_eq!(c.result, w.result, "{}", c.name);
             assert_eq!(c.goodput, w.goodput, "{}: cached goodput must be exact", c.name);
+        }
+        cache.clear().unwrap();
+    }
+
+    #[test]
+    fn windowed_and_full_ledger_summaries_are_bit_identical() {
+        let mut full: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries_with_mode(
+            spec(2),
+            None,
+            crate::sim::LedgerMode::Full,
+            |s| full.push(s),
+        );
+        let mut win: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries(spec(2), None, |s| win.push(s));
+        assert_eq!(full.len(), win.len());
+        for (f, w) in full.iter().zip(&win) {
+            assert_eq!(f.name, w.name);
+            assert_eq!(f.result, w.result, "{}", f.name);
+            assert_eq!(
+                f.goodput, w.goodput,
+                "{}: windowed summary must match full-ledger bitwise",
+                f.name
+            );
+            assert_eq!(f.goodput.pg.to_bits(), w.goodput.pg.to_bits(), "{}", f.name);
+            assert_eq!(f.goodput.sg.to_bits(), w.goodput.sg.to_bits(), "{}", f.name);
+        }
+    }
+
+    /// The no-`SIM_BEHAVIOR_VERSION`-bump contract: simulation behavior
+    /// is untouched by the reduction rewrite (same events, results, and
+    /// ledger contents), so the behavior version stays 1 — and cache
+    /// entries written by the full-ledger path must serve the windowed
+    /// path bit-identically, and vice versa. (Entries from *before* the
+    /// rewrite used the old flat summation order, which can differ in the
+    /// last ULP; those are invalidated by the `CACHE_VERSION` bump to 2,
+    /// not by a behavior bump.)
+    #[test]
+    fn cache_entries_are_mode_compatible_without_version_bump() {
+        assert_eq!(
+            crate::sim::cache::SIM_BEHAVIOR_VERSION,
+            1,
+            "the reduction rewrite must NOT bump the behavior version; \
+             if simulation behavior really changed, this test and the \
+             bit-identity suite need revisiting together"
+        );
+        assert_eq!(
+            crate::sim::cache::CACHE_VERSION,
+            2,
+            "pre-rewrite cache entries (flat summation order) must be \
+             invalidated by the cache version, not served alongside \
+             canonical-order rows"
+        );
+        let cache = temp_cache("mode-compat");
+        let mut cold: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries_with_mode(
+            spec(2),
+            Some(&cache),
+            crate::sim::LedgerMode::Full,
+            |s| cold.push(s),
+        );
+        assert!(cold.iter().all(|s| !s.cached));
+        let mut warm: Vec<SweepSummary> = Vec::new();
+        SweepRunner::run_streaming_summaries(spec(2), Some(&cache), |s| warm.push(s));
+        assert!(warm.iter().all(|s| s.cached), "windowed pass must hit full-mode entries");
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.result, w.result, "{}", c.name);
+            assert_eq!(c.goodput, w.goodput, "{}", c.name);
         }
         cache.clear().unwrap();
     }

@@ -5,7 +5,44 @@
 //! be replayed exactly (`check_one(seed, f)`). No shrinking — cases are
 //! kept small instead.
 
+use crate::metrics::GoodputReport;
 use crate::util::Rng;
+
+/// Assert two goodput reports are bit-identical (`f64::to_bits`) on every
+/// field — the comparison the reduction engine's bit-identity contract is
+/// stated in. One definition shared by the unit suites and the property
+/// tests: the exhaustive destructuring makes adding a `GoodputReport`
+/// field without extending this check a compile error.
+pub fn assert_reports_bit_identical(a: &GoodputReport, b: &GoodputReport, what: &str) {
+    let GoodputReport {
+        sg,
+        rg,
+        pg,
+        capacity_cs,
+        all_allocated_cs,
+        productive_cs,
+        lost_cs,
+        startup_cs,
+        stall_cs,
+        partial_cs,
+        job_count,
+    } = *a;
+    for (x, y, name) in [
+        (sg, b.sg, "sg"),
+        (rg, b.rg, "rg"),
+        (pg, b.pg, "pg"),
+        (capacity_cs, b.capacity_cs, "capacity_cs"),
+        (all_allocated_cs, b.all_allocated_cs, "all_allocated_cs"),
+        (productive_cs, b.productive_cs, "productive_cs"),
+        (lost_cs, b.lost_cs, "lost_cs"),
+        (startup_cs, b.startup_cs, "startup_cs"),
+        (stall_cs, b.stall_cs, "stall_cs"),
+        (partial_cs, b.partial_cs, "partial_cs"),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} {x} vs {y}");
+    }
+    assert_eq!(job_count, b.job_count, "{what}: job_count");
+}
 
 /// Run `f` for `cases` random cases. Panics with the failing case's seed.
 pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, seed: u64, f: F) {

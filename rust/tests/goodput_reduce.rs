@@ -1,0 +1,223 @@
+//! Property suite for the single-pass MPG reduction engine and the
+//! streaming windowed ledger: for random ledgers and real simulations,
+//! every optimized path must be bit-identical (`f64::to_bits`) to the
+//! retained naive reference — the contract that keeps warm sweep caches
+//! and shard merges byte-identical with no `SIM_BEHAVIOR_VERSION` bump.
+
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::metrics::goodput::{self, Axis};
+use tpufleet::metrics::{JobMeta, Ledger, TimeClass, TimeSeries};
+use tpufleet::sim::{shard, LedgerMode, SimConfig, SweepRunner, SweepSpec, SweepSummary};
+use tpufleet::testkit::check;
+use tpufleet::util::Rng;
+use tpufleet::workload::{
+    CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+};
+
+fn random_job(rng: &mut Rng, id: u64) -> Job {
+    let gens = [ChipGeneration::TpuB, ChipGeneration::TpuC, ChipGeneration::TpuD];
+    let gen = gens[rng.below(3) as usize];
+    let pod = gen.spec().pod_shape;
+    let (slice_shape, pods) = if rng.chance(0.2) {
+        ([0, 0, 0], rng.range_u64(1, 3) as u32)
+    } else {
+        let s = [
+            rng.range_u64(1, pod[0] as u64) as u32,
+            rng.range_u64(1, pod[1] as u64) as u32,
+            rng.range_u64(1, pod[2] as u64) as u32,
+        ];
+        (s, 0)
+    };
+    let phases = [Phase::Training, Phase::Serving, Phase::BulkInference];
+    Job {
+        id,
+        arrival_s: rng.range_f64(0.0, 500.0),
+        phase: phases[rng.below(3) as usize],
+        framework: Framework::ALL[rng.below(3) as usize],
+        arch: ModelArch::ALL[rng.below(4) as usize],
+        priority: Priority::Prod,
+        gen,
+        slice_shape,
+        pods,
+        work_s: rng.range_f64(100.0, 20_000.0),
+        step: StepProfile {
+            ideal_flops_per_chip: rng.range_f64(1e10, 1e13),
+            base_efficiency: rng.range_f64(0.1, 0.9),
+            comm_fraction: rng.range_f64(0.0, 0.7),
+            host_fraction: rng.range_f64(0.0, 0.6),
+        },
+        ckpt: CheckpointPolicy::synchronous(),
+        startup_s: rng.range_f64(10.0, 600.0),
+    }
+}
+
+/// A random ledger with irregular spans, PG samples, and capacity steps.
+fn random_ledger(rng: &mut Rng) -> (Ledger, f64) {
+    let mut ledger = Ledger::new();
+    ledger.set_capacity(0.0, rng.range_u64(500, 50_000));
+    let end = rng.range_f64(1_000.0, 20_000.0);
+    if rng.chance(0.7) {
+        let t = rng.range_f64(0.0, end);
+        ledger.set_capacity(t, rng.range_u64(500, 50_000));
+    }
+    let n_jobs = rng.range_u64(1, 20);
+    for id in 1..=n_jobs {
+        let job = random_job(rng, id);
+        let chips = job.chips();
+        ledger.ensure_job(JobMeta::of(&job));
+        let mut t = rng.range_f64(0.0, end * 0.5);
+        for _ in 0..rng.range_u64(0, 25) {
+            let dur = rng.range_f64(0.1, end * 0.1);
+            let class = TimeClass::ALL[rng.below(7) as usize];
+            ledger.add_span(id, t, t + dur, chips, class);
+            if class == TimeClass::Productive && rng.chance(0.8) {
+                ledger.add_pg_sample(id, t, t + dur, chips, rng.range_f64(0.0, 1.0));
+            }
+            t += dur * rng.range_f64(0.8, 1.4);
+        }
+    }
+    (ledger, end)
+}
+
+use tpufleet::testkit::assert_reports_bit_identical as assert_bitwise;
+
+/// Single-pass `report` == naive reference, bit for bit, under random
+/// ledgers, windows, and meta filters.
+#[test]
+fn prop_single_pass_report_matches_naive() {
+    check(80, 0x5EDC, |rng| {
+        let (ledger, end) = random_ledger(rng);
+        for _ in 0..4 {
+            let a = rng.range_f64(0.0, end);
+            let b = rng.range_f64(0.0, end);
+            let (w0, w1) = (a.min(b), a.max(b));
+            assert_bitwise(
+                &goodput::report(&ledger, w0, w1, |_| true),
+                &goodput::report_naive(&ledger, w0, w1, |_| true),
+                &format!("fleet [{w0}, {w1})"),
+            );
+            let phase = [Phase::Training, Phase::Serving, Phase::BulkInference]
+                [rng.below(3) as usize];
+            assert_bitwise(
+                &goodput::report(&ledger, w0, w1, |m| m.phase == phase),
+                &goodput::report_naive(&ledger, w0, w1, |m| m.phase == phase),
+                &format!("{} [{w0}, {w1})", phase.name()),
+            );
+        }
+    });
+}
+
+/// Single-pass `segmented` == naive reference on every axis.
+#[test]
+fn prop_single_pass_segmented_matches_naive() {
+    let axes =
+        [Axis::Phase, Axis::Framework, Axis::Arch, Axis::Generation, Axis::SizeClass];
+    check(40, 0x5E63, |rng| {
+        let (ledger, end) = random_ledger(rng);
+        let axis = axes[rng.below(axes.len() as u64) as usize];
+        let fast = goodput::segmented(&ledger, 0.0, end, axis);
+        let slow = goodput::segmented_naive(&ledger, 0.0, end, axis);
+        assert_eq!(fast.len(), slow.len(), "{axis:?}: row count");
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.label, s.label, "{axis:?}");
+            assert_bitwise(&f.report, &s.report, &f.label);
+        }
+    });
+}
+
+/// One-fold `TimeSeries::build` == per-window naive reference.
+#[test]
+fn prop_single_pass_series_matches_naive() {
+    check(40, 0x5E71E5, |rng| {
+        let (ledger, end) = random_ledger(rng);
+        let width = rng.range_f64(end / 30.0, end / 2.0);
+        let fast = TimeSeries::build("t", &ledger, 0.0, end, width, |_| true);
+        let slow = TimeSeries::build_naive("t", &ledger, 0.0, end, width, |_| true);
+        assert_eq!(fast.windows.len(), slow.windows.len());
+        for ((f, s), w) in fast.reports.iter().zip(&slow.reports).zip(&fast.windows) {
+            assert_bitwise(f, s, &format!("window [{}, {})", w.t0, w.t1));
+        }
+    });
+}
+
+fn sweep_spec(workers: usize) -> SweepSpec {
+    let mut spec = SweepSpec::new().workers(workers);
+    for (i, seed) in [3u64, 11, 17].iter().enumerate() {
+        let mut cfg = SimConfig {
+            seed: *seed,
+            duration_s: 10.0 * 3600.0,
+            static_fleet: vec![(ChipGeneration::TpuC, 12)],
+            ..Default::default()
+        };
+        cfg.generator.arrivals_per_hour = 10.0;
+        cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+        if i == 1 {
+            cfg.policy.preemption = false;
+        }
+        spec.push(format!("v{i}"), cfg);
+    }
+    spec
+}
+
+/// Windowed-ledger sweep summaries == full-ledger summaries, bit for bit,
+/// on real simulations (failures, preemptions, queueing included).
+#[test]
+fn windowed_sweep_summaries_match_full_ledger_bitwise() {
+    let mut full: Vec<SweepSummary> = Vec::new();
+    SweepRunner::run_streaming_summaries_with_mode(
+        sweep_spec(2),
+        None,
+        LedgerMode::Full,
+        |s| full.push(s),
+    );
+    let mut win: Vec<SweepSummary> = Vec::new();
+    SweepRunner::run_streaming_summaries(sweep_spec(2), None, |s| win.push(s));
+    assert_eq!(full.len(), win.len());
+    for (f, w) in full.iter().zip(&win) {
+        assert_eq!(f.name, w.name);
+        assert_eq!(f.result, w.result, "{}", f.name);
+        assert_bitwise(&f.goodput, &w.goodput, &f.name);
+    }
+}
+
+/// End-to-end byte identity: the sweep report written from windowed-mode
+/// summaries is byte-identical to the one written from full-ledger
+/// summaries — the in-process mirror of the CI `cmp` gate, covering the
+/// shared row/report writers too.
+#[test]
+fn sweep_report_bytes_identical_across_ledger_modes() {
+    use tpufleet::util::Json;
+
+    let spec_json = Json::obj(vec![("grid", Json::str("mode-cmp"))]);
+    let write = |mode: LedgerMode| -> Vec<u8> {
+        let mut out: Vec<u8> = Vec::new();
+        shard::write_report_header(&mut out, &spec_json).unwrap();
+        let mut n = 0usize;
+        SweepRunner::run_streaming_summaries_with_mode(sweep_spec(1), None, mode, |s| {
+            shard::write_report_row(&mut out, n, &shard::summary_row_json(&s)).unwrap();
+            n += 1;
+        });
+        shard::write_report_footer(&mut out).unwrap();
+        out
+    };
+    let full = write(LedgerMode::Full);
+    let windowed = write(tpufleet::sim::sweep::summary_ledger_mode());
+    assert_eq!(
+        String::from_utf8(full).unwrap(),
+        String::from_utf8(windowed).unwrap(),
+        "report bytes must not depend on the accounting mode"
+    );
+}
+
+/// The incremental `end_time` tracker never drifts from the span fold.
+#[test]
+fn prop_end_time_matches_fold() {
+    check(60, 0xE2D, |rng| {
+        let (ledger, _) = random_ledger(rng);
+        assert_eq!(
+            ledger.end_time().to_bits(),
+            ledger.end_time_by_fold().to_bits(),
+            "incremental max-end drifted from the span fold"
+        );
+    });
+}
