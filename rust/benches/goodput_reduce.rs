@@ -11,7 +11,7 @@
 
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::metrics::goodput::{self, Axis};
-use tpufleet::metrics::{JobMeta, Ledger, TimeClass, TimeSeries};
+use tpufleet::metrics::{JobMeta, Ledger, StackLayer, TimeClass, TimeSeries};
 use tpufleet::sim::{sweep, SimConfig, Simulation};
 use tpufleet::util::bench::{fmt_dur, Bench};
 use tpufleet::util::{Json, Rng};
@@ -51,7 +51,14 @@ fn build_ledger(total_spans: usize, seed: u64) -> Ledger {
         let t0 = cursors[j];
         let dur = rng.range_f64(10.0, 1800.0);
         let class = TimeClass::ALL[rng.below(7) as usize];
-        ledger.add_span(job.id, t0, t0 + dur, job.chips(), class);
+        // Mix default and explicit layer tags so the layer-dimension
+        // series exercises split classes, like the engine does.
+        if i % 3 == 0 {
+            let layer = StackLayer::ALL[rng.below(6) as usize];
+            ledger.add_span_layered(job.id, t0, t0 + dur, job.chips(), class, layer);
+        } else {
+            ledger.add_span(job.id, t0, t0 + dur, job.chips(), class);
+        }
         if class == TimeClass::Productive {
             let pg = rng.range_f64(0.05, 1.0);
             ledger.add_pg_sample(job.id, t0, t0 + dur, job.chips(), pg);
@@ -162,14 +169,37 @@ fn main() {
         headline_rep = rep.speedup();
         headline_seg = seg.speedup();
         headline_ts = ts.speedup();
+        // Layer dimension: the single-pass fold fills all 6 layer buckets
+        // in the same walk; the naive path pays one extra rescan per
+        // layer. Record the per-layer totals (and assert the fold matches
+        // the rescans bitwise) so the artifact carries the layer series.
+        let horizon = 30.0 * DAY_S;
+        let fold = goodput::report(&ledger, 0.0, horizon, |_| true);
+        let layers_json = Json::obj(
+            StackLayer::ALL
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    let naive = ledger.layer_chip_seconds(*l, 0.0, horizon, |_| true);
+                    assert_eq!(
+                        fold.layer_cs[i].to_bits(),
+                        naive.to_bits(),
+                        "layer {} must be bit-identical to its naive rescan",
+                        l.name()
+                    );
+                    (l.name(), Json::num(fold.layer_cs[i]))
+                })
+                .collect(),
+        );
         series_json.push(Json::obj(vec![
             ("spans", Json::num(spans as f64)),
             ("report", rep.json()),
             ("segmented", seg.json()),
             ("timeseries", ts.json()),
+            ("layer_cs", layers_json),
         ]));
     }
-    println!("bit-identical naive vs single-pass outputs ... OK");
+    println!("bit-identical naive vs single-pass outputs (incl. layer cells) ... OK");
 
     // Windowed-ledger memory: the same simulation accounted in streaming
     // mode holds O(windows x jobs) cells instead of O(spans) spans, with
@@ -213,9 +243,16 @@ fn main() {
         bound
     );
 
+    // Attribution bit-identity across accounting modes: the windowed sim's
+    // layer buckets (and thus the derived waterfall) equal the full-span
+    // ones — already covered by the report equality assert above, since
+    // GoodputReport's PartialEq includes layer_cs.
+    let att = tpufleet::metrics::AttributionReport::of(&win.fleet_goodput());
+
     let report = Json::obj(vec![
         ("bench", Json::str("goodput_reduce")),
         ("max_spans", Json::num(max_spans as f64)),
+        ("attribution_bottleneck", Json::str(att.bottleneck().name())),
         ("series", Json::Arr(series_json)),
         ("report_speedup", Json::num(headline_rep)),
         ("segmented_speedup", Json::num(headline_seg)),

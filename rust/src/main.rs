@@ -42,9 +42,20 @@ COMMANDS:
   overlap    print the §5.1 collective-overlap case-study numbers
   ablate     [--seed S] [--workers W] one-design-choice-at-a-time ablation
              matrix (runs as a parallel sweep; W=0 means one per core)
+  attribution [--days N] [--seed S] [--arrivals-per-hour R] [--no-failures]
+             [--degrade PRESET] [--windowed] [--out FILE]
+             run a fleet simulation and print the per-layer MPG waterfall:
+             chip-time attributed to each ML-stack layer (model, compiler,
+             framework, data, hardware, scheduling) and the fleet MPG
+             recovered if each layer were made ideal, ranked — the paper's
+             bottleneck-identification workflow. --degrade regresses one
+             layer (none data-3x framework-3x compiler-3x hardware-3x
+             scheduling-8x); --windowed accounts through the streaming
+             ledger (bit-identical report); --out writes the JSON report
   sweep      [--days N] [--seed S] [--workers W] [--arrivals-per-hour R]
              [--policies a,b,..] [--fleets a,b,..] [--job-mixes a,b,..]
-             [--failure-mults 0,1,3] [--out FILE] [--progress]
+             [--failure-mults 0,1,3] [--degrades none,data-3x,..]
+             [--out FILE] [--progress]
              [--no-cache] [--cache-dir DIR] [--cache-max-mb N]
              [--cache-stats] [--shards N] [--shard-cmd CMD]
              [--full-ledger]
@@ -65,7 +76,10 @@ COMMANDS:
              this binary)
              (policies: default no-preemption no-defrag no-anti-thrash
              headroom-15; fleets: default small large c-only; job-mixes:
-             default xl-heavy small-heavy)
+             default xl-heavy small-heavy; degrades: none data-3x
+             framework-3x compiler-3x hardware-3x scheduling-8x — each
+             regresses one stack layer; every report row carries the
+             per-layer attribution section)
   trace      generate <out.json> [--hours H] | replay <in.json> [--days N]
 
 (`sweep-worker` is the internal subcommand `sweep --shards` spawns; it
@@ -88,6 +102,7 @@ fn main() {
         "hlo-cost" => cmd_hlo_cost(&args),
         "overlap" => cmd_overlap(),
         "ablate" => cmd_ablate(&args),
+        "attribution" => cmd_attribution(&args),
         "sweep" => cmd_sweep(&args),
         "sweep-worker" => cmd_sweep_worker(&args),
         "trace" => cmd_trace(&args),
@@ -335,6 +350,74 @@ fn cmd_ablate(args: &Args) -> i32 {
     0
 }
 
+/// The stack-layer MPG attribution waterfall: run one simulation, reduce
+/// it to per-layer chip-time, and rank layers by the fleet MPG recovered
+/// if each were made ideal (the paper's bottleneck-identification
+/// workflow). `--windowed` accounts through the streaming ledger instead
+/// of retained spans — the report is bit-identical either way, which the
+/// CI `cmp` gate checks on the real binary.
+fn cmd_attribution(args: &Args) -> i32 {
+    use tpufleet::metrics::AttributionReport;
+
+    let days = args.get_f64("days", 7.0);
+    let mut cfg = SimConfig {
+        seed: args.get_u64("seed", 42),
+        duration_s: days * 24.0 * 3600.0,
+        ..Default::default()
+    };
+    cfg.generator.arrivals_per_hour = args.get_f64("arrivals-per-hour", 10.0);
+    if args.has_flag("no-failures") {
+        cfg.failures = false;
+    }
+    if let Some(preset) = args.get("degrade") {
+        if !tpufleet::sim::sweep::apply_degrade_preset(&mut cfg, preset) {
+            eprintln!("unknown degrade preset: {preset}");
+            return 2;
+        }
+    }
+    let windowed = args.has_flag("windowed");
+    eprintln!(
+        "attributing {days} days (seed {}, {} accounting)...",
+        cfg.seed,
+        if windowed { "windowed" } else { "full-span" }
+    );
+    let t0 = std::time::Instant::now();
+    let mode = if windowed {
+        tpufleet::sim::sweep::summary_ledger_mode()
+    } else {
+        LedgerMode::Full
+    };
+    let mut sim = Simulation::with_ledger_mode(cfg, mode);
+    let res = sim.run();
+    eprintln!(
+        "done in {:.2?}: {} arrived, {} completed, {} preemptions, {} failures",
+        t0.elapsed(),
+        res.arrived_jobs,
+        res.completed_jobs,
+        res.preemptions,
+        res.failures_injected
+    );
+    let fleet = sim.fleet_goodput();
+    let att = AttributionReport::of(&fleet);
+    println!(
+        "fleet MPG = SG {:.3} x RG {:.3} x PG {:.3} = {:.4}",
+        fleet.sg,
+        fleet.rg,
+        fleet.pg,
+        fleet.mpg()
+    );
+    println!("{}", att.table("Stack-layer MPG attribution waterfall").to_ascii());
+    println!("bottleneck layer: {}", att.bottleneck().name());
+    if let Some(out) = args.get("out") {
+        if let Err(e) = std::fs::write(out, att.to_json().to_string_pretty()) {
+            eprintln!("writing {out} failed: {e}");
+            return 1;
+        }
+        eprintln!("wrote {out}");
+    }
+    0
+}
+
 /// Named policy variants for the sweep grid (shared preset table).
 fn sweep_policy(cfg: &mut SimConfig, name: &str) -> bool {
     tpufleet::sim::sweep::apply_policy_preset(cfg, name)
@@ -465,12 +548,16 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
     let policies = list("policies", "default,no-preemption,headroom-15");
     let fleets = list("fleets", "default,small");
     let job_mixes = list("job-mixes", "default");
+    let degrades = list("degrades", "none");
     let fail_strs = list("failure-mults", "1");
     // Repeated axis values would produce duplicate variant names (which
     // SweepSpec rejects) and ambiguous report rows — fail fast instead.
-    for (axis, vals) in
-        [("policies", &policies), ("fleets", &fleets), ("job-mixes", &job_mixes)]
-    {
+    for (axis, vals) in [
+        ("policies", &policies),
+        ("fleets", &fleets),
+        ("job-mixes", &job_mixes),
+        ("degrades", &degrades),
+    ] {
         if let Some(dup) = vals.iter().enumerate().find_map(|(i, s)| {
             vals[..i].contains(s).then_some(s)
         }) {
@@ -501,30 +588,36 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
     for pol in &policies {
         for fl in &fleets {
             for jm in &job_mixes {
-                for &fm in &fail_mults {
-                    let mut cfg = SimConfig {
-                        duration_s: days * 24.0 * 3600.0,
-                        ..Default::default()
-                    };
-                    cfg.generator.arrivals_per_hour = arrivals;
-                    if !sweep_policy(&mut cfg, pol) {
-                        eprintln!("unknown policy variant: {pol}");
-                        return Err(2);
+                for dg in &degrades {
+                    for &fm in &fail_mults {
+                        let mut cfg = SimConfig {
+                            duration_s: days * 24.0 * 3600.0,
+                            ..Default::default()
+                        };
+                        cfg.generator.arrivals_per_hour = arrivals;
+                        if !sweep_policy(&mut cfg, pol) {
+                            eprintln!("unknown policy variant: {pol}");
+                            return Err(2);
+                        }
+                        if !sweep_fleet(&mut cfg, fl) {
+                            eprintln!("unknown fleet variant: {fl}");
+                            return Err(2);
+                        }
+                        if !sweep_job_mix(&mut cfg, jm) {
+                            eprintln!("unknown job-mix variant: {jm}");
+                            return Err(2);
+                        }
+                        if !tpufleet::sim::sweep::apply_degrade_preset(&mut cfg, dg) {
+                            eprintln!("unknown degrade variant: {dg}");
+                            return Err(2);
+                        }
+                        cfg.failure_rate_mult = fm;
+                        if fm == 0.0 {
+                            cfg.failures = false;
+                        }
+                        let name = format!("{pol}+{fl}+{jm}+{dg}+fail{fm}");
+                        spec.push_derived_seed(name, cfg, seed);
                     }
-                    if !sweep_fleet(&mut cfg, fl) {
-                        eprintln!("unknown fleet variant: {fl}");
-                        return Err(2);
-                    }
-                    if !sweep_job_mix(&mut cfg, jm) {
-                        eprintln!("unknown job-mix variant: {jm}");
-                        return Err(2);
-                    }
-                    cfg.failure_rate_mult = fm;
-                    if fm == 0.0 {
-                        cfg.failures = false;
-                    }
-                    let name = format!("{pol}+{fl}+{jm}+fail{fm}");
-                    spec.push_derived_seed(name, cfg, seed);
                 }
             }
         }
@@ -600,7 +693,18 @@ fn cmd_sweep_serial(args: &Args, spec: SweepSpec) -> i32 {
 
     let mut table = report::Table::new(
         "Scenario sweep — fleet goodputs per variant",
-        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures", "src"],
+        &[
+            "variant",
+            "SG",
+            "RG",
+            "PG",
+            "MPG",
+            "completed",
+            "preempt",
+            "failures",
+            "bottleneck",
+            "src",
+        ],
     );
     let mut done = 0usize;
     let mut hits = 0usize;
@@ -616,6 +720,7 @@ fn cmd_sweep_serial(args: &Args, spec: SweepSpec) -> i32 {
             s.result.completed_jobs.to_string(),
             s.result.preemptions.to_string(),
             s.result.failures_injected.to_string(),
+            tpufleet::metrics::AttributionReport::of(g).bottleneck().name().to_string(),
             if s.cached { "cache".to_string() } else { "sim".to_string() },
         ]);
         let row = shard::summary_row_json(&s);
@@ -849,10 +954,22 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
         return 1;
     }
     // Same stdout summary table as the serial path, rebuilt from the
-    // merged rows.
+    // merged rows (the bottleneck layer comes from the row's embedded
+    // attribution section).
     let mut table = report::Table::new(
         "Scenario sweep — fleet goodputs per variant",
-        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "failures", "src"],
+        &[
+            "variant",
+            "SG",
+            "RG",
+            "PG",
+            "MPG",
+            "completed",
+            "preempt",
+            "failures",
+            "bottleneck",
+            "src",
+        ],
     );
     for r in &rows {
         let f = |key: &str| r.row.get(key).as_f64().unwrap_or(f64::NAN);
@@ -866,6 +983,12 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
             u("completed_jobs").to_string(),
             u("preemptions").to_string(),
             u("failures_injected").to_string(),
+            r.row
+                .get("attribution")
+                .get("bottleneck")
+                .as_str()
+                .unwrap_or("?")
+                .to_string(),
             if r.cached { "cache".to_string() } else { "sim".to_string() },
         ]);
     }

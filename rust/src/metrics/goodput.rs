@@ -9,8 +9,11 @@
 //! (`f64::to_bits`) to them, and the `goodput_reduce` bench measures the
 //! speedup against them.
 
+pub mod attribution;
+
 use super::ledger::{JobMeta, Ledger, TimeClass};
 use super::reduce::fold_ledger;
+use super::stack::{StackLayer, N_LAYERS};
 use crate::workload::{Framework, ModelArch, Phase, SizeClass};
 
 /// The MPG decomposition over some window and job population.
@@ -30,12 +33,23 @@ pub struct GoodputReport {
     pub startup_cs: f64,
     pub stall_cs: f64,
     pub partial_cs: f64,
+    /// Chip-seconds per stack layer (`StackLayer as usize` index order) —
+    /// the per-layer attribution the waterfall report reduces. Note this
+    /// is the only place Queued chip-seconds surface in a report (under
+    /// `StackLayer::Scheduling`); the class totals above deliberately
+    /// exclude them from SG/RG as before.
+    pub layer_cs: [f64; N_LAYERS],
     pub job_count: usize,
 }
 
 impl GoodputReport {
     pub fn mpg(&self) -> f64 {
         self.sg * self.rg * self.pg
+    }
+
+    /// Chip-seconds attributed to one stack layer.
+    pub fn layer(&self, layer: StackLayer) -> f64 {
+        self.layer_cs[layer as usize]
     }
 
     /// MPG expressed as productive-and-well-spent capacity fraction; equal
@@ -130,6 +144,12 @@ pub fn report_naive<F: Fn(&JobMeta) -> bool>(
     let partial = ledger.class_chip_seconds(TimeClass::Partial, w0, w1, &filter);
     let all_allocated = productive + startup + ckpt + rstall + lost;
     let capacity = ledger.capacity_chip_seconds(w0, w1);
+    // One rescan per stack layer — the naive shape, mirroring the
+    // per-class rescans above; bit-identical to the fold's layer cells.
+    let mut layer_cs = [0.0; N_LAYERS];
+    for (i, layer) in StackLayer::ALL.iter().enumerate() {
+        layer_cs[i] = ledger.layer_chip_seconds(*layer, w0, w1, &filter);
+    }
 
     // PG: productive-chip-second weighted mean of samples in the window,
     // reduced per job then combined in job order (the canonical order).
@@ -171,6 +191,7 @@ pub fn report_naive<F: Fn(&JobMeta) -> bool>(
         startup_cs: startup,
         stall_cs: ckpt + rstall,
         partial_cs: partial,
+        layer_cs,
         job_count,
     }
 }
@@ -354,6 +375,32 @@ mod tests {
     }
 
     use crate::testkit::assert_reports_bit_identical;
+
+    /// Layers whose classes are exclusively their own receive exactly
+    /// the additions their class buckets do — bitwise equal, per cell.
+    #[test]
+    fn exclusive_layers_match_their_class_totals_bitwise() {
+        let l = ledger();
+        for (w0, w1) in [(0.0, 100.0), (7.0, 93.0), (40.0, 60.0)] {
+            let r = report(&l, w0, w1, |_| true);
+            assert_eq!(
+                r.layer(StackLayer::Model).to_bits(),
+                r.productive_cs.to_bits(),
+                "[{w0}, {w1}) model"
+            );
+            assert_eq!(
+                r.layer(StackLayer::Compiler).to_bits(),
+                r.startup_cs.to_bits(),
+                "[{w0}, {w1}) compiler (default Startup mapping)"
+            );
+            assert_eq!(
+                r.layer(StackLayer::Hardware).to_bits(),
+                r.lost_cs.to_bits(),
+                "[{w0}, {w1}) hardware (no Partial time in this fixture)"
+            );
+            assert_eq!(r.layer(StackLayer::Scheduling), 0.0, "no Queued time");
+        }
+    }
 
     #[test]
     fn single_pass_report_matches_naive_bitwise() {

@@ -1,0 +1,284 @@
+//! Per-layer MPG attribution: the paper's stack-layer waterfall and
+//! bottleneck ranking ("characterize the fleet across the ML system
+//! stack").
+//!
+//! An [`AttributionReport`] is a pure function of one [`GoodputReport`]:
+//! it takes the per-layer chip-second buckets the reduction engine filled
+//! ([`GoodputReport::layer_cs`]) and asks, for each layer, *what would
+//! fleet MPG be if this layer were made ideal?* The difference to the
+//! actual fleet MPG is that layer's recovered-MPG headroom, and sorting
+//! layers by it is the paper's bottleneck-identification workflow.
+//!
+//! Because the input report is bit-identical across every reduction path
+//! (full-span, single-pass, windowed, shard-merged — the `goodput_reduce`
+//! contract) and this derivation is deterministic scalar arithmetic, the
+//! attribution bytes are identical no matter which path produced them —
+//! the property the CI `cmp` gate and the sweep cache rely on.
+//!
+//! # Counterfactuals per layer
+//!
+//! * **Model** ideal: the program runs at roofline — PG becomes 1.
+//! * **Compiler / Framework / Data** ideal: that layer's overhead
+//!   chip-seconds (compile startup; checkpoint writes + restores +
+//!   framework stalls; data-pipeline stalls) become productive time —
+//!   RG rises, SG/PG unchanged.
+//! * **Hardware** ideal: lost progress becomes productive and
+//!   gang-incomplete (Partial) time becomes fully-allocated productive
+//!   time — both SG and RG rise.
+//! * **Scheduling** ideal: queue-wait chip-seconds become allocated
+//!   productive time — SG rises (still capped by capacity).
+
+use crate::report::table::{f, pct, Table};
+use crate::util::Json;
+
+use super::super::stack::{StackLayer, N_LAYERS};
+use super::GoodputReport;
+
+/// One layer's row in the waterfall.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerRow {
+    pub layer: StackLayer,
+    /// Chip-seconds attributed to this layer.
+    pub chip_seconds: f64,
+    /// Fleet MPG if this layer were made ideal.
+    pub mpg_if_ideal: f64,
+    /// MPG headroom: `mpg_if_ideal - fleet_mpg` (clamped at 0).
+    pub mpg_recovered: f64,
+}
+
+/// The per-layer MPG waterfall over one job population and window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttributionReport {
+    pub fleet: GoodputReport,
+    /// One row per layer, in [`StackLayer::ALL`] order.
+    pub rows: [LayerRow; N_LAYERS],
+}
+
+impl AttributionReport {
+    /// Derive the waterfall from a goodput report (any reduction path).
+    pub fn of(fleet: &GoodputReport) -> AttributionReport {
+        let mpg = fleet.mpg();
+        let rows = StackLayer::ALL.map(|layer| {
+            let mpg_if_ideal = mpg_if_ideal(fleet, layer);
+            LayerRow {
+                layer,
+                chip_seconds: fleet.layer(layer),
+                mpg_if_ideal,
+                mpg_recovered: (mpg_if_ideal - mpg).max(0.0),
+            }
+        });
+        AttributionReport { fleet: *fleet, rows }
+    }
+
+    /// Rows sorted by recovered MPG, largest headroom first (ties keep
+    /// `StackLayer::ALL` order, so the ranking is deterministic).
+    pub fn ranked(&self) -> Vec<LayerRow> {
+        let mut rows = self.rows.to_vec();
+        rows.sort_by(|a, b| b.mpg_recovered.total_cmp(&a.mpg_recovered));
+        rows
+    }
+
+    /// The layer whose idealization recovers the most MPG — the paper's
+    /// "which layer should the fleet team optimize next" answer.
+    pub fn bottleneck(&self) -> StackLayer {
+        self.ranked()[0].layer
+    }
+
+    /// The JSON section embedded in sweep-report rows and the
+    /// `attribution --out` file. Deterministic bytes for a given report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mpg", Json::num(self.fleet.mpg())),
+            ("bottleneck", Json::str(self.bottleneck().name())),
+            (
+                "layers",
+                Json::arr(self.rows.iter().map(|r| {
+                    Json::obj(vec![
+                        ("layer", Json::str(r.layer.name())),
+                        ("chip_seconds", Json::num(r.chip_seconds)),
+                        ("mpg_if_ideal", Json::num(r.mpg_if_ideal)),
+                        ("mpg_recovered", Json::num(r.mpg_recovered)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// ASCII waterfall, ranked by recovered MPG.
+    pub fn table(&self, title: &str) -> Table {
+        let mut table = Table::new(
+            title,
+            &["rank", "layer", "chip-hours", "share", "MPG if ideal", "MPG recovered"],
+        );
+        let accounted: f64 = self.rows.iter().map(|r| r.chip_seconds).sum();
+        for (i, r) in self.ranked().iter().enumerate() {
+            table.row(vec![
+                (i + 1).to_string(),
+                r.layer.name().to_string(),
+                f(r.chip_seconds / 3600.0, 1),
+                pct(if accounted > 0.0 { r.chip_seconds / accounted } else { 0.0 }),
+                f(r.mpg_if_ideal, 4),
+                format!("+{}", f(r.mpg_recovered, 4)),
+            ]);
+        }
+        table
+    }
+}
+
+/// Fleet MPG with `layer` made ideal (see the module doc's
+/// counterfactual definitions). Degenerate fleets (zero capacity or zero
+/// allocated time) report 0, matching the base reductions' guards.
+fn mpg_if_ideal(fleet: &GoodputReport, layer: StackLayer) -> f64 {
+    let cap = fleet.capacity_cs;
+    let alloc = fleet.all_allocated_cs;
+    let prod = fleet.productive_cs;
+    if cap <= 0.0 {
+        return 0.0;
+    }
+    let recompose = |alloc2: f64, prod2: f64, pg: f64| -> f64 {
+        if alloc2 <= 0.0 {
+            return 0.0;
+        }
+        let sg = (alloc2 / cap).min(1.0);
+        let rg = prod2 / alloc2;
+        sg * rg * pg
+    };
+    match layer {
+        StackLayer::Model => recompose(alloc, prod, 1.0),
+        StackLayer::Compiler | StackLayer::Framework | StackLayer::Data => {
+            // That layer's overhead time becomes productive time.
+            recompose(alloc, prod + fleet.layer(layer), fleet.pg)
+        }
+        StackLayer::Hardware => {
+            // Lost becomes productive (already allocated); Partial
+            // becomes fully-allocated productive time.
+            recompose(alloc + fleet.partial_cs, prod + fleet.layer(layer), fleet.pg)
+        }
+        StackLayer::Scheduling => {
+            // Queue-wait becomes allocated productive time.
+            let queued = fleet.layer(layer);
+            recompose(alloc + queued, prod + queued, fleet.pg)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::ledger::TimeClass;
+    use super::super::super::stack::N_LAYERS;
+    use super::*;
+
+    /// A hand-built report: capacity 10_000 cs; 900 productive, 100
+    /// compile startup, 200 data stalls, 300 lost + 100 partial, 400
+    /// queued; PG 0.5.
+    fn report() -> GoodputReport {
+        let mut layer_cs = [0.0; N_LAYERS];
+        layer_cs[StackLayer::Model as usize] = 900.0;
+        layer_cs[StackLayer::Compiler as usize] = 100.0;
+        layer_cs[StackLayer::Data as usize] = 200.0;
+        layer_cs[StackLayer::Hardware as usize] = 400.0;
+        layer_cs[StackLayer::Scheduling as usize] = 400.0;
+        let all_allocated = 900.0 + 100.0 + 200.0 + 300.0;
+        GoodputReport {
+            sg: all_allocated / 10_000.0,
+            rg: 900.0 / all_allocated,
+            pg: 0.5,
+            capacity_cs: 10_000.0,
+            all_allocated_cs: all_allocated,
+            productive_cs: 900.0,
+            lost_cs: 300.0,
+            startup_cs: 100.0,
+            stall_cs: 200.0,
+            partial_cs: 100.0,
+            layer_cs,
+            job_count: 3,
+        }
+    }
+
+    #[test]
+    fn idealizing_a_layer_never_lowers_mpg() {
+        let att = AttributionReport::of(&report());
+        let mpg = att.fleet.mpg();
+        for r in &att.rows {
+            assert!(
+                r.mpg_if_ideal >= mpg - 1e-12,
+                "{}: {} < {mpg}",
+                r.layer.name(),
+                r.mpg_if_ideal
+            );
+            assert!(r.mpg_recovered >= 0.0);
+        }
+    }
+
+    #[test]
+    fn waterfall_matches_hand_computation() {
+        let att = AttributionReport::of(&report());
+        let row = |l: StackLayer| att.rows[l as usize];
+        // Model ideal: pg -> 1, so mpg' = sg * rg.
+        let f = &att.fleet;
+        assert!((row(StackLayer::Model).mpg_if_ideal - f.sg * f.rg).abs() < 1e-12);
+        // Data ideal: 200 cs of stalls become productive.
+        let want = f.sg * (1100.0 / 1500.0) * 0.5;
+        assert!((row(StackLayer::Data).mpg_if_ideal - want).abs() < 1e-12);
+        // Hardware ideal: +400 productive, +100 allocated.
+        let want = (1600.0 / 10_000.0) * (1300.0 / 1600.0) * 0.5;
+        assert!((row(StackLayer::Hardware).mpg_if_ideal - want).abs() < 1e-12);
+        // Scheduling ideal: 400 queued cs become allocated productive.
+        let want = (1900.0 / 10_000.0) * (1300.0 / 1900.0) * 0.5;
+        assert!((row(StackLayer::Scheduling).mpg_if_ideal - want).abs() < 1e-12);
+        // Framework saw no time: idealizing it recovers nothing.
+        assert_eq!(row(StackLayer::Framework).mpg_recovered, 0.0);
+    }
+
+    #[test]
+    fn ranking_orders_by_recovered_mpg() {
+        let att = AttributionReport::of(&report());
+        let ranked = att.ranked();
+        for pair in ranked.windows(2) {
+            assert!(pair[0].mpg_recovered >= pair[1].mpg_recovered);
+        }
+        // PG 0.5 on a low-SG fleet: Model's doubling dominates here.
+        assert_eq!(att.bottleneck(), StackLayer::Model);
+        assert_eq!(ranked.len(), N_LAYERS);
+    }
+
+    #[test]
+    fn degenerate_fleets_do_not_nan() {
+        let mut r = report();
+        r.capacity_cs = 0.0;
+        for row in AttributionReport::of(&r).rows {
+            assert_eq!(row.mpg_if_ideal, 0.0);
+        }
+        let mut r = report();
+        r.all_allocated_cs = 0.0;
+        r.productive_cs = 0.0;
+        r.layer_cs = [0.0; N_LAYERS];
+        for row in AttributionReport::of(&r).rows {
+            assert!(row.mpg_if_ideal.is_finite(), "{:?}", row.layer);
+        }
+    }
+
+    #[test]
+    fn json_and_table_are_deterministic() {
+        let a = AttributionReport::of(&report());
+        let b = AttributionReport::of(&report());
+        assert_eq!(a.to_json().to_string_compact(), b.to_json().to_string_compact());
+        assert_eq!(a.table("t").to_ascii(), b.table("t").to_ascii());
+        let json = a.to_json();
+        assert_eq!(json.get("bottleneck").as_str(), Some("model"));
+        assert_eq!(json.get("layers").as_arr().unwrap().len(), N_LAYERS);
+        // Queued chip-seconds surface under the scheduling layer.
+        let sched = json.get("layers").idx(StackLayer::Scheduling as usize);
+        assert_eq!(sched.get("chip_seconds").as_f64(), Some(400.0));
+    }
+
+    #[test]
+    fn uses_time_class_taxonomy_consistently() {
+        // Guard: the attribution's layer buckets cover exactly the chip
+        // time the class taxonomy classifies (all 7 classes map into the
+        // 6 layers — see StackLayer::of_class).
+        for class in TimeClass::ALL {
+            let _ = StackLayer::of_class(class);
+        }
+    }
+}

@@ -10,6 +10,8 @@ use std::collections::BTreeMap;
 use crate::fleet::ChipGeneration;
 use crate::workload::{Framework, Job, JobId, ModelArch, Phase, SizeClass};
 
+use super::stack::StackLayer;
+
 /// Classification of allocated chip-time (paper Fig. 5 / Fig. 10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TimeClass {
@@ -91,13 +93,16 @@ impl JobMeta {
     }
 }
 
-/// One classified span of chip-time.
+/// One classified span of chip-time. Besides *what kind* of time it was
+/// (`class`), every span records *which stack layer* was responsible
+/// (`layer`) — the provenance the per-layer MPG attribution reduces.
 #[derive(Clone, Copy, Debug)]
 pub struct Span {
     pub t0: f64,
     pub t1: f64,
     pub chips: u32,
     pub class: TimeClass,
+    pub layer: StackLayer,
 }
 
 impl Span {
@@ -131,6 +136,31 @@ pub struct PgSample {
 pub struct JobLedger {
     pub spans: Vec<Span>,
     pub pg_samples: Vec<PgSample>,
+    /// True once any span was recorded out of time order (t0 or t1 below
+    /// its predecessor's). The engine always appends in time order, so
+    /// windowed queries binary-search their first overlapping span;
+    /// hand-built unordered ledgers fall back to the full scan.
+    unordered: bool,
+}
+
+impl JobLedger {
+    /// Index of the first span that can overlap a window starting at
+    /// `w0`, or 0 when the spans are not time-ordered. Skipped spans end
+    /// at or before `w0` and would have contributed exactly 0.0, so
+    /// starting the scan here is bit-identical to scanning from 0.
+    pub fn first_overlapping(&self, w0: f64) -> usize {
+        if self.unordered {
+            0
+        } else {
+            self.spans.partition_point(|s| s.t1 <= w0)
+        }
+    }
+
+    /// Can a windowed scan early-break on `span.t0 >= w1`? Only when the
+    /// spans are time-ordered.
+    pub fn time_ordered(&self) -> bool {
+        !self.unordered
+    }
 }
 
 /// The fleet-wide accounting book.
@@ -194,13 +224,36 @@ impl Ledger {
         self.jobs.entry(meta.id).or_insert_with(|| (meta, JobLedger::default()));
     }
 
-    /// Record a classified span for a job. Zero/negative spans are ignored.
+    /// Record a classified span for a job, attributed to the class's
+    /// default stack layer ([`StackLayer::of_class`]). Zero/negative
+    /// spans are ignored.
     pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        self.add_span_layered(id, t0, t1, chips, class, StackLayer::of_class(class));
+    }
+
+    /// Record a classified span with explicit stack-layer provenance —
+    /// what the simulation engine emits (it refines Startup into
+    /// compile-vs-restore and RuntimeStall into data-vs-framework).
+    pub fn add_span_layered(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
         if t1 <= t0 || chips == 0 {
             return;
         }
         let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
-        entry.1.spans.push(Span { t0, t1, chips, class });
+        let jl = &mut entry.1;
+        if let Some(last) = jl.spans.last() {
+            if t0 < last.t0 || t1 < last.t1 {
+                jl.unordered = true;
+            }
+        }
+        jl.spans.push(Span { t0, t1, chips, class, layer });
         if t1 > self.max_end {
             self.max_end = t1;
         }
@@ -259,6 +312,80 @@ impl Ledger {
             .sum()
     }
 
+    /// Sum of chip-seconds attributed to `layer` over [w0, w1), optionally
+    /// filtered — the stack-layer counterpart of [`Self::class_chip_seconds`],
+    /// and the naive reference for the single-pass fold's layer buckets.
+    /// Same canonical summation order: per-job subtotals in span insertion
+    /// order, jobs combined in `BTreeMap` order.
+    pub fn layer_chip_seconds<F: Fn(&JobMeta) -> bool>(
+        &self,
+        layer: StackLayer,
+        w0: f64,
+        w1: f64,
+        filter: F,
+    ) -> f64 {
+        self.jobs
+            .values()
+            .filter(|(meta, _)| filter(meta))
+            .map(|(_, jl)| {
+                jl.spans
+                    .iter()
+                    .filter(|s| s.layer == layer)
+                    .map(|s| s.clipped(w0, w1))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Demand chip-seconds over [w0, w1): every class, Queued and Partial
+    /// included — the denominator of demand-relative SG (Fig. 16).
+    ///
+    /// Per class, per job, the scan starts at the first span that can
+    /// overlap the window (binary search on the time-ordered span list,
+    /// mirroring the `capacity_chip_seconds` fix) and stops at the first
+    /// span starting past it; skipped spans contributed exactly 0.0 in
+    /// the full scan, so the result is bit-identical to
+    /// [`Self::demand_cs_by_fold`]. Jobs whose spans were recorded out of
+    /// time order (hand-built ledgers) fall back to the full scan.
+    pub fn demand_cs<F: Fn(&JobMeta) -> bool>(&self, w0: f64, w1: f64, filter: F) -> f64 {
+        TimeClass::ALL
+            .iter()
+            .map(|&class| {
+                self.jobs
+                    .values()
+                    .filter(|(meta, _)| filter(meta))
+                    .map(|(_, jl)| {
+                        let mut sub = 0.0;
+                        for s in &jl.spans[jl.first_overlapping(w0)..] {
+                            if jl.time_ordered() && s.t0 >= w1 {
+                                break;
+                            }
+                            if s.class == class {
+                                sub += s.clipped(w0, w1);
+                            }
+                        }
+                        sub
+                    })
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Reference `demand_cs`: one full [`Self::class_chip_seconds`] scan
+    /// per class — the pre-optimization shape, kept for tests asserting
+    /// the binary-searched path never drifts.
+    pub fn demand_cs_by_fold<F: Fn(&JobMeta) -> bool>(
+        &self,
+        w0: f64,
+        w1: f64,
+        filter: F,
+    ) -> f64 {
+        TimeClass::ALL
+            .iter()
+            .map(|&c| self.class_chip_seconds(c, w0, w1, &filter))
+            .sum()
+    }
+
     /// Latest span end ever recorded (O(1); tracked in `add_span`).
     pub fn end_time(&self) -> f64 {
         self.max_end
@@ -305,7 +432,13 @@ mod tests {
 
     #[test]
     fn span_clipping() {
-        let s = Span { t0: 10.0, t1: 20.0, chips: 4, class: TimeClass::Productive };
+        let s = Span {
+            t0: 10.0,
+            t1: 20.0,
+            chips: 4,
+            class: TimeClass::Productive,
+            layer: StackLayer::Model,
+        };
         assert_eq!(s.chip_seconds(), 40.0);
         assert_eq!(s.clipped(0.0, 100.0), 40.0);
         assert_eq!(s.clipped(15.0, 100.0), 20.0);
@@ -425,6 +558,71 @@ mod tests {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
         l.add_pg_sample(1, 0.0, 1.0, 8, 1.5);
+    }
+
+    #[test]
+    fn default_layers_follow_class_mapping() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        for (i, class) in TimeClass::ALL.iter().enumerate() {
+            let t = i as f64 * 10.0;
+            l.add_span(1, t, t + 10.0, 4, *class);
+        }
+        for s in &l.jobs[&1].1.spans {
+            assert_eq!(s.layer, StackLayer::of_class(s.class), "{:?}", s.class);
+        }
+        // Pure-layer buckets read back their class totals bitwise.
+        let model = l.layer_chip_seconds(StackLayer::Model, 0.0, 100.0, |_| true);
+        let prod = l.class_chip_seconds(TimeClass::Productive, 0.0, 100.0, |_| true);
+        assert_eq!(model.to_bits(), prod.to_bits());
+    }
+
+    #[test]
+    fn explicit_layer_overrides_default() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1));
+        l.add_span_layered(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Framework);
+        assert_eq!(l.jobs[&1].1.spans[0].layer, StackLayer::Framework);
+        assert_eq!(l.layer_chip_seconds(StackLayer::Compiler, 0.0, 10.0, |_| true), 0.0);
+        assert_eq!(l.layer_chip_seconds(StackLayer::Framework, 0.0, 10.0, |_| true), 40.0);
+    }
+
+    /// The binary-searched demand scan must equal the per-class full-scan
+    /// reference bitwise, for time-ordered (engine-shaped) and unordered
+    /// (hand-built) ledgers alike.
+    #[test]
+    fn demand_cs_binary_search_matches_fold() {
+        let mut ordered = Ledger::new();
+        ordered.ensure_job(meta(1));
+        ordered.ensure_job(meta(2));
+        let mut t = 0.0;
+        for (i, class) in TimeClass::ALL.iter().cycle().take(40).enumerate() {
+            let dur = 3.0 + (i % 7) as f64 * 1.7;
+            ordered.add_span(1 + (i % 2) as u64, t, t + dur, 4, *class);
+            t += dur * 0.9; // overlapping but t0/t1 both non-decreasing
+        }
+        assert!(ordered.jobs[&1].1.time_ordered());
+
+        let mut unordered = Ledger::new();
+        unordered.ensure_job(meta(1));
+        unordered.add_span(1, 50.0, 60.0, 4, TimeClass::Productive);
+        unordered.add_span(1, 5.0, 15.0, 4, TimeClass::Queued);
+        unordered.add_span(1, 30.0, 31.0, 4, TimeClass::Lost);
+        assert!(!unordered.jobs[&1].1.time_ordered());
+
+        for l in [&ordered, &unordered] {
+            for (w0, w1) in
+                [(0.0, 1e9), (10.0, 40.0), (33.3, 57.9), (90.0, 95.0), (200.0, 100.0)]
+            {
+                let fast = l.demand_cs(w0, w1, |_| true);
+                let slow = l.demand_cs_by_fold(w0, w1, |_| true);
+                assert_eq!(fast.to_bits(), slow.to_bits(), "[{w0}, {w1})");
+                let filt = |m: &JobMeta| m.id == 1;
+                let fast = l.demand_cs(w0, w1, filt);
+                let slow = l.demand_cs_by_fold(w0, w1, filt);
+                assert_eq!(fast.to_bits(), slow.to_bits(), "job 1 [{w0}, {w1})");
+            }
+        }
     }
 
     #[test]

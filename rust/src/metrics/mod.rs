@@ -15,9 +15,12 @@ pub mod goodput;
 pub mod ledger;
 pub mod reduce;
 pub mod series;
+pub mod stack;
 pub mod windowed;
 
+pub use goodput::attribution::AttributionReport;
 pub use goodput::{GoodputReport, SegmentReport};
 pub use ledger::{JobMeta, Ledger, TimeClass};
 pub use series::{TimeSeries, Window};
+pub use stack::StackLayer;
 pub use windowed::WindowedLedger;

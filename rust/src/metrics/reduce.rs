@@ -26,17 +26,27 @@
 
 use super::goodput::GoodputReport;
 use super::ledger::{JobMeta, Ledger, TimeClass};
+use super::stack::{StackLayer, N_LAYERS};
 
 /// Number of [`TimeClass`] buckets every cell tracks.
 pub const N_CLASSES: usize = TimeClass::ALL.len();
 
-/// One reduction cell: all seven class chip-second buckets plus the PG
-/// sample reduction and the active-job count for one (group, window).
+/// One reduction cell: all seven class chip-second buckets, the six
+/// stack-layer attribution buckets, the PG sample reduction, and the
+/// active-job count for one (group, window).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CellAccum {
     /// Chip-seconds per class, indexed by `TimeClass as usize`
     /// (declaration order == `TimeClass::ALL` order).
     pub class_cs: [f64; N_CLASSES],
+    /// Chip-seconds per stack layer, indexed by `StackLayer as usize` —
+    /// filled by the SAME `add_piece` calls that fill `class_cs`, so
+    /// every reduction path produces bit-identical layer cells under the
+    /// one canonical summation order. A layer whose classes are
+    /// exclusively its own (Model ⇐ Productive, Scheduling ⇐ Queued)
+    /// receives exactly the additions its class bucket does and is
+    /// therefore bitwise equal to it.
+    pub layer_cs: [f64; N_LAYERS],
     /// PG denominator: productive chip-seconds covered by samples.
     pub pg_w: f64,
     /// PG numerator: sample-weighted sum of per-sample PG.
@@ -47,10 +57,11 @@ pub struct CellAccum {
 }
 
 impl CellAccum {
-    /// Fold one clipped span piece into its class bucket.
+    /// Fold one clipped span piece into its class AND layer buckets.
     #[inline]
-    pub fn add_piece(&mut self, class: TimeClass, chip_seconds: f64) {
+    pub fn add_piece(&mut self, class: TimeClass, layer: StackLayer, chip_seconds: f64) {
         self.class_cs[class as usize] += chip_seconds;
+        self.layer_cs[layer as usize] += chip_seconds;
     }
 
     /// Fold one clipped PG-sample piece.
@@ -72,6 +83,9 @@ impl CellAccum {
     /// addition per job, of that job's insertion-order subtotal.
     pub fn merge_job(&mut self, job: &CellAccum) {
         for (acc, &c) in self.class_cs.iter_mut().zip(&job.class_cs) {
+            *acc += c;
+        }
+        for (acc, &c) in self.layer_cs.iter_mut().zip(&job.layer_cs) {
             *acc += c;
         }
         self.pg_w += job.pg_w;
@@ -108,6 +122,7 @@ impl CellAccum {
             startup_cs: startup,
             stall_cs: ckpt + rstall,
             partial_cs: partial,
+            layer_cs: self.layer_cs,
             job_count: self.job_count,
         }
     }
@@ -152,7 +167,7 @@ pub fn fold_ledger(
                 if w0 >= s.t1 {
                     break;
                 }
-                job_cells[w].add_piece(s.class, s.clipped(w0, w1));
+                job_cells[w].add_piece(s.class, s.layer, s.clipped(w0, w1));
                 touched_lo = touched_lo.min(w);
                 touched_hi = touched_hi.max(w);
             }
@@ -263,6 +278,30 @@ mod tests {
         assert_eq!(cells[1][0].job_count, 1);
         assert_eq!(cells[1][0].class_cs[TimeClass::Lost as usize], 20.0);
         assert_eq!(cells[1][0].class_cs[TimeClass::Productive as usize], 0.0);
+    }
+
+    #[test]
+    fn fold_fills_layer_buckets_alongside_classes() {
+        let mut l = Ledger::new();
+        l.ensure_job(meta(1, Phase::Training));
+        // One class (Startup) split across two layers via explicit tags —
+        // the engine's compile-vs-restore refinement.
+        l.add_span_layered(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Compiler);
+        l.add_span_layered(1, 10.0, 14.0, 4, TimeClass::Startup, StackLayer::Framework);
+        l.add_span(1, 14.0, 24.0, 4, TimeClass::Productive);
+        let cells = fold_ledger(&l, &[(0.0, 30.0)], 1, |_, gs| gs.push(0));
+        let cell = &cells[0][0];
+        assert_eq!(cell.class_cs[TimeClass::Startup as usize], 56.0);
+        assert_eq!(cell.layer_cs[StackLayer::Compiler as usize], 40.0);
+        assert_eq!(cell.layer_cs[StackLayer::Framework as usize], 16.0);
+        // Model is Productive's exclusive layer: bitwise equal buckets.
+        assert_eq!(
+            cell.layer_cs[StackLayer::Model as usize].to_bits(),
+            cell.class_cs[TimeClass::Productive as usize].to_bits()
+        );
+        // And the finalized report carries the buckets through verbatim.
+        let r = cell.finalize(1000.0);
+        assert_eq!(r.layer_cs, cell.layer_cs);
     }
 
     #[test]

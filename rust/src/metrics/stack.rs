@@ -1,0 +1,126 @@
+//! Stack-layer provenance for chip-time accounting (paper §3 / §6: "ML
+//! fleets extend beyond the hardware layer, with model, data, framework,
+//! compiler, and scheduling layers significantly impacting performance").
+//!
+//! Every classified [`Span`](super::ledger::Span) carries, besides its
+//! [`TimeClass`] (*what kind* of time it was), a [`StackLayer`] (*which
+//! layer of the ML system stack* was responsible). The reduction engine
+//! fills a per-layer chip-second bucket for every (segment, window) cell
+//! in the same single pass that fills the class buckets, and
+//! `goodput::attribution` turns those buckets into the paper's per-layer
+//! MPG waterfall (fleet MPG plus the MPG recovered if each layer were
+//! made ideal — the bottleneck-ranking method).
+//!
+//! # Layer order
+//!
+//! [`StackLayer::ALL`] is ordered so that walking layers and, within each
+//! layer, its default classes (see [`StackLayer::of_class`]) visits the
+//! classes in exactly [`TimeClass::ALL`] order — the pinned canonical
+//! summation order every reduction shares. Keep the two orders aligned
+//! when adding variants.
+
+use super::ledger::TimeClass;
+
+/// A layer of the ML system stack (paper Fig. 2's decomposition).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StackLayer {
+    /// The model/program itself: productive step execution (whose
+    /// *efficiency* is what PG measures).
+    Model,
+    /// Compilation: program load + compile cost at (re)startup.
+    Compiler,
+    /// Framework/runtime orchestration: checkpoint writes, checkpoint
+    /// restores, and the framework's base input-dispatch overhead.
+    Framework,
+    /// Data/input pipeline: host-bound input stalls and storage-driven
+    /// stall regressions.
+    Data,
+    /// Hardware: machine failures — lost uncheckpointed progress and
+    /// gang-incomplete (Partial) time.
+    Hardware,
+    /// Cluster scheduling: time spent waiting in queue for resources.
+    Scheduling,
+}
+
+/// Number of stack layers every attribution cell tracks.
+pub const N_LAYERS: usize = StackLayer::ALL.len();
+
+impl StackLayer {
+    pub const ALL: [StackLayer; 6] = [
+        StackLayer::Model,
+        StackLayer::Compiler,
+        StackLayer::Framework,
+        StackLayer::Data,
+        StackLayer::Hardware,
+        StackLayer::Scheduling,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StackLayer::Model => "model",
+            StackLayer::Compiler => "compiler",
+            StackLayer::Framework => "framework",
+            StackLayer::Data => "data",
+            StackLayer::Hardware => "hardware",
+            StackLayer::Scheduling => "scheduling",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<StackLayer> {
+        Self::ALL.iter().copied().find(|l| l.name() == s)
+    }
+
+    /// The default layer a [`TimeClass`] attributes to when the emitter
+    /// has no finer-grained provenance (plain `Ledger::add_span`). The
+    /// simulation engine refines two of these per span: `Startup` spans
+    /// whose cost is restore-dominated attribute to Framework instead of
+    /// Compiler, and `RuntimeStall` spans whose stall is framework base
+    /// overhead (not data-pipeline amplification) attribute to Framework
+    /// instead of Data — see `runtime_model`.
+    pub fn of_class(class: TimeClass) -> StackLayer {
+        match class {
+            TimeClass::Productive => StackLayer::Model,
+            TimeClass::Startup => StackLayer::Compiler,
+            TimeClass::CkptStall => StackLayer::Framework,
+            TimeClass::RuntimeStall => StackLayer::Data,
+            TimeClass::Lost | TimeClass::Partial => StackLayer::Hardware,
+            TimeClass::Queued => StackLayer::Scheduling,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_indices_follow_declaration_order() {
+        for (i, l) in StackLayer::ALL.iter().enumerate() {
+            assert_eq!(*l as usize, i, "{}", l.name());
+        }
+    }
+
+    #[test]
+    fn layer_names_roundtrip() {
+        for l in StackLayer::ALL {
+            assert_eq!(StackLayer::from_name(l.name()), Some(l));
+        }
+        assert_eq!(StackLayer::from_name("not-a-layer"), None);
+    }
+
+    /// The canonical-order alignment documented on the module: walking
+    /// layers in ALL order and their default classes in TimeClass::ALL
+    /// order visits every class exactly once, in TimeClass::ALL order.
+    #[test]
+    fn layer_order_partitions_classes_in_class_order() {
+        let mut visited = Vec::new();
+        for layer in StackLayer::ALL {
+            for class in TimeClass::ALL {
+                if StackLayer::of_class(class) == layer {
+                    visited.push(class);
+                }
+            }
+        }
+        assert_eq!(visited, TimeClass::ALL.to_vec());
+    }
+}

@@ -39,6 +39,7 @@ use super::goodput::{Axis, GoodputReport, SegmentReport};
 use super::ledger::{capacity_integral, push_capacity_step, JobMeta, Span, TimeClass};
 use super::reduce::CellAccum;
 use super::series::{TimeSeries, Window};
+use super::stack::StackLayer;
 
 /// Per-job accumulator state: a dense run of window cells starting at
 /// `first_window`, plus the whole-horizon subtotal.
@@ -118,10 +119,25 @@ impl WindowedLedger {
         push_capacity_step(&mut self.capacity_steps, t, chips);
     }
 
-    /// Record a classified span: folded into the job's whole-horizon
-    /// subtotal (one addition, clipped to [0, horizon)) and split across
-    /// the window cells it overlaps. The raw span is NOT retained.
+    /// Record a classified span attributed to the class's default stack
+    /// layer — see [`Self::add_span_layered`].
     pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        self.add_span_layered(id, t0, t1, chips, class, StackLayer::of_class(class));
+    }
+
+    /// Record a classified span with explicit stack-layer provenance:
+    /// folded into the job's whole-horizon subtotal (one addition,
+    /// clipped to [0, horizon)) and split across the window cells it
+    /// overlaps. The raw span is NOT retained.
+    pub fn add_span_layered(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
         if t1 <= t0 || chips == 0 {
             return;
         }
@@ -129,15 +145,15 @@ impl WindowedLedger {
         let windows = &self.windows;
         let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
         let wj = &mut entry.1;
-        let span = Span { t0, t1, chips, class };
-        wj.total.add_piece(class, span.clipped(0.0, horizon));
+        let span = Span { t0, t1, chips, class, layer };
+        wj.total.add_piece(class, layer, span.clipped(0.0, horizon));
         let start = windows.partition_point(|&(_, w1)| w1 <= t0);
         for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
             if w0 >= t1 {
                 break;
             }
             let cell = Self::cell_mut(wj, w, &mut self.cells_allocated);
-            cell.add_piece(class, span.clipped(w0, w1));
+            cell.add_piece(class, layer, span.clipped(w0, w1));
         }
     }
 
@@ -319,15 +335,18 @@ mod tests {
             win.ensure_job(m);
         }
         // Interleave spans across jobs (the engine's write pattern) with
-        // boundary-straddling and beyond-horizon spans.
+        // boundary-straddling and beyond-horizon spans; random layer tags
+        // exercise the per-layer cells, including off-default ones (the
+        // engine's compile-vs-restore / data-vs-framework refinements).
         for _ in 0..300 {
             let id = 1 + rng.below(10);
             let t0 = rng.range_f64(0.0, 1100.0);
             let t1 = t0 + rng.range_f64(0.0, 200.0);
             let chips = 1 + rng.below(16) as u32;
             let class = TimeClass::ALL[rng.below(7) as usize];
-            full.add_span(id, t0, t1, chips, class);
-            win.add_span(id, t0, t1, chips, class);
+            let layer = StackLayer::ALL[rng.below(6) as usize];
+            full.add_span_layered(id, t0, t1, chips, class, layer);
+            win.add_span_layered(id, t0, t1, chips, class, layer);
             if class == TimeClass::Productive {
                 let pg = rng.range_f64(0.0, 1.0);
                 full.add_pg_sample(id, t0, t1, chips, pg);

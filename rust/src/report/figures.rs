@@ -264,13 +264,13 @@ pub fn fig14_rg_segments(seed: u64) -> Fig14 {
         t0: 30.0 * DAY_S,
         t1: quarter,
         phase: None,
-        effects: EraEffects { stall_mult: 0.45, restore_mult: 1.0 },
+        effects: EraEffects { stall_mult: 0.45, ..Default::default() },
     });
     cfg.eras.add(EraRule {
         t0: 55.0 * DAY_S,
         t1: quarter,
         phase: None,
-        effects: EraEffects { stall_mult: 1.0, restore_mult: 0.5 },
+        effects: EraEffects { restore_mult: 0.5, ..Default::default() },
     });
     // Async checkpointing adoption is high in this quarter's cohort.
     cfg.generator.async_ckpt_fraction = 0.5;
@@ -340,7 +340,7 @@ pub fn fig15_rg_phase(seed: u64) -> Fig15 {
         t0: 3.0 * MONTH_S,
         t1: 6.0 * MONTH_S,
         phase: Some(Phase::BulkInference),
-        effects: EraEffects { stall_mult: 6.0, restore_mult: 4.0 },
+        effects: EraEffects { stall_mult: 6.0, restore_mult: 4.0, ..Default::default() },
     });
     let sim = SweepRunner::run_single("fig15", cfg).sim;
 
@@ -694,7 +694,7 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     }
     let mut table = Table::new(
         "Ablations — one design choice at a time, same 7-day trace",
-        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt"],
+        &["variant", "SG", "RG", "PG", "MPG", "completed", "preempt", "bottleneck"],
     );
     let mut rows = Vec::new();
     SweepRunner::run_streaming_summaries(spec, None, |s| {
@@ -708,6 +708,9 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
             f(r.mpg(), 3),
             res.completed_jobs.to_string(),
             res.preemptions.to_string(),
+            // Which stack layer each ablation's fleet is bottlenecked on
+            // (the per-layer attribution waterfall's top row).
+            crate::metrics::AttributionReport::of(&r).bottleneck().name().to_string(),
         ]);
         rows.push(AblationRow {
             name: s.name,
@@ -723,13 +726,93 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
 }
 
 // ---------------------------------------------------------------------------
+// Stack-layer MPG attribution waterfall (paper §6's per-layer
+// characterization; companion to Table 2's per-layer optimizations)
+// ---------------------------------------------------------------------------
+
+pub struct AttributionFigure {
+    /// (scenario label, attribution) — baseline plus one degraded-layer
+    /// scenario per degradation preset, so the waterfall's ranking shift
+    /// is visible.
+    pub scenarios: Vec<(String, crate::metrics::AttributionReport)>,
+    pub table: Table,
+}
+
+/// The per-layer MPG waterfall across a baseline and per-layer degraded
+/// scenarios: for each scenario, the chip-time share each stack layer is
+/// responsible for and the fleet MPG recovered if that layer were ideal.
+/// Runs as a parallel sweep over the shared trace-free configs.
+pub fn attribution_waterfall(seed: u64) -> AttributionFigure {
+    attribution_waterfall_with_workers(seed, 0)
+}
+
+pub fn attribution_waterfall_with_workers(seed: u64, workers: usize) -> AttributionFigure {
+    attribution_impl(seed, workers, 4.0)
+}
+
+fn attribution_impl(seed: u64, workers: usize, days: f64) -> AttributionFigure {
+    use crate::metrics::{AttributionReport, StackLayer};
+
+    let presets = [
+        "none",
+        "data-3x",
+        "framework-3x",
+        "compiler-3x",
+        "hardware-3x",
+        "scheduling-8x",
+    ];
+    let mut spec = SweepSpec::new().workers(workers);
+    for preset in presets {
+        // ONE sim seed for every scenario: the workload and event streams
+        // stay comparable, so waterfall differences are attributable to
+        // the degraded layer alone.
+        let mut cfg = SimConfig { seed, duration_s: days * DAY_S, ..Default::default() };
+        cfg.generator.arrivals_per_hour = 10.0;
+        assert!(
+            crate::sim::sweep::apply_degrade_preset(&mut cfg, preset),
+            "unknown degrade preset {preset}"
+        );
+        spec.push(preset, cfg);
+    }
+    let mut table = Table::new(
+        "Stack-layer MPG attribution — waterfall per degradation scenario",
+        &std::iter::once("scenario")
+            .chain(std::iter::once("MPG"))
+            .chain(StackLayer::ALL.iter().map(|l| l.name()))
+            .chain(std::iter::once("bottleneck"))
+            .collect::<Vec<_>>(),
+    );
+    let mut scenarios = Vec::new();
+    SweepRunner::run_streaming_summaries(spec, None, |s| {
+        let att = AttributionReport::of(&s.goodput);
+        let mut row = vec![s.name.clone(), f(s.goodput.mpg(), 4)];
+        // Per-layer column: recovered MPG if that layer were ideal.
+        row.extend(att.rows.iter().map(|r| format!("+{}", f(r.mpg_recovered, 4))));
+        row.push(att.bottleneck().name().to_string());
+        table.row(row);
+        scenarios.push((s.name, att));
+    });
+    AttributionFigure { scenarios, table }
+}
+
+// ---------------------------------------------------------------------------
 // Figure registry — the `figures` CLI fan-out
 // ---------------------------------------------------------------------------
 
 /// Every figure/table generator name, in the paper's order. `figures all`
 /// fans exactly this list out over the `util::pool` substrate.
-pub const FIGURE_NAMES: [&str; 9] =
-    ["fig1", "fig4", "fig6", "fig12", "fig13", "fig14", "fig15", "fig16", "table2"];
+pub const FIGURE_NAMES: [&str; 10] = [
+    "fig1",
+    "fig4",
+    "fig6",
+    "fig12",
+    "fig13",
+    "fig14",
+    "fig15",
+    "fig16",
+    "table2",
+    "attribution",
+];
 
 /// A deferred figure generator — the unit of work the `figures` CLI
 /// streams through the worker pool (boxed so a heterogeneous set fans out
@@ -739,9 +822,10 @@ pub type FigureGen = Box<dyn FnOnce() -> Table + Send>;
 /// Look up one generator by name; None for an unknown name. Each closure
 /// is independent and deterministic given `seed`, so `figures all` can
 /// run them concurrently and still print identical tables in order.
-/// `inner_workers` bounds any pool a generator spawns internally (only
-/// fig13 has one): pass 1 when fanning several figures out so the outer
-/// pool is the only source of parallelism, 0 for a standalone figure.
+/// `inner_workers` bounds any pool a generator spawns internally (fig13
+/// and attribution have one): pass 1 when fanning several figures out so
+/// the outer pool is the only source of parallelism, 0 for a standalone
+/// figure.
 pub fn generator(name: &str, seed: u64, inner_workers: usize) -> Option<FigureGen> {
     Some(match name {
         "fig1" => Box::new(move || fig1_fleet_mix().table),
@@ -755,6 +839,9 @@ pub fn generator(name: &str, seed: u64, inner_workers: usize) -> Option<FigureGe
         "fig15" => Box::new(move || fig15_rg_phase(seed).table),
         "fig16" => Box::new(move || fig16_sg_jobsize(seed).table),
         "table2" => Box::new(move || table2_matrix().table),
+        "attribution" => {
+            Box::new(move || attribution_waterfall_with_workers(seed, inner_workers).table)
+        }
         _ => return None,
     })
 }
@@ -894,6 +981,40 @@ mod tests {
             assert!(generator(name, 1, 1).is_some(), "{name} must resolve");
         }
         assert!(generator("fig99", 1, 1).is_none());
+    }
+
+    #[test]
+    fn attribution_waterfall_shifts_with_degraded_layer() {
+        use crate::metrics::StackLayer;
+        // Short horizon: the point is the ranking shift, not the 4-day
+        // figure itself.
+        let fig = attribution_impl(0xA77, 0, 1.0);
+        assert_eq!(fig.scenarios.len(), 6);
+        let att = |name: &str| &fig.scenarios.iter().find(|(n, _)| n == name).unwrap().1;
+        let base = att("none");
+        // Regressing one layer must grow that layer's recovered-MPG
+        // headroom relative to the baseline.
+        for (preset, layer) in [
+            ("data-3x", StackLayer::Data),
+            ("compiler-3x", StackLayer::Compiler),
+            ("framework-3x", StackLayer::Framework),
+        ] {
+            let degraded = att(preset);
+            assert!(
+                degraded.rows[layer as usize].mpg_recovered
+                    >= base.rows[layer as usize].mpg_recovered,
+                "{preset}: {} vs base {}",
+                degraded.rows[layer as usize].mpg_recovered,
+                base.rows[layer as usize].mpg_recovered
+            );
+        }
+        // Every scenario's waterfall is internally consistent.
+        for (name, att) in &fig.scenarios {
+            let mpg = att.fleet.mpg();
+            for r in &att.rows {
+                assert!(r.mpg_if_ideal >= mpg - 1e-12, "{name}/{}", r.layer.name());
+            }
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! `write_stall_s` checkpoint stalls, losing the uncheckpointed tail if the
 //! window ends in eviction/failure.
 
-use crate::metrics::TimeClass;
+use crate::metrics::{StackLayer, TimeClass};
 use crate::workload::{Job, Phase};
 
 /// Why an allocation window ended.
@@ -23,17 +23,25 @@ pub enum WindowEnd {
 
 /// Era multipliers — scenario-time effects on the runtime layer (e.g. the
 /// Fig. 15 bulk-inference regression when sharded-weight models arrive).
+/// Each knob scales one stack layer's cost source, so the per-layer MPG
+/// attribution can localize a regression; the `sim::engine` additionally
+/// folds the `SimConfig` layer-degradation knobs into these before
+/// accounting. All default to 1.0 (identity — bit-identical arithmetic).
 #[derive(Clone, Copy, Debug)]
 pub struct EraEffects {
-    /// Multiplies input-pipeline stall fraction (data reads etc.).
+    /// Multiplies input-pipeline stall fraction (data layer: reads etc.).
     pub stall_mult: f64,
-    /// Multiplies checkpoint restore cost.
+    /// Multiplies checkpoint restore cost (framework layer).
     pub restore_mult: f64,
+    /// Multiplies program load + compile cost (compiler layer).
+    pub compile_mult: f64,
+    /// Multiplies checkpoint write stalls (framework layer).
+    pub ckpt_mult: f64,
 }
 
 impl Default for EraEffects {
     fn default() -> Self {
-        EraEffects { stall_mult: 1.0, restore_mult: 1.0 }
+        EraEffects { stall_mult: 1.0, restore_mult: 1.0, compile_mult: 1.0, ckpt_mult: 1.0 }
     }
 }
 
@@ -65,8 +73,12 @@ impl Default for RuntimeModel {
 /// The classified outcome of one allocation window.
 #[derive(Clone, Debug)]
 pub struct WindowAccount {
-    /// (class, seconds) in window order; seconds sum to the window length.
-    pub pieces: Vec<(TimeClass, f64)>,
+    /// (class, stack layer, seconds) in window order; seconds sum to the
+    /// window length. The layer is the per-piece attribution refinement:
+    /// Startup pieces split into compile (Compiler) vs restore-dominated
+    /// (Framework), RuntimeStall pieces into data-pipeline (Data) vs
+    /// framework-overhead (Framework) stalls.
+    pub pieces: Vec<(TimeClass, StackLayer, f64)>,
     /// Job work completed and SAVED by the end of the window (absolute).
     pub work_done_after: f64,
     /// True if the job finished inside the window.
@@ -84,15 +96,48 @@ impl RuntimeModel {
         (base * (1.0 + 4.0 * job.step.host_fraction) * era.stall_mult).min(0.9)
     }
 
-    fn startup_s(&self, job: &Job, restarted: bool, era: &EraEffects) -> f64 {
-        let mut s = job.startup_s;
+    /// Which stack layer a RuntimeStall span attributes to: the stall is
+    /// `base × (1 + 4·host_fraction) × era.stall_mult`, i.e. the
+    /// framework's base input-dispatch overhead amplified by
+    /// host-boundedness and era data regressions. When the amplification
+    /// at least doubles the base, the data pipeline dominates the stall
+    /// (Data); otherwise it is framework bookkeeping (Framework).
+    pub fn stall_layer(&self, job: &Job, era: &EraEffects) -> StackLayer {
+        if (1.0 + 4.0 * job.step.host_fraction) * era.stall_mult >= 2.0 {
+            StackLayer::Data
+        } else {
+            StackLayer::Framework
+        }
+    }
+
+    /// (compile seconds, restore seconds) of a window's startup cost.
+    /// Compile pays the compiler-layer era/degrade multiplier and the AOT
+    /// cache discount; restarted windows add the framework-layer
+    /// checkpoint restore.
+    fn startup_parts(&self, job: &Job, restarted: bool, era: &EraEffects) -> (f64, f64) {
+        let mut compile = job.startup_s * era.compile_mult;
         if self.aot_cache_enabled {
-            s *= self.aot_cache_startup_mult;
+            compile *= self.aot_cache_startup_mult;
         }
-        if restarted {
-            s += job.ckpt.restore_s * era.restore_mult;
+        let restore = if restarted { job.ckpt.restore_s * era.restore_mult } else { 0.0 };
+        (compile, restore)
+    }
+
+    fn startup_s(&self, job: &Job, restarted: bool, era: &EraEffects) -> f64 {
+        let (compile, restore) = self.startup_parts(job, restarted, era);
+        compile + restore
+    }
+
+    /// Which stack layer a Startup span attributes to: Compiler when the
+    /// program-load-and-compile cost dominates, Framework when the
+    /// checkpoint restore does.
+    fn startup_layer(&self, job: &Job, restarted: bool, era: &EraEffects) -> StackLayer {
+        let (compile, restore) = self.startup_parts(job, restarted, era);
+        if restore > compile {
+            StackLayer::Framework
+        } else {
+            StackLayer::Compiler
         }
-        s
     }
 
     /// Wall-clock seconds of allocation the job needs (from scratch in this
@@ -119,7 +164,7 @@ impl RuntimeModel {
                 // stepping, its input stalls, and one checkpoint write.
                 let intervals = (remaining / job.ckpt.interval_s).ceil();
                 let stepping = remaining * (1.0 + stall);
-                startup + stepping + intervals * job.ckpt.write_stall_s
+                startup + stepping + intervals * (job.ckpt.write_stall_s * era.ckpt_mult)
             }
         }
     }
@@ -135,12 +180,13 @@ impl RuntimeModel {
         era: &EraEffects,
     ) -> WindowAccount {
         assert!(window_s >= 0.0);
-        let mut pieces: Vec<(TimeClass, f64)> = Vec::new();
+        let mut pieces: Vec<(TimeClass, StackLayer, f64)> = Vec::new();
         let mut t = 0.0;
 
         let startup = self.startup_s(job, restarted, era).min(window_s);
         if startup > 0.0 {
-            pieces.push((TimeClass::Startup, startup));
+            let layer = self.startup_layer(job, restarted, era);
+            pieces.push((TimeClass::Startup, layer, startup));
             t += startup;
         }
         let mut saved = work_done;
@@ -151,7 +197,7 @@ impl RuntimeModel {
             let remaining = (job.work_s - work_done).max(0.0);
             let productive = (window_s - t).min(remaining);
             if productive > 0.0 {
-                pieces.push((TimeClass::Productive, productive));
+                pieces.push((TimeClass::Productive, StackLayer::Model, productive));
                 saved += productive;
             }
             let completed = saved >= job.work_s - 1e-9;
@@ -159,6 +205,8 @@ impl RuntimeModel {
         }
 
         let stall = self.stall_frac(job, era);
+        let stall_layer = self.stall_layer(job, era);
+        let write_stall = job.ckpt.write_stall_s * era.ckpt_mult;
         let mut completed = false;
 
         // Walk checkpoint intervals until window or work is exhausted.
@@ -170,31 +218,31 @@ impl RuntimeModel {
 
             if t + chunk_step <= window_s + 1e-12 {
                 // Full interval of stepping fits.
-                pieces.push((TimeClass::Productive, productive_part));
+                pieces.push((TimeClass::Productive, StackLayer::Model, productive_part));
                 if stall_part > 0.0 {
-                    pieces.push((TimeClass::RuntimeStall, stall_part));
+                    pieces.push((TimeClass::RuntimeStall, stall_layer, stall_part));
                 }
                 t += chunk_step;
                 // Checkpoint write (or final save on completion).
-                let write = job.ckpt.write_stall_s.min((window_s - t).max(0.0));
+                let write = write_stall.min((window_s - t).max(0.0));
                 if saved + chunk_work >= job.work_s - 1e-12 {
                     // Completion save: always charged, capped by window.
                     if write > 0.0 {
-                        pieces.push((TimeClass::CkptStall, write));
+                        pieces.push((TimeClass::CkptStall, StackLayer::Framework, write));
                     }
                     saved = job.work_s;
                     completed = true;
                     break;
                 }
-                if t + job.ckpt.write_stall_s <= window_s + 1e-12 {
-                    pieces.push((TimeClass::CkptStall, job.ckpt.write_stall_s));
-                    t += job.ckpt.write_stall_s;
+                if t + write_stall <= window_s + 1e-12 {
+                    pieces.push((TimeClass::CkptStall, StackLayer::Framework, write_stall));
+                    t += write_stall;
                     saved += chunk_work;
                 } else {
                     // Window ends mid-checkpoint-write: that write is lost.
                     let partial_write = window_s - t;
                     if partial_write > 0.0 {
-                        pieces.push((TimeClass::Lost, partial_write));
+                        pieces.push((TimeClass::Lost, StackLayer::Hardware, partial_write));
                     }
                     // The whole interval's work wasn't saved: reclassify.
                     reclassify_tail_as_lost(&mut pieces, chunk_step);
@@ -205,11 +253,11 @@ impl RuntimeModel {
                 let avail = window_s - t;
                 if end == WindowEnd::Evicted {
                     // Uncheckpointed tail -> Lost entirely.
-                    pieces.push((TimeClass::Lost, avail));
+                    pieces.push((TimeClass::Lost, StackLayer::Hardware, avail));
                 } else {
                     // Completed shouldn't land here (caller sizes windows
                     // via wall_to_complete), but classify conservatively.
-                    pieces.push((TimeClass::Lost, avail));
+                    pieces.push((TimeClass::Lost, StackLayer::Hardware, avail));
                 }
                 break;
             }
@@ -221,16 +269,18 @@ impl RuntimeModel {
 
 /// Reclassify the last `amount` seconds of Productive/RuntimeStall pieces as
 /// Lost (an interval whose checkpoint never landed). Any trailing Lost
-/// pieces are merged into the single Lost tail this produces.
-fn reclassify_tail_as_lost(pieces: &mut Vec<(TimeClass, f64)>, mut amount: f64) {
+/// pieces are merged into the single Lost tail this produces. Lost time is
+/// hardware-layer provenance: the progress evaporated with the machine,
+/// whatever layer was executing when it did.
+fn reclassify_tail_as_lost(pieces: &mut Vec<(TimeClass, StackLayer, f64)>, mut amount: f64) {
     let mut lost = 0.0;
-    while let Some(&(TimeClass::Lost, d)) = pieces.last() {
+    while let Some(&(TimeClass::Lost, _, d)) = pieces.last() {
         lost += d;
         pieces.pop();
     }
     while amount > 1e-12 {
         match pieces.last_mut() {
-            Some((class, dur))
+            Some((class, _, dur))
                 if matches!(class, TimeClass::Productive | TimeClass::RuntimeStall) =>
             {
                 let take = amount.min(*dur);
@@ -245,7 +295,7 @@ fn reclassify_tail_as_lost(pieces: &mut Vec<(TimeClass, f64)>, mut amount: f64) 
         }
     }
     if lost > 0.0 {
-        pieces.push((TimeClass::Lost, lost));
+        pieces.push((TimeClass::Lost, StackLayer::Hardware, lost));
     }
 }
 
@@ -281,11 +331,15 @@ mod tests {
     }
 
     fn sum_class(acct: &WindowAccount, class: TimeClass) -> f64 {
-        acct.pieces.iter().filter(|(c, _)| *c == class).map(|(_, d)| d).sum()
+        acct.pieces.iter().filter(|(c, _, _)| *c == class).map(|(_, _, d)| d).sum()
+    }
+
+    fn sum_layer(acct: &WindowAccount, layer: StackLayer) -> f64 {
+        acct.pieces.iter().filter(|(_, l, _)| *l == layer).map(|(_, _, d)| d).sum()
     }
 
     fn total(acct: &WindowAccount) -> f64 {
-        acct.pieces.iter().map(|(_, d)| d).sum()
+        acct.pieces.iter().map(|(_, _, d)| d).sum()
     }
 
     #[test]
@@ -381,12 +435,78 @@ mod tests {
     }
 
     #[test]
+    fn startup_layer_splits_compile_vs_restore() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let era = EraEffects::default();
+        // Fresh start: all startup is compile -> Compiler layer.
+        let mut j = job(Phase::Training, 1000.0);
+        let acct = rm.account(&j, false, 0.0, 30.0, WindowEnd::Evicted, &era);
+        assert_eq!(sum_layer(&acct, StackLayer::Compiler), 30.0);
+        assert_eq!(sum_layer(&acct, StackLayer::Framework), 0.0);
+        // Restart with restore (20s) dominating a cheap compile (10s):
+        // the whole startup span attributes to Framework.
+        j.startup_s = 10.0;
+        j.ckpt.restore_s = 20.0;
+        let acct = rm.account(&j, true, 0.0, 25.0, WindowEnd::Evicted, &era);
+        assert_eq!(sum_layer(&acct, StackLayer::Framework), 25.0);
+        assert_eq!(sum_layer(&acct, StackLayer::Compiler), 0.0);
+    }
+
+    #[test]
+    fn stall_layer_splits_data_vs_framework() {
+        let rm = RuntimeModel::default();
+        let mut j = job(Phase::Training, 1000.0);
+        // Low host-boundedness, no era regression: framework overhead.
+        j.step.host_fraction = 0.05;
+        assert_eq!(rm.stall_layer(&j, &EraEffects::default()), StackLayer::Framework);
+        // Heavily host-bound: the data pipeline dominates.
+        j.step.host_fraction = 0.5;
+        assert_eq!(rm.stall_layer(&j, &EraEffects::default()), StackLayer::Data);
+        // An era data regression flips even a low-host job to Data.
+        j.step.host_fraction = 0.05;
+        let era = EraEffects { stall_mult: 4.0, ..Default::default() };
+        assert_eq!(rm.stall_layer(&j, &era), StackLayer::Data);
+    }
+
+    #[test]
+    fn layered_pieces_respect_class_defaults_elsewhere() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 250.0);
+        let era = EraEffects::default();
+        let wall = rm.wall_to_complete(&j, false, 0.0, &era);
+        let acct = rm.account(&j, false, 0.0, wall, WindowEnd::Completed, &era);
+        for (class, layer, _) in &acct.pieces {
+            match class {
+                TimeClass::Productive => assert_eq!(*layer, StackLayer::Model),
+                TimeClass::CkptStall => assert_eq!(*layer, StackLayer::Framework),
+                TimeClass::Lost => assert_eq!(*layer, StackLayer::Hardware),
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn compile_and_ckpt_era_multipliers_scale_costs() {
+        let rm = RuntimeModel { multiclient_stall_frac: 0.0, ..Default::default() };
+        let j = job(Phase::Training, 250.0);
+        let base = rm.wall_to_complete(&j, false, 0.0, &EraEffects::default());
+        let slow_compile_era = EraEffects { compile_mult: 2.0, ..Default::default() };
+        let slow_compile = rm.wall_to_complete(&j, false, 0.0, &slow_compile_era);
+        // Compile cost is 50s; doubling it adds exactly 50s.
+        assert!((slow_compile - base - 50.0).abs() < 1e-9);
+        let slow_ckpt_era = EraEffects { ckpt_mult: 2.0, ..Default::default() };
+        let slow_ckpt = rm.wall_to_complete(&j, false, 0.0, &slow_ckpt_era);
+        // 3 checkpoint writes at 10s each; doubling adds 30s.
+        assert!((slow_ckpt - base - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
     fn era_effects_slow_things_down() {
         let rm = RuntimeModel::default();
         let mut j = job(Phase::Training, 500.0);
         j.step.host_fraction = 0.3;
         let base = rm.wall_to_complete(&j, true, 0.0, &EraEffects::default());
-        let bad_era = EraEffects { stall_mult: 3.0, restore_mult: 4.0 };
+        let bad_era = EraEffects { stall_mult: 3.0, restore_mult: 4.0, ..Default::default() };
         let worse = rm.wall_to_complete(&j, true, 0.0, &bad_era);
         assert!(worse > base);
     }

@@ -37,7 +37,14 @@ use super::{SimConfig, SimResult};
 /// same `SimResult`, same ledger contents), but goodput floats derived by
 /// the pre-v2 flat summation can differ from the canonical order in the
 /// last ULP, so pre-v2 entries must not mix with canonical-order rows.
-pub const CACHE_VERSION: u64 = 2;
+///
+/// v3: cached goodput reports gained the stack-layer attribution section
+/// (`layer_cs`), and the config hash covers the new `LayerDegrade` knobs
+/// and `EraEffects` fields. Still no `SIM_BEHAVIOR_VERSION` bump — at
+/// identity defaults every new multiplier is arithmetically exact — but
+/// v2 entries have no layer buckets to serve, so they read as misses and
+/// re-simulate.
+pub const CACHE_VERSION: u64 = 3;
 
 /// Simulator behavior fingerprint, mixed into every config hash. A cached
 /// entry is only valid for the engine that produced it, so **any PR that
@@ -132,6 +139,7 @@ pub fn config_hash(cfg: &SimConfig) -> u64 {
         repair_s,
         fail_detect_s,
         failure_rate_mult,
+        degrade,
     } = cfg;
     let mut h = StableHasher::new();
     h.write_u64(CACHE_VERSION);
@@ -189,6 +197,18 @@ pub fn config_hash(cfg: &SimConfig) -> u64 {
     h.write_f64(*repair_s);
     h.write_f64(*fail_detect_s);
     h.write_f64(*failure_rate_mult);
+    let crate::sim::engine::LayerDegrade {
+        data_mult,
+        framework_mult,
+        compiler_mult,
+        hardware_mult,
+        scheduling_mult,
+    } = degrade;
+    h.write_f64(*data_mult);
+    h.write_f64(*framework_mult);
+    h.write_f64(*compiler_mult);
+    h.write_f64(*hardware_mult);
+    h.write_f64(*scheduling_mult);
     h.finish()
 }
 
@@ -274,9 +294,11 @@ fn hash_era_rule(h: &mut StableHasher, r: &EraRule) {
     if let Some(p) = phase {
         h.write_u64(*p as u64);
     }
-    let EraEffects { stall_mult, restore_mult } = effects;
+    let EraEffects { stall_mult, restore_mult, compile_mult, ckpt_mult } = effects;
     h.write_f64(*stall_mult);
     h.write_f64(*restore_mult);
+    h.write_f64(*compile_mult);
+    h.write_f64(*ckpt_mult);
 }
 
 fn hash_job(h: &mut StableHasher, job: &Job) {
@@ -666,6 +688,8 @@ fn encode(key: &CacheKey, run: &CachedRun) -> Json {
                 ("startup_cs", bits(g.startup_cs)),
                 ("stall_cs", bits(g.stall_cs)),
                 ("partial_cs", bits(g.partial_cs)),
+                // Per-layer attribution buckets, StackLayer::ALL order.
+                ("layer_cs", Json::arr(g.layer_cs.iter().map(|&x| bits(x)))),
                 ("job_count", Json::num(g.job_count as f64)),
             ]),
         ),
@@ -690,6 +714,14 @@ fn decode(j: &Json, key: &CacheKey) -> Option<CachedRun> {
         sim_end_s: unbits(r.get("sim_end_s"))?,
     };
     let g = j.get("goodput");
+    let layers = g.get("layer_cs").as_arr()?;
+    if layers.len() != crate::metrics::stack::N_LAYERS {
+        return None;
+    }
+    let mut layer_cs = [0.0; crate::metrics::stack::N_LAYERS];
+    for (slot, enc) in layer_cs.iter_mut().zip(layers) {
+        *slot = unbits(enc)?;
+    }
     let goodput = GoodputReport {
         sg: unbits(g.get("sg"))?,
         rg: unbits(g.get("rg"))?,
@@ -701,6 +733,7 @@ fn decode(j: &Json, key: &CacheKey) -> Option<CachedRun> {
         startup_cs: unbits(g.get("startup_cs"))?,
         stall_cs: unbits(g.get("stall_cs"))?,
         partial_cs: unbits(g.get("partial_cs"))?,
+        layer_cs,
         job_count: g.get("job_count").as_u64()? as usize,
     };
     Some(CachedRun { result, goodput })
@@ -743,6 +776,7 @@ mod tests {
                 startup_cs: 2.5e7,
                 stall_cs: 3.5e7,
                 partial_cs: 1.5e6,
+                layer_cs: [9.9e8, 1.5e7, 1.25e7, 2.25e7, 1.15e7, 7.7e6],
                 job_count: 140,
             },
         }
@@ -777,6 +811,23 @@ mod tests {
         let mut c = base.clone();
         c.static_fleet.push((ChipGeneration::TpuE, 4));
         assert_ne!(h0, config_hash(&c), "static fleet");
+        let mut c = base.clone();
+        c.degrade.data_mult = 3.0;
+        assert_ne!(h0, config_hash(&c), "degrade.data_mult");
+        let mut c = base.clone();
+        c.degrade.scheduling_mult = 2.0;
+        assert_ne!(h0, config_hash(&c), "degrade.scheduling_mult");
+        let mut c = base;
+        c.eras.add(crate::sim::EraRule {
+            t0: 0.0,
+            t1: 1.0,
+            phase: None,
+            effects: crate::runtime_model::EraEffects {
+                compile_mult: 2.0,
+                ..Default::default()
+            },
+        });
+        assert_ne!(h0, config_hash(&c), "era compile_mult");
     }
 
     #[test]
@@ -913,6 +964,18 @@ mod tests {
             full.replace(&format!("\"version\": {CACHE_VERSION}"), "\"version\": 999");
         std::fs::write(&path, skewed).unwrap();
         assert!(cache.lookup(&key).is_none(), "version skew must miss");
+
+        // A v2-era entry (pre-attribution: no layer_cs, version 2) must
+        // read as a miss — not corruption, not a layerless report.
+        let mut v2 = Json::parse(&full).unwrap();
+        if let Json::Obj(ref mut o) = v2 {
+            o.insert("version".into(), Json::num(2.0));
+            if let Some(Json::Obj(g)) = o.get_mut("goodput") {
+                g.remove("layer_cs");
+            }
+        }
+        std::fs::write(&path, v2.to_string_pretty()).unwrap();
+        assert!(cache.lookup(&key).is_none(), "CACHE_VERSION 2 entry must miss");
 
         // Valid JSON, embedded key disagrees with the file name.
         let forged = full.replace(&format!("{:016x}", 7u64), &format!("{:016x}", 8u64));

@@ -13,8 +13,11 @@ use std::collections::{BinaryHeap, HashMap};
 use std::sync::Arc;
 
 use crate::fleet::{ChipGeneration, EvolutionModel, Fleet, PodId};
-use crate::metrics::{goodput, GoodputReport, JobMeta, Ledger, TimeClass, WindowedLedger};
-use crate::runtime_model::{RuntimeModel, WindowAccount, WindowEnd};
+use crate::metrics::{
+    goodput, GoodputReport, JobMeta, Ledger, StackLayer, TimeClass, WindowedLedger,
+};
+use crate::runtime_model::{EraEffects, RuntimeModel, WindowAccount, WindowEnd};
+use crate::workload::Phase;
 use crate::scheduler::{Scheduler, SchedulerPolicy};
 use crate::util::Rng;
 use crate::workload::{GeneratorConfig, Job, JobId, WorkloadGenerator};
@@ -42,6 +45,53 @@ pub enum LedgerMode {
         /// Accumulation window width, seconds.
         width_s: f64,
     },
+}
+
+/// Per-stack-layer degradation multipliers — the sweep axes for the
+/// attribution studies ("how does fleet MPG respond when one layer
+/// regresses?"). Every knob defaults to 1.0, and identity multipliers
+/// are arithmetically exact (`x * 1.0 == x` bitwise), so a default
+/// `LayerDegrade` leaves simulation behavior bit-identical — which is
+/// why adding these knobs needs no `SIM_BEHAVIOR_VERSION` bump.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LayerDegrade {
+    /// Scales data-pipeline stalls (multiplies era `stall_mult`).
+    pub data_mult: f64,
+    /// Scales framework overheads: checkpoint restores AND writes.
+    pub framework_mult: f64,
+    /// Scales program load + compile cost.
+    pub compiler_mult: f64,
+    /// Scales the machine failure rate (on top of `failure_rate_mult`).
+    pub hardware_mult: f64,
+    /// Scales the scheduling layer's responsiveness: the periodic pass
+    /// interval stretches by this factor AND event-triggered passes are
+    /// throttled to at most one per `schedule_tick_s × (mult − 1)`
+    /// seconds — a slow control plane, so arrivals/evictions sit Queued
+    /// until the next pass. At 1.0 the throttle window is exactly 0 and
+    /// no pass is ever skipped.
+    pub scheduling_mult: f64,
+}
+
+impl Default for LayerDegrade {
+    fn default() -> Self {
+        LayerDegrade {
+            data_mult: 1.0,
+            framework_mult: 1.0,
+            compiler_mult: 1.0,
+            hardware_mult: 1.0,
+            scheduling_mult: 1.0,
+        }
+    }
+}
+
+impl LayerDegrade {
+    /// Fold the runtime-facing knobs into a window's era effects.
+    pub fn apply(&self, era: &mut EraEffects) {
+        era.stall_mult *= self.data_mult;
+        era.restore_mult *= self.framework_mult;
+        era.ckpt_mult *= self.framework_mult;
+        era.compile_mult *= self.compiler_mult;
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -79,6 +129,12 @@ pub struct SimConfig {
     /// from the chip specs; 0.0 = no failures). Sweep axis for failure
     /// sensitivity studies.
     pub failure_rate_mult: f64,
+    /// Per-stack-layer degradation multipliers (identity by default) —
+    /// the attribution sweep axes. NOTE for future PRs: new `SimConfig`
+    /// fields (here or nested) must be added to the shard codec
+    /// (`sim::shard`), the cache hash (`sim::cache`), AND considered for
+    /// the stack-layer attribution mapping.
+    pub degrade: LayerDegrade,
 }
 
 impl Default for SimConfig {
@@ -105,6 +161,7 @@ impl Default for SimConfig {
             repair_s: 4.0 * 3600.0,
             fail_detect_s: 120.0,
             failure_rate_mult: 1.0,
+            degrade: LayerDegrade::default(),
         }
     }
 }
@@ -207,6 +264,9 @@ pub struct Simulation {
     jobs: HashMap<JobId, JobState>,
     now: f64,
     next_arrival: Option<Job>,
+    /// Time of the last scheduling pass (the degraded-scheduling
+    /// throttle's state; never read at the identity degrade).
+    last_pass: f64,
     pub result: SimResult,
 }
 
@@ -247,6 +307,7 @@ impl Simulation {
             jobs: HashMap::new(),
             now: 0.0,
             next_arrival: None,
+            last_pass: f64::NEG_INFINITY,
             result: SimResult::default(),
             scheduler: Scheduler::new(cfg.policy.clone()),
             ledger: Ledger::new(),
@@ -279,7 +340,8 @@ impl Simulation {
             let t = j.arrival_s;
             sim.push(t, EventKind::Arrival);
         }
-        sim.push(sim.cfg.schedule_tick_s, EventKind::ScheduleTick);
+        let first_tick = sim.cfg.schedule_tick_s * sim.cfg.degrade.scheduling_mult;
+        sim.push(first_tick, EventKind::ScheduleTick);
         if sim.cfg.defrag_tick_s > 0.0 {
             sim.push(sim.cfg.defrag_tick_s, EventKind::DefragTick);
         }
@@ -307,11 +369,28 @@ impl Simulation {
         }
     }
 
-    fn record_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+    fn record_span(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
         match &mut self.windowed {
-            Some(w) => w.add_span(id, t0, t1, chips, class),
-            None => self.ledger.add_span(id, t0, t1, chips, class),
+            Some(w) => w.add_span_layered(id, t0, t1, chips, class, layer),
+            None => self.ledger.add_span_layered(id, t0, t1, chips, class, layer),
         }
+    }
+
+    /// Era effects at (t, phase) with the config's layer-degradation
+    /// multipliers folded in — the one place scenario effects and degrade
+    /// knobs combine before reaching the runtime model.
+    fn era_at(&self, t: f64, phase: Phase) -> EraEffects {
+        let mut era = self.cfg.eras.effects_at(t, phase);
+        self.cfg.degrade.apply(&mut era);
+        era
     }
 
     fn record_pg(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
@@ -358,7 +437,8 @@ impl Simulation {
                 EventKind::Finish { job, epoch } => self.on_finish(job, epoch),
                 EventKind::ScheduleTick => {
                     self.schedule_pass();
-                    let t = self.now + self.cfg.schedule_tick_s;
+                    let tick = self.cfg.schedule_tick_s * self.cfg.degrade.scheduling_mult;
+                    let t = self.now + tick;
                     self.push(t, EventKind::ScheduleTick);
                 }
                 EventKind::DefragTick => {
@@ -518,7 +598,7 @@ impl Simulation {
                 let chips = st.job.chips();
                 let detect = self.cfg.fail_detect_s;
                 let (t0, t1) = (self.now, self.now + detect);
-                self.record_span(id, t0, t1, chips, TimeClass::Partial);
+                self.record_span(id, t0, t1, chips, TimeClass::Partial, StackLayer::Hardware);
                 self.scheduler.evict(&mut self.fleet, id);
                 let st = self.jobs.get_mut(&id).unwrap();
                 st.queued_since = Some(self.now + detect);
@@ -540,6 +620,7 @@ impl Simulation {
             }
         }
         rate_per_s *= self.cfg.failure_rate_mult;
+        rate_per_s *= self.cfg.degrade.hardware_mult;
         if rate_per_s <= 0.0 {
             return;
         }
@@ -553,6 +634,15 @@ impl Simulation {
     // ------------------------------------------------------------------
 
     fn schedule_pass(&mut self) {
+        // Degraded scheduling layer: throttle event-triggered passes to
+        // one per `tick × (mult − 1)` seconds. At the identity degrade
+        // the window is exactly 0.0, the guard never fires, and no state
+        // the simulation reads is touched — bit-identical behavior.
+        let min_gap = self.cfg.schedule_tick_s * (self.cfg.degrade.scheduling_mult - 1.0);
+        if min_gap > 0.0 && self.now < self.last_pass + min_gap {
+            return;
+        }
+        self.last_pass = self.now;
         let outcome = self.scheduler.schedule(&mut self.fleet, self.now);
         // Preempted first: close their windows (chips already released).
         for id in &outcome.preempted {
@@ -590,7 +680,9 @@ impl Simulation {
         let st = self.jobs.get_mut(&id).expect("placed unknown job");
         st.window_start = Some(self.now);
         st.epoch += 1;
-        let era = self.cfg.eras.effects_at(self.now, st.job.phase);
+        let phase = st.job.phase;
+        let era = self.era_at(self.now, phase);
+        let st = self.jobs.get_mut(&id).expect("placed unknown job");
         let wall =
             self.cfg.runtime.wall_to_complete(&st.job, st.restarted, st.work_done, &era);
         let t = self.now + wall;
@@ -603,7 +695,7 @@ impl Simulation {
         if let Some(q0) = st.queued_since.take() {
             let chips = st.job.chips();
             let (t0, t1) = (q0, self.now);
-            self.record_span(id, t0, t1, chips, TimeClass::Queued);
+            self.record_span(id, t0, t1, chips, TimeClass::Queued, StackLayer::Scheduling);
         }
     }
 
@@ -616,7 +708,9 @@ impl Simulation {
         if window <= 0.0 {
             return;
         }
-        let era = self.cfg.eras.effects_at(t0, st.job.phase);
+        let phase = st.job.phase;
+        let era = self.era_at(t0, phase);
+        let st = self.jobs.get_mut(&id).expect("close_window lost job");
         let acct: WindowAccount =
             self.cfg.runtime.account(&st.job, st.restarted, st.work_done, window, end, &era);
         st.work_done = acct.work_done_after;
@@ -644,12 +738,12 @@ impl Simulation {
 
         let mut t = t0;
         let job_id = st.job.id;
-        for (class, dur) in acct.pieces {
+        for (class, layer, dur) in acct.pieces {
             if dur <= 0.0 {
                 continue;
             }
             let t1 = t + dur;
-            self.record_span(job_id, t, t1, chips, class);
+            self.record_span(job_id, t, t1, chips, class, layer);
             if class == TimeClass::Productive {
                 self.record_pg(job_id, t, t1, chips, pg);
             }
@@ -686,6 +780,9 @@ impl Simulation {
 
     /// Queue demand chip-seconds (Queued + Partial + all-allocated) per
     /// filter — the denominator for demand-relative SG (Fig. 16).
+    /// Binary-searches each job's first overlapping span (the engine
+    /// appends spans in time order) instead of scanning every span per
+    /// class; bit-identical to the full scan.
     ///
     /// Requires [`LedgerMode::Full`]: arbitrary [w0, w1) windows need the
     /// retained spans. Panics in windowed mode rather than silently
@@ -696,11 +793,7 @@ impl Simulation {
             "demand_cs requires LedgerMode::Full (windowed accounting \
              retains no spans for arbitrary windows)"
         );
-        let l = &self.ledger;
-        TimeClass::ALL
-            .iter()
-            .map(|&c| l.class_chip_seconds(c, w0, w1, &filter))
-            .sum()
+        self.ledger.demand_cs(w0, w1, filter)
     }
 }
 
@@ -915,6 +1008,118 @@ mod tests {
         let full_spans: usize =
             full.ledger.jobs.values().map(|(_, jl)| jl.spans.len()).sum();
         assert!(full_spans > 0, "sanity: the full run did record spans");
+    }
+
+    /// The tentpole contract: every chip-second the engine classifies
+    /// carries stack-layer provenance, and the pure-mapped layers read
+    /// back their class totals bitwise (Model <- Productive, Scheduling
+    /// <- Queued — their buckets receive exactly the same additions).
+    #[test]
+    fn spans_carry_layer_provenance_end_to_end() {
+        let mut cfg = small_cfg();
+        gen_only_c(&mut cfg);
+        cfg.duration_s = 4.0 * 24.0 * 3600.0;
+        cfg.generator.arrivals_per_hour = 16.0; // contention -> queueing
+        let mut sim = Simulation::new(cfg.clone());
+        sim.run();
+        let r = sim.fleet_goodput();
+        assert_eq!(r.layer(StackLayer::Model).to_bits(), r.productive_cs.to_bits());
+        let queued = sim.ledger.class_chip_seconds(
+            TimeClass::Queued,
+            0.0,
+            cfg.duration_s,
+            |_| true,
+        );
+        assert_eq!(r.layer(StackLayer::Scheduling).to_bits(), queued.to_bits());
+        // Hardware holds Lost + Partial (up to summation order).
+        let hw = r.layer(StackLayer::Hardware);
+        assert!((hw - (r.lost_cs + r.partial_cs)).abs() <= 1e-6 * (hw + 1.0), "{hw}");
+        // Startup splits across Compiler/Framework; stalls across
+        // Data/Framework; everything is attributed somewhere: the layer
+        // buckets cover exactly the classified time.
+        let layer_total: f64 = StackLayer::ALL.iter().map(|&l| r.layer(l)).sum();
+        let class_total = r.all_allocated_cs + r.partial_cs + queued;
+        assert!(
+            (layer_total - class_total).abs() <= 1e-6 * class_total.max(1.0),
+            "layers {layer_total} vs classes {class_total}"
+        );
+        assert!(r.layer(StackLayer::Compiler) > 0.0, "startups must attribute");
+    }
+
+    /// The engine appends each job's spans in time order, so the
+    /// binary-searched demand scan applies — and stays bit-identical to
+    /// the per-class full-scan reference.
+    #[test]
+    fn demand_cs_binary_search_matches_reference_on_real_ledger() {
+        let mut cfg = small_cfg();
+        gen_only_c(&mut cfg);
+        let mut sim = Simulation::new(cfg.clone());
+        sim.run();
+        for (_, jl) in sim.ledger.jobs.values() {
+            assert!(jl.time_ordered(), "engine spans must be time-ordered");
+        }
+        let end = cfg.duration_s;
+        for (w0, w1) in [(0.0, end), (end * 0.3, end * 0.6), (end * 0.9, end * 2.0)] {
+            let fast = sim.demand_cs(w0, w1, |_| true);
+            let slow = sim.ledger.demand_cs_by_fold(w0, w1, |_| true);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "[{w0}, {w1})");
+        }
+    }
+
+    /// Each per-layer degradation knob must move its own layer's
+    /// attribution (scenario diversity for the attribution sweeps).
+    #[test]
+    fn degrade_knobs_move_their_layers() {
+        let base_cfg = || {
+            let mut cfg = small_cfg();
+            gen_only_c(&mut cfg);
+            cfg.generator.arrivals_per_hour = 8.0;
+            cfg
+        };
+        let report_of = |cfg: SimConfig| {
+            let mut sim = Simulation::new(cfg);
+            let res = sim.run();
+            (sim.fleet_goodput(), res)
+        };
+        let (base, base_res) = report_of(base_cfg());
+
+        let mut c = base_cfg();
+        c.degrade.data_mult = 8.0;
+        let (r, _) = report_of(c);
+        assert!(
+            r.layer(StackLayer::Data) > base.layer(StackLayer::Data),
+            "data degrade must grow data-layer stalls: {} vs {}",
+            r.layer(StackLayer::Data),
+            base.layer(StackLayer::Data)
+        );
+
+        let mut c = base_cfg();
+        c.degrade.compiler_mult = 6.0;
+        let (r, _) = report_of(c);
+        assert!(r.layer(StackLayer::Compiler) > base.layer(StackLayer::Compiler));
+
+        let mut c = base_cfg();
+        c.degrade.framework_mult = 6.0;
+        let (r, _) = report_of(c);
+        assert!(r.layer(StackLayer::Framework) > base.layer(StackLayer::Framework));
+
+        let mut c = base_cfg();
+        c.degrade.hardware_mult = 10.0;
+        let (_, res) = report_of(c);
+        assert!(
+            res.failures_injected > base_res.failures_injected,
+            "{} vs {}",
+            res.failures_injected,
+            base_res.failures_injected
+        );
+
+        let mut c = base_cfg();
+        c.degrade.scheduling_mult = 30.0;
+        let (r, _) = report_of(c);
+        assert!(
+            r.layer(StackLayer::Scheduling) > base.layer(StackLayer::Scheduling),
+            "slower scheduling passes must grow queue wait"
+        );
     }
 
     #[test]

@@ -37,6 +37,8 @@ impl EraSchedule {
             if t >= r.t0 && t < r.t1 && r.phase.map_or(true, |p| p == phase) {
                 out.stall_mult *= r.effects.stall_mult;
                 out.restore_mult *= r.effects.restore_mult;
+                out.compile_mult *= r.effects.compile_mult;
+                out.ckpt_mult *= r.effects.ckpt_mult;
             }
         }
         out
@@ -54,10 +56,17 @@ mod tests {
             t0: 100.0,
             t1: 200.0,
             phase: Some(Phase::BulkInference),
-            effects: EraEffects { stall_mult: 4.0, restore_mult: 3.0 },
+            effects: EraEffects {
+                stall_mult: 4.0,
+                restore_mult: 3.0,
+                compile_mult: 2.0,
+                ckpt_mult: 1.5,
+            },
         });
         let inside = s.effects_at(150.0, Phase::BulkInference);
         assert_eq!(inside.stall_mult, 4.0);
+        assert_eq!(inside.compile_mult, 2.0);
+        assert_eq!(inside.ckpt_mult, 1.5);
         let wrong_phase = s.effects_at(150.0, Phase::Training);
         assert_eq!(wrong_phase.stall_mult, 1.0);
         let outside = s.effects_at(250.0, Phase::BulkInference);
@@ -67,7 +76,7 @@ mod tests {
     #[test]
     fn overlapping_rules_compose() {
         let mut s = EraSchedule::new();
-        let e = EraEffects { stall_mult: 2.0, restore_mult: 1.0 };
+        let e = EraEffects { stall_mult: 2.0, ..Default::default() };
         s.add(EraRule { t0: 0.0, t1: 100.0, phase: None, effects: e });
         s.add(EraRule { t0: 50.0, t1: 100.0, phase: None, effects: e });
         assert_eq!(s.effects_at(75.0, Phase::Serving).stall_mult, 4.0);

@@ -41,6 +41,7 @@ use crate::workload::{trace, GeneratorConfig, MixDrift, Phase};
 use crate::xlaopt::{CompilerStack, Deployment, Pass};
 
 use super::cache::{CACHE_VERSION, SIM_BEHAVIOR_VERSION};
+use super::engine::LayerDegrade;
 use super::scenario::{EraRule, EraSchedule};
 use super::sweep::{SweepSpec, SweepSummary, SweepVariant};
 use super::SimConfig;
@@ -86,6 +87,7 @@ pub fn config_to_json(cfg: &SimConfig) -> Json {
         repair_s,
         fail_detect_s,
         failure_rate_mult,
+        degrade,
     } = cfg;
     Json::obj(vec![
         ("seed", Json::u64_hex(*seed)),
@@ -125,7 +127,35 @@ pub fn config_to_json(cfg: &SimConfig) -> Json {
         ("repair_s", Json::f64b(*repair_s)),
         ("fail_detect_s", Json::f64b(*fail_detect_s)),
         ("failure_rate_mult", Json::f64b(*failure_rate_mult)),
+        ("degrade", degrade_to_json(degrade)),
     ])
+}
+
+fn degrade_to_json(d: &LayerDegrade) -> Json {
+    let LayerDegrade {
+        data_mult,
+        framework_mult,
+        compiler_mult,
+        hardware_mult,
+        scheduling_mult,
+    } = d;
+    Json::obj(vec![
+        ("data_mult", Json::f64b(*data_mult)),
+        ("framework_mult", Json::f64b(*framework_mult)),
+        ("compiler_mult", Json::f64b(*compiler_mult)),
+        ("hardware_mult", Json::f64b(*hardware_mult)),
+        ("scheduling_mult", Json::f64b(*scheduling_mult)),
+    ])
+}
+
+fn degrade_from_json(j: &Json) -> Result<LayerDegrade> {
+    Ok(LayerDegrade {
+        data_mult: f64_of(j, "data_mult")?,
+        framework_mult: f64_of(j, "framework_mult")?,
+        compiler_mult: f64_of(j, "compiler_mult")?,
+        hardware_mult: f64_of(j, "hardware_mult")?,
+        scheduling_mult: f64_of(j, "scheduling_mult")?,
+    })
 }
 
 /// Decode [`config_to_json`]. Strict: every field must be present and
@@ -167,6 +197,8 @@ pub fn config_from_json(j: &Json) -> Result<SimConfig> {
         repair_s: f64_of(j, "repair_s")?,
         fail_detect_s: f64_of(j, "fail_detect_s")?,
         failure_rate_mult: f64_of(j, "failure_rate_mult")?,
+        degrade: degrade_from_json(j.get("degrade"))
+            .map_err(|e| anyhow!("degrade: {e}"))?,
     })
 }
 
@@ -423,7 +455,7 @@ fn eras_to_json(e: &EraSchedule) -> Json {
         "rules",
         Json::arr(rules.iter().map(|r| {
             let EraRule { t0, t1, phase, effects } = r;
-            let EraEffects { stall_mult, restore_mult } = effects;
+            let EraEffects { stall_mult, restore_mult, compile_mult, ckpt_mult } = effects;
             Json::obj(vec![
                 ("t0", Json::f64b(*t0)),
                 ("t1", Json::f64b(*t1)),
@@ -436,6 +468,8 @@ fn eras_to_json(e: &EraSchedule) -> Json {
                 ),
                 ("stall_mult", Json::f64b(*stall_mult)),
                 ("restore_mult", Json::f64b(*restore_mult)),
+                ("compile_mult", Json::f64b(*compile_mult)),
+                ("ckpt_mult", Json::f64b(*ckpt_mult)),
             ])
         })),
     )])
@@ -462,6 +496,8 @@ fn eras_from_json(j: &Json) -> Result<EraSchedule> {
                 effects: EraEffects {
                     stall_mult: f64_of(r, "stall_mult")?,
                     restore_mult: f64_of(r, "restore_mult")?,
+                    compile_mult: f64_of(r, "compile_mult")?,
+                    ckpt_mult: f64_of(r, "ckpt_mult")?,
                 },
             })
         };
@@ -687,7 +723,10 @@ fn variant_cfg_from_json(
 
 /// The per-variant JSON record of the `sweep` report — the single
 /// definition shared by the serial path, the worker, and the merge, which
-/// is what makes the merged report byte-identical to the serial one.
+/// is what makes the merged report byte-identical to the serial one. The
+/// `attribution` section is a pure function of the goodput report, so
+/// its bytes are identical whichever reduction path (full-span,
+/// windowed, cached, sharded) produced the report.
 pub fn summary_row_json(s: &SweepSummary) -> Json {
     let g: &GoodputReport = &s.goodput;
     Json::obj(vec![
@@ -703,6 +742,7 @@ pub fn summary_row_json(s: &SweepSummary) -> Json {
         ("rg", Json::num(g.rg)),
         ("pg", Json::num(g.pg)),
         ("mpg", Json::num(g.mpg())),
+        ("attribution", crate::metrics::AttributionReport::of(g).to_json()),
     ])
 }
 
@@ -899,14 +939,26 @@ mod tests {
             t0: 100.0,
             t1: 5000.0,
             phase: Some(Phase::BulkInference),
-            effects: EraEffects { stall_mult: 3.0, restore_mult: 2.0 },
+            effects: EraEffects {
+                stall_mult: 3.0,
+                restore_mult: 2.0,
+                compile_mult: 1.75,
+                ckpt_mult: 1.25,
+            },
         });
         cfg.eras.add(EraRule {
             t0: 0.0,
             t1: 50.0,
             phase: None,
-            effects: EraEffects { stall_mult: 1.5, restore_mult: 1.0 },
+            effects: EraEffects { stall_mult: 1.5, ..Default::default() },
         });
+        cfg.degrade = LayerDegrade {
+            data_mult: 2.5,
+            framework_mult: 1.5,
+            compiler_mult: 3.0,
+            hardware_mult: 0.5,
+            scheduling_mult: 2.0,
+        };
         let mut gcfg = cfg.generator.clone();
         gcfg.duration_s = 2.0 * 3600.0;
         cfg.trace_jobs = Some(Arc::new(WorkloadGenerator::new(gcfg).trace()));
@@ -965,6 +1017,14 @@ mod tests {
         }
         let err = config_from_json(&j).unwrap_err().to_string();
         assert!(err.contains("failure_rate_mult"), "{err}");
+
+        // A pre-degrade manifest must be refused, not silently defaulted.
+        let mut j = config_to_json(&SimConfig::default());
+        if let Json::Obj(ref mut o) = j {
+            o.remove("degrade");
+        }
+        let err = config_from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("degrade"), "{err}");
     }
 
     fn tiny_spec(n: usize) -> SweepSpec {

@@ -116,6 +116,24 @@ pub fn apply_policy_preset(cfg: &mut SimConfig, name: &str) -> bool {
     true
 }
 
+/// Apply a named per-layer degradation preset (the `sweep --degrades`
+/// axis): each non-`none` preset regresses exactly one stack layer, so
+/// the attribution report should rank that layer's recovered-MPG higher —
+/// the scenario-diversity axis for the waterfall studies. Returns false
+/// for an unknown name.
+pub fn apply_degrade_preset(cfg: &mut SimConfig, name: &str) -> bool {
+    match name {
+        "none" => {}
+        "data-3x" => cfg.degrade.data_mult = 3.0,
+        "framework-3x" => cfg.degrade.framework_mult = 3.0,
+        "compiler-3x" => cfg.degrade.compiler_mult = 3.0,
+        "hardware-3x" => cfg.degrade.hardware_mult = 3.0,
+        "scheduling-8x" => cfg.degrade.scheduling_mult = 8.0,
+        _ => return false,
+    }
+    true
+}
+
 /// One finished variant: its summary plus the whole post-run simulation
 /// (the ledger stays available for goodput reduction).
 pub struct SweepRun {
@@ -407,10 +425,10 @@ mod tests {
         );
         assert_eq!(
             crate::sim::cache::CACHE_VERSION,
-            2,
-            "pre-rewrite cache entries (flat summation order) must be \
+            3,
+            "pre-attribution cache entries (no layer_cs section) must be \
              invalidated by the cache version, not served alongside \
-             canonical-order rows"
+             layer-resolved rows"
         );
         let cache = temp_cache("mode-compat");
         let mut cold: Vec<SweepSummary> = Vec::new();
@@ -487,6 +505,18 @@ mod tests {
         assert_eq!(cfg.policy.headroom_fraction, 0.15);
         assert!(apply_policy_preset(&mut cfg, "default"));
         assert!(!apply_policy_preset(&mut cfg, "not-a-preset"));
+    }
+
+    #[test]
+    fn degrade_presets_apply_and_reject_unknown() {
+        let mut cfg = SimConfig::default();
+        assert!(apply_degrade_preset(&mut cfg, "none"));
+        assert_eq!(cfg.degrade, crate::sim::engine::LayerDegrade::default());
+        assert!(apply_degrade_preset(&mut cfg, "data-3x"));
+        assert_eq!(cfg.degrade.data_mult, 3.0);
+        assert!(apply_degrade_preset(&mut cfg, "scheduling-8x"));
+        assert_eq!(cfg.degrade.scheduling_mult, 8.0);
+        assert!(!apply_degrade_preset(&mut cfg, "gpu-3x"));
     }
 
     #[test]

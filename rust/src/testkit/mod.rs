@@ -5,7 +5,7 @@
 //! be replayed exactly (`check_one(seed, f)`). No shrinking — cases are
 //! kept small instead.
 
-use crate::metrics::GoodputReport;
+use crate::metrics::{GoodputReport, StackLayer};
 use crate::util::Rng;
 
 /// Assert two goodput reports are bit-identical (`f64::to_bits`) on every
@@ -25,6 +25,7 @@ pub fn assert_reports_bit_identical(a: &GoodputReport, b: &GoodputReport, what: 
         startup_cs,
         stall_cs,
         partial_cs,
+        layer_cs,
         job_count,
     } = *a;
     for (x, y, name) in [
@@ -40,6 +41,14 @@ pub fn assert_reports_bit_identical(a: &GoodputReport, b: &GoodputReport, what: 
         (partial_cs, b.partial_cs, "partial_cs"),
     ] {
         assert_eq!(x.to_bits(), y.to_bits(), "{what}: {name} {x} vs {y}");
+    }
+    for (layer, (x, y)) in StackLayer::ALL.iter().zip(layer_cs.iter().zip(&b.layer_cs)) {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: layer_cs[{}] {x} vs {y}",
+            layer.name()
+        );
     }
     assert_eq!(job_count, b.job_count, "{what}: job_count");
 }

@@ -188,6 +188,15 @@ impl Json {
                     // bare would make the document unparseable (including
                     // by our own parser). Values that must survive
                     // non-finite go through `Json::f64b` instead.
+                    //
+                    // READ-BACK ASYMMETRY (deliberate, pinned by
+                    // `nonfinite_null_readback_is_not_a_number`): the
+                    // `null` this writes parses back as `Json::Null`, so
+                    // a numeric position holding it reads as None from
+                    // `as_f64`/`as_u64` — NOT as NaN. Strict decoders
+                    // (shard manifests, cache entries) therefore REFUSE
+                    // a round-tripped non-finite rather than silently
+                    // substituting a different value.
                     out.push_str("null");
                 } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     out.push_str(&format!("{}", *x as i64));
@@ -477,6 +486,34 @@ mod tests {
         }
         let arr = Json::arr([Json::num(1.0), Json::num(f64::NAN)]);
         assert_eq!(arr.to_string_compact(), "[1,null]");
+    }
+
+    /// Pin the non-finite → `null` read-back story end to end: the writer
+    /// downgrades non-finite `Num`s to `null`, and that `null` reads back
+    /// as `Json::Null` in numeric positions — `as_f64`/`as_u64` return
+    /// None, never NaN — so strict decoders fail loudly instead of
+    /// running with a silently-altered value. (`Json::f64b` is the
+    /// encoding for values that must survive non-finite bitwise.)
+    #[test]
+    fn nonfinite_null_readback_is_not_a_number() {
+        let doc = Json::obj(vec![
+            ("bad", Json::num(f64::NAN)),
+            ("inf", Json::num(f64::INFINITY)),
+            ("good", Json::num(2.5)),
+        ]);
+        let text = doc.to_string_compact();
+        assert_eq!(text, r#"{"bad":null,"good":2.5,"inf":null}"#);
+        let back = Json::parse(&text).unwrap();
+        // The numeric position now holds Null, not a number...
+        assert_eq!(back.get("bad"), &Json::Null);
+        assert_eq!(back.get("bad").as_f64(), None);
+        assert_eq!(back.get("inf").as_u64(), None);
+        assert_eq!(back.get("bad").as_f64b(), None, "not an f64b either");
+        // ...while finite neighbors round-trip exactly.
+        assert_eq!(back.get("good").as_f64(), Some(2.5));
+        // A second round trip is stable: null stays null.
+        let again = Json::parse(&back.to_string_compact()).unwrap();
+        assert_eq!(back, again);
     }
 
     #[test]

@@ -275,6 +275,24 @@ mod tests {
         }
     }
 
+    /// Shard manifests and era rules address phases by name; a phase
+    /// whose name doesn't round-trip through `from_name` would silently
+    /// desync the codec the way an unnamed compiler pass would (see the
+    /// matching `Pass::ALL` round-trip in `xlaopt`).
+    #[test]
+    fn phase_names_roundtrip() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::from_name(p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(Phase::from_name("not-a-phase"), None);
+        assert_eq!(Phase::from_name("Training"), None, "names are case-sensitive");
+        // ALL covers every variant exactly once (a new Phase variant that
+        // isn't added to ALL breaks the exhaustive match in name()).
+        let unique: std::collections::HashSet<&str> =
+            Phase::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(unique.len(), Phase::ALL.len());
+    }
+
     #[test]
     fn size_classes_match_paper_buckets() {
         assert_eq!(job([1, 1, 1], 0).size_class(), SizeClass::Small);

@@ -249,12 +249,19 @@ pub fn overlap_case_study(gen: ChipGeneration) -> (f64, f64) {
 mod tests {
     use super::*;
 
+    /// Shard manifests address compiler passes by name; a pass whose
+    /// name doesn't round-trip (or collides with another's) would
+    /// silently desync the `sim::shard` codec.
     #[test]
     fn pass_names_roundtrip() {
         for p in Pass::ALL {
             assert_eq!(Pass::from_name(p.name()), Some(p));
         }
         assert_eq!(Pass::from_name("not-a-pass"), None);
+        assert_eq!(Pass::from_name("Fusion"), None, "names are case-sensitive");
+        let unique: std::collections::HashSet<&str> =
+            Pass::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(unique.len(), Pass::ALL.len(), "pass names must be distinct");
     }
 
     fn profile(comm: f64) -> StepProfile {

@@ -6,7 +6,7 @@
 
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::metrics::goodput::{self, Axis};
-use tpufleet::metrics::{JobMeta, Ledger, TimeClass, TimeSeries};
+use tpufleet::metrics::{JobMeta, Ledger, StackLayer, TimeClass, TimeSeries, WindowedLedger};
 use tpufleet::sim::{shard, LedgerMode, SimConfig, SweepRunner, SweepSpec, SweepSummary};
 use tpufleet::testkit::check;
 use tpufleet::util::Rng;
@@ -69,7 +69,16 @@ fn random_ledger(rng: &mut Rng) -> (Ledger, f64) {
         for _ in 0..rng.range_u64(0, 25) {
             let dur = rng.range_f64(0.1, end * 0.1);
             let class = TimeClass::ALL[rng.below(7) as usize];
-            ledger.add_span(id, t, t + dur, chips, class);
+            // Half default layer tags, half explicit random layers — the
+            // per-layer cells must stay bit-identical across paths even
+            // when a class splits across layers (the engine's
+            // compile-vs-restore / data-vs-framework refinements).
+            if rng.chance(0.5) {
+                ledger.add_span(id, t, t + dur, chips, class);
+            } else {
+                let layer = StackLayer::ALL[rng.below(6) as usize];
+                ledger.add_span_layered(id, t, t + dur, chips, class, layer);
+            }
             if class == TimeClass::Productive && rng.chance(0.8) {
                 ledger.add_pg_sample(id, t, t + dur, chips, rng.range_f64(0.0, 1.0));
             }
@@ -207,6 +216,126 @@ fn sweep_report_bytes_identical_across_ledger_modes() {
         String::from_utf8(windowed).unwrap(),
         "report bytes must not depend on the accounting mode"
     );
+}
+
+/// Per-layer cells, not just per-class: the single-pass fold's layer
+/// buckets must be bit-identical to one naive rescan per layer
+/// (`Ledger::layer_chip_seconds`) AND to a streaming windowed ledger fed
+/// the identical spans — for random ledgers, random windows, and meta
+/// filters. (`assert_bitwise` also re-checks layers inside every other
+/// property in this suite, since the report carries `layer_cs`.)
+#[test]
+fn prop_layer_cells_bitwise_across_naive_single_pass_and_windowed() {
+    check(60, 0x1A9E2, |rng| {
+        // Twin ledgers: every write (capacity, layered spans, PG samples)
+        // mirrored into a full-span ledger and a streaming windowed one,
+        // with a width chosen so windows straddle span boundaries.
+        let end = rng.range_f64(1_000.0, 20_000.0);
+        let width = rng.range_f64(end / 20.0, end / 2.0);
+        let mut ledger = Ledger::new();
+        let mut win = WindowedLedger::new(end, width);
+        let c0 = rng.range_u64(500, 50_000);
+        ledger.set_capacity(0.0, c0);
+        win.set_capacity(0.0, c0);
+        if rng.chance(0.7) {
+            let t = rng.range_f64(0.0, end);
+            let c = rng.range_u64(500, 50_000);
+            ledger.set_capacity(t, c);
+            win.set_capacity(t, c);
+        }
+        let n_jobs = rng.range_u64(1, 15);
+        for id in 1..=n_jobs {
+            let job = random_job(rng, id);
+            let chips = job.chips();
+            let meta = JobMeta::of(&job);
+            ledger.ensure_job(meta.clone());
+            win.ensure_job(meta);
+            let mut t = rng.range_f64(0.0, end * 0.5);
+            for _ in 0..rng.range_u64(0, 20) {
+                let dur = rng.range_f64(0.1, end * 0.1);
+                let class = TimeClass::ALL[rng.below(7) as usize];
+                let layer = StackLayer::ALL[rng.below(6) as usize];
+                ledger.add_span_layered(id, t, t + dur, chips, class, layer);
+                win.add_span_layered(id, t, t + dur, chips, class, layer);
+                if class == TimeClass::Productive && rng.chance(0.8) {
+                    let pg = rng.range_f64(0.0, 1.0);
+                    ledger.add_pg_sample(id, t, t + dur, chips, pg);
+                    win.add_pg_sample(id, t, t + dur, chips, pg);
+                }
+                t += dur * rng.range_f64(0.8, 1.4);
+            }
+        }
+        // Whole horizon, fleet and filtered: fold vs naive per-layer
+        // rescans vs the windowed ledger.
+        let phase = [Phase::Training, Phase::Serving, Phase::BulkInference]
+            [rng.below(3) as usize];
+        let filters: [(&str, Box<dyn Fn(&JobMeta) -> bool>); 2] = [
+            ("fleet", Box::new(|_| true)),
+            ("phase", Box::new(move |m: &JobMeta| m.phase == phase)),
+        ];
+        for (what, filter) in &filters {
+            let fast = goodput::report(&ledger, 0.0, end, filter);
+            for (i, layer) in StackLayer::ALL.iter().enumerate() {
+                let naive = ledger.layer_chip_seconds(*layer, 0.0, end, filter);
+                assert_eq!(
+                    fast.layer_cs[i].to_bits(),
+                    naive.to_bits(),
+                    "{what}: fold vs naive layer {}",
+                    layer.name()
+                );
+            }
+            assert_bitwise(&win.report(filter), &fast, &format!("{what}: windowed"));
+        }
+        // Per-window cells too (the windowed series reports carry the
+        // layer buckets through assert_bitwise).
+        let ws = win.series("w", |_| true);
+        let fs = TimeSeries::build("w", &ledger, 0.0, end, width, |_| true);
+        assert_eq!(ws.windows.len(), fs.windows.len());
+        for (i, (a, b)) in ws.reports.iter().zip(&fs.reports).enumerate() {
+            assert_bitwise(a, b, &format!("window {i}"));
+        }
+    });
+}
+
+/// A CACHE_VERSION-2 entry (pre-attribution: no `layer_cs`, old version
+/// stamp) must read as a MISS — the variant silently re-simulates — not
+/// as corruption and not as a layerless report.
+#[test]
+fn cache_v2_entries_read_as_misses_not_corruption() {
+    use tpufleet::sim::{CacheKey, SweepCache};
+    use tpufleet::util::Json;
+
+    let dir = std::env::temp_dir().join(format!("tpufleet-cache-v2-{}", std::process::id()));
+    let cache = SweepCache::new(&dir);
+    cache.clear().expect("clearing temp cache");
+
+    let mut spec = SweepSpec::new().workers(1);
+    let cfg = sweep_spec(1).variants[0].cfg.clone();
+    spec.push("solo", cfg.clone());
+    let mut first: Vec<SweepSummary> = Vec::new();
+    SweepRunner::run_streaming_summaries(spec, Some(&cache), |s| first.push(s));
+    assert!(!first[0].cached, "cold start must simulate");
+
+    // Forge the entry down to a v2-era shape.
+    let path = dir.join(CacheKey::of(&cfg).file_name());
+    let text = std::fs::read_to_string(&path).expect("entry must exist");
+    let mut entry = Json::parse(&text).unwrap();
+    if let Json::Obj(ref mut o) = entry {
+        o.insert("version".into(), Json::num(2.0));
+        if let Some(Json::Obj(g)) = o.get_mut("goodput") {
+            g.remove("layer_cs");
+        }
+    }
+    std::fs::write(&path, entry.to_string_pretty()).unwrap();
+
+    let mut spec = SweepSpec::new().workers(1);
+    spec.push("solo", cfg);
+    let mut second: Vec<SweepSummary> = Vec::new();
+    SweepRunner::run_streaming_summaries(spec, Some(&cache), |s| second.push(s));
+    assert!(!second[0].cached, "v2 entry must read as a miss, not serve");
+    assert_eq!(first[0].result, second[0].result);
+    assert_bitwise(&first[0].goodput, &second[0].goodput, "re-simulated summary");
+    cache.clear().unwrap();
 }
 
 /// The incremental `end_time` tracker never drifts from the span fold.

@@ -119,7 +119,7 @@ fn era_regression_shows_up_in_windowed_series() {
         t0: half,
         t1: cfg.duration_s,
         phase: Some(Phase::BulkInference),
-        effects: EraEffects { stall_mult: 8.0, restore_mult: 5.0 },
+        effects: EraEffects { stall_mult: 8.0, restore_mult: 5.0, ..Default::default() },
     });
     let mut sim = Simulation::new(cfg.clone());
     sim.run();

@@ -180,9 +180,11 @@ fn prop_runtime_accounting_conserves_time() {
         let era = EraEffects {
             stall_mult: rng.range_f64(0.2, 5.0),
             restore_mult: rng.range_f64(0.2, 5.0),
+            compile_mult: rng.range_f64(0.2, 5.0),
+            ckpt_mult: rng.range_f64(0.2, 5.0),
         };
         let acct = rm.account(&job, rng.chance(0.5), work_done, window, end, &era);
-        let total: f64 = acct.pieces.iter().map(|(_, d)| d).sum();
+        let total: f64 = acct.pieces.iter().map(|(_, _, d)| d).sum();
         assert!(total <= window + 1e-6, "pieces exceed window: {total} > {window}");
         if !acct.completed {
             assert!(
@@ -192,7 +194,7 @@ fn prop_runtime_accounting_conserves_time() {
         }
         assert!(acct.work_done_after >= work_done - 1e-9, "work regressed");
         assert!(acct.work_done_after <= job.work_s + 1e-9, "work overshoot");
-        for (_, d) in &acct.pieces {
+        for (_, _, d) in &acct.pieces {
             assert!(*d >= -1e-12, "negative piece {d}");
         }
     });
