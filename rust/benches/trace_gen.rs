@@ -1,0 +1,82 @@
+//! Bench: partitioned trace generation — jobs/sec for the materialized
+//! `trace()` path vs the constant-memory `TracePartition` stream (single
+//! part, 8-part replay fast-forward, and 8-part checkpoint jump), plus the
+//! peak-resident estimate that motivates the descriptor representation:
+//! O(jobs) for a materialized trace vs one in-flight `Job` (plus an
+//! O(cells) cursor table when checkpoints are used). Writes
+//! BENCH_trace_gen.json in the house bench-report format.
+
+use std::mem::size_of;
+
+use tpufleet::util::bench::Bench;
+use tpufleet::util::Json;
+use tpufleet::workload::{
+    partition_cells, GenCursor, GeneratorConfig, Job, TraceCheckpoints, TracePartition,
+    WorkloadGenerator,
+};
+
+const PARTS: u64 = 8;
+
+fn main() {
+    let days: f64 = std::env::var("TRACE_GEN_BENCH_DAYS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4.0);
+    let cfg = GeneratorConfig { duration_s: days * 86400.0, ..Default::default() };
+    let n_jobs = WorkloadGenerator::new(cfg.clone()).trace().len();
+    let cells = partition_cells(cfg.duration_s);
+    println!("trace_gen: {days} days, {n_jobs} jobs, {cells} cells");
+
+    // Sanity before timing anything: the 8 parts cover the trace exactly.
+    let covered: usize =
+        (0..PARTS).map(|j| TracePartition::new(cfg.clone(), j, PARTS).count()).sum();
+    assert_eq!(covered, n_jobs, "partition parts must cover the trace exactly");
+
+    let materialized = Bench::new("materialize_full_trace")
+        .iters(10)
+        .run(|| WorkloadGenerator::new(cfg.clone()).trace().len());
+    let streamed = Bench::new("stream_single_part")
+        .iters(10)
+        .run(|| TracePartition::new(cfg.clone(), 0, 1).count());
+    let replay = Bench::new("stream_8_parts_replay").iters(5).run(|| {
+        (0..PARTS).map(|j| TracePartition::new(cfg.clone(), j, PARTS).count()).sum::<usize>()
+    });
+    let ckpt_build =
+        Bench::new("checkpoint_build").iters(5).run(|| TraceCheckpoints::build(&cfg).cells());
+    let ckpts = TraceCheckpoints::build(&cfg);
+    let jump = Bench::new("stream_8_parts_checkpoint_jump").iters(5).run(|| {
+        (0..PARTS)
+            .map(|j| TracePartition::with_checkpoints(cfg.clone(), j, PARTS, &ckpts).count())
+            .sum::<usize>()
+    });
+
+    let jobs_per_s = |median_s: f64| n_jobs as f64 / median_s.max(1e-12);
+    let mat_bytes = n_jobs * size_of::<Job>();
+    let stream_bytes = size_of::<Job>();
+    let ckpt_bytes = cells as usize * size_of::<GenCursor>();
+    println!(
+        "peak resident estimate: materialized {mat_bytes} B vs streaming {stream_bytes} B \
+         (+{ckpt_bytes} B cursor table with checkpoints)"
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("trace_gen")),
+        ("days", Json::num(days)),
+        ("jobs", Json::num(n_jobs as f64)),
+        ("cells", Json::num(cells as f64)),
+        ("parts", Json::num(PARTS as f64)),
+        ("materialize_jobs_per_s", Json::num(jobs_per_s(materialized.median_s))),
+        ("stream_jobs_per_s", Json::num(jobs_per_s(streamed.median_s))),
+        ("stream_8_parts_replay_jobs_per_s", Json::num(jobs_per_s(replay.median_s))),
+        ("stream_8_parts_ckpt_jobs_per_s", Json::num(jobs_per_s(jump.median_s))),
+        ("checkpoint_build_s", Json::num(ckpt_build.median_s)),
+        ("materialized_peak_bytes", Json::num(mat_bytes as f64)),
+        ("streaming_peak_bytes", Json::num(stream_bytes as f64)),
+        ("checkpoint_table_bytes", Json::num(ckpt_bytes as f64)),
+    ]);
+    let path = "BENCH_trace_gen.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("writing {path} failed: {e}"),
+    }
+}

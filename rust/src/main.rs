@@ -16,7 +16,7 @@ use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
 use tpufleet::sim::cache::SIM_BEHAVIOR_VERSION;
 use tpufleet::sim::{
-    shard, LedgerMode, SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec,
+    shard, JobSource, LedgerMode, SimConfig, Simulation, SweepCache, SweepRunner, SweepSpec,
 };
 use tpufleet::util::cli::Args;
 use tpufleet::util::{pool, Rng};
@@ -58,7 +58,7 @@ COMMANDS:
              [--out FILE] [--progress]
              [--no-cache] [--cache-dir DIR] [--cache-max-mb N]
              [--cache-stats] [--shards N] [--shard-cmd CMD]
-             [--full-ledger]
+             [--full-ledger] [--materialize-trace]
              run a policy x fleet x job-size x failure-rate grid on a
              worker pool, streaming rows into one JSON report as variants
              finish (memory stays O(workers)); each variant accounts into
@@ -73,7 +73,10 @@ COMMANDS:
              the grid across N worker subprocesses (sharing one cache;
              merged report is byte-identical to the single-process run)
              and --shard-cmd overrides how workers are launched (default:
-             this binary)
+             this binary); --materialize-trace pre-generates every
+             variant's job list instead of streaming it from the O(1)
+             partition descriptor — results and report bytes are
+             identical; use it to cross-check the descriptor path
              (policies: default no-preemption no-defrag no-anti-thrash
              headroom-15; fleets: default small large c-only; job-mixes:
              default xl-heavy small-heavy; degrades: none data-3x
@@ -626,10 +629,28 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
-    let spec = match build_sweep_spec(args) {
+    let mut spec = match build_sweep_spec(args) {
         Ok(spec) => spec,
         Err(code) => return code,
     };
+    // Convert every descriptor-backed variant to an explicit materialized
+    // trace up front. Results (and report bytes) are identical to the
+    // descriptor path by construction — the CI shard-smoke gate `cmp`s a
+    // 2-shard descriptor run against this path to prove it — but configs
+    // go from O(1) to O(jobs), so this is a verification tool, not a
+    // default.
+    if args.has_flag("materialize-trace") {
+        for v in &mut spec.variants {
+            if let JobSource::Partition { part_index, part_count } = v.cfg.source {
+                let mut gcfg = v.cfg.generator.clone();
+                gcfg.duration_s = v.cfg.duration_s;
+                let jobs: Vec<_> =
+                    tpufleet::workload::TracePartition::new(gcfg, part_index, part_count)
+                        .collect();
+                v.cfg.source = JobSource::materialized(jobs);
+            }
+        }
+    }
     // A bare `--shards` (no value) parses as a flag; running serially
     // would silently ignore the operator's intent to shard — reject it.
     if args.has_flag("shards") {
@@ -1110,7 +1131,7 @@ fn cmd_trace(args: &Args) -> i32 {
                 ..Default::default()
             };
             eprintln!("replaying {} jobs over {days} days...", jobs.len());
-            cfg.trace_jobs = Some(std::sync::Arc::new(jobs));
+            cfg.source = JobSource::materialized(jobs);
             let mut sim = Simulation::new(cfg.clone());
             let res = sim.run();
             eprintln!("{res:?}");

@@ -602,8 +602,10 @@ pub struct Ablations {
     pub table: Table,
 }
 
-/// Replay the SAME workload trace under config variants that each disable
-/// or perturb one design choice, so every delta is attributable:
+/// Run the SAME workload stream (one generator seed, synthesized per
+/// variant from the default partition descriptor) under config variants
+/// that each disable or perturb one design choice, so every delta is
+/// attributable:
 ///   * no-preemption      — priority scheduling without eviction
 ///   * no-defrag          — fragmentation left to accumulate
 ///   * no-anti-thrash     — min_runtime_before_evict = 0
@@ -624,15 +626,11 @@ pub fn ablations_with_workers(seed: u64, workers: usize) -> Ablations {
 fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
     let mut base = SimConfig { seed, duration_s: days * DAY_S, ..Default::default() };
     base.generator.arrivals_per_hour = 10.0;
-    // One fixed trace for every variant — Arc'd, so the eight config
-    // clones below (and any hundred-variant grid built the same way)
-    // share a single allocation instead of cloning every `Job`.
-    let trace = {
-        let mut gcfg = base.generator.clone();
-        gcfg.duration_s = base.duration_s;
-        crate::workload::WorkloadGenerator::new(gcfg).trace()
-    };
-    base.trace_jobs = Some(std::sync::Arc::new(trace));
+    // Every variant keeps the default partition descriptor (part 0 of 1):
+    // the engine synthesizes the SAME job stream per variant from the
+    // shared generator seed in constant memory, so the eight configs below
+    // (and any hundred-variant grid built the same way) ship no job list
+    // at all — a config is O(1) regardless of trace length.
 
     let mut variants: Vec<(String, SimConfig)> = vec![("baseline".into(), base.clone())];
     {
@@ -660,31 +658,25 @@ fn ablations_impl(seed: u64, workers: usize, days: f64) -> Ablations {
         c.policy.headroom_fraction = 0.15;
         variants.push(("headroom-15%".into(), c));
     }
+    // Checkpoint-strategy extremes via the generator knob: `Rng::chance`
+    // consumes exactly one draw whatever the probability, so forcing the
+    // fraction to 0.0 / 1.0 flips every job's ckpt policy while leaving
+    // the rest of the stream bit-identical to the baseline — the same
+    // controlled comparison the old materialized-trace rewrite gave,
+    // without materializing anything.
     {
         let mut c = base.clone();
         c.generator.async_ckpt_fraction = 0.0;
-        // ckpt policy is baked into the trace jobs; rewrite them. The
-        // copy-on-write `make_mut` clones the shared trace only for the
-        // variants that actually edit it.
-        if let Some(tr) = c.trace_jobs.as_mut() {
-            for j in std::sync::Arc::make_mut(tr).iter_mut() {
-                j.ckpt = crate::workload::CheckpointPolicy::synchronous();
-            }
-        }
         variants.push(("sync-ckpt-only".into(), c));
     }
     {
         let mut c = base.clone();
-        if let Some(tr) = c.trace_jobs.as_mut() {
-            for j in std::sync::Arc::make_mut(tr).iter_mut() {
-                j.ckpt = crate::workload::CheckpointPolicy::asynchronous();
-            }
-        }
+        c.generator.async_ckpt_fraction = 1.0;
         variants.push(("async-ckpt-all".into(), c));
     }
 
-    // Every variant replays the same trace independently, so the whole
-    // matrix runs as one parallel sweep — through the streaming-summary
+    // Every variant synthesizes the same job stream independently, so the
+    // whole matrix runs as one parallel sweep — through the streaming-summary
     // path, which accounts each variant in the windowed ledger (no span
     // retention) and reduces it inside the worker. Reductions are
     // bit-identical to the full-ledger path, so the table is unchanged.

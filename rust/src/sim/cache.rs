@@ -24,6 +24,7 @@ use crate::util::Json;
 use crate::workload::{CheckpointPolicy, GeneratorConfig, Job, MixDrift, StepProfile};
 use crate::xlaopt::{CompilerStack, Deployment};
 
+use super::engine::JobSource;
 use super::scenario::{EraRule, EraSchedule};
 use super::{SimConfig, SimResult};
 
@@ -44,7 +45,16 @@ use super::{SimConfig, SimResult};
 /// identity defaults every new multiplier is arithmetically exact — but
 /// v2 entries have no layer buckets to serve, so they read as misses and
 /// re-simulate.
-pub const CACHE_VERSION: u64 = 3;
+///
+/// v4: `SimConfig::trace_jobs` (option of a job list) became
+/// `SimConfig::source` (partition descriptor | materialized list), so the
+/// config hash changed shape for EVERY config: the descriptor's two
+/// integers are hashed instead of an is-some bool plus per-job fields.
+/// Again no `SIM_BEHAVIOR_VERSION` bump — the default descriptor
+/// (`part 0 of 1`) streams the bit-identical job sequence the generator
+/// path produced — but a v3 hash and a v4 hash of the same logical config
+/// differ, so v3 entries read as misses and re-simulate.
+pub const CACHE_VERSION: u64 = 4;
 
 /// Simulator behavior fingerprint, mixed into every config hash. A cached
 /// entry is only valid for the engine that produced it, so **any PR that
@@ -134,7 +144,7 @@ pub fn config_hash(cfg: &SimConfig) -> u64 {
         generator,
         compiler,
         eras,
-        trace_jobs,
+        source,
         failures,
         repair_s,
         fail_detect_s,
@@ -185,11 +195,21 @@ pub fn config_hash(cfg: &SimConfig) -> u64 {
         hash_era_rule(&mut h, r);
     }
 
-    h.write_bool(trace_jobs.is_some());
-    if let Some(jobs) = trace_jobs {
-        h.write_usize(jobs.len());
-        for job in jobs.iter() {
-            hash_job(&mut h, job);
+    // Tagged like an enum discriminant so a descriptor can never collide
+    // with a materialized trace. The descriptor arm is the whole point of
+    // the v4 hash shape: two integers instead of O(jobs) field hashing.
+    match source {
+        JobSource::Partition { part_index, part_count } => {
+            h.write_u64(1);
+            h.write_u64(*part_index);
+            h.write_u64(*part_count);
+        }
+        JobSource::Materialized(jobs) => {
+            h.write_u64(2);
+            h.write_usize(jobs.len());
+            for job in jobs.iter() {
+                hash_job(&mut h, job);
+            }
         }
     }
 
@@ -836,13 +856,30 @@ mod tests {
         let mut gcfg = base.generator.clone();
         gcfg.duration_s = 6.0 * 3600.0;
         let jobs = WorkloadGenerator::new(gcfg).trace();
-        base.trace_jobs = Some(Arc::new(jobs.clone()));
+        base.source = JobSource::Materialized(Arc::new(jobs.clone()));
         let h0 = config_hash(&base);
         let mut edited = jobs;
         edited[0].work_s += 1.0;
         let mut c = base.clone();
-        c.trace_jobs = Some(Arc::new(edited));
+        c.source = JobSource::Materialized(Arc::new(edited));
         assert_ne!(h0, config_hash(&c), "a one-job trace edit must change the hash");
+    }
+
+    #[test]
+    fn hash_covers_partition_descriptor() {
+        let base = SimConfig::default();
+        let h0 = config_hash(&base);
+        let mut c = base.clone();
+        c.source = JobSource::Partition { part_index: 0, part_count: 2 };
+        let h_p0 = config_hash(&c);
+        assert_ne!(h0, h_p0, "part_count must be hashed");
+        c.source = JobSource::Partition { part_index: 1, part_count: 2 };
+        assert_ne!(h_p0, config_hash(&c), "part_index must be hashed");
+        // A descriptor never collides with a materialized trace — not even
+        // an empty one (the arms are tag-disambiguated).
+        let mut m = base.clone();
+        m.source = JobSource::materialized(Vec::new());
+        assert_ne!(h0, config_hash(&m), "descriptor vs materialized must differ");
     }
 
     #[test]
@@ -976,6 +1013,15 @@ mod tests {
         }
         std::fs::write(&path, v2.to_string_pretty()).unwrap();
         assert!(cache.lookup(&key).is_none(), "CACHE_VERSION 2 entry must miss");
+
+        // A v3-era entry (pre-JobSource: hashes had the old trace_jobs
+        // shape, version 3) is structurally identical to v4 apart from the
+        // version stamp — the stamp alone must force a miss, since a v3
+        // hash and a v4 hash of the same logical config differ.
+        let v3 = full.replace(&format!("\"version\": {CACHE_VERSION}"), "\"version\": 3");
+        assert_ne!(v3, full, "version stamp must be present to rewrite");
+        std::fs::write(&path, v3).unwrap();
+        assert!(cache.lookup(&key).is_none(), "CACHE_VERSION 3 entry must miss");
 
         // Valid JSON, embedded key disagrees with the file name.
         let forged = full.replace(&format!("{:016x}", 7u64), &format!("{:016x}", 8u64));

@@ -20,7 +20,7 @@ use crate::runtime_model::{EraEffects, RuntimeModel, WindowAccount, WindowEnd};
 use crate::workload::Phase;
 use crate::scheduler::{Scheduler, SchedulerPolicy};
 use crate::util::Rng;
-use crate::workload::{GeneratorConfig, Job, JobId, WorkloadGenerator};
+use crate::workload::{GeneratorConfig, Job, JobId, TracePartition};
 use crate::xlaopt::CompilerStack;
 
 use super::scenario::EraSchedule;
@@ -94,6 +94,42 @@ impl LayerDegrade {
     }
 }
 
+/// Where the engine's arrival stream comes from.
+///
+/// The descriptor variant is the default: jobs are synthesized on demand
+/// from `SimConfig::generator`, so configs, shard manifests, and cache
+/// hashes carry two integers instead of O(jobs) serialized records, and
+/// peak memory per variant is one in-flight `Job`. A part's stream is a
+/// deterministic slice of the full generator stream (see
+/// [`crate::workload::TracePartition`] for the composability law), so
+/// `Partition { part_index: 0, part_count: 1 }` is value-identical to the
+/// old generator-driven path.
+#[derive(Clone, Debug)]
+pub enum JobSource {
+    /// Synthesize part `part_index` of `part_count` of the generator's job
+    /// stream in constant memory. O(1) to serialize and hash.
+    Partition { part_index: u64, part_count: u64 },
+    /// Replay this exact job list (controlled comparisons; see
+    /// workload::trace). Arrivals past `duration_s` are ignored. `Arc`'d so
+    /// a hundred-variant ablation grid shares ONE trace allocation: cloning
+    /// a config for the next sweep variant bumps a refcount instead of
+    /// copying every `Job`.
+    Materialized(Arc<Vec<Job>>),
+}
+
+impl Default for JobSource {
+    fn default() -> Self {
+        JobSource::Partition { part_index: 0, part_count: 1 }
+    }
+}
+
+impl JobSource {
+    /// Wrap an owned job list for replay.
+    pub fn materialized(jobs: Vec<Job>) -> Self {
+        JobSource::Materialized(Arc::new(jobs))
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct SimConfig {
     pub seed: u64,
@@ -113,12 +149,9 @@ pub struct SimConfig {
     pub generator: GeneratorConfig,
     pub compiler: CompilerStack,
     pub eras: EraSchedule,
-    /// Replay this exact job trace instead of sampling from `generator`
-    /// (controlled comparisons; see workload::trace). Arrivals past
-    /// `duration_s` are ignored. `Arc`'d so a hundred-variant ablation
-    /// grid shares ONE trace allocation: cloning a config for the next
-    /// sweep variant bumps a refcount instead of copying every `Job`.
-    pub trace_jobs: Option<Arc<Vec<Job>>>,
+    /// Arrival stream: a partition descriptor over `generator` (default)
+    /// or an exact materialized trace to replay (see [`JobSource`]).
+    pub source: JobSource,
     /// Inject machine failures (Poisson over machines, per-gen MTBF).
     pub failures: bool,
     /// Machine repair time, seconds.
@@ -156,7 +189,7 @@ impl Default for SimConfig {
             generator: GeneratorConfig::default(),
             compiler: CompilerStack::new(),
             eras: EraSchedule::new(),
-            trace_jobs: None,
+            source: JobSource::default(),
             failures: true,
             repair_s: 4.0 * 3600.0,
             fail_detect_s: 120.0,
@@ -213,6 +246,16 @@ impl Ord for Event {
     }
 }
 
+/// The engine-internal face of [`JobSource`]: a live partition stream or a
+/// sorted replay cursor into a shared materialized trace.
+enum ArrivalFeed {
+    /// Constant-memory generator slice.
+    Stream(TracePartition),
+    /// Indices into `jobs` sorted by arrival time descending (pop from
+    /// back).
+    Replay { jobs: Arc<Vec<Job>>, order: Vec<u32> },
+}
+
 /// Per-job dynamic state.
 #[derive(Clone, Debug)]
 struct JobState {
@@ -254,11 +297,7 @@ pub struct Simulation {
     /// [`LedgerMode::Windowed`].
     windowed: Option<WindowedLedger>,
     rng: Rng,
-    gen: WorkloadGenerator,
-    /// Replay cursor into the shared `cfg.trace_jobs`: indices sorted by
-    /// arrival time, reversed (pop from back). Jobs are cloned one at a
-    /// time on arrival, so the trace itself is never copied per variant.
-    trace_order: Option<Vec<u32>>,
+    feed: ArrivalFeed,
     events: BinaryHeap<Event>,
     seq: u64,
     jobs: HashMap<JobId, JobState>,
@@ -285,23 +324,30 @@ impl Simulation {
                 Some(WindowedLedger::new(cfg.duration_s, width_s))
             }
         };
-        let mut gcfg = cfg.generator.clone();
-        gcfg.duration_s = cfg.duration_s;
-        // Sort replay *indices*, not the jobs: the Arc'd trace stays
-        // shared (and untouched) across every sweep variant. The stable
-        // sort on the same comparator yields the identical replay order
-        // the owned-Vec path produced.
-        let trace_order = cfg.trace_jobs.as_ref().map(|jobs| {
-            let mut order: Vec<u32> = (0..jobs.len() as u32).collect();
-            order.sort_by(|&a, &b| {
-                jobs[b as usize].arrival_s.total_cmp(&jobs[a as usize].arrival_s)
-            });
-            order
-        });
+        let feed = match &cfg.source {
+            JobSource::Partition { part_index, part_count } => {
+                // The engine's horizon, not the generator's nominal one,
+                // bounds the stream (matching the old generator-driven path).
+                let mut gcfg = cfg.generator.clone();
+                gcfg.duration_s = cfg.duration_s;
+                ArrivalFeed::Stream(TracePartition::new(gcfg, *part_index, *part_count))
+            }
+            JobSource::Materialized(jobs) => {
+                // Sort replay *indices*, not the jobs: the Arc'd trace stays
+                // shared (and untouched) across every sweep variant. The
+                // descending sort makes the cursor a pop-from-back Vec; jobs
+                // are cloned one at a time on arrival, so the trace itself
+                // is never copied per variant.
+                let mut order: Vec<u32> = (0..jobs.len() as u32).collect();
+                order.sort_by(|&a, &b| {
+                    jobs[b as usize].arrival_s.total_cmp(&jobs[a as usize].arrival_s)
+                });
+                ArrivalFeed::Replay { jobs: Arc::clone(jobs), order }
+            }
+        };
         let mut sim = Simulation {
             rng: Rng::new(cfg.seed ^ 0x51D),
-            gen: WorkloadGenerator::new(gcfg),
-            trace_order,
+            feed,
             events: BinaryHeap::new(),
             seq: 0,
             jobs: HashMap::new(),
@@ -496,18 +542,17 @@ impl Simulation {
     // Event handlers
     // ------------------------------------------------------------------
 
-    /// Next arrival from the shared trace (when replaying) or the
-    /// generator.
+    /// Next arrival from the partition stream or the replay cursor.
     fn pull_arrival(&mut self) -> Option<Job> {
         let horizon = self.cfg.duration_s;
-        match (&self.cfg.trace_jobs, self.trace_order.as_mut()) {
-            (Some(jobs), Some(order)) => loop {
+        match &mut self.feed {
+            ArrivalFeed::Stream(part) => part.next(),
+            ArrivalFeed::Replay { jobs, order } => loop {
                 let job = &jobs[order.pop()? as usize];
                 if job.arrival_s < horizon {
                     return Some(job.clone());
                 }
             },
-            _ => self.gen.next_job(),
         }
     }
 
@@ -848,7 +893,7 @@ mod tests {
         gcfg.duration_s = cfg.duration_s;
         let mut jobs = crate::workload::WorkloadGenerator::new(gcfg).trace();
         jobs[0].arrival_s = f64::NAN;
-        cfg.trace_jobs = Some(Arc::new(jobs));
+        cfg.source = JobSource::materialized(jobs);
         let res = Simulation::new(cfg).run();
         assert!(res.arrived_jobs > 0, "{res:?}");
     }
@@ -867,12 +912,12 @@ mod tests {
         let shared = Arc::new(jobs.clone());
 
         let mut base = cfg.clone();
-        base.trace_jobs = Some(Arc::clone(&shared));
+        base.source = JobSource::Materialized(Arc::clone(&shared));
         let mut nopreempt = cfg.clone();
         nopreempt.policy.preemption = false;
-        nopreempt.trace_jobs = Some(Arc::clone(&shared));
+        nopreempt.source = JobSource::Materialized(Arc::clone(&shared));
         let mut private = cfg;
-        private.trace_jobs = Some(Arc::new(jobs));
+        private.source = JobSource::materialized(jobs);
 
         let r_base = Simulation::new(base).run();
         let r_nop = Simulation::new(nopreempt).run();

@@ -12,7 +12,7 @@ pub mod shard;
 pub mod sweep;
 
 pub use cache::{CacheKey, CacheStats, CachedRun, SweepCache};
-pub use engine::{LayerDegrade, LedgerMode, SimConfig, SimResult, Simulation};
+pub use engine::{JobSource, LayerDegrade, LedgerMode, SimConfig, SimResult, Simulation};
 pub use scenario::{EraRule, EraSchedule};
 pub use shard::{MergedRow, ShardTask};
 pub use sweep::{SweepRun, SweepRunner, SweepSpec, SweepSummary, SweepVariant};

@@ -41,7 +41,7 @@ use crate::workload::{trace, GeneratorConfig, MixDrift, Phase};
 use crate::xlaopt::{CompilerStack, Deployment, Pass};
 
 use super::cache::{CACHE_VERSION, SIM_BEHAVIOR_VERSION};
-use super::engine::LayerDegrade;
+use super::engine::{JobSource, LayerDegrade};
 use super::scenario::{EraRule, EraSchedule};
 use super::sweep::{SweepSpec, SweepSummary, SweepVariant};
 use super::SimConfig;
@@ -49,7 +49,12 @@ use super::SimConfig;
 /// Bumped when the manifest / shard-report layout itself changes shape.
 /// Behavior compatibility is carried separately by
 /// [`SIM_BEHAVIOR_VERSION`] in every header.
-pub const SHARD_FORMAT_VERSION: u64 = 1;
+///
+/// v2: the config's `trace_jobs` key (null | inline trace) became
+/// `source` (partition descriptor object | inline trace) — generated
+/// workloads now ship as two integers instead of serialized job arrays,
+/// so manifests are O(1) in trace size.
+pub const SHARD_FORMAT_VERSION: u64 = 2;
 
 // ---------------------------------------------------------------------------
 // SimConfig <-> JSON (bit-exact, exhaustive)
@@ -62,12 +67,13 @@ pub const SHARD_FORMAT_VERSION: u64 = 1;
 /// bit-pattern hex ([`Json::f64b`]): NaN/inf/-0.0 survive, and a decoded
 /// config hashes to the same `sim::cache` key as the original.
 ///
-/// Exception: `trace_jobs` reuses the versioned `workload::trace` format,
-/// whose floats are plain JSON numbers — exact for every finite value
-/// (shortest-roundtrip `Display`), which generated traces always are. A
-/// non-finite float smuggled into a hand-edited trace serializes as
-/// `null` and the worker REFUSES the manifest (decode error), rather than
-/// silently running an altered config.
+/// Exception: a materialized `source` reuses the versioned
+/// `workload::trace` format, whose floats are plain JSON numbers — exact
+/// for every finite value (shortest-roundtrip `Display`), which generated
+/// traces always are. A non-finite float smuggled into a hand-edited
+/// trace serializes as `null` and the worker REFUSES the manifest (decode
+/// error), rather than silently running an altered config. A partition
+/// `source` is just two integers (`part_index`, `part_count`).
 pub fn config_to_json(cfg: &SimConfig) -> Json {
     let SimConfig {
         seed,
@@ -82,7 +88,7 @@ pub fn config_to_json(cfg: &SimConfig) -> Json {
         generator,
         compiler,
         eras,
-        trace_jobs,
+        source,
         failures,
         repair_s,
         fail_detect_s,
@@ -114,13 +120,17 @@ pub fn config_to_json(cfg: &SimConfig) -> Json {
         ("compiler", compiler_to_json(compiler)),
         ("eras", eras_to_json(eras)),
         (
-            "trace_jobs",
-            match trace_jobs {
-                None => Json::Null,
+            "source",
+            match source {
+                // O(1) descriptor: the worker re-synthesizes its slice.
+                JobSource::Partition { part_index, part_count } => Json::obj(vec![
+                    ("part_index", Json::u64_hex(*part_index)),
+                    ("part_count", Json::u64_hex(*part_count)),
+                ]),
                 // Reuse the versioned workload-trace format (its decoder
                 // constructs `Job` exhaustively, preserving the
                 // compile-breaking guarantee for job fields too).
-                Some(jobs) => trace::to_json(jobs),
+                JobSource::Materialized(jobs) => trace::to_json(jobs),
             },
         ),
         ("failures", Json::Bool(*failures)),
@@ -174,9 +184,20 @@ pub fn config_from_json(j: &Json) -> Result<SimConfig> {
         Json::Null => None,
         ev => Some(evolution_from_json(ev)?),
     };
-    let trace_jobs = match j.get("trace_jobs") {
-        Json::Null => None,
-        t => Some(Arc::new(trace::from_json(t)?)),
+    let src = j.get("source");
+    let source = if let Some(part_index) = src.get("part_index").as_u64_hex() {
+        let part_count = src
+            .get("part_count")
+            .as_u64_hex()
+            .ok_or_else(|| anyhow!("source: missing/invalid part_count"))?;
+        if part_count == 0 || part_index >= part_count {
+            bail!("source: part_index {part_index} out of range for {part_count} parts");
+        }
+        JobSource::Partition { part_index, part_count }
+    } else if !matches!(src, Json::Null) {
+        JobSource::Materialized(Arc::new(trace::from_json(src)?))
+    } else {
+        bail!("missing source");
     };
     Ok(SimConfig {
         seed: u64_of(j, "seed")?,
@@ -192,7 +213,7 @@ pub fn config_from_json(j: &Json) -> Result<SimConfig> {
         generator: generator_from_json(j.get("generator"))?,
         compiler: compiler_from_json(j.get("compiler"))?,
         eras: eras_from_json(j.get("eras"))?,
-        trace_jobs,
+        source,
         failures: bool_of(j, "failures")?,
         repair_s: f64_of(j, "repair_s")?,
         fail_detect_s: f64_of(j, "fail_detect_s")?,
@@ -605,17 +626,18 @@ pub fn shard_manifests(spec: &SweepSpec, shard_count: usize) -> Vec<Json> {
         .collect()
 }
 
-/// Encode one variant's config for a manifest, routing its replay trace
-/// (if any) through the manifest's `traces` interning table: the config's
-/// `trace_jobs` field becomes `{"shared_trace": idx}`. Distinctness is by
-/// `Arc` identity — the grid-construction idiom clones one config per
-/// variant, so shared traces share a pointer.
+/// Encode one variant's config for a manifest, routing a materialized
+/// replay trace (if any) through the manifest's `traces` interning table:
+/// the config's `source` field becomes `{"shared_trace": idx}`.
+/// Distinctness is by `Arc` identity — the grid-construction idiom clones
+/// one config per variant, so shared traces share a pointer. Partition
+/// descriptors are already O(1) and encode inline.
 fn intern_trace(
     cfg: &SimConfig,
     traces: &mut Vec<Json>,
     seen: &mut Vec<*const Vec<crate::workload::Job>>,
 ) -> Json {
-    let Some(jobs) = &cfg.trace_jobs else { return config_to_json(cfg) };
+    let JobSource::Materialized(jobs) = &cfg.source else { return config_to_json(cfg) };
     let ptr = Arc::as_ptr(jobs);
     let idx = match seen.iter().position(|&p| p == ptr) {
         Some(idx) => idx,
@@ -625,13 +647,14 @@ fn intern_trace(
             traces.len() - 1
         }
     };
-    // Encode the config without its trace, then splice in the reference.
+    // Encode the config with a placeholder descriptor in place of the
+    // trace, then splice in the reference.
     let mut stripped = cfg.clone();
-    stripped.trace_jobs = None;
+    stripped.source = JobSource::default();
     let mut cfg_json = config_to_json(&stripped);
     if let Json::Obj(ref mut o) = cfg_json {
         let trace_ref = Json::obj(vec![("shared_trace", Json::num(idx as f64))]);
-        o.insert("trace_jobs".to_string(), trace_ref);
+        o.insert("source".to_string(), trace_ref);
     }
     cfg_json
 }
@@ -697,12 +720,13 @@ pub fn parse_manifest(j: &Json) -> Result<ShardTask> {
 
 /// Decode a manifest variant's config, resolving a `{"shared_trace": i}`
 /// reference against the manifest's interned trace table. Configs whose
-/// `trace_jobs` is inline (or null) decode exactly as [`config_from_json`].
+/// `source` is an inline descriptor or trace decode exactly as
+/// [`config_from_json`].
 fn variant_cfg_from_json(
     cfg_json: &Json,
     traces: &[Arc<Vec<crate::workload::Job>>],
 ) -> Result<SimConfig> {
-    let trace_ref = cfg_json.get("trace_jobs").get("shared_trace").as_u64();
+    let trace_ref = cfg_json.get("source").get("shared_trace").as_u64();
     let Some(idx) = trace_ref else { return config_from_json(cfg_json) };
     let idx = idx as usize;
     let arc = traces
@@ -710,10 +734,18 @@ fn variant_cfg_from_json(
         .ok_or_else(|| anyhow!("shared_trace {idx} out of range ({} traces)", traces.len()))?;
     let mut stripped = cfg_json.clone();
     if let Json::Obj(ref mut o) = stripped {
-        o.insert("trace_jobs".to_string(), Json::Null);
+        // Placeholder descriptor so the strict decoder sees a well-formed
+        // source; the real trace is spliced in below.
+        o.insert(
+            "source".to_string(),
+            Json::obj(vec![
+                ("part_index", Json::u64_hex(0)),
+                ("part_count", Json::u64_hex(1)),
+            ]),
+        );
     }
     let mut cfg = config_from_json(&stripped)?;
-    cfg.trace_jobs = Some(arc.clone());
+    cfg.source = JobSource::Materialized(arc.clone());
     Ok(cfg)
 }
 
@@ -961,8 +993,15 @@ mod tests {
         };
         let mut gcfg = cfg.generator.clone();
         gcfg.duration_s = 2.0 * 3600.0;
-        cfg.trace_jobs = Some(Arc::new(WorkloadGenerator::new(gcfg).trace()));
+        cfg.source = JobSource::Materialized(Arc::new(WorkloadGenerator::new(gcfg).trace()));
         cfg
+    }
+
+    fn materialized_len(cfg: &SimConfig) -> usize {
+        match &cfg.source {
+            JobSource::Materialized(jobs) => jobs.len(),
+            JobSource::Partition { .. } => panic!("expected a materialized source"),
+        }
     }
 
     /// Equality via the cache's exhaustive stable hash (which covers every
@@ -987,10 +1026,40 @@ mod tests {
         assert_eq!(cfg.duration_s, back.duration_s);
         assert_eq!(cfg.generator.seed, back.generator.seed);
         assert_eq!(cfg.compiler.deployments.len(), back.compiler.deployments.len());
-        assert_eq!(
-            cfg.trace_jobs.as_ref().unwrap().len(),
-            back.trace_jobs.as_ref().unwrap().len()
+        assert_eq!(materialized_len(&cfg), materialized_len(&back));
+    }
+
+    #[test]
+    fn config_roundtrips_partition_descriptor() {
+        let mut cfg = SimConfig::default();
+        cfg.source = JobSource::Partition { part_index: 3, part_count: 8 };
+        let text = config_to_json(&cfg).to_string_pretty();
+        let back = config_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_configs_equal(&cfg, &back);
+        assert!(
+            matches!(back.source, JobSource::Partition { part_index: 3, part_count: 8 }),
+            "descriptor must round-trip: {:?}",
+            back.source
         );
+        // Malformed descriptors are refused, not defaulted.
+        let mut j = config_to_json(&cfg);
+        if let Json::Obj(ref mut o) = j {
+            o.insert(
+                "source".into(),
+                Json::obj(vec![
+                    ("part_index", Json::u64_hex(8)),
+                    ("part_count", Json::u64_hex(8)),
+                ]),
+            );
+        }
+        let err = config_from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        let mut j = config_to_json(&cfg);
+        if let Json::Obj(ref mut o) = j {
+            o.insert("source".into(), Json::Null);
+        }
+        let err = config_from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("source"), "{err}");
     }
 
     #[test]
@@ -1073,7 +1142,7 @@ mod tests {
         for i in 0..3u64 {
             let cfg = SimConfig {
                 seed: 1000 + i,
-                trace_jobs: Some(jobs.clone()),
+                source: JobSource::Materialized(jobs.clone()),
                 ..Default::default()
             };
             spec.push(format!("replay-{i}"), cfg);
@@ -1089,7 +1158,10 @@ mod tests {
         let arcs: Vec<_> = task
             .variants
             .iter()
-            .filter_map(|(_, v)| v.cfg.trace_jobs.clone())
+            .filter_map(|(_, v)| match &v.cfg.source {
+                JobSource::Materialized(jobs) => Some(jobs.clone()),
+                JobSource::Partition { .. } => None,
+            })
             .collect();
         assert_eq!(arcs.len(), 3);
         assert!(
@@ -1098,6 +1170,49 @@ mod tests {
         );
         for (i, v) in &task.variants {
             assert_configs_equal(&v.cfg, &spec.variants[*i].cfg);
+        }
+    }
+
+    /// The tentpole's O(jobs) → O(1) manifest collapse, pinned: a
+    /// descriptor-backed grid (the default source) ships shard manifests
+    /// with ZERO serialized jobs, under a fixed byte budget that no
+    /// O(jobs) encoding could meet — tiny_spec's 6-hour traces alone
+    /// would serialize to hundreds of KiB.
+    #[test]
+    fn descriptor_manifests_carry_no_jobs_and_stay_small() {
+        let spec = tiny_spec(6);
+        let manifests = shard_manifests(&spec, 5);
+        assert_eq!(manifests.len(), 5);
+        for (k, m) in manifests.iter().enumerate() {
+            assert_eq!(
+                m.get("traces").as_arr().unwrap().len(),
+                0,
+                "shard {k}: descriptor-backed manifests must intern no traces"
+            );
+            let text = m.to_string_pretty();
+            assert_eq!(
+                text.matches("\"job_count\"").count(),
+                0,
+                "shard {k}: no serialized jobs allowed"
+            );
+            assert!(
+                text.contains("\"part_index\"") && text.contains("\"part_count\""),
+                "shard {k}: configs must carry the descriptor"
+            );
+            const MANIFEST_BYTE_BUDGET: usize = 32 * 1024;
+            assert!(
+                text.len() <= MANIFEST_BYTE_BUDGET,
+                "shard {k}: {} bytes exceeds the {MANIFEST_BYTE_BUDGET}-byte budget",
+                text.len()
+            );
+            // And the descriptor survives the worker-side decode.
+            let task = parse_manifest(&Json::parse(&text).unwrap()).unwrap();
+            for (_, v) in &task.variants {
+                assert!(matches!(
+                    v.cfg.source,
+                    JobSource::Partition { part_index: 0, part_count: 1 }
+                ));
+            }
         }
     }
 

@@ -419,16 +419,18 @@ mod tests {
         assert_eq!(
             crate::sim::cache::SIM_BEHAVIOR_VERSION,
             1,
-            "the reduction rewrite must NOT bump the behavior version; \
-             if simulation behavior really changed, this test and the \
-             bit-identity suite need revisiting together"
+            "neither the reduction rewrite nor the JobSource refactor may \
+             bump the behavior version (the default partition descriptor \
+             streams the bit-identical job sequence); if simulation \
+             behavior really changed, this test and the bit-identity \
+             suite need revisiting together"
         );
         assert_eq!(
             crate::sim::cache::CACHE_VERSION,
-            3,
-            "pre-attribution cache entries (no layer_cs section) must be \
-             invalidated by the cache version, not served alongside \
-             layer-resolved rows"
+            4,
+            "pre-JobSource cache entries were keyed by the old trace_jobs \
+             hash shape; they must be invalidated by the cache version, \
+             not served against descriptor-shaped hashes"
         );
         let cache = temp_cache("mode-compat");
         let mut cold: Vec<SweepSummary> = Vec::new();

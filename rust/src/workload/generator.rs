@@ -100,6 +100,25 @@ impl WorkloadGenerator {
         WorkloadGenerator { cfg, rng, next_id: 1, clock_s: 0.0 }
     }
 
+    /// Snapshot the generator's resumable state. Restoring via
+    /// [`WorkloadGenerator::from_cursor`] with the same config continues the
+    /// job stream bit-identically from the snapshot point.
+    pub fn cursor(&self) -> GenCursor {
+        GenCursor { rng: self.rng.state(), clock_s: self.clock_s, next_id: self.next_id }
+    }
+
+    /// Rebuild a generator mid-stream from a [`GenCursor`] snapshot. The
+    /// config must be the one the cursor was captured under; cursors are not
+    /// portable across configs (the RNG draw sequence depends on the mixes).
+    pub fn from_cursor(cfg: GeneratorConfig, cur: &GenCursor) -> Self {
+        WorkloadGenerator {
+            cfg,
+            rng: Rng::from_state(cur.rng),
+            next_id: cur.next_id,
+            clock_s: cur.clock_s,
+        }
+    }
+
     /// Generate the full arrival trace for the configured duration.
     pub fn trace(&mut self) -> Vec<Job> {
         let mut out = Vec::new();
@@ -260,6 +279,197 @@ fn medium_shapes(pod: [u32; 3]) -> Vec<[u32; 3]> {
     out
 }
 
+/// Partition-cell width in seconds. Partitions slice the job stream at
+/// integer multiples of this width so that coarse and fine partitionings
+/// agree on every boundary (the composability law below).
+pub const PARTITION_CELL_S: f64 = 3600.0;
+
+/// Number of partition cells a scenario of `duration_s` spans. Always ≥ 1 so
+/// even degenerate durations have a well-defined single-part partition.
+pub fn partition_cells(duration_s: f64) -> u64 {
+    let cells = (duration_s / PARTITION_CELL_S).ceil();
+    if cells.is_finite() && cells > 1.0 { cells as u64 } else { 1 }
+}
+
+/// Absolute start time of partition cell `cell`. Every partitioning computes
+/// boundary times through this one function, so part edges are bit-identical
+/// regardless of `part_count`.
+pub fn cell_start(cell: u64) -> f64 {
+    cell as f64 * PARTITION_CELL_S
+}
+
+/// First cell owned by part `part_index` of `part_count` over `cells` cells.
+/// Integer floor arithmetic in u128 gives the exact refinement property
+/// `floor(j·k·C / (n·k)) = floor(j·C / n)`: refining a partitioning k-fold
+/// subdivides parts without moving any existing boundary.
+fn part_cell_lo(cells: u64, part_index: u64, part_count: u64) -> u64 {
+    (part_index as u128 * cells as u128 / part_count as u128) as u64
+}
+
+/// Resumable generator state between two jobs: the raw RNG words plus the
+/// arrival clock and the next job id. ~48 bytes — small enough to checkpoint
+/// one per hour-cell for a fleet-year (O(cells), not O(jobs)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenCursor {
+    pub rng: [u64; 4],
+    pub clock_s: f64,
+    pub next_id: JobId,
+}
+
+/// Per-cell generator cursors: `cursors[c]` is the state from which resuming
+/// yields exactly the jobs arriving at or after `cell_start(c)`. Built by one
+/// O(jobs) walk of the stream; lets [`TracePartition`] jump to any part in
+/// O(1) instead of replaying the whole prefix.
+#[derive(Clone, Debug)]
+pub struct TraceCheckpoints {
+    cells: u64,
+    cursors: Vec<GenCursor>,
+}
+
+impl TraceCheckpoints {
+    /// Walk the full stream once, capturing the pre-job cursor at every cell
+    /// boundary crossing. Boundaries inside arrival gaps (empty cells) and
+    /// past the end of the stream get the nearest following state, which
+    /// resumes to the correct first job (or immediately to end-of-stream).
+    pub fn build(cfg: &GeneratorConfig) -> Self {
+        let cells = partition_cells(cfg.duration_s);
+        let mut gen = WorkloadGenerator::new(cfg.clone());
+        let mut cursors = Vec::with_capacity(cells as usize);
+        cursors.push(gen.cursor());
+        loop {
+            let before = gen.cursor();
+            match gen.next_job() {
+                Some(job) => {
+                    while (cursors.len() as u64) < cells
+                        && !(job.arrival_s < cell_start(cursors.len() as u64))
+                    {
+                        cursors.push(before.clone());
+                    }
+                }
+                None => {
+                    while (cursors.len() as u64) < cells {
+                        cursors.push(before.clone());
+                    }
+                    break;
+                }
+            }
+        }
+        TraceCheckpoints { cells, cursors }
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.cells
+    }
+}
+
+/// One part of a deterministic partitioning of the generator's job stream.
+///
+/// Part `j` of `n` yields exactly the jobs arriving in
+/// `[cell_start(lo), cell_start(hi))` where `lo = floor(j·cells/n)` and
+/// `hi = floor((j+1)·cells/n)` — a contiguous run of whole hour-cells.
+/// Because boundaries are integer cell indices, partitionings compose: the
+/// concatenation of parts `j·k .. (j+1)·k` of `n·k` is bit-identical to part
+/// `j` of `n`, and the concatenation of all parts of any `n` is bit-identical
+/// to [`WorkloadGenerator::trace`]. Peak memory is one in-flight `Job`
+/// regardless of part or trace size.
+pub struct TracePartition {
+    gen: WorkloadGenerator,
+    t_hi: f64,
+    pending: Option<Job>,
+    done: bool,
+}
+
+impl TracePartition {
+    /// Open part `part_index` of `part_count` by deterministic replay:
+    /// generate-and-discard the stream prefix before the part's first cell.
+    /// O(prefix jobs) time, O(1) memory. Panics if `part_index >= part_count`
+    /// or `part_count == 0`.
+    pub fn new(cfg: GeneratorConfig, part_index: u64, part_count: u64) -> Self {
+        assert!(part_count > 0, "TracePartition: part_count must be >= 1");
+        assert!(
+            part_index < part_count,
+            "TracePartition: part_index {part_index} out of range for {part_count} parts"
+        );
+        let cells = partition_cells(cfg.duration_s);
+        let cell_lo = part_cell_lo(cells, part_index, part_count);
+        let t_lo = cell_start(cell_lo);
+        let t_hi = cell_start(part_cell_lo(cells, part_index + 1, part_count));
+        let mut gen = WorkloadGenerator::new(cfg);
+        let mut pending = None;
+        let mut done = false;
+        if cell_lo > 0 {
+            loop {
+                match gen.next_job() {
+                    None => {
+                        done = true;
+                        break;
+                    }
+                    Some(job) => {
+                        if !(job.arrival_s < t_lo) {
+                            pending = Some(job);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        TracePartition { gen, t_hi, pending, done }
+    }
+
+    /// Open a part by jumping straight to its first cell's checkpoint —
+    /// O(1) instead of replaying the prefix. Yields exactly the same jobs as
+    /// [`TracePartition::new`] with the same arguments. The checkpoints must
+    /// have been built from the same `cfg`.
+    pub fn with_checkpoints(
+        cfg: GeneratorConfig,
+        part_index: u64,
+        part_count: u64,
+        ckpts: &TraceCheckpoints,
+    ) -> Self {
+        assert!(part_count > 0, "TracePartition: part_count must be >= 1");
+        assert!(
+            part_index < part_count,
+            "TracePartition: part_index {part_index} out of range for {part_count} parts"
+        );
+        let cells = partition_cells(cfg.duration_s);
+        assert_eq!(
+            cells, ckpts.cells,
+            "TracePartition: checkpoints built for a different duration"
+        );
+        let cell_lo = part_cell_lo(cells, part_index, part_count);
+        let t_hi = cell_start(part_cell_lo(cells, part_index + 1, part_count));
+        let gen = WorkloadGenerator::from_cursor(cfg, &ckpts.cursors[cell_lo as usize]);
+        TracePartition { gen, t_hi, pending: None, done: false }
+    }
+}
+
+impl Iterator for TracePartition {
+    type Item = Job;
+
+    fn next(&mut self) -> Option<Job> {
+        if self.done {
+            return None;
+        }
+        let job = match self.pending.take() {
+            Some(job) => job,
+            None => match self.gen.next_job() {
+                Some(job) => job,
+                None => {
+                    self.done = true;
+                    return None;
+                }
+            },
+        };
+        // Negated comparison so a non-finite arrival ends the part instead
+        // of leaking past its upper boundary.
+        if !(job.arrival_s < self.t_hi) {
+            self.done = true;
+            return None;
+        }
+        Some(job)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +565,55 @@ mod tests {
         let trace = WorkloadGenerator::new(cfg).trace();
         assert!(!trace.is_empty());
         assert!(trace.iter().all(|j| j.priority == Priority::Critical));
+    }
+
+    fn jobs_bit_identical(a: &Job, b: &Job) -> bool {
+        a.id == b.id
+            && a.arrival_s.to_bits() == b.arrival_s.to_bits()
+            && a.work_s.to_bits() == b.work_s.to_bits()
+            && a.startup_s.to_bits() == b.startup_s.to_bits()
+            && a.slice_shape == b.slice_shape
+            && a.pods == b.pods
+            && a.framework == b.framework
+            && a.step.ideal_flops_per_chip.to_bits() == b.step.ideal_flops_per_chip.to_bits()
+    }
+
+    #[test]
+    fn single_part_partition_is_the_full_trace() {
+        let cfg = GeneratorConfig { duration_s: 2.0 * 86400.0, ..Default::default() };
+        let full = WorkloadGenerator::new(cfg.clone()).trace();
+        let streamed: Vec<Job> = TracePartition::new(cfg, 0, 1).collect();
+        assert_eq!(full.len(), streamed.len());
+        assert!(full.iter().zip(&streamed).all(|(a, b)| jobs_bit_identical(a, b)));
+    }
+
+    #[test]
+    fn checkpoint_jump_matches_replay_fast_forward() {
+        let cfg = GeneratorConfig { duration_s: 2.0 * 86400.0, ..Default::default() };
+        let ckpts = TraceCheckpoints::build(&cfg);
+        assert_eq!(ckpts.cells(), 48);
+        for part in 0..5 {
+            let replayed: Vec<Job> = TracePartition::new(cfg.clone(), part, 5).collect();
+            let jumped: Vec<Job> =
+                TracePartition::with_checkpoints(cfg.clone(), part, 5, &ckpts).collect();
+            assert_eq!(replayed.len(), jumped.len(), "part {part}");
+            assert!(replayed.iter().zip(&jumped).all(|(a, b)| jobs_bit_identical(a, b)));
+        }
+    }
+
+    #[test]
+    fn more_parts_than_cells_yields_empty_tails_and_same_concat() {
+        let cfg = GeneratorConfig { duration_s: 3.0 * 3600.0, ..Default::default() };
+        let full = WorkloadGenerator::new(cfg.clone()).trace();
+        let n = 7; // > 3 cells: some parts must be empty
+        let concat: Vec<Job> =
+            (0..n).flat_map(|j| TracePartition::new(cfg.clone(), j, n)).collect();
+        assert_eq!(full.len(), concat.len());
+        assert!(full.iter().zip(&concat).all(|(a, b)| jobs_bit_identical(a, b)));
+        let empties = (0..n)
+            .filter(|&j| TracePartition::new(cfg.clone(), j, n).next().is_none())
+            .count();
+        assert!(empties >= n as usize - 3, "expected empty tail parts, got {empties}");
     }
 
     #[test]

@@ -7,7 +7,10 @@ pub mod generator;
 pub mod job;
 pub mod trace;
 
-pub use generator::{GeneratorConfig, MixDrift, WorkloadGenerator};
+pub use generator::{
+    cell_start, partition_cells, GenCursor, GeneratorConfig, MixDrift, TraceCheckpoints,
+    TracePartition, WorkloadGenerator, PARTITION_CELL_S,
+};
 pub use job::{
     CheckpointPolicy, Framework, Job, JobId, ModelArch, Phase, Priority, SizeClass,
     StepProfile,

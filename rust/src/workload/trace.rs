@@ -44,14 +44,20 @@ pub fn from_json(j: &Json) -> Result<Vec<Job>> {
 }
 
 pub fn save(jobs: &[Job], path: &Path) -> Result<()> {
-    std::fs::write(path, to_json(jobs).to_string_pretty())?;
+    std::fs::write(path, to_json(jobs).to_string_pretty())
+        .map_err(|e| anyhow!("writing trace {}: {e}", path.display()))?;
     Ok(())
 }
 
+/// Load a trace file. Every failure mode — unreadable file, truncated or
+/// malformed JSON, bad record — names the offending path (and, via
+/// [`from_json`], the offending job index), so a bad trace in a batch of
+/// replays is identifiable from the error alone.
 pub fn load(path: &Path) -> Result<Vec<Job>> {
-    let text = std::fs::read_to_string(path)?;
-    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
-    from_json(&j)
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading trace {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("parsing trace {}: {e}", path.display()))?;
+    from_json(&j).map_err(|e| anyhow!("trace {}: {e}", path.display()))
 }
 
 fn job_to_json(job: &Job) -> Json {
@@ -237,6 +243,37 @@ mod tests {
         }
         let err = from_json(&good).unwrap_err().to_string();
         assert!(err.contains("job[0]"), "{err}");
+    }
+
+    #[test]
+    fn load_errors_name_the_offending_path_and_job() {
+        // Missing file: the error must carry the path, not a bare ENOENT.
+        let missing = std::env::temp_dir().join("tpufleet_trace_missing.json");
+        std::fs::remove_file(&missing).ok();
+        let err = format!("{:#}", load(&missing).unwrap_err());
+        assert!(err.contains("tpufleet_trace_missing.json"), "{err}");
+
+        // Truncated file (interrupted write): path must be in the error.
+        let path = std::env::temp_dir().join("tpufleet_trace_truncated.json");
+        let jobs = sample_jobs(1.0);
+        let full = to_json(&jobs).to_string_pretty();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("tpufleet_trace_truncated.json"), "{err}");
+        assert!(err.contains("parsing trace"), "{err}");
+
+        // Well-formed JSON with one bad record: path AND job index.
+        let mut j = to_json(&jobs);
+        if let Json::Obj(ref mut o) = j {
+            if let Some(Json::Arr(ref mut recs)) = o.get_mut("jobs") {
+                recs[1] = Json::obj(vec![("id", Json::num(2.0))]);
+            }
+        }
+        std::fs::write(&path, j.to_string_pretty()).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("tpufleet_trace_truncated.json"), "{err}");
+        assert!(err.contains("job[1]"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -180,6 +180,89 @@ fn killed_shard_run_resumes_from_cache() {
 }
 
 #[test]
+fn materialized_trace_run_matches_descriptor_runs_bytewise() {
+    // The JobSource contract on the real binary: --materialize-trace
+    // converts every variant's partition descriptor into an explicit
+    // Vec<Job> replay before sweeping, and the report must come out
+    // byte-identical to the descriptor-backed serial AND 2-shard runs
+    // (whose manifests carry only descriptor integers).
+    let dir = scratch("materialize");
+    let mat_out = dir.join("materialized.json");
+    let mut mat_args = sweep_args(&mat_out, &dir.join("cache-mat"));
+    mat_args.push("--materialize-trace".to_string());
+    let mat = run(&mat_args, &[]);
+    assert!(mat.status.success(), "materialized sweep failed: {}", stderr_of(&mat));
+    let reference = read(&mat_out);
+
+    let desc_out = dir.join("descriptor.json");
+    let desc = run(&sweep_args(&desc_out, &dir.join("cache-desc")), &[]);
+    assert!(desc.status.success(), "descriptor sweep failed: {}", stderr_of(&desc));
+    assert_eq!(
+        reference,
+        read(&desc_out),
+        "materialized and descriptor-backed reports must be byte-identical"
+    );
+
+    let sh_out = dir.join("sharded.json");
+    let mut sh_args = sweep_args(&sh_out, &dir.join("cache-sh"));
+    sh_args.push("--shards".to_string());
+    sh_args.push("2".to_string());
+    let sh = run(&sh_args, &[]);
+    assert!(sh.status.success(), "sharded sweep failed: {}", stderr_of(&sh));
+    assert_eq!(
+        reference,
+        read(&sh_out),
+        "descriptor-manifest sharded report must match the materialized run"
+    );
+}
+
+#[test]
+fn pre_descriptor_cache_entries_read_as_misses_end_to_end() {
+    // CACHE_VERSION 3 -> 4 migration on the real binary: v3 entries were
+    // keyed under the old trace_jobs hash shape, so a v3 version stamp
+    // must read as a miss — the sweep re-simulates everything (0/6 hits)
+    // and still produces byte-identical output, rather than trusting a
+    // stale entry or failing.
+    let dir = scratch("stalecache");
+    let cache = dir.join("cache");
+    let out = dir.join("report.json");
+    let cold = run(&sweep_args(&out, &cache), &[]);
+    assert!(cold.status.success(), "cold sweep failed: {}", stderr_of(&cold));
+    let reference = read(&out);
+
+    let warm = run(&sweep_args(&out, &cache), &[]);
+    assert!(warm.status.success(), "warm sweep failed: {}", stderr_of(&warm));
+    assert!(
+        stderr_of(&warm).contains("(6/6 cache hits"),
+        "sanity: warm run must be all hits: {}",
+        stderr_of(&warm)
+    );
+
+    // Downgrade every entry's version stamp to 3 in place.
+    let mut rewritten = 0;
+    for e in std::fs::read_dir(&cache).expect("reading cache dir") {
+        let path = e.expect("cache dir entry").path();
+        if path.extension().is_some_and(|x| x == "json") {
+            let text = read(&path);
+            let stale = text.replace("\"version\": 4", "\"version\": 3");
+            assert_ne!(stale, text, "entry must carry a v4 stamp: {}", path.display());
+            std::fs::write(&path, stale).expect("rewriting cache entry");
+            rewritten += 1;
+        }
+    }
+    assert!(rewritten >= 6, "expected >= 6 cache entries, rewrote {rewritten}");
+
+    let stale_run = run(&sweep_args(&out, &cache), &[]);
+    assert!(stale_run.status.success(), "stale-cache sweep failed: {}", stderr_of(&stale_run));
+    assert!(
+        stderr_of(&stale_run).contains("(0/6 cache hits"),
+        "v3 entries must all read as misses: {}",
+        stderr_of(&stale_run)
+    );
+    assert_eq!(reference, read(&out), "re-simulated report must be byte-identical");
+}
+
+#[test]
 fn cache_stats_flag_reports_footprint() {
     let dir = scratch("cachestats");
     let out = dir.join("report.json");

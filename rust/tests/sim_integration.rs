@@ -132,7 +132,7 @@ fn trace_replay_is_deterministic_and_matches_generator_run() {
     let json = trace::to_json(&jobs);
     let restored = trace::from_json(&json).unwrap();
     let mut cfg2 = cfg.clone();
-    cfg2.trace_jobs = Some(std::sync::Arc::new(restored));
+    cfg2.source = tpufleet::sim::JobSource::materialized(restored);
     let mut replay = Simulation::new(cfg2.clone());
     let r_replay = replay.run();
     assert_eq!(r_direct.arrived_jobs, r_replay.arrived_jobs);

@@ -1,0 +1,208 @@
+//! Property suite for the partitioned job-stream contract (the descriptor
+//! tentpole): parts compose under refinement, the concatenation of every
+//! part of any partitioning is bit-identical to the materialized
+//! [`WorkloadGenerator::trace`], and the engine produces bit-identical
+//! results whether it streams a partition descriptor or replays the
+//! equivalent materialized trace.
+
+use tpufleet::fleet::ChipGeneration;
+use tpufleet::sim::{JobSource, SimConfig, Simulation};
+use tpufleet::workload::{
+    partition_cells, CheckpointPolicy, GeneratorConfig, Job, StepProfile, TraceCheckpoints,
+    TracePartition, WorkloadGenerator,
+};
+
+/// Bitwise job equality (`f64::to_bits` on every float) with exhaustive
+/// destructuring: adding a `Job` field without extending this check is a
+/// compile error, so the partition bit-identity contract can't silently
+/// narrow.
+fn assert_jobs_bit_identical(a: &Job, b: &Job, what: &str) {
+    let Job {
+        id,
+        arrival_s,
+        phase,
+        framework,
+        arch,
+        priority,
+        gen,
+        slice_shape,
+        pods,
+        work_s,
+        step,
+        ckpt,
+        startup_s,
+    } = a;
+    assert_eq!(*id, b.id, "{what}: id");
+    assert_eq!(arrival_s.to_bits(), b.arrival_s.to_bits(), "{what}: arrival_s");
+    assert_eq!(*phase, b.phase, "{what}: phase");
+    assert_eq!(*framework, b.framework, "{what}: framework");
+    assert_eq!(*arch, b.arch, "{what}: arch");
+    assert_eq!(*priority, b.priority, "{what}: priority");
+    assert_eq!(*gen, b.gen, "{what}: gen");
+    assert_eq!(*slice_shape, b.slice_shape, "{what}: slice_shape");
+    assert_eq!(*pods, b.pods, "{what}: pods");
+    assert_eq!(work_s.to_bits(), b.work_s.to_bits(), "{what}: work_s");
+    assert_eq!(startup_s.to_bits(), b.startup_s.to_bits(), "{what}: startup_s");
+    let StepProfile { ideal_flops_per_chip, base_efficiency, comm_fraction, host_fraction } =
+        step;
+    assert_eq!(
+        ideal_flops_per_chip.to_bits(),
+        b.step.ideal_flops_per_chip.to_bits(),
+        "{what}: step.ideal_flops_per_chip"
+    );
+    assert_eq!(
+        base_efficiency.to_bits(),
+        b.step.base_efficiency.to_bits(),
+        "{what}: step.base_efficiency"
+    );
+    assert_eq!(
+        comm_fraction.to_bits(),
+        b.step.comm_fraction.to_bits(),
+        "{what}: step.comm_fraction"
+    );
+    assert_eq!(
+        host_fraction.to_bits(),
+        b.step.host_fraction.to_bits(),
+        "{what}: step.host_fraction"
+    );
+    let CheckpointPolicy { interval_s, write_stall_s, restore_s } = ckpt;
+    assert_eq!(interval_s.to_bits(), b.ckpt.interval_s.to_bits(), "{what}: ckpt.interval_s");
+    assert_eq!(
+        write_stall_s.to_bits(),
+        b.ckpt.write_stall_s.to_bits(),
+        "{what}: ckpt.write_stall_s"
+    );
+    assert_eq!(restore_s.to_bits(), b.ckpt.restore_s.to_bits(), "{what}: ckpt.restore_s");
+}
+
+fn assert_traces_bit_identical(a: &[Job], b: &[Job], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: job count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_jobs_bit_identical(x, y, &format!("{what}: job {i}"));
+    }
+}
+
+fn part(cfg: &GeneratorConfig, j: u64, n: u64) -> Vec<Job> {
+    TracePartition::new(cfg.clone(), j, n).collect()
+}
+
+/// Concatenating every part of an n-way partitioning reproduces the full
+/// materialized trace bitwise — for n below, at, and above the cell count.
+#[test]
+fn concat_of_all_parts_is_the_materialized_trace() {
+    let cfg = GeneratorConfig { duration_s: 2.0 * 86400.0, ..Default::default() };
+    let cells = partition_cells(cfg.duration_s);
+    assert_eq!(cells, 48);
+    let full = WorkloadGenerator::new(cfg.clone()).trace();
+    assert!(full.len() > 500, "trace too small to exercise boundaries: {}", full.len());
+    for n in [1u64, 2, 5, 48, 97] {
+        let concat: Vec<Job> = (0..n).flat_map(|j| part(&cfg, j, n)).collect();
+        assert_traces_bit_identical(&full, &concat, &format!("{n} parts"));
+    }
+}
+
+/// The composability law: refining an n-way partitioning k-fold subdivides
+/// parts without moving any boundary, so parts `j·k .. (j+1)·k` of `n·k`
+/// concatenate to exactly part `j` of `n`.
+#[test]
+fn refinement_composability_parts_subdivide_exactly() {
+    let cfg = GeneratorConfig { duration_s: 30.0 * 3600.0, ..Default::default() };
+    for (n, k) in [(2u64, 5u64), (3, 4), (5, 2), (1, 10)] {
+        for j in 0..n {
+            let coarse = part(&cfg, j, n);
+            let refined: Vec<Job> =
+                (j * k..(j + 1) * k).flat_map(|jf| part(&cfg, jf, n * k)).collect();
+            assert_traces_bit_identical(
+                &coarse,
+                &refined,
+                &format!("part {j} of {n} vs parts {}..{} of {}", j * k, (j + 1) * k, n * k),
+            );
+        }
+    }
+}
+
+/// Randomized composability: arbitrary seeds, rates, non-round durations,
+/// and part counts — concat equals trace, and the O(1) checkpoint jump
+/// equals the replay fast-forward, part by part.
+#[test]
+fn random_configs_uphold_partition_laws() {
+    tpufleet::testkit::check(6, 0x7A27, |rng| {
+        let cfg = GeneratorConfig {
+            seed: rng.below(u64::MAX),
+            arrivals_per_hour: rng.range_f64(4.0, 24.0),
+            duration_s: rng.range_f64(0.5, 40.0) * 3600.0,
+            ..Default::default()
+        };
+        let n = 1 + rng.below(9);
+        let full = WorkloadGenerator::new(cfg.clone()).trace();
+        let ckpts = TraceCheckpoints::build(&cfg);
+        assert_eq!(ckpts.cells(), partition_cells(cfg.duration_s));
+        let mut concat = Vec::new();
+        for j in 0..n {
+            let replayed = part(&cfg, j, n);
+            let jumped: Vec<Job> =
+                TracePartition::with_checkpoints(cfg.clone(), j, n, &ckpts).collect();
+            assert_traces_bit_identical(
+                &replayed,
+                &jumped,
+                &format!("checkpoint jump, part {j} of {n}"),
+            );
+            concat.extend(replayed);
+        }
+        assert_traces_bit_identical(&full, &concat, &format!("concat of {n} parts"));
+    });
+}
+
+fn engine_cfg() -> SimConfig {
+    let mut cfg = SimConfig {
+        seed: 0xD15C,
+        duration_s: 2.0 * 86400.0,
+        static_fleet: vec![(ChipGeneration::TpuC, 20)],
+        ..Default::default()
+    };
+    cfg.generator.gen_mix = vec![(ChipGeneration::TpuC, 1.0)];
+    cfg.generator.arrivals_per_hour = 10.0;
+    cfg
+}
+
+/// Materialize the slice of the generator stream a descriptor denotes,
+/// under the engine's horizon override (the engine bounds the stream by
+/// `SimConfig::duration_s`, not the generator's nominal duration).
+fn materialize(cfg: &SimConfig, part_index: u64, part_count: u64) -> Vec<Job> {
+    let mut gcfg = cfg.generator.clone();
+    gcfg.duration_s = cfg.duration_s;
+    TracePartition::new(gcfg, part_index, part_count).collect()
+}
+
+/// The engine contract: a descriptor-backed run and the run replaying the
+/// equivalent materialized trace produce an equal `SimResult` and a
+/// bit-identical `GoodputReport`. This is what lets sweep/shard configs
+/// carry two integers instead of O(jobs) serialized records.
+#[test]
+fn engine_results_bit_identical_descriptor_vs_materialized() {
+    for (part_index, part_count) in [(0u64, 1u64), (1, 2)] {
+        let mut desc_cfg = engine_cfg();
+        desc_cfg.source = JobSource::Partition { part_index, part_count };
+        let mut mat_cfg = engine_cfg();
+        mat_cfg.source = JobSource::materialized(materialize(&mat_cfg, part_index, part_count));
+
+        let mut desc = Simulation::new(desc_cfg);
+        let r_desc = desc.run();
+        let mut mat = Simulation::new(mat_cfg);
+        let r_mat = mat.run();
+        assert!(
+            r_desc.arrived_jobs > 0,
+            "part {part_index}/{part_count} must see arrivals: {r_desc:?}"
+        );
+        assert_eq!(
+            r_desc, r_mat,
+            "SimResult must not depend on the source representation \
+             (part {part_index}/{part_count})"
+        );
+        tpufleet::testkit::assert_reports_bit_identical(
+            &desc.fleet_goodput(),
+            &mat.fleet_goodput(),
+            &format!("descriptor vs materialized, part {part_index}/{part_count}"),
+        );
+    }
+}
