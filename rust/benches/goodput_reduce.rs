@@ -55,9 +55,9 @@ fn build_ledger(total_spans: usize, seed: u64) -> Ledger {
         // series exercises split classes, like the engine does.
         if i % 3 == 0 {
             let layer = StackLayer::ALL[rng.below(6) as usize];
-            ledger.add_span_layered(job.id, t0, t0 + dur, job.chips(), class, layer);
+            ledger.add_span(job.id, t0, t0 + dur, job.chips(), class, layer);
         } else {
-            ledger.add_span(job.id, t0, t0 + dur, job.chips(), class);
+            ledger.add_span_auto(job.id, t0, t0 + dur, job.chips(), class);
         }
         if class == TimeClass::Productive {
             let pg = rng.range_f64(0.05, 1.0);
@@ -221,7 +221,7 @@ fn main() {
         .values()
         .map(|(_, jl)| jl.spans.len() + jl.pg_samples.len())
         .sum();
-    let mut win = Simulation::with_ledger_mode(cfg, sweep::summary_ledger_mode());
+    let mut win = Simulation::new(cfg).ledger_mode(sweep::summary_ledger_mode());
     win.run();
     assert_eq!(
         full.fleet_goodput(),

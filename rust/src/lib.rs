@@ -9,6 +9,7 @@
 pub mod fleet;
 pub mod hlo;
 pub mod metrics;
+pub mod monitor;
 pub mod report;
 pub mod roofline;
 pub mod runtime;

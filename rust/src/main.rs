@@ -7,10 +7,12 @@
 //!   run-model  execute one artifact and report measured Program Goodput
 //!   hlo-cost   FLOP/byte analysis of an HLO text file
 //!   overlap    §5.1 collective-overlap case study numbers
+//!   monitor    live MPG over a span/event stream (bounded memory)
 
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::hlo::{CostAnalysis, HloModule};
-use tpufleet::metrics::goodput;
+use tpufleet::metrics::{goodput, WindowedLedger};
+use tpufleet::monitor::{proto, snapshot_json, MonitorLedger, StreamStats};
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
@@ -58,7 +60,7 @@ COMMANDS:
              [--out FILE] [--progress]
              [--no-cache] [--cache-dir DIR] [--cache-max-mb N]
              [--cache-stats] [--shards N] [--shard-cmd CMD]
-             [--full-ledger] [--materialize-trace]
+             [--windowed | --full-ledger] [--materialize-trace]
              run a policy x fleet x job-size x failure-rate grid on a
              worker pool, streaming rows into one JSON report as variants
              finish (memory stays O(workers)); each variant accounts into
@@ -83,10 +85,36 @@ COMMANDS:
              framework-3x compiler-3x hardware-3x scheduling-8x — each
              regresses one stack layer; every report row carries the
              per-layer attribution section)
-  trace      generate <out.json> [--hours H] | replay <in.json> [--days N]
+  trace      generate [<out.json>] [--hours H] [--seed S] [--out FILE]
+             | replay <in.json> [--days N] [--seed S] [--windowed]
+             [--out FILE]
+             generate a workload trace, or replay one through the
+             simulator; replay's --windowed accounts through the
+             streaming ledger (bit-identical fleet report) and --out
+             writes the per-layer attribution JSON
+  monitor    [--in FILE] [--width-s W] [--ring-windows N]
+             [--snapshot-every SECS] [--out FILE] [--batch] [--follow]
+             [--progress]
+             ingest a span/event stream (stdin, or --in FILE; --follow
+             tails the file until an `end` line) through the rolling
+             monitor ledger: O(ring-windows x live jobs) cells no matter
+             how long the stream runs, whole-stream totals exact. Writes
+             an MPG + per-layer-attribution snapshot JSON to --out (or
+             stdout) at the end, and every SECS stream-seconds with
+             --snapshot-every; --batch replays the same stream through
+             the batch windowed ledger instead and emits a byte-identical
+             snapshot (the CI cross-mode `cmp` gate)
+  monitor record [--days N] [--seed S] [--arrivals-per-hour R]
+             [--no-failures] [--out FILE]
+             run the simulator with a stream recorder attached and write
+             the replayable span stream (line protocol; see README)
 
 (`sweep-worker` is the internal subcommand `sweep --shards` spawns; it
 runs one shard manifest and writes a shard report for the coordinator.)
+
+Unknown flags are rejected with the offending subcommand named; --out,
+--workers, --windowed, and --progress spell the same thing everywhere
+they appear.
 ";
 
 fn main() {
@@ -103,12 +131,13 @@ fn main() {
         "train" => cmd_train(&args),
         "run-model" => cmd_run_model(&args),
         "hlo-cost" => cmd_hlo_cost(&args),
-        "overlap" => cmd_overlap(),
+        "overlap" => cmd_overlap(&args),
         "ablate" => cmd_ablate(&args),
         "attribution" => cmd_attribution(&args),
         "sweep" => cmd_sweep(&args),
         "sweep-worker" => cmd_sweep_worker(&args),
         "trace" => cmd_trace(&args),
+        "monitor" => cmd_monitor(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             0
@@ -121,7 +150,25 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Simulation-shaping flags shared by every subcommand that runs the
+/// simulator on a generated workload.
+const SIM_FLAGS: [&str; 4] = ["days", "seed", "arrivals-per-hour", "no-failures"];
+
+/// The CLI consistency gate: every subcommand declares its flag
+/// vocabulary and anything else exits 2 with the subcommand named —
+/// a typo'd `--sed 7` can no longer silently run with the default seed.
+fn check_flags(args: &Args, cmd: &str, known: &[&str]) -> Option<i32> {
+    if let Err(e) = args.reject_unknown(cmd, known) {
+        eprintln!("{e}");
+        return Some(2);
+    }
+    None
+}
+
 fn cmd_simulate(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "simulate", &SIM_FLAGS) {
+        return code;
+    }
     let days = args.get_f64("days", 7.0);
     let mut cfg = SimConfig {
         seed: args.get_u64("seed", 42),
@@ -157,6 +204,9 @@ fn cmd_simulate(args: &Args) -> i32 {
 }
 
 fn cmd_figures(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "figures", &["csv", "seed", "workers"]) {
+        return code;
+    }
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let seed = args.get_u64("seed", 0xF1EE7);
     let csv_dir = args.get("csv");
@@ -204,6 +254,9 @@ fn cmd_figures(args: &Args) -> i32 {
 }
 
 fn cmd_train(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "train", &["steps", "lr", "seed", "artifacts"]) {
+        return code;
+    }
     let steps = args.get_usize("steps", 300);
     let lr = args.get_f64("lr", 0.2) as f32;
     let seed = args.get_u64("seed", 42) as i32;
@@ -246,6 +299,9 @@ fn run_training(
 }
 
 fn cmd_run_model(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "run-model", &["iters", "artifacts"]) {
+        return code;
+    }
     let Some(name) = args.positional.first().map(|s| s.to_string()) else {
         eprintln!("usage: tpufleet run-model <artifact> [--iters N]");
         return 2;
@@ -310,6 +366,9 @@ fn run_model(dir: &std::path::Path, name: &str, iters: usize) -> anyhow::Result<
 }
 
 fn cmd_hlo_cost(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "hlo-cost", &[]) {
+        return code;
+    }
     let Some(path) = args.positional.first() else {
         eprintln!("usage: tpufleet hlo-cost <file.hlo.txt>");
         return 2;
@@ -345,6 +404,9 @@ fn cmd_hlo_cost(args: &Args) -> i32 {
 }
 
 fn cmd_ablate(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "ablate", &["seed", "workers"]) {
+        return code;
+    }
     let seed = args.get_u64("seed", 0xAB1A);
     let workers = args.get_usize("workers", 0);
     eprintln!("running 8 variant simulations on one 7-day trace (sweep)...");
@@ -362,6 +424,10 @@ fn cmd_ablate(args: &Args) -> i32 {
 fn cmd_attribution(args: &Args) -> i32 {
     use tpufleet::metrics::AttributionReport;
 
+    let known = ["days", "seed", "arrivals-per-hour", "no-failures", "degrade", "windowed", "out"];
+    if let Some(code) = check_flags(args, "attribution", &known) {
+        return code;
+    }
     let days = args.get_f64("days", 7.0);
     let mut cfg = SimConfig {
         seed: args.get_u64("seed", 42),
@@ -390,7 +456,7 @@ fn cmd_attribution(args: &Args) -> i32 {
     } else {
         LedgerMode::Full
     };
-    let mut sim = Simulation::with_ledger_mode(cfg, mode);
+    let mut sim = Simulation::new(cfg).ledger_mode(mode);
     let res = sim.run();
     eprintln!(
         "done in {:.2?}: {} arrived, {} completed, {} preemptions, {} failures",
@@ -628,7 +694,40 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
     Ok(spec)
 }
 
+const SWEEP_FLAGS: [&str; 20] = [
+    "days",
+    "seed",
+    "workers",
+    "arrivals-per-hour",
+    "policies",
+    "fleets",
+    "job-mixes",
+    "failure-mults",
+    "degrades",
+    "out",
+    "progress",
+    "no-cache",
+    "cache-dir",
+    "cache-max-mb",
+    "cache-stats",
+    "shards",
+    "shard-cmd",
+    "windowed",
+    "full-ledger",
+    "materialize-trace",
+];
+
 fn cmd_sweep(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "sweep", &SWEEP_FLAGS) {
+        return code;
+    }
+    // `--windowed` names the default accounting explicitly (the same
+    // spelling attribution, trace replay, and monitor use); it cannot be
+    // combined with the full-span debugging mode.
+    if args.has_flag("windowed") && args.has_flag("full-ledger") {
+        eprintln!("sweep: --windowed and --full-ledger are mutually exclusive");
+        return 2;
+    }
     let mut spec = match build_sweep_spec(args) {
         Ok(spec) => spec,
         Err(code) => return code,
@@ -1040,6 +1139,10 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
     const WORKER_USAGE: &str =
         "usage: tpufleet sweep-worker --manifest FILE --out FILE \
          [--cache-dir DIR | --no-cache] [--cache-max-mb N] [--full-ledger]";
+    let known = ["manifest", "out", "cache-dir", "no-cache", "cache-max-mb", "full-ledger"];
+    if let Some(code) = check_flags(args, "sweep-worker", &known) {
+        return code;
+    }
     let Some(manifest_path) = args.get("manifest") else {
         eprintln!("{WORKER_USAGE}");
         return 2;
@@ -1090,11 +1193,21 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
 }
 
 fn cmd_trace(args: &Args) -> i32 {
+    use tpufleet::metrics::AttributionReport;
     use tpufleet::workload::{trace, GeneratorConfig, WorkloadGenerator};
     match args.positional.first().map(|s| s.as_str()) {
         Some("generate") => {
-            let Some(out) = args.positional.get(1) else {
-                eprintln!("usage: tpufleet trace generate <out.json> [--hours H]");
+            if let Some(code) = check_flags(args, "trace generate", &["hours", "seed", "out"]) {
+                return code;
+            }
+            // `--out FILE` is the cross-subcommand spelling; the bare
+            // positional form still works.
+            let out = args
+                .get("out")
+                .map(str::to_string)
+                .or_else(|| args.positional.get(1).cloned());
+            let Some(out) = out else {
+                eprintln!("usage: tpufleet trace generate [<out.json>] [--hours H] [--out FILE]");
                 return 2;
             };
             let hours = args.get_f64("hours", 24.0);
@@ -1104,7 +1217,7 @@ fn cmd_trace(args: &Args) -> i32 {
                 ..Default::default()
             };
             let jobs = WorkloadGenerator::new(cfg).trace();
-            if let Err(e) = trace::save(&jobs, std::path::Path::new(out)) {
+            if let Err(e) = trace::save(&jobs, std::path::Path::new(&out)) {
                 eprintln!("trace save failed: {e:#}");
                 return 1;
             }
@@ -1112,8 +1225,12 @@ fn cmd_trace(args: &Args) -> i32 {
             0
         }
         Some("replay") => {
+            let known = ["days", "seed", "windowed", "out"];
+            if let Some(code) = check_flags(args, "trace replay", &known) {
+                return code;
+            }
             let Some(input) = args.positional.get(1) else {
-                eprintln!("usage: tpufleet trace replay <in.json> [--days N]");
+                eprintln!("usage: tpufleet trace replay <in.json> [--days N] [--windowed]");
                 return 2;
             };
             let jobs = match trace::load(std::path::Path::new(input)) {
@@ -1130,12 +1247,43 @@ fn cmd_trace(args: &Args) -> i32 {
                 duration_s: days * 24.0 * 3600.0,
                 ..Default::default()
             };
-            eprintln!("replaying {} jobs over {days} days...", jobs.len());
+            let windowed = args.has_flag("windowed");
+            eprintln!(
+                "replaying {} jobs over {days} days ({} accounting)...",
+                jobs.len(),
+                if windowed { "windowed" } else { "full-span" }
+            );
             cfg.source = JobSource::materialized(jobs);
-            let mut sim = Simulation::new(cfg.clone());
+            let mode = if windowed {
+                tpufleet::sim::sweep::summary_ledger_mode()
+            } else {
+                LedgerMode::Full
+            };
+            let mut sim = Simulation::new(cfg.clone()).ledger_mode(mode);
             let res = sim.run();
             eprintln!("{res:?}");
-            print!("{}", figures::mpg_summary(&sim.ledger, 0.0, cfg.duration_s).to_ascii());
+            // The segmented summary needs retained spans; the fleet MPG
+            // line and the --out report come from `fleet_goodput`, which
+            // is bit-identical across accounting modes.
+            if !windowed {
+                print!("{}", figures::mpg_summary(&sim.ledger, 0.0, cfg.duration_s).to_ascii());
+            }
+            let fleet = sim.fleet_goodput();
+            println!(
+                "fleet MPG = SG {:.3} x RG {:.3} x PG {:.3} = {:.4}",
+                fleet.sg,
+                fleet.rg,
+                fleet.pg,
+                fleet.mpg()
+            );
+            if let Some(out) = args.get("out") {
+                let att = AttributionReport::of(&fleet);
+                if let Err(e) = std::fs::write(out, att.to_json().to_string_pretty()) {
+                    eprintln!("writing {out} failed: {e}");
+                    return 1;
+                }
+                eprintln!("wrote {out}");
+            }
             0
         }
         _ => {
@@ -1145,7 +1293,287 @@ fn cmd_trace(args: &Args) -> i32 {
     }
 }
 
-fn cmd_overlap() -> i32 {
+/// Flag vocabulary for `monitor` stream ingest (the `record` subaction
+/// declares its own).
+const MONITOR_FLAGS: [&str; 8] =
+    ["in", "out", "width-s", "ring-windows", "snapshot-every", "batch", "follow", "progress"];
+
+/// Per-line `monitor` state shared by the stdin, file, and `--follow`
+/// readers: parse -> validate -> count -> account. Streaming mode folds
+/// each event into the [`MonitorLedger`] as it arrives; `--batch`
+/// retains the parsed events and replays them through the batch
+/// [`WindowedLedger`] at the end, folding the watermark through the
+/// same `f64::max` chain the monitor runs so both modes hand
+/// [`snapshot_json`] an identical horizon — and therefore emit
+/// byte-identical snapshots (the CI cross-mode `cmp` gate).
+struct MonitorIngest {
+    ml: MonitorLedger,
+    validator: proto::Validator,
+    stats: StreamStats,
+    batch: bool,
+    /// Batch mode only: the replay tape.
+    events: Vec<proto::Event>,
+    /// Batch mode only: max event end-time seen so far.
+    batch_watermark: f64,
+    snapshot_every: Option<f64>,
+    last_emit: f64,
+    out: Option<String>,
+    progress: bool,
+    lines: u64,
+}
+
+impl MonitorIngest {
+    /// Feed one raw stream line; `Ok(true)` once the `end` line lands.
+    fn feed(&mut self, raw: &str) -> Result<bool, String> {
+        use proto::Event;
+        self.lines += 1;
+        let ev = match Event::parse(raw) {
+            Ok(Some(ev)) => ev,
+            Ok(None) => return Ok(false),
+            Err(e) => return Err(format!("line {}: {e}", self.lines)),
+        };
+        if let Err(e) = self.validator.check(&ev) {
+            return Err(format!("line {}: {e}", self.lines));
+        }
+        match ev {
+            Event::Span { .. } => self.stats.spans += 1,
+            Event::Pg { .. } => self.stats.pg_samples += 1,
+            Event::Capacity { .. } => self.stats.cap_events += 1,
+            Event::Job(_) | Event::End => {}
+        }
+        self.stats.jobs = self.validator.job_count();
+        let done = matches!(ev, Event::End);
+        if self.batch {
+            if let Some(t) = ev.end_time() {
+                self.batch_watermark = self.batch_watermark.max(t);
+            }
+            self.events.push(ev);
+            return Ok(done);
+        }
+        self.ml.ingest(&ev);
+        if let Some(every) = self.snapshot_every {
+            if self.ml.watermark_s() - self.last_emit >= every {
+                self.last_emit = self.ml.watermark_s();
+                self.emit(false)?;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Write one snapshot to `--out` (overwriting) or stdout.
+    fn emit(&self, is_final: bool) -> Result<(), String> {
+        let doc = if self.batch {
+            let mut win = WindowedLedger::new(self.batch_watermark, self.ml.width_s());
+            for ev in &self.events {
+                match *ev {
+                    proto::Event::Capacity { t, chips } => win.set_capacity(t, chips),
+                    proto::Event::Job(ref m) => win.ensure_job(m.clone()),
+                    proto::Event::Span { id, t0, t1, chips, class, layer } => {
+                        win.add_span(id, t0, t1, chips, class, layer)
+                    }
+                    proto::Event::Pg { id, t0, t1, chips, pg } => {
+                        win.add_pg_sample(id, t0, t1, chips, pg)
+                    }
+                    proto::Event::End => {}
+                }
+            }
+            let report = win.report(|_| true);
+            snapshot_json(&report, self.batch_watermark, win.width_s(), &self.stats, is_final)
+        } else {
+            let report = self.ml.report(|_| true);
+            snapshot_json(&report, self.ml.watermark_s(), self.ml.width_s(), &self.stats, is_final)
+        };
+        let text = format!("{}\n", doc.to_string_pretty());
+        match &self.out {
+            Some(path) => {
+                std::fs::write(path, &text).map_err(|e| format!("writing {path} failed: {e}"))?;
+            }
+            None => print!("{text}"),
+        }
+        if self.progress {
+            if self.batch {
+                eprintln!(
+                    "monitor: {} lines, watermark {:.1}s (batch replay)",
+                    self.lines, self.batch_watermark
+                );
+            } else {
+                eprintln!(
+                    "monitor: t={:.1}s jobs={} live-jobs={} cells={} peak-cells={} evicted={}",
+                    self.ml.watermark_s(),
+                    self.ml.job_count(),
+                    self.ml.live_job_count(),
+                    self.ml.live_cells(),
+                    self.ml.peak_cells(),
+                    self.ml.evicted_cells()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Tail `path` like `tail -f`, feeding complete lines as the writer
+/// lands them, until the `end` line (or a stream error). A partial
+/// trailing line is held until the writer finishes it.
+fn monitor_follow(path: &str, ing: &mut MonitorIngest) -> Result<(), String> {
+    use std::io::BufRead as _;
+    let file = std::fs::File::open(path).map_err(|e| format!("opening {path} failed: {e}"))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut pending = String::new();
+    loop {
+        let n = reader
+            .read_line(&mut pending)
+            .map_err(|e| format!("reading {path} failed: {e}"))?;
+        if n == 0 || !pending.ends_with('\n') {
+            std::thread::sleep(std::time::Duration::from_millis(200));
+            continue;
+        }
+        let done = ing.feed(&pending)?;
+        pending.clear();
+        if done {
+            return Ok(());
+        }
+    }
+}
+
+fn cmd_monitor(args: &Args) -> i32 {
+    if args.positional.first().map(|s| s.as_str()) == Some("record") {
+        return cmd_monitor_record(args);
+    }
+    if !args.positional.is_empty() {
+        eprintln!("usage: tpufleet monitor [record] [options]  (see `tpufleet help`)");
+        return 2;
+    }
+    if let Some(code) = check_flags(args, "monitor", &MONITOR_FLAGS) {
+        return code;
+    }
+    let width_s = args.get_f64("width-s", 3600.0);
+    if !width_s.is_finite() || width_s <= 0.0 {
+        eprintln!("monitor: --width-s must be a positive number of seconds");
+        return 2;
+    }
+    let ring_windows = args.get_usize("ring-windows", 48);
+    if ring_windows == 0 {
+        eprintln!("monitor: --ring-windows must be at least 1");
+        return 2;
+    }
+    let batch = args.has_flag("batch");
+    let follow = args.has_flag("follow");
+    if batch && follow {
+        eprintln!("monitor: --batch and --follow are mutually exclusive");
+        return 2;
+    }
+    if follow && args.get("in").is_none() {
+        eprintln!("monitor: --follow requires --in FILE (stdin cannot be tailed)");
+        return 2;
+    }
+    let snapshot_every = match args.get("snapshot-every") {
+        None => None,
+        Some(s) => match s.parse::<f64>() {
+            Ok(v) if v.is_finite() && v > 0.0 => Some(v),
+            _ => {
+                eprintln!("monitor: bad --snapshot-every `{s}` (need seconds > 0)");
+                return 2;
+            }
+        },
+    };
+    if batch && snapshot_every.is_some() {
+        eprintln!("monitor: --snapshot-every requires streaming mode (drop --batch)");
+        return 2;
+    }
+    let mut ing = MonitorIngest {
+        ml: MonitorLedger::new(width_s, ring_windows),
+        validator: proto::Validator::default(),
+        stats: StreamStats::default(),
+        batch,
+        events: Vec::new(),
+        batch_watermark: 0.0,
+        snapshot_every,
+        last_emit: 0.0,
+        out: args.get("out").map(str::to_string),
+        progress: args.has_flag("progress"),
+        lines: 0,
+    };
+    let fed = if follow {
+        monitor_follow(args.get("in").expect("checked above"), &mut ing)
+    } else {
+        let text = match args.get("in") {
+            Some(path) => {
+                std::fs::read_to_string(path).map_err(|e| format!("reading {path} failed: {e}"))
+            }
+            None => {
+                let stdin = std::io::stdin();
+                let mut s = String::new();
+                std::io::Read::read_to_string(&mut stdin.lock(), &mut s)
+                    .map(|_| s)
+                    .map_err(|e| format!("reading stdin failed: {e}"))
+            }
+        };
+        text.and_then(|text| {
+            for line in text.lines() {
+                if ing.feed(line)? {
+                    break;
+                }
+            }
+            Ok(())
+        })
+    };
+    let done = fed.and_then(|()| ing.emit(true));
+    if let Err(e) = done {
+        eprintln!("monitor: {e}");
+        return 1;
+    }
+    if let Some(out) = args.get("out") {
+        eprintln!("wrote {out}");
+    }
+    0
+}
+
+fn cmd_monitor_record(args: &Args) -> i32 {
+    use std::sync::{Arc, Mutex};
+    let known = ["days", "seed", "arrivals-per-hour", "no-failures", "out"];
+    if let Some(code) = check_flags(args, "monitor record", &known) {
+        return code;
+    }
+    if args.positional.len() > 1 {
+        eprintln!("usage: tpufleet monitor record [--days N] [--seed S] [--out FILE]");
+        return 2;
+    }
+    let days = args.get_f64("days", 1.0);
+    let mut cfg = SimConfig {
+        seed: args.get_u64("seed", 42),
+        duration_s: days * 24.0 * 3600.0,
+        ..Default::default()
+    };
+    cfg.generator.arrivals_per_hour = args.get_f64("arrivals-per-hour", 10.0);
+    if args.has_flag("no-failures") {
+        cfg.failures = false;
+    }
+    let out = args.get("out").unwrap_or("monitor_stream.txt");
+    eprintln!("recording {days} days (seed {})...", cfg.seed);
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(proto::StreamRecorder::sharing(buf.clone())));
+    let res = sim.run();
+    let mut stream = buf.lock().expect("stream buffer poisoned").clone();
+    stream.push_str("end\n");
+    if let Err(e) = std::fs::write(out, &stream) {
+        eprintln!("writing {out} failed: {e}");
+        return 1;
+    }
+    eprintln!(
+        "done: {} arrived, {} completed; wrote {} lines to {out}",
+        res.arrived_jobs,
+        res.completed_jobs,
+        stream.lines().count()
+    );
+    0
+}
+
+fn cmd_overlap(args: &Args) -> i32 {
+    if let Some(code) = check_flags(args, "overlap", &[]) {
+        return code;
+    }
     let (speedup, util) = xlaopt::overlap_case_study(ChipGeneration::TpuC);
     println!("§5.1 collective-overlap case study (500B-LLM-like profile):");
     println!("  end-to-end speedup: {speedup:.2}x   (paper: up to 1.38x)");

@@ -295,12 +295,12 @@ mod tests {
         let mut l = Ledger::new();
         l.set_capacity(0.0, 100);
         l.ensure_job(meta(1, Phase::Training));
-        l.add_span(1, 0.0, 10.0, 8, TimeClass::Startup);
-        l.add_span(1, 10.0, 90.0, 8, TimeClass::Productive);
-        l.add_span(1, 90.0, 100.0, 8, TimeClass::Lost);
+        l.add_span_auto(1, 0.0, 10.0, 8, TimeClass::Startup);
+        l.add_span_auto(1, 10.0, 90.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 90.0, 100.0, 8, TimeClass::Lost);
         l.add_pg_sample(1, 10.0, 90.0, 8, 0.5);
         l.ensure_job(meta(2, Phase::Serving));
-        l.add_span(2, 25.0, 75.0, 8, TimeClass::Productive);
+        l.add_span_auto(2, 25.0, 75.0, 8, TimeClass::Productive);
         l.add_pg_sample(2, 25.0, 75.0, 8, 0.25);
         l
     }

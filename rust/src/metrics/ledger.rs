@@ -59,6 +59,12 @@ impl TimeClass {
         }
     }
 
+    /// Inverse of [`Self::name`] — how the monitor line-protocol spells
+    /// span classes. Case-sensitive, like every other `from_name`.
+    pub fn from_name(s: &str) -> Option<TimeClass> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
     /// Does this class count as "all-allocated" time (the SG numerator and
     /// RG denominator)? `Partial` does not: the bulk-synchronous gang is
     /// incomplete (Fig. 11). `Queued` holds no chips at all.
@@ -224,17 +230,19 @@ impl Ledger {
         self.jobs.entry(meta.id).or_insert_with(|| (meta, JobLedger::default()));
     }
 
-    /// Record a classified span for a job, attributed to the class's
-    /// default stack layer ([`StackLayer::of_class`]). Zero/negative
-    /// spans are ignored.
-    pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
-        self.add_span_layered(id, t0, t1, chips, class, StackLayer::of_class(class));
+    /// Record a classified span without explicit provenance: a thin shim
+    /// over [`Self::add_span`] that attributes the span to the class's
+    /// default stack layer ([`StackLayer::of_class`]).
+    pub fn add_span_auto(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        self.add_span(id, t0, t1, chips, class, StackLayer::of_class(class));
     }
 
-    /// Record a classified span with explicit stack-layer provenance —
-    /// what the simulation engine emits (it refines Startup into
+    /// Record a classified span with stack-layer provenance — the one
+    /// layered entry point (formerly `add_span_layered`), and what the
+    /// simulation engine emits (it refines Startup into
     /// compile-vs-restore and RuntimeStall into data-vs-framework).
-    pub fn add_span_layered(
+    /// Zero/negative spans are ignored.
+    pub fn add_span(
         &mut self,
         id: JobId,
         t0: f64,
@@ -277,6 +285,12 @@ impl Ledger {
     /// Declare fleet capacity (healthy accelerator chips) from time `t` on.
     pub fn set_capacity(&mut self, t: f64, chips: u64) {
         push_capacity_step(&mut self.capacity_steps, t, chips);
+    }
+
+    /// The recorded capacity breakpoints — what `Simulation::ledger_mode`
+    /// replays when it swaps the accounting sink.
+    pub(crate) fn capacity_steps(&self) -> &[(f64, u64)] {
+        &self.capacity_steps
     }
 
     /// Integrated capacity chip-seconds over [w0, w1).
@@ -506,10 +520,10 @@ mod tests {
         assert_eq!(l.end_time(), 0.0);
         l.ensure_job(meta(1));
         l.ensure_job(meta(2));
-        l.add_span(1, 0.0, 30.0, 8, TimeClass::Productive);
-        l.add_span(2, 5.0, 12.0, 8, TimeClass::Queued);
-        l.add_span(1, 30.0, 31.5, 8, TimeClass::Lost);
-        l.add_span(2, 40.0, 40.0, 8, TimeClass::Productive); // ignored
+        l.add_span_auto(1, 0.0, 30.0, 8, TimeClass::Productive);
+        l.add_span_auto(2, 5.0, 12.0, 8, TimeClass::Queued);
+        l.add_span_auto(1, 30.0, 31.5, 8, TimeClass::Lost);
+        l.add_span_auto(2, 40.0, 40.0, 8, TimeClass::Productive); // ignored
         assert_eq!(l.end_time(), 31.5);
         assert_eq!(l.end_time(), l.end_time_by_fold());
     }
@@ -521,9 +535,9 @@ mod tests {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
         l.ensure_job(meta(2));
-        l.add_span(1, 0.0, 0.25, 4, TimeClass::Productive);
-        l.add_span(1, 0.25, 0.75, 4, TimeClass::Productive);
-        l.add_span(2, 1.0, 1.5, 8, TimeClass::Productive);
+        l.add_span_auto(1, 0.0, 0.25, 4, TimeClass::Productive);
+        l.add_span_auto(1, 0.25, 0.75, 4, TimeClass::Productive);
+        l.add_span_auto(2, 1.0, 1.5, 8, TimeClass::Productive);
         let got = l.class_chip_seconds(TimeClass::Productive, 0.0, 2.0, |_| true);
         assert_eq!(got, 0.25 * 4.0 + 0.5 * 4.0 + 0.5 * 8.0);
     }
@@ -532,8 +546,8 @@ mod tests {
     fn class_accounting_respects_filter() {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
-        l.add_span(1, 0.0, 10.0, 8, TimeClass::Productive);
-        l.add_span(1, 10.0, 12.0, 8, TimeClass::Lost);
+        l.add_span_auto(1, 0.0, 10.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 10.0, 12.0, 8, TimeClass::Lost);
         assert_eq!(l.class_chip_seconds(TimeClass::Productive, 0.0, 100.0, |_| true), 80.0);
         assert_eq!(l.class_chip_seconds(TimeClass::Lost, 0.0, 100.0, |_| true), 16.0);
         assert_eq!(
@@ -547,8 +561,8 @@ mod tests {
     fn zero_spans_ignored() {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
-        l.add_span(1, 5.0, 5.0, 8, TimeClass::Productive);
-        l.add_span(1, 6.0, 5.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 5.0, 5.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 6.0, 5.0, 8, TimeClass::Productive);
         assert!(l.jobs[&1].1.spans.is_empty());
     }
 
@@ -566,7 +580,7 @@ mod tests {
         l.ensure_job(meta(1));
         for (i, class) in TimeClass::ALL.iter().enumerate() {
             let t = i as f64 * 10.0;
-            l.add_span(1, t, t + 10.0, 4, *class);
+            l.add_span_auto(1, t, t + 10.0, 4, *class);
         }
         for s in &l.jobs[&1].1.spans {
             assert_eq!(s.layer, StackLayer::of_class(s.class), "{:?}", s.class);
@@ -581,7 +595,7 @@ mod tests {
     fn explicit_layer_overrides_default() {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
-        l.add_span_layered(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Framework);
+        l.add_span(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Framework);
         assert_eq!(l.jobs[&1].1.spans[0].layer, StackLayer::Framework);
         assert_eq!(l.layer_chip_seconds(StackLayer::Compiler, 0.0, 10.0, |_| true), 0.0);
         assert_eq!(l.layer_chip_seconds(StackLayer::Framework, 0.0, 10.0, |_| true), 40.0);
@@ -598,16 +612,16 @@ mod tests {
         let mut t = 0.0;
         for (i, class) in TimeClass::ALL.iter().cycle().take(40).enumerate() {
             let dur = 3.0 + (i % 7) as f64 * 1.7;
-            ordered.add_span(1 + (i % 2) as u64, t, t + dur, 4, *class);
+            ordered.add_span_auto(1 + (i % 2) as u64, t, t + dur, 4, *class);
             t += dur * 0.9; // overlapping but t0/t1 both non-decreasing
         }
         assert!(ordered.jobs[&1].1.time_ordered());
 
         let mut unordered = Ledger::new();
         unordered.ensure_job(meta(1));
-        unordered.add_span(1, 50.0, 60.0, 4, TimeClass::Productive);
-        unordered.add_span(1, 5.0, 15.0, 4, TimeClass::Queued);
-        unordered.add_span(1, 30.0, 31.0, 4, TimeClass::Lost);
+        unordered.add_span_auto(1, 50.0, 60.0, 4, TimeClass::Productive);
+        unordered.add_span_auto(1, 5.0, 15.0, 4, TimeClass::Queued);
+        unordered.add_span_auto(1, 30.0, 31.0, 4, TimeClass::Lost);
         assert!(!unordered.jobs[&1].1.time_ordered());
 
         for l in [&ordered, &unordered] {

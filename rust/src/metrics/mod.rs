@@ -15,6 +15,7 @@ pub mod goodput;
 pub mod ledger;
 pub mod reduce;
 pub mod series;
+pub mod sink;
 pub mod stack;
 pub mod windowed;
 
@@ -22,5 +23,6 @@ pub use goodput::attribution::AttributionReport;
 pub use goodput::{GoodputReport, SegmentReport};
 pub use ledger::{JobMeta, Ledger, TimeClass};
 pub use series::{TimeSeries, Window};
+pub use sink::SpanSink;
 pub use stack::StackLayer;
 pub use windowed::WindowedLedger;

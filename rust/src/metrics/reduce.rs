@@ -128,6 +128,26 @@ impl CellAccum {
     }
 }
 
+/// Combine per-job subtotal cells into one group cell under the canonical
+/// cross-job step: iterate jobs in the order given (callers pass
+/// `BTreeMap` job-id order) and [`CellAccum::merge_job`] each subtotal
+/// whose meta passes `filter`. Shared by the windowed ledger's
+/// whole-horizon report and the monitor's snapshot report, so both walk
+/// the identical addition chain.
+pub fn merge_job_totals<'a, F, I>(jobs: I, filter: F) -> CellAccum
+where
+    I: Iterator<Item = (&'a JobMeta, &'a CellAccum)>,
+    F: Fn(&JobMeta) -> bool,
+{
+    let mut cell = CellAccum::default();
+    for (meta, total) in jobs {
+        if filter(meta) {
+            cell.merge_job(total);
+        }
+    }
+    cell
+}
+
 /// Walk every job's spans and PG samples exactly once, accumulating into
 /// `n_groups × windows.len()` cells.
 ///
@@ -247,7 +267,7 @@ mod tests {
     fn fold_splits_spans_across_windows() {
         let mut l = Ledger::new();
         l.ensure_job(meta(1, Phase::Training));
-        l.add_span(1, 5.0, 25.0, 4, TimeClass::Productive);
+        l.add_span_auto(1, 5.0, 25.0, 4, TimeClass::Productive);
         l.add_pg_sample(1, 5.0, 25.0, 4, 0.5);
         let windows = [(0.0, 10.0), (10.0, 20.0), (20.0, 30.0)];
         let cells = fold_ledger(&l, &windows, 1, |_, gs| gs.push(0));
@@ -265,8 +285,8 @@ mod tests {
         let mut l = Ledger::new();
         l.ensure_job(meta(1, Phase::Training));
         l.ensure_job(meta(2, Phase::Serving));
-        l.add_span(1, 0.0, 10.0, 8, TimeClass::Productive);
-        l.add_span(2, 0.0, 10.0, 2, TimeClass::Lost);
+        l.add_span_auto(1, 0.0, 10.0, 8, TimeClass::Productive);
+        l.add_span_auto(2, 0.0, 10.0, 2, TimeClass::Lost);
         // Group 0 = everyone, group 1 = serving only.
         let cells = fold_ledger(&l, &[(0.0, 10.0)], 2, |m, gs| {
             gs.push(0);
@@ -286,9 +306,9 @@ mod tests {
         l.ensure_job(meta(1, Phase::Training));
         // One class (Startup) split across two layers via explicit tags —
         // the engine's compile-vs-restore refinement.
-        l.add_span_layered(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Compiler);
-        l.add_span_layered(1, 10.0, 14.0, 4, TimeClass::Startup, StackLayer::Framework);
-        l.add_span(1, 14.0, 24.0, 4, TimeClass::Productive);
+        l.add_span(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Compiler);
+        l.add_span(1, 10.0, 14.0, 4, TimeClass::Startup, StackLayer::Framework);
+        l.add_span_auto(1, 14.0, 24.0, 4, TimeClass::Productive);
         let cells = fold_ledger(&l, &[(0.0, 30.0)], 1, |_, gs| gs.push(0));
         let cell = &cells[0][0];
         assert_eq!(cell.class_cs[TimeClass::Startup as usize], 56.0);
@@ -308,7 +328,7 @@ mod tests {
     fn untouched_jobs_do_not_count() {
         let mut l = Ledger::new();
         l.ensure_job(meta(1, Phase::Training));
-        l.add_span(1, 100.0, 110.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 100.0, 110.0, 8, TimeClass::Productive);
         let cells = fold_ledger(&l, &[(0.0, 10.0)], 1, |_, gs| gs.push(0));
         assert_eq!(cells[0][0], CellAccum::default());
     }

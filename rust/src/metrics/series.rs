@@ -154,7 +154,7 @@ mod tests {
         let mut l = Ledger::new();
         l.set_capacity(0.0, 10);
         l.ensure_job(meta(1));
-        l.add_span(1, 0.0, 100.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 0.0, 100.0, 8, TimeClass::Productive);
         let ts = TimeSeries::build("t", &l, 0.0, 100.0, 30.0, |_| true);
         assert_eq!(ts.windows.len(), 4);
         assert_eq!(ts.windows[3].t1, 100.0);
@@ -168,9 +168,9 @@ mod tests {
         l.set_capacity(0.0, 10);
         l.ensure_job(meta(1));
         // First half: half the allocated time lost; second half: none.
-        l.add_span(1, 0.0, 25.0, 8, TimeClass::Productive);
-        l.add_span(1, 25.0, 50.0, 8, TimeClass::Lost);
-        l.add_span(1, 50.0, 100.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 0.0, 25.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 25.0, 50.0, 8, TimeClass::Lost);
+        l.add_span_auto(1, 50.0, 100.0, 8, TimeClass::Productive);
         let ts = TimeSeries::build("t", &l, 0.0, 100.0, 50.0, |_| true);
         let rg = ts.rg_values();
         assert!((rg[0] - 0.5).abs() < 1e-9);
@@ -187,9 +187,9 @@ mod tests {
         l.ensure_job(meta(1));
         l.ensure_job(meta(2));
         // Spans deliberately straddle window boundaries.
-        l.add_span(1, 3.0, 47.0, 8, TimeClass::Productive);
-        l.add_span(1, 47.0, 55.0, 8, TimeClass::Lost);
-        l.add_span(2, 10.0, 90.0, 4, TimeClass::Productive);
+        l.add_span_auto(1, 3.0, 47.0, 8, TimeClass::Productive);
+        l.add_span_auto(1, 47.0, 55.0, 8, TimeClass::Lost);
+        l.add_span_auto(2, 10.0, 90.0, 4, TimeClass::Productive);
         l.add_pg_sample(1, 3.0, 47.0, 8, 0.7);
         l.add_pg_sample(2, 10.0, 90.0, 4, 0.3);
         let fast = TimeSeries::build("t", &l, 0.0, 100.0, 13.0, |_| true);

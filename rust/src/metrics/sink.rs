@@ -1,0 +1,163 @@
+//! `SpanSink` — the incremental span-emission interface.
+//!
+//! The simulation engine classifies chip-time *as it runs*; everything
+//! downstream (full ledger, streaming windowed ledger, the live monitor's
+//! rolling accumulators, stream recorders) is just a consumer of that
+//! emission. `SpanSink` names the four write operations every consumer
+//! shares, so `sim::engine` drives any sink during `run()` instead of
+//! only filling a `SimResult`-adjacent ledger it owns.
+//!
+//! # Bit-identity contract
+//!
+//! The trait is deliberately *exactly* the write surface [`Ledger`] and
+//! [`WindowedLedger`] already expose (`ensure_job` / `add_span` /
+//! `add_pg_sample` / `set_capacity`): the engine's call sequence through
+//! the trait is the same sequence it made through concrete methods
+//! before, so every report stays `f64::to_bits`-identical and no
+//! `SIM_BEHAVIOR_VERSION` bump is needed. A new sink that wants the same
+//! guarantees must accumulate per-job subtotals in call order and combine
+//! jobs in `BTreeMap` id order — the pinned canonical summation order
+//! (see `metrics::reduce`).
+
+use crate::workload::JobId;
+
+use super::ledger::{JobMeta, Ledger, TimeClass};
+use super::stack::StackLayer;
+use super::windowed::WindowedLedger;
+
+/// A consumer of incremental span emission. All methods mirror the
+/// ledgers' inherent write methods; see those for validity rules
+/// (zero/negative spans ignored, PG asserted into [0, 1], capacity steps
+/// time-ordered and deduplicated).
+pub trait SpanSink {
+    /// Register a job's segmentation metadata before its first span.
+    fn ensure_job(&mut self, meta: &JobMeta);
+
+    /// One classified span of chip-time with stack-layer provenance.
+    fn add_span(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    );
+
+    /// One Program-Goodput sample over a productive span.
+    fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64);
+
+    /// Fleet capacity (healthy accelerator chips) from time `t` on.
+    fn set_capacity(&mut self, t: f64, chips: u64);
+}
+
+impl SpanSink for Ledger {
+    fn ensure_job(&mut self, meta: &JobMeta) {
+        Ledger::ensure_job(self, meta.clone());
+    }
+
+    fn add_span(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
+        Ledger::add_span(self, id, t0, t1, chips, class, layer);
+    }
+
+    fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        Ledger::add_pg_sample(self, id, t0, t1, chips, pg);
+    }
+
+    fn set_capacity(&mut self, t: f64, chips: u64) {
+        Ledger::set_capacity(self, t, chips);
+    }
+}
+
+impl SpanSink for WindowedLedger {
+    fn ensure_job(&mut self, meta: &JobMeta) {
+        WindowedLedger::ensure_job(self, meta.clone());
+    }
+
+    fn add_span(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
+        WindowedLedger::add_span(self, id, t0, t1, chips, class, layer);
+    }
+
+    fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        WindowedLedger::add_pg_sample(self, id, t0, t1, chips, pg);
+    }
+
+    fn set_capacity(&mut self, t: f64, chips: u64) {
+        WindowedLedger::set_capacity(self, t, chips);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::metrics::goodput;
+    use crate::testkit::assert_reports_bit_identical;
+    use crate::workload::{
+        CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+    };
+
+    fn meta(id: u64) -> JobMeta {
+        JobMeta::of(&Job {
+            id,
+            arrival_s: 0.0,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        })
+    }
+
+    /// Drive identical emission through `dyn SpanSink` into both canonical
+    /// sinks: the trait dispatch must not perturb any report bit.
+    #[test]
+    fn trait_dispatch_is_bit_identical_across_sinks() {
+        let horizon = 100.0;
+        let mut full = Ledger::new();
+        let mut win = WindowedLedger::new(horizon, 10.0);
+        for sink in [&mut full as &mut dyn SpanSink, &mut win as &mut dyn SpanSink] {
+            sink.set_capacity(0.0, 64);
+            sink.ensure_job(&meta(1));
+            sink.ensure_job(&meta(2));
+            sink.add_span(1, 0.0, 30.0, 8, TimeClass::Productive, StackLayer::Model);
+            sink.add_pg_sample(1, 0.0, 30.0, 8, 0.625);
+            sink.add_span(1, 30.0, 33.0, 8, TimeClass::Startup, StackLayer::Compiler);
+            sink.add_span(2, 5.0, 45.0, 4, TimeClass::RuntimeStall, StackLayer::Data);
+            sink.set_capacity(50.0, 32);
+            sink.add_span(2, 45.0, 45.0, 4, TimeClass::Lost, StackLayer::Hardware);
+        }
+        assert_reports_bit_identical(
+            &win.report(|_| true),
+            &goodput::report(&full, 0.0, horizon, |_| true),
+            "sink dispatch",
+        );
+    }
+}

@@ -37,7 +37,7 @@ use crate::workload::JobId;
 
 use super::goodput::{Axis, GoodputReport, SegmentReport};
 use super::ledger::{capacity_integral, push_capacity_step, JobMeta, Span, TimeClass};
-use super::reduce::CellAccum;
+use super::reduce::{merge_job_totals, CellAccum};
 use super::series::{TimeSeries, Window};
 use super::stack::StackLayer;
 
@@ -119,17 +119,25 @@ impl WindowedLedger {
         push_capacity_step(&mut self.capacity_steps, t, chips);
     }
 
-    /// Record a classified span attributed to the class's default stack
-    /// layer — see [`Self::add_span_layered`].
-    pub fn add_span(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
-        self.add_span_layered(id, t0, t1, chips, class, StackLayer::of_class(class));
+    /// The recorded capacity breakpoints — what `Simulation::ledger_mode`
+    /// replays when it swaps the accounting sink.
+    pub(crate) fn capacity_steps(&self) -> &[(f64, u64)] {
+        &self.capacity_steps
     }
 
-    /// Record a classified span with explicit stack-layer provenance:
-    /// folded into the job's whole-horizon subtotal (one addition,
-    /// clipped to [0, horizon)) and split across the window cells it
-    /// overlaps. The raw span is NOT retained.
-    pub fn add_span_layered(
+    /// Record a classified span without explicit provenance: a thin shim
+    /// over [`Self::add_span`] attributing it to the class's default
+    /// stack layer ([`StackLayer::of_class`]).
+    pub fn add_span_auto(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass) {
+        self.add_span(id, t0, t1, chips, class, StackLayer::of_class(class));
+    }
+
+    /// Record a classified span with stack-layer provenance (the one
+    /// layered entry point, formerly `add_span_layered`): folded into the
+    /// job's whole-horizon subtotal (one addition, clipped to
+    /// [0, horizon)) and split across the window cells it overlaps. The
+    /// raw span is NOT retained.
+    pub fn add_span(
         &mut self,
         id: JobId,
         t0: f64,
@@ -219,12 +227,8 @@ impl WindowedLedger {
     /// Whole-horizon report for jobs passing `filter` — bit-identical to
     /// `goodput::report(&full_ledger, 0.0, horizon, filter)`.
     pub fn report<F: Fn(&JobMeta) -> bool>(&self, filter: F) -> GoodputReport {
-        let mut cell = CellAccum::default();
-        for (meta, wj) in self.jobs.values() {
-            if filter(meta) {
-                cell.merge_job(&wj.total);
-            }
-        }
+        let cell =
+            merge_job_totals(self.jobs.values().map(|(m, wj)| (m, &wj.total)), filter);
         cell.finalize(capacity_integral(&self.capacity_steps, 0.0, self.horizon_s))
     }
 
@@ -345,8 +349,8 @@ mod tests {
             let chips = 1 + rng.below(16) as u32;
             let class = TimeClass::ALL[rng.below(7) as usize];
             let layer = StackLayer::ALL[rng.below(6) as usize];
-            full.add_span_layered(id, t0, t1, chips, class, layer);
-            win.add_span_layered(id, t0, t1, chips, class, layer);
+            full.add_span(id, t0, t1, chips, class, layer);
+            win.add_span(id, t0, t1, chips, class, layer);
             if class == TimeClass::Productive {
                 let pg = rng.range_f64(0.0, 1.0);
                 full.add_pg_sample(id, t0, t1, chips, pg);
@@ -389,7 +393,7 @@ mod tests {
         win.ensure_job(meta(1, Phase::Training));
         for k in 0..50 {
             let t = k as f64 * 2.0;
-            win.add_span(1, t, t + 2.0, 4, TimeClass::Productive);
+            win.add_span_auto(1, t, t + 2.0, 4, TimeClass::Productive);
         }
         // One job covering all 10 windows: exactly 10 cells, however many
         // spans were folded in.
@@ -404,8 +408,8 @@ mod tests {
     fn out_of_order_spans_grow_the_run_backwards() {
         let mut win = WindowedLedger::new(100.0, 10.0);
         win.ensure_job(meta(1, Phase::Training));
-        win.add_span(1, 55.0, 58.0, 2, TimeClass::Productive);
-        win.add_span(1, 5.0, 8.0, 2, TimeClass::Lost);
+        win.add_span_auto(1, 55.0, 58.0, 2, TimeClass::Productive);
+        win.add_span_auto(1, 5.0, 8.0, 2, TimeClass::Lost);
         assert_eq!(win.cell_count(), 6); // windows 0..=5
         let r = win.report(|_| true);
         assert_eq!(r.productive_cs, 6.0);
@@ -416,9 +420,9 @@ mod tests {
     fn zero_and_invalid_spans_ignored_like_full_ledger() {
         let mut win = WindowedLedger::new(100.0, 10.0);
         win.ensure_job(meta(1, Phase::Training));
-        win.add_span(1, 5.0, 5.0, 4, TimeClass::Productive);
-        win.add_span(1, 9.0, 7.0, 4, TimeClass::Productive);
-        win.add_span(1, 5.0, 6.0, 0, TimeClass::Productive);
+        win.add_span_auto(1, 5.0, 5.0, 4, TimeClass::Productive);
+        win.add_span_auto(1, 9.0, 7.0, 4, TimeClass::Productive);
+        win.add_span_auto(1, 5.0, 6.0, 0, TimeClass::Productive);
         assert_eq!(win.cell_count(), 0);
         assert_eq!(win.report(|_| true).all_allocated_cs, 0.0);
     }

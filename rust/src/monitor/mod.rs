@@ -1,0 +1,689 @@
+//! Live fleet monitor: streaming MPG over an unbounded span stream.
+//!
+//! The batch ledgers need the horizon up front ([`WindowedLedger`] sizes
+//! its window list from it) and the full [`Ledger`](crate::metrics::Ledger)
+//! retains every span. A *monitor* has neither luxury: events arrive
+//! indefinitely, the horizon is "now", and memory must stay bounded no
+//! matter how long the stream runs. [`MonitorLedger`] ingests the
+//! [`proto`] event stream incrementally, keeping
+//!
+//! * one whole-horizon [`CellAccum`] subtotal per job (O(jobs) — the same
+//!   per-job state every batch reduction keeps), and
+//! * a rolling ring of per-window cells covering only the most recent
+//!   `ring_windows` windows, evicting older cells as the watermark
+//!   advances — O(ring_windows × live jobs) regardless of stream length.
+//!
+//! # Bit-identity contract
+//!
+//! A monitor fed a recorded stream reports `f64::to_bits`-identical to a
+//! [`WindowedLedger`] replaying the same stream with the final horizon
+//! known up front:
+//!
+//! * the watermark (max event end-time) IS the batch horizon, and every
+//!   span/sample lies within it, so the whole-horizon piece
+//!   `(t1 - t0) * chips` equals the batch `clipped(0, horizon)` bitwise
+//!   (both clip bounds are no-ops), and the PG fraction arithmetic
+//!   reproduces the batch expressions term for term;
+//!   - per-job subtotals accumulate in stream order — the batch insertion
+//!     order — and [`MonitorLedger::report`] combines them through the
+//!     shared [`merge_job_totals`] + [`CellAccum::finalize`] path, so the
+//!     addition chains match exactly;
+//! * window boundaries extend the same iterative chain
+//!   `w1 = w0 + width` that `TimeSeries::windows_for` builds (boundary
+//!   *values*, not `k * width` products, which can differ in the last
+//!   ulp), with only the retained ring's boundaries kept;
+//! * evicted capacity steps fold into a prefix sum left-to-right — the
+//!   exact partial sum `capacity_integral(steps, 0, h)` passes through —
+//!   and the final integral continues that chain over the retained steps.
+//!
+//! `tests/monitor_stream.rs` locks the contract end-to-end: a recorded
+//! simulation stream through the monitor must match the batch windowed
+//! replay byte-for-byte, with bounded cells on streams ≥ 10× the ring.
+
+pub mod proto;
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::metrics::ledger::{capacity_integral, Span};
+use crate::metrics::reduce::{merge_job_totals, CellAccum};
+use crate::metrics::{AttributionReport, GoodputReport, JobMeta, StackLayer, Window};
+use crate::util::Json;
+use crate::workload::JobId;
+
+use proto::Event;
+
+/// Per-job monitor state: the whole-horizon subtotal (kept for the life
+/// of the stream) plus the job's cells inside the rolling ring.
+#[derive(Debug)]
+struct MonitorJob {
+    meta: JobMeta,
+    total: CellAccum,
+    /// Absolute window index of `ring[0]`; `>= ring_start` after every
+    /// eviction sweep.
+    first_window: usize,
+    ring: VecDeque<CellAccum>,
+}
+
+/// Streaming accounting over a [`proto`] event stream with bounded
+/// memory. See the module docs for the bit-identity contract.
+#[derive(Debug)]
+pub struct MonitorLedger {
+    width_s: f64,
+    ring_windows: usize,
+    /// Retained window boundaries: `boundaries[i]` starts absolute window
+    /// `ring_start + i`; the last element is the NEXT window's start.
+    /// Extending the chain by `back + width` (never `k * width`) keeps
+    /// every retained boundary bit-equal to the batch window list.
+    boundaries: VecDeque<f64>,
+    /// Absolute index of the oldest retained window.
+    ring_start: usize,
+    /// Absolute count of windows ever started (`b_k < watermark`).
+    windows_started: usize,
+    /// Max event end-time seen — the stream's current horizon.
+    watermark_s: f64,
+    jobs: BTreeMap<JobId, MonitorJob>,
+    /// Jobs with any retained ring cell (id order = canonical job order).
+    live: BTreeSet<JobId>,
+    /// Capacity steps still overlapping the ring (plus the step active at
+    /// its start); older steps are folded into `cap_prefix_cs`.
+    cap_steps: VecDeque<(f64, u64)>,
+    /// Left-to-right partial sum of evicted capacity-step contributions —
+    /// a prefix of the exact `capacity_integral(steps, 0, h)` chain.
+    cap_prefix_cs: f64,
+    live_cells: usize,
+    peak_cells: usize,
+    peak_live_jobs: usize,
+    evicted_cells: u64,
+    span_count: u64,
+    pg_count: u64,
+    cap_events: u64,
+}
+
+impl MonitorLedger {
+    pub fn new(width_s: f64, ring_windows: usize) -> MonitorLedger {
+        assert!(width_s > 0.0, "window width must be positive");
+        assert!(ring_windows >= 1, "ring must retain at least one window");
+        MonitorLedger {
+            width_s,
+            ring_windows,
+            boundaries: VecDeque::from([0.0]),
+            ring_start: 0,
+            windows_started: 0,
+            watermark_s: 0.0,
+            jobs: BTreeMap::new(),
+            live: BTreeSet::new(),
+            cap_steps: VecDeque::new(),
+            cap_prefix_cs: 0.0,
+            live_cells: 0,
+            peak_cells: 0,
+            peak_live_jobs: 0,
+            evicted_cells: 0,
+            span_count: 0,
+            pg_count: 0,
+            cap_events: 0,
+        }
+    }
+
+    /// Fold one validated event into the rolling state. Callers run
+    /// [`proto::Validator`] first; like the batch ledgers, this panics on
+    /// spans for undeclared jobs and out-of-order capacity steps.
+    pub fn ingest(&mut self, ev: &Event) {
+        match *ev {
+            Event::Job(ref meta) => {
+                let meta = meta.clone();
+                self.jobs.entry(meta.id).or_insert_with(|| MonitorJob {
+                    meta,
+                    total: CellAccum::default(),
+                    first_window: 0,
+                    ring: VecDeque::new(),
+                });
+            }
+            Event::Capacity { t, chips } => {
+                self.cap_events += 1;
+                self.advance(t);
+                // push_capacity_step's rule on the retained suffix: the
+                // fold only ever removes from the front, so deduping
+                // against the back matches the batch list exactly.
+                if let Some(last) = self.cap_steps.back() {
+                    assert!(t >= last.0, "capacity steps must be time-ordered");
+                    if last.1 == chips {
+                        return;
+                    }
+                }
+                self.cap_steps.push_back((t, chips));
+            }
+            Event::Span { id, t0, t1, chips, class, layer } => {
+                self.span_count += 1;
+                self.advance(t1);
+                if t1 <= t0 || chips == 0 {
+                    return;
+                }
+                let job = self.jobs.get_mut(&id).expect("add_span before ensure_job");
+                // Whole-horizon piece: t0 >= 0 and t1 <= watermark <=
+                // final horizon, so the batch `clipped(0, horizon)` bounds
+                // are both no-ops and the piece is (t1 - t0) * chips.
+                let span = Span { t0, t1, chips, class, layer };
+                job.total.add_piece(class, layer, span.chip_seconds());
+                let nwin = self.windows_started - self.ring_start;
+                let mut i = 0;
+                while i < nwin && self.boundaries[i + 1] <= t0 {
+                    i += 1;
+                }
+                while i < nwin {
+                    let (w0, w1) = (self.boundaries[i], self.boundaries[i + 1]);
+                    if w0 >= t1 {
+                        break;
+                    }
+                    // w1 is the unclipped chain boundary; the batch list
+                    // clips its last window to the horizon, but t1 never
+                    // exceeds it, so the clipped piece is identical.
+                    let piece = span.clipped(w0, w1);
+                    let w = self.ring_start + i;
+                    Self::job_cell(job, w, &mut self.live_cells).add_piece(class, layer, piece);
+                    i += 1;
+                }
+                self.note_live(id);
+            }
+            Event::Pg { id, t0, t1, chips, pg } => {
+                self.pg_count += 1;
+                self.advance(t1);
+                if t1 <= t0 || chips == 0 {
+                    return;
+                }
+                assert!((0.0..=1.0 + 1e-9).contains(&pg), "pg={pg}");
+                let job = self.jobs.get_mut(&id).expect("add_pg_sample before ensure_job");
+                let chip_seconds = (t1 - t0) * chips as f64;
+                // Batch whole-horizon terms with `t1.min(horizon)` == t1.
+                let (lo, hi) = (t0.max(0.0), t1);
+                if hi > lo {
+                    let frac = (hi - lo) / (t1 - t0);
+                    job.total.add_pg(chip_seconds * frac, pg);
+                }
+                let nwin = self.windows_started - self.ring_start;
+                let mut i = 0;
+                while i < nwin && self.boundaries[i + 1] <= t0 {
+                    i += 1;
+                }
+                while i < nwin {
+                    let (w0, w1) = (self.boundaries[i], self.boundaries[i + 1]);
+                    if w0 >= t1 {
+                        break;
+                    }
+                    let (lo, hi) = (t0.max(w0), t1.min(w1));
+                    if hi > lo {
+                        let frac = (hi - lo) / (t1 - t0);
+                        let w = self.ring_start + i;
+                        Self::job_cell(job, w, &mut self.live_cells)
+                            .add_pg(chip_seconds * frac, pg);
+                    }
+                    i += 1;
+                }
+                self.note_live(id);
+            }
+            Event::End => {}
+        }
+    }
+
+    /// Advance the watermark and extend the window chain to cover it,
+    /// evicting windows that fall off the ring.
+    fn advance(&mut self, t: f64) {
+        self.watermark_s = self.watermark_s.max(t);
+        while *self.boundaries.back().expect("chain never empty") < self.watermark_s {
+            let next = self.boundaries.back().unwrap() + self.width_s;
+            self.boundaries.push_back(next);
+            self.windows_started += 1;
+            if self.windows_started - self.ring_start > self.ring_windows {
+                self.evict_to(self.windows_started - self.ring_windows);
+            }
+        }
+    }
+
+    /// Drop windows below `new_start` from the ring: fold their capacity
+    /// contributions into the prefix sum and release their cells.
+    fn evict_to(&mut self, new_start: usize) {
+        while self.ring_start < new_start {
+            self.boundaries.pop_front();
+            self.ring_start += 1;
+        }
+        let ring_t0 = self.boundaries[0];
+        // A step whose interval ends at or before the ring start can no
+        // longer overlap any retained window; its whole-horizon
+        // contribution is final (the final horizon is >= ring_t0), so
+        // fold it into the prefix exactly as capacity_integral would:
+        // skipped zero-width additions stay skipped.
+        while self.cap_steps.len() >= 2 && self.cap_steps[1].0 <= ring_t0 {
+            let (t, chips) = self.cap_steps.pop_front().unwrap();
+            let next = self.cap_steps[0].0;
+            let lo = t.max(0.0);
+            if next > lo {
+                self.cap_prefix_cs += (next - lo) * chips as f64;
+            }
+        }
+        let start = self.ring_start;
+        let mut emptied: Vec<JobId> = Vec::new();
+        for &id in &self.live {
+            let job = self.jobs.get_mut(&id).expect("live job not in ledger");
+            let drop_n = start.saturating_sub(job.first_window).min(job.ring.len());
+            if drop_n == 0 {
+                continue;
+            }
+            for _ in 0..drop_n {
+                job.ring.pop_front();
+            }
+            job.first_window += drop_n;
+            self.live_cells -= drop_n;
+            self.evicted_cells += drop_n as u64;
+            if job.ring.is_empty() {
+                emptied.push(id);
+            }
+        }
+        for id in emptied {
+            self.live.remove(&id);
+        }
+    }
+
+    /// The job's ring cell for absolute window `w`, growing its dense run
+    /// like the batch ledger's `cell_mut` (callers guarantee
+    /// `w >= ring_start`, which `ingest` ensures by never binning below
+    /// the retained chain).
+    fn job_cell<'a>(
+        job: &'a mut MonitorJob,
+        w: usize,
+        live_cells: &mut usize,
+    ) -> &'a mut CellAccum {
+        if job.ring.is_empty() {
+            job.first_window = w;
+            job.ring.push_back(CellAccum::default());
+            *live_cells += 1;
+        } else if w < job.first_window {
+            let grow = job.first_window - w;
+            for _ in 0..grow {
+                job.ring.push_front(CellAccum::default());
+            }
+            job.first_window = w;
+            *live_cells += grow;
+        } else if w >= job.first_window + job.ring.len() {
+            let grow = w - job.first_window + 1 - job.ring.len();
+            for _ in 0..grow {
+                job.ring.push_back(CellAccum::default());
+            }
+            *live_cells += grow;
+        }
+        &mut job.ring[w - job.first_window]
+    }
+
+    /// Track the live set and peaks after a span/sample landed in `id`'s
+    /// ring (no-op when the event predated every retained window).
+    fn note_live(&mut self, id: JobId) {
+        if !self.jobs[&id].ring.is_empty() {
+            self.live.insert(id);
+        }
+        self.peak_cells = self.peak_cells.max(self.live_cells);
+        self.peak_live_jobs = self.peak_live_jobs.max(self.live.len());
+    }
+
+    /// Whole-stream report up to the current watermark — bit-identical to
+    /// `WindowedLedger::new(watermark, width)` replaying the stream.
+    pub fn report<F: Fn(&JobMeta) -> bool>(&self, filter: F) -> GoodputReport {
+        let cell = merge_job_totals(self.jobs.values().map(|j| (&j.meta, &j.total)), filter);
+        cell.finalize(self.capacity_cs())
+    }
+
+    /// `capacity_integral(all steps, 0, watermark)`, resumed from the
+    /// folded prefix: same additions in the same order.
+    fn capacity_cs(&self) -> f64 {
+        let h = self.watermark_s;
+        if self.cap_steps.is_empty() || h <= 0.0 {
+            // No step was ever recorded (the fold always retains one) or
+            // no time has passed — no fold ran, the prefix is 0.0, and
+            // the batch integral's degenerate guard returns 0.0 too.
+            return 0.0;
+        }
+        let mut total = self.cap_prefix_cs;
+        for (i, &(t, chips)) in self.cap_steps.iter().enumerate() {
+            if t >= h {
+                break;
+            }
+            let next = self.cap_steps.get(i + 1).map(|&(t2, _)| t2).unwrap_or(f64::INFINITY);
+            let lo = t.max(0.0);
+            let hi = next.min(h);
+            if hi > lo {
+                total += (hi - lo) * chips as f64;
+            }
+        }
+        total
+    }
+
+    /// Per-window reports for the retained ring, newest-last — what the
+    /// batch `series()` would report for these windows when the stream
+    /// fits in the ring.
+    pub fn recent_series<F: Fn(&JobMeta) -> bool>(
+        &self,
+        filter: F,
+    ) -> Vec<(Window, GoodputReport)> {
+        let nwin = self.windows_started - self.ring_start;
+        let mut cells = vec![CellAccum::default(); nwin];
+        for &id in &self.live {
+            let job = &self.jobs[&id];
+            if !filter(&job.meta) {
+                continue;
+            }
+            for (i, c) in job.ring.iter().enumerate() {
+                cells[job.first_window + i - self.ring_start].merge_job(c);
+            }
+        }
+        let steps: Vec<(f64, u64)> = self.cap_steps.iter().copied().collect();
+        (0..nwin)
+            .map(|i| {
+                let w0 = self.boundaries[i];
+                let w1 = self.boundaries[i + 1].min(self.watermark_s);
+                // Folded-out capacity steps end at or before the ring
+                // start, so the retained steps alone cover every retained
+                // window's integral.
+                let cap = capacity_integral(&steps, w0, w1);
+                (Window { t0: w0, t1: w1 }, cells[i].finalize(cap))
+            })
+            .collect()
+    }
+
+    pub fn watermark_s(&self) -> f64 {
+        self.watermark_s
+    }
+
+    pub fn width_s(&self) -> f64 {
+        self.width_s
+    }
+
+    pub fn ring_windows(&self) -> usize {
+        self.ring_windows
+    }
+
+    /// Windows the chain has started since t=0 (evicted ones included).
+    pub fn windows_started(&self) -> usize {
+        self.windows_started
+    }
+
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Jobs with at least one retained ring cell.
+    pub fn live_job_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Ring cells currently held across all jobs.
+    pub fn live_cells(&self) -> usize {
+        self.live_cells
+    }
+
+    /// High-water mark of [`Self::live_cells`] — the bounded-memory
+    /// telemetry: never exceeds `ring_windows × peak live jobs`.
+    pub fn peak_cells(&self) -> usize {
+        self.peak_cells
+    }
+
+    pub fn peak_live_jobs(&self) -> usize {
+        self.peak_live_jobs
+    }
+
+    pub fn evicted_cells(&self) -> u64 {
+        self.evicted_cells
+    }
+
+    pub fn span_count(&self) -> u64 {
+        self.span_count
+    }
+
+    pub fn pg_count(&self) -> u64 {
+        self.pg_count
+    }
+
+    pub fn cap_events(&self) -> u64 {
+        self.cap_events
+    }
+}
+
+/// Mode-independent stream totals for the snapshot: both the streaming
+/// and batch paths count the same parsed events, so these bytes agree.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub jobs: usize,
+    pub spans: u64,
+    pub pg_samples: u64,
+    pub cap_events: u64,
+}
+
+/// The monitor snapshot document: fleet MPG, per-layer attribution, and
+/// stream totals at one watermark. Only mode-independent values appear —
+/// ring telemetry (live cells, evictions) goes to stderr — so a streaming
+/// snapshot and a batch-replay snapshot of the same stream are
+/// byte-identical (the CI smoke step `cmp`s them).
+pub fn snapshot_json(
+    report: &GoodputReport,
+    horizon_s: f64,
+    width_s: f64,
+    stats: &StreamStats,
+    is_final: bool,
+) -> Json {
+    let att = AttributionReport::of(report);
+    let layers = Json::obj(
+        StackLayer::ALL
+            .iter()
+            .map(|&l| (l.name(), Json::num(report.layer_cs[l as usize])))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("final", Json::Bool(is_final)),
+        ("horizon_s", Json::num(horizon_s)),
+        ("width_s", Json::num(width_s)),
+        (
+            "fleet",
+            Json::obj(vec![
+                ("sg", Json::num(report.sg)),
+                ("rg", Json::num(report.rg)),
+                ("pg", Json::num(report.pg)),
+                ("mpg", Json::num(report.mpg())),
+                ("mpg_bits", Json::f64b(report.mpg())),
+                ("capacity_cs", Json::num(report.capacity_cs)),
+                ("all_allocated_cs", Json::num(report.all_allocated_cs)),
+                ("productive_cs", Json::num(report.productive_cs)),
+                ("lost_cs", Json::num(report.lost_cs)),
+                ("startup_cs", Json::num(report.startup_cs)),
+                ("stall_cs", Json::num(report.stall_cs)),
+                ("partial_cs", Json::num(report.partial_cs)),
+                ("layer_cs", layers),
+                ("job_count", Json::num(report.job_count as f64)),
+            ]),
+        ),
+        ("attribution", att.to_json()),
+        (
+            "stream",
+            Json::obj(vec![
+                ("jobs", Json::num(stats.jobs as f64)),
+                ("spans", Json::num(stats.spans as f64)),
+                ("pg_samples", Json::num(stats.pg_samples as f64)),
+                ("cap_events", Json::num(stats.cap_events as f64)),
+            ]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::ChipGeneration;
+    use crate::metrics::{SpanSink, TimeClass, WindowedLedger};
+    use crate::testkit::assert_reports_bit_identical;
+    use crate::workload::{
+        CheckpointPolicy, Framework, Job, ModelArch, Phase, Priority, StepProfile,
+    };
+
+    fn meta(id: u64) -> JobMeta {
+        JobMeta::of(&Job {
+            id,
+            arrival_s: 0.0,
+            phase: Phase::Training,
+            framework: Framework::JaxPathways,
+            arch: ModelArch::Transformer,
+            priority: Priority::Prod,
+            gen: ChipGeneration::TpuC,
+            slice_shape: [2, 2, 2],
+            pods: 0,
+            work_s: 100.0,
+            step: StepProfile {
+                ideal_flops_per_chip: 1e12,
+                base_efficiency: 0.5,
+                comm_fraction: 0.1,
+                host_fraction: 0.1,
+            },
+            ckpt: CheckpointPolicy::synchronous(),
+            startup_s: 10.0,
+        })
+    }
+
+    /// Hand-rolled event tape: capacity change mid-stream, spans
+    /// straddling window boundaries, PG samples, and one late span far
+    /// older than the stream head — the shapes the engine emits.
+    fn tape() -> Vec<Event> {
+        let mut evs = vec![
+            Event::Capacity { t: 0.0, chips: 64 },
+            Event::Job(meta(1)),
+            Event::Job(meta(2)),
+        ];
+        for k in 0..40 {
+            let t = k as f64 * 7.5;
+            evs.push(Event::Span {
+                id: 1 + (k % 2) as u64,
+                t0: t,
+                t1: t + 9.0,
+                chips: 4 + (k % 3) as u32,
+                class: TimeClass::ALL[k % 7],
+                layer: StackLayer::ALL[k % 6],
+            });
+            if k % 5 == 0 {
+                let pg = 0.5 + 0.01 * k as f64;
+                evs.push(Event::Pg { id: 1, t0: t, t1: t + 9.0, chips: 4, pg });
+            }
+            if k == 20 {
+                evs.push(Event::Capacity { t, chips: 48 });
+            }
+        }
+        // Late arrival for long-evicted time: the whole-horizon subtotal
+        // still takes it even though its ring windows may be gone.
+        evs.push(Event::Span {
+            id: 2,
+            t0: 3.0,
+            t1: 5.0,
+            chips: 6,
+            class: TimeClass::Lost,
+            layer: StackLayer::Hardware,
+        });
+        evs
+    }
+
+    #[test]
+    fn streaming_report_matches_batch_windowed_replay() {
+        let evs = tape();
+        let mut ml = MonitorLedger::new(10.0, 4);
+        for ev in &evs {
+            ml.ingest(ev);
+        }
+        let horizon = ml.watermark_s();
+        let mut win = WindowedLedger::new(horizon, 10.0);
+        for ev in &evs {
+            match *ev {
+                Event::Capacity { t, chips } => win.set_capacity(t, chips),
+                Event::Job(ref m) => SpanSink::ensure_job(&mut win, m),
+                Event::Span { id, t0, t1, chips, class, layer } => {
+                    win.add_span(id, t0, t1, chips, class, layer)
+                }
+                Event::Pg { id, t0, t1, chips, pg } => win.add_pg_sample(id, t0, t1, chips, pg),
+                Event::End => {}
+            }
+        }
+        assert_reports_bit_identical(&ml.report(|_| true), &win.report(|_| true), "fleet");
+        assert_reports_bit_identical(
+            &ml.report(|m| m.id == 2),
+            &win.report(|m| m.id == 2),
+            "job 2",
+        );
+    }
+
+    #[test]
+    fn ring_stays_bounded_while_totals_keep_everything() {
+        let mut ml = MonitorLedger::new(10.0, 4);
+        ml.ingest(&Event::Capacity { t: 0.0, chips: 8 });
+        ml.ingest(&Event::Job(meta(1)));
+        // 100 windows of stream: 25x the ring.
+        for k in 0..1000 {
+            let t = k as f64;
+            ml.ingest(&Event::Span {
+                id: 1,
+                t0: t,
+                t1: t + 1.0,
+                chips: 2,
+                class: TimeClass::Productive,
+                layer: StackLayer::Model,
+            });
+        }
+        assert_eq!(ml.windows_started(), 100);
+        assert!(ml.peak_cells() <= ml.ring_windows() * ml.peak_live_jobs());
+        assert!(ml.evicted_cells() > 0);
+        let r = ml.report(|_| true);
+        assert_eq!(r.productive_cs, 1000.0 * 2.0);
+        assert_eq!(r.capacity_cs, 1000.0 * 8.0);
+    }
+
+    #[test]
+    fn recent_series_matches_batch_series_when_ring_covers_stream() {
+        let evs = tape();
+        let mut ml = MonitorLedger::new(10.0, 64);
+        for ev in &evs {
+            ml.ingest(ev);
+        }
+        assert_eq!(ml.evicted_cells(), 0);
+        let horizon = ml.watermark_s();
+        let mut win = WindowedLedger::new(horizon, 10.0);
+        for ev in &evs {
+            match *ev {
+                Event::Capacity { t, chips } => win.set_capacity(t, chips),
+                Event::Job(ref m) => SpanSink::ensure_job(&mut win, m),
+                Event::Span { id, t0, t1, chips, class, layer } => {
+                    win.add_span(id, t0, t1, chips, class, layer)
+                }
+                Event::Pg { id, t0, t1, chips, pg } => win.add_pg_sample(id, t0, t1, chips, pg),
+                Event::End => {}
+            }
+        }
+        let stream = ml.recent_series(|_| true);
+        let batch = win.series("w", |_| true);
+        assert_eq!(stream.len(), batch.windows.len());
+        for ((w, r), (bw, br)) in stream.iter().zip(batch.windows.iter().zip(&batch.reports)) {
+            assert_eq!(w.t0.to_bits(), bw.t0.to_bits());
+            assert_eq!(w.t1.to_bits(), bw.t1.to_bits());
+            assert_reports_bit_identical(r, br, "ring window");
+        }
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic_and_mode_independent() {
+        let mut ml = MonitorLedger::new(10.0, 4);
+        for ev in tape() {
+            ml.ingest(&ev);
+        }
+        let stats = StreamStats {
+            jobs: ml.job_count(),
+            spans: ml.span_count(),
+            pg_samples: ml.pg_count(),
+            cap_events: ml.cap_events(),
+        };
+        let r = ml.report(|_| true);
+        let a = snapshot_json(&r, ml.watermark_s(), ml.width_s(), &stats, true);
+        let b = snapshot_json(&r, ml.watermark_s(), ml.width_s(), &stats, true);
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+        let doc = Json::parse(&a.to_string_pretty()).expect("snapshot parses");
+        assert_eq!(doc.get("final").as_bool(), Some(true));
+        assert!(doc.get("fleet").get("mpg").as_f64().is_some());
+    }
+}

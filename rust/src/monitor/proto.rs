@@ -1,0 +1,349 @@
+//! Monitor line-protocol: the serialized form of [`SpanSink`] emission.
+//!
+//! One event per line, whitespace-separated fields, `#` comments and
+//! blank lines ignored:
+//!
+//! ```text
+//! cap  <t> <chips>
+//! job  <id> <phase> <framework> <arch> <gen> <size> <chips>
+//! span <id> <t0> <t1> <chips> <class> <layer>
+//! pg   <id> <t0> <t1> <chips> <pg>
+//! end
+//! ```
+//!
+//! Enum fields use the canonical `name()` spellings (`from_name` is the
+//! inverse). Floats are written with Rust's shortest round-trip `{}`
+//! display, so `parse(format(x))` reproduces `x` bit-exactly — the
+//! property that lets a replayed stream drive any [`SpanSink`] to
+//! `f64::to_bits`-identical reports.
+//!
+//! Parsing validates field shapes (finite floats, `t1 >= t0 >= 0`, PG in
+//! [0, 1]); the stateful checks (span/pg lines referencing a declared
+//! `job`, time-ordered `cap` lines) live in [`Validator`], which every
+//! ingest mode runs so malformed streams fail with a line-numbered error
+//! instead of tripping the ledgers' internal panics.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::fleet::ChipGeneration;
+use crate::metrics::{JobMeta, SpanSink, StackLayer, TimeClass};
+use crate::workload::{Framework, JobId, ModelArch, Phase, SizeClass};
+
+/// One parsed line of the monitor stream.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// Fleet capacity (healthy accelerator chips) from time `t` on.
+    Capacity { t: f64, chips: u64 },
+    /// Job registration: must precede the job's first `span`/`pg` line.
+    Job(JobMeta),
+    /// One classified span of chip-time with stack-layer provenance.
+    Span { id: JobId, t0: f64, t1: f64, chips: u32, class: TimeClass, layer: StackLayer },
+    /// One Program-Goodput sample over a productive span.
+    Pg { id: JobId, t0: f64, t1: f64, chips: u32, pg: f64 },
+    /// Optional terminator: tells follow-mode readers the stream is done.
+    End,
+}
+
+impl Event {
+    /// Serialize to one protocol line (no trailing newline).
+    pub fn format(&self) -> String {
+        let mut s = String::new();
+        match self {
+            Event::Capacity { t, chips } => {
+                write!(s, "cap {t} {chips}").unwrap();
+            }
+            Event::Job(m) => {
+                write!(
+                    s,
+                    "job {} {} {} {} {} {} {}",
+                    m.id,
+                    m.phase.name(),
+                    m.framework.name(),
+                    m.arch.name(),
+                    m.gen.name(),
+                    m.size.name(),
+                    m.chips
+                )
+                .unwrap();
+            }
+            Event::Span { id, t0, t1, chips, class, layer } => {
+                write!(s, "span {id} {t0} {t1} {chips} {} {}", class.name(), layer.name())
+                    .unwrap();
+            }
+            Event::Pg { id, t0, t1, chips, pg } => {
+                write!(s, "pg {id} {t0} {t1} {chips} {pg}").unwrap();
+            }
+            Event::End => s.push_str("end"),
+        }
+        s
+    }
+
+    /// Parse one line. `Ok(None)` for blank lines and `#` comments.
+    pub fn parse(line: &str) -> Result<Option<Event>, String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let tok: Vec<&str> = line.split_whitespace().collect();
+        let ev = match tok[0] {
+            "cap" => {
+                arity(&tok, 3, "cap <t> <chips>")?;
+                let t = time(tok[1], "t")?;
+                let chips = int::<u64>(tok[2], "chips")?;
+                Event::Capacity { t, chips }
+            }
+            "job" => {
+                arity(&tok, 8, "job <id> <phase> <framework> <arch> <gen> <size> <chips>")?;
+                Event::Job(JobMeta {
+                    id: int::<JobId>(tok[1], "id")?,
+                    phase: name(tok[2], "phase", Phase::from_name)?,
+                    framework: name(tok[3], "framework", Framework::from_name)?,
+                    arch: name(tok[4], "arch", ModelArch::from_name)?,
+                    gen: name(tok[5], "gen", ChipGeneration::from_name)?,
+                    size: name(tok[6], "size", SizeClass::from_name)?,
+                    chips: int::<u32>(tok[7], "chips")?,
+                })
+            }
+            "span" => {
+                arity(&tok, 7, "span <id> <t0> <t1> <chips> <class> <layer>")?;
+                let (t0, t1) = interval(tok[2], tok[3])?;
+                Event::Span {
+                    id: int::<JobId>(tok[1], "id")?,
+                    t0,
+                    t1,
+                    chips: int::<u32>(tok[4], "chips")?,
+                    class: name(tok[5], "class", TimeClass::from_name)?,
+                    layer: name(tok[6], "layer", StackLayer::from_name)?,
+                }
+            }
+            "pg" => {
+                arity(&tok, 6, "pg <id> <t0> <t1> <chips> <pg>")?;
+                let (t0, t1) = interval(tok[2], tok[3])?;
+                let pg = float(tok[5], "pg")?;
+                if !(0.0..=1.0 + 1e-9).contains(&pg) {
+                    return Err(format!("pg `{pg}` outside [0, 1]"));
+                }
+                Event::Pg {
+                    id: int::<JobId>(tok[1], "id")?,
+                    t0,
+                    t1,
+                    chips: int::<u32>(tok[4], "chips")?,
+                    pg,
+                }
+            }
+            "end" => {
+                arity(&tok, 1, "end")?;
+                Event::End
+            }
+            kw => return Err(format!("unknown event `{kw}`")),
+        };
+        Ok(Some(ev))
+    }
+
+    /// The time the stream's watermark advances to on this event, if any.
+    pub fn end_time(&self) -> Option<f64> {
+        match self {
+            Event::Capacity { t, .. } => Some(*t),
+            Event::Span { t1, .. } | Event::Pg { t1, .. } => Some(*t1),
+            Event::Job(_) | Event::End => None,
+        }
+    }
+}
+
+fn arity(tok: &[&str], n: usize, usage: &str) -> Result<(), String> {
+    if tok.len() == n {
+        Ok(())
+    } else {
+        Err(format!("expected {} field(s): `{usage}`", n - 1))
+    }
+}
+
+fn int<T: std::str::FromStr>(tok: &str, what: &str) -> Result<T, String> {
+    tok.parse().map_err(|_| format!("bad {what} `{tok}`"))
+}
+
+fn float(tok: &str, what: &str) -> Result<f64, String> {
+    let v: f64 = tok.parse().map_err(|_| format!("bad {what} `{tok}`"))?;
+    if !v.is_finite() {
+        return Err(format!("non-finite {what} `{tok}`"));
+    }
+    Ok(v)
+}
+
+fn time(tok: &str, what: &str) -> Result<f64, String> {
+    let v = float(tok, what)?;
+    if v < 0.0 {
+        return Err(format!("negative {what} `{tok}`"));
+    }
+    Ok(v)
+}
+
+fn interval(a: &str, b: &str) -> Result<(f64, f64), String> {
+    let t0 = time(a, "t0")?;
+    let t1 = time(b, "t1")?;
+    if t1 < t0 {
+        return Err(format!("t1 `{t1}` before t0 `{t0}`"));
+    }
+    Ok((t0, t1))
+}
+
+fn name<T>(tok: &str, what: &str, from: impl Fn(&str) -> Option<T>) -> Result<T, String> {
+    from(tok).ok_or_else(|| format!("unknown {what} `{tok}`"))
+}
+
+/// Stateful stream checks shared by every ingest mode: `span`/`pg` lines
+/// must reference a previously declared `job`, and `cap` times must be
+/// non-decreasing (the ledgers' capacity-write rule). Running these up
+/// front turns would-be ledger panics into line-numbered stream errors.
+#[derive(Debug, Default)]
+pub struct Validator {
+    jobs: BTreeSet<JobId>,
+    last_cap_t: Option<f64>,
+}
+
+impl Validator {
+    pub fn check(&mut self, ev: &Event) -> Result<(), String> {
+        match ev {
+            Event::Job(m) => {
+                self.jobs.insert(m.id);
+            }
+            Event::Span { id, .. } => {
+                if !self.jobs.contains(id) {
+                    return Err(format!("span for undeclared job {id} (missing `job` line)"));
+                }
+            }
+            Event::Pg { id, .. } => {
+                if !self.jobs.contains(id) {
+                    return Err(format!("pg for undeclared job {id} (missing `job` line)"));
+                }
+            }
+            Event::Capacity { t, .. } => {
+                if let Some(last) = self.last_cap_t {
+                    if *t < last {
+                        return Err(format!("cap out of order ({t} after {last})"));
+                    }
+                }
+                self.last_cap_t = Some(*t);
+            }
+            Event::End => {}
+        }
+        Ok(())
+    }
+
+    /// Distinct job ids declared so far.
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+/// A [`SpanSink`] that serializes the emission into a shared line-protocol
+/// buffer — attach one to a `Simulation` (`attach_sink`) to record a
+/// replayable stream while the primary ledger accounts normally. No-op
+/// spans/samples the ledgers would ignore (`t1 <= t0` or `chips == 0`)
+/// are dropped at the source, so recorded streams carry no dead lines.
+pub struct StreamRecorder {
+    buf: Arc<Mutex<String>>,
+}
+
+impl StreamRecorder {
+    /// A recorder appending to `buf` (keep a clone of the `Arc` to read
+    /// the stream back after the simulation run).
+    pub fn sharing(buf: Arc<Mutex<String>>) -> StreamRecorder {
+        StreamRecorder { buf }
+    }
+
+    fn push(&mut self, ev: &Event) {
+        let mut buf = self.buf.lock().expect("stream buffer poisoned");
+        buf.push_str(&ev.format());
+        buf.push('\n');
+    }
+}
+
+impl SpanSink for StreamRecorder {
+    fn ensure_job(&mut self, meta: &JobMeta) {
+        self.push(&Event::Job(meta.clone()));
+    }
+
+    fn add_span(
+        &mut self,
+        id: JobId,
+        t0: f64,
+        t1: f64,
+        chips: u32,
+        class: TimeClass,
+        layer: StackLayer,
+    ) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        self.push(&Event::Span { id, t0, t1, chips, class, layer });
+    }
+
+    fn add_pg_sample(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
+        if t1 <= t0 || chips == 0 {
+            return;
+        }
+        self.push(&Event::Pg { id, t0, t1, chips, pg });
+    }
+
+    fn set_capacity(&mut self, t: f64, chips: u64) {
+        self.push(&Event::Capacity { t, chips });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floats_round_trip_bit_exactly() {
+        for &x in &[0.0, 1.5, 1.0 / 3.0, 86_400.123_456_789, 1e-300, 2.0_f64.powi(-53)] {
+            let line = Event::Capacity { t: x, chips: 7 }.format();
+            match Event::parse(&line).unwrap().unwrap() {
+                Event::Capacity { t, chips: 7 } => assert_eq!(t.to_bits(), x.to_bits()),
+                other => panic!("reparsed as {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        assert!(Event::parse("").unwrap().is_none());
+        assert!(Event::parse("   ").unwrap().is_none());
+        assert!(Event::parse("# span 1 0 1 4 lost hardware").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_with_context() {
+        for (line, needle) in [
+            ("warp 1 2", "unknown event"),
+            ("cap 5", "expected 2 field"),
+            ("cap -1 64", "negative t"),
+            ("cap inf 64", "non-finite t"),
+            ("span 1 9 3 4 lost hardware", "before t0"),
+            ("span 1 0 3 4 misc hardware", "unknown class"),
+            ("pg 1 0 3 4 1.5", "outside [0, 1]"),
+        ] {
+            let err = Event::parse(line).unwrap_err();
+            assert!(err.contains(needle), "`{line}` -> `{err}`");
+        }
+    }
+
+    #[test]
+    fn validator_enforces_declarations_and_cap_order() {
+        let mut v = Validator::default();
+        let span = Event::parse("span 9 0 1 4 lost hardware").unwrap().unwrap();
+        assert!(v.check(&span).unwrap_err().contains("undeclared job 9"));
+        let job = Event::parse("job 9 training jax-pathways transformer tpu-c small 64")
+            .unwrap()
+            .unwrap();
+        v.check(&job).unwrap();
+        v.check(&span).unwrap();
+        assert_eq!(v.job_count(), 1);
+        v.check(&Event::Capacity { t: 10.0, chips: 1 }).unwrap();
+        let err = v.check(&Event::Capacity { t: 4.0, chips: 2 }).unwrap_err();
+        assert!(err.contains("out of order"));
+    }
+}

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::fleet::{ChipGeneration, EvolutionModel, Fleet, PodId};
 use crate::metrics::{
-    goodput, GoodputReport, JobMeta, Ledger, StackLayer, TimeClass, WindowedLedger,
+    goodput, GoodputReport, JobMeta, Ledger, SpanSink, StackLayer, TimeClass, WindowedLedger,
 };
 use crate::runtime_model::{EraEffects, RuntimeModel, WindowAccount, WindowEnd};
 use crate::workload::Phase;
@@ -296,6 +296,9 @@ pub struct Simulation {
     /// Streaming accounting, populated instead of `ledger` in
     /// [`LedgerMode::Windowed`].
     windowed: Option<WindowedLedger>,
+    /// Extra [`SpanSink`]s receiving the same emission as the primary
+    /// ledger (attach before `run()`; see [`Simulation::attach_sink`]).
+    observers: Vec<Box<dyn SpanSink + Send>>,
     rng: Rng,
     feed: ArrivalFeed,
     events: BinaryHeap<Event>,
@@ -310,20 +313,11 @@ pub struct Simulation {
 }
 
 impl Simulation {
+    /// Construct a simulation in [`LedgerMode::Full`]. Chain
+    /// [`Simulation::ledger_mode`] to select streaming accounting:
+    /// `Simulation::new(cfg).ledger_mode(mode)` (the builder that
+    /// replaced the old `with_ledger_mode` second constructor).
     pub fn new(cfg: SimConfig) -> Simulation {
-        Simulation::with_ledger_mode(cfg, LedgerMode::Full)
-    }
-
-    /// Construct with an explicit accounting mode (see [`LedgerMode`]).
-    /// Both modes run the identical event stream; only where classified
-    /// chip-time lands differs.
-    pub fn with_ledger_mode(cfg: SimConfig, mode: LedgerMode) -> Simulation {
-        let windowed = match mode {
-            LedgerMode::Full => None,
-            LedgerMode::Windowed { width_s } => {
-                Some(WindowedLedger::new(cfg.duration_s, width_s))
-            }
-        };
         let feed = match &cfg.source {
             JobSource::Partition { part_index, part_count } => {
                 // The engine's horizon, not the generator's nominal one,
@@ -357,7 +351,8 @@ impl Simulation {
             result: SimResult::default(),
             scheduler: Scheduler::new(cfg.policy.clone()),
             ledger: Ledger::new(),
-            windowed,
+            windowed: None,
+            observers: Vec::new(),
             fleet: Fleet::new(),
             cfg,
         };
@@ -397,21 +392,78 @@ impl Simulation {
         sim
     }
 
+    /// Builder: select the accounting mode (see [`LedgerMode`]). Both
+    /// modes run the identical event stream; only where classified
+    /// chip-time lands differs. Must be called before `run()` — the only
+    /// emission a freshly built simulation has made is its capacity
+    /// step(s), which this replays into the new primary sink verbatim
+    /// (the step list is reproduced exactly, so reports stay
+    /// bit-identical to constructing in that mode directly).
+    pub fn ledger_mode(mut self, mode: LedgerMode) -> Simulation {
+        let steps: Vec<(f64, u64)> = match &self.windowed {
+            Some(w) => w.capacity_steps().to_vec(),
+            None => self.ledger.capacity_steps().to_vec(),
+        };
+        let no_jobs = self.ledger.jobs.is_empty()
+            && self.windowed.as_ref().map_or(true, |w| w.job_count() == 0);
+        assert!(no_jobs, "ledger_mode must be selected before run()");
+        self.ledger = Ledger::new();
+        self.windowed = match mode {
+            LedgerMode::Full => None,
+            LedgerMode::Windowed { width_s } => {
+                Some(WindowedLedger::new(self.cfg.duration_s, width_s))
+            }
+        };
+        let primary = self.primary_sink();
+        for (t, chips) in steps {
+            primary.set_capacity(t, chips);
+        }
+        self
+    }
+
+    /// Attach an extra [`SpanSink`] observing the same incremental
+    /// emission the primary ledger receives during `run()` (stream
+    /// recorders, live monitors). Capacity steps recorded so far are
+    /// replayed into the sink on attach so it sees a consistent stream;
+    /// attach before `run()` — spans already folded into the primary are
+    /// not replayable.
+    pub fn attach_sink(&mut self, mut sink: Box<dyn SpanSink + Send>) {
+        let steps: Vec<(f64, u64)> = match &self.windowed {
+            Some(w) => w.capacity_steps().to_vec(),
+            None => self.ledger.capacity_steps().to_vec(),
+        };
+        for (t, chips) in steps {
+            sink.set_capacity(t, chips);
+        }
+        self.observers.push(sink);
+    }
+
+    /// The primary accounting sink (full or windowed ledger) as a
+    /// [`SpanSink`] — the single dispatch every `record_*` funnels
+    /// through.
+    fn primary_sink(&mut self) -> &mut dyn SpanSink {
+        match &mut self.windowed {
+            Some(w) => w,
+            None => &mut self.ledger,
+        }
+    }
+
     fn push(&mut self, t: f64, kind: EventKind) {
         self.seq += 1;
         self.events.push(Event { t, seq: self.seq, kind });
     }
 
     // ------------------------------------------------------------------
-    // Accounting sink: every classified chip-second goes through these,
-    // landing in the full ledger or the windowed accumulators depending
-    // on the construction-time LedgerMode.
+    // Accounting sink: every classified chip-second is emitted through
+    // the SpanSink trait — to the primary ledger (full or windowed, per
+    // LedgerMode) and then to each attached observer, in the same call
+    // order the pre-trait dispatch made, so reports are bit-identical.
     // ------------------------------------------------------------------
 
     fn record_job(&mut self, meta: JobMeta) {
-        match &mut self.windowed {
-            Some(w) => w.ensure_job(meta),
-            None => self.ledger.ensure_job(meta),
+        self.primary_sink().ensure_job(&meta);
+        for o in &mut self.observers {
+            o.ensure_job(&meta);
         }
     }
 
@@ -424,9 +476,9 @@ impl Simulation {
         class: TimeClass,
         layer: StackLayer,
     ) {
-        match &mut self.windowed {
-            Some(w) => w.add_span_layered(id, t0, t1, chips, class, layer),
-            None => self.ledger.add_span_layered(id, t0, t1, chips, class, layer),
+        self.primary_sink().add_span(id, t0, t1, chips, class, layer);
+        for o in &mut self.observers {
+            o.add_span(id, t0, t1, chips, class, layer);
         }
     }
 
@@ -440,16 +492,16 @@ impl Simulation {
     }
 
     fn record_pg(&mut self, id: JobId, t0: f64, t1: f64, chips: u32, pg: f64) {
-        match &mut self.windowed {
-            Some(w) => w.add_pg_sample(id, t0, t1, chips, pg),
-            None => self.ledger.add_pg_sample(id, t0, t1, chips, pg),
+        self.primary_sink().add_pg_sample(id, t0, t1, chips, pg);
+        for o in &mut self.observers {
+            o.add_pg_sample(id, t0, t1, chips, pg);
         }
     }
 
     fn record_capacity(&mut self, t: f64, chips: u64) {
-        match &mut self.windowed {
-            Some(w) => w.set_capacity(t, chips),
-            None => self.ledger.set_capacity(t, chips),
+        self.primary_sink().set_capacity(t, chips);
+        for o in &mut self.observers {
+            o.set_capacity(t, chips);
         }
     }
 
@@ -1020,7 +1072,7 @@ mod tests {
         let width = 6.0 * 3600.0;
         let mut full = Simulation::new(cfg.clone());
         let r_full = full.run();
-        let mut win = Simulation::with_ledger_mode(cfg, LedgerMode::Windowed { width_s: width });
+        let mut win = Simulation::new(cfg).ledger_mode(LedgerMode::Windowed { width_s: width });
         let r_win = win.run();
         assert_eq!(r_full, r_win, "event stream must be mode-independent");
         assert!(full.windowed().is_none() && win.windowed().is_some());

@@ -254,7 +254,7 @@ impl SweepRunner {
             }
         }
         let seed = v.cfg.seed;
-        let mut sim = Simulation::with_ledger_mode(v.cfg, mode);
+        let mut sim = Simulation::new(v.cfg).ledger_mode(mode);
         let result = sim.run();
         let goodput = sim.fleet_goodput();
         if let Some((c, k)) = &key {

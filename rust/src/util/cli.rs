@@ -57,6 +57,34 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Reject any option or flag not in `known`, naming the subcommand —
+    /// every subcommand runs this so a typo'd flag fails loudly instead
+    /// of silently falling back to a default.
+    pub fn reject_unknown(&self, cmd: &str, known: &[&str]) -> Result<(), String> {
+        let mut unknown: Vec<&str> = self
+            .options
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.flags.iter().map(|f| f.as_str()))
+            .filter(|k| !known.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        unknown.dedup();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        let bad: Vec<String> = unknown.iter().map(|k| format!("--{k}")).collect();
+        if known.is_empty() {
+            return Err(format!("{cmd}: unknown flag(s) {} (takes none)", bad.join(", ")));
+        }
+        let ok: Vec<String> = known.iter().map(|k| format!("--{k}")).collect();
+        Err(format!(
+            "{cmd}: unknown flag(s) {}; known: {}",
+            bad.join(", "),
+            ok.join(", ")
+        ))
+    }
 }
 
 #[cfg(test)]
@@ -81,6 +109,17 @@ mod tests {
         let a = args("--days 30 --fast");
         assert_eq!(a.get_f64("days", 0.0), 30.0);
         assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn reject_unknown_names_the_subcommand() {
+        let a = args("--days 3 --progress --typo 7");
+        a.reject_unknown("sweep", &["days", "progress", "typo"]).unwrap();
+        let err = a.reject_unknown("sweep", &["days", "progress"]).unwrap_err();
+        assert!(err.contains("sweep: unknown flag(s) --typo"), "{err}");
+        assert!(err.contains("--days"), "{err}");
+        let err = args("--x").reject_unknown("overlap", &[]).unwrap_err();
+        assert!(err.contains("takes none"), "{err}");
     }
 
     #[test]

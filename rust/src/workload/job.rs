@@ -53,6 +53,10 @@ impl Framework {
         }
     }
 
+    pub fn from_name(s: &str) -> Option<Framework> {
+        Self::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
     pub fn is_pathways(self) -> bool {
         matches!(self, Framework::JaxPathways)
     }
@@ -84,6 +88,10 @@ impl ModelArch {
             ModelArch::Vision => "vision",
         }
     }
+
+    pub fn from_name(s: &str) -> Option<ModelArch> {
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
 }
 
 /// Paper Fig. 4 size buckets, by requested chip count.
@@ -106,6 +114,10 @@ impl SizeClass {
             SizeClass::Large => "large",
             SizeClass::ExtraLarge => "extra-large",
         }
+    }
+
+    pub fn from_name(s: &str) -> Option<SizeClass> {
+        Self::ALL.iter().copied().find(|c| c.name() == s)
     }
 }
 
@@ -291,6 +303,34 @@ mod tests {
         let unique: std::collections::HashSet<&str> =
             Phase::ALL.iter().map(|p| p.name()).collect();
         assert_eq!(unique.len(), Phase::ALL.len());
+    }
+
+    /// The monitor line-protocol addresses every JobMeta field by name,
+    /// so each segmentation enum must round-trip like `Phase` does.
+    #[test]
+    fn segmentation_names_roundtrip() {
+        for f in Framework::ALL {
+            assert_eq!(Framework::from_name(f.name()), Some(f), "{}", f.name());
+        }
+        assert_eq!(Framework::from_name("jax"), None);
+        for a in ModelArch::ALL {
+            assert_eq!(ModelArch::from_name(a.name()), Some(a), "{}", a.name());
+        }
+        assert_eq!(ModelArch::from_name("MoE"), None, "names are case-sensitive");
+        for c in SizeClass::ALL {
+            assert_eq!(SizeClass::from_name(c.name()), Some(c), "{}", c.name());
+        }
+        assert_eq!(SizeClass::from_name("xl"), None);
+        // Uniqueness within each namespace (same rationale as Phase::ALL).
+        let unique: std::collections::HashSet<&str> =
+            Framework::ALL.iter().map(|f| f.name()).collect();
+        assert_eq!(unique.len(), Framework::ALL.len());
+        let unique: std::collections::HashSet<&str> =
+            ModelArch::ALL.iter().map(|a| a.name()).collect();
+        assert_eq!(unique.len(), ModelArch::ALL.len());
+        let unique: std::collections::HashSet<&str> =
+            SizeClass::ALL.iter().map(|c| c.name()).collect();
+        assert_eq!(unique.len(), SizeClass::ALL.len());
     }
 
     #[test]

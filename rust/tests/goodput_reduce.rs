@@ -74,10 +74,10 @@ fn random_ledger(rng: &mut Rng) -> (Ledger, f64) {
             // when a class splits across layers (the engine's
             // compile-vs-restore / data-vs-framework refinements).
             if rng.chance(0.5) {
-                ledger.add_span(id, t, t + dur, chips, class);
+                ledger.add_span_auto(id, t, t + dur, chips, class);
             } else {
                 let layer = StackLayer::ALL[rng.below(6) as usize];
-                ledger.add_span_layered(id, t, t + dur, chips, class, layer);
+                ledger.add_span(id, t, t + dur, chips, class, layer);
             }
             if class == TimeClass::Productive && rng.chance(0.8) {
                 ledger.add_pg_sample(id, t, t + dur, chips, rng.range_f64(0.0, 1.0));
@@ -255,8 +255,8 @@ fn prop_layer_cells_bitwise_across_naive_single_pass_and_windowed() {
                 let dur = rng.range_f64(0.1, end * 0.1);
                 let class = TimeClass::ALL[rng.below(7) as usize];
                 let layer = StackLayer::ALL[rng.below(6) as usize];
-                ledger.add_span_layered(id, t, t + dur, chips, class, layer);
-                win.add_span_layered(id, t, t + dur, chips, class, layer);
+                ledger.add_span(id, t, t + dur, chips, class, layer);
+                win.add_span(id, t, t + dur, chips, class, layer);
                 if class == TimeClass::Productive && rng.chance(0.8) {
                     let pg = rng.range_f64(0.0, 1.0);
                     ledger.add_pg_sample(id, t, t + dur, chips, pg);

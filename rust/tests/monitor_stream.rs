@@ -1,0 +1,186 @@
+//! End-to-end contract for the streaming fleet monitor: a recorded
+//! simulation stream driven through [`MonitorLedger`] must report
+//! `f64::to_bits`-identical to the batch [`WindowedLedger`] replaying
+//! the same stream with the horizon known up front, while holding only
+//! O(ring_windows × live jobs) cells no matter how long the stream runs.
+
+use std::sync::{Arc, Mutex};
+
+use tpufleet::metrics::{StackLayer, TimeClass, WindowedLedger};
+use tpufleet::monitor::proto::{Event, StreamRecorder, Validator};
+use tpufleet::monitor::{snapshot_json, MonitorLedger, StreamStats};
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::testkit::assert_reports_bit_identical;
+
+/// Record a simulation's span emission as protocol lines.
+fn recorded_stream(seed: u64, days: f64) -> String {
+    let mut cfg = SimConfig { seed, duration_s: days * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 8.0;
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    sim.run();
+    let mut stream = buf.lock().unwrap().clone();
+    stream.push_str("end\n");
+    stream
+}
+
+/// Parse + validate every line the way the `monitor` subcommand does.
+fn parse_stream(text: &str) -> Vec<Event> {
+    let mut validator = Validator::default();
+    let mut evs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(ev) = Event::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1)) {
+            validator.check(&ev).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+            evs.push(ev);
+        }
+    }
+    evs
+}
+
+fn replay_batch(evs: &[Event], horizon_s: f64, width_s: f64) -> WindowedLedger {
+    let mut win = WindowedLedger::new(horizon_s, width_s);
+    for ev in evs {
+        match *ev {
+            Event::Capacity { t, chips } => win.set_capacity(t, chips),
+            Event::Job(ref m) => win.ensure_job(m.clone()),
+            Event::Span { id, t0, t1, chips, class, layer } => {
+                win.add_span(id, t0, t1, chips, class, layer)
+            }
+            Event::Pg { id, t0, t1, chips, pg } => win.add_pg_sample(id, t0, t1, chips, pg),
+            Event::End => {}
+        }
+    }
+    win
+}
+
+/// The watermark the streaming mode converges to: the same `f64::max`
+/// fold over event end-times that `MonitorLedger::advance` runs.
+fn watermark(evs: &[Event]) -> f64 {
+    evs.iter().filter_map(Event::end_time).fold(0.0, f64::max)
+}
+
+#[test]
+fn recorded_sim_stream_matches_batch_replay_bitwise() {
+    let stream = recorded_stream(0x9011, 1.0);
+    let evs = parse_stream(&stream);
+    assert!(evs.iter().any(|e| matches!(e, Event::Span { .. })), "stream has spans");
+    let mut ml = MonitorLedger::new(3600.0, 6);
+    for ev in &evs {
+        ml.ingest(ev);
+    }
+    assert!(ml.evicted_cells() > 0, "a 24h stream must overflow a 6h ring");
+    let win = replay_batch(&evs, watermark(&evs), 3600.0);
+    assert_eq!(ml.watermark_s().to_bits(), watermark(&evs).to_bits());
+    assert_reports_bit_identical(&ml.report(|_| true), &win.report(|_| true), "fleet");
+    // Filtered views go through the same merge path.
+    assert_reports_bit_identical(
+        &ml.report(|m| m.chips >= 256),
+        &win.report(|m| m.chips >= 256),
+        "large jobs",
+    );
+    // The snapshot document — what `monitor` vs `monitor --batch` emit
+    // and CI `cmp`s — is byte-identical too.
+    let stats = StreamStats {
+        jobs: ml.job_count(),
+        spans: ml.span_count(),
+        pg_samples: ml.pg_count(),
+        cap_events: ml.cap_events(),
+    };
+    let a = snapshot_json(&ml.report(|_| true), ml.watermark_s(), 3600.0, &stats, true);
+    let b = snapshot_json(&win.report(|_| true), watermark(&evs), 3600.0, &stats, true);
+    assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+}
+
+#[test]
+fn ring_memory_stays_bounded_on_streams_far_longer_than_the_ring() {
+    // 4-window ring of 100 s windows; the stream runs 40× the ring
+    // horizon with two interleaved jobs and periodic capacity wobble.
+    let mut evs = vec![Event::Capacity { t: 0.0, chips: 512 }];
+    let meta = |id: u64| {
+        match Event::parse(&format!(
+            "job {id} training jax-pathways transformer tpu-c small 64"
+        )) {
+            Ok(Some(ev)) => ev,
+            other => panic!("meta line: {other:?}"),
+        }
+    };
+    evs.push(meta(1));
+    evs.push(meta(2));
+    for k in 0..4000u64 {
+        let t = k as f64 * 4.0;
+        evs.push(Event::Span {
+            id: 1 + (k % 2),
+            t0: t,
+            t1: t + 6.0,
+            chips: 8,
+            class: TimeClass::ALL[(k % 7) as usize],
+            layer: StackLayer::ALL[(k % 6) as usize],
+        });
+        if k % 7 == 0 {
+            evs.push(Event::Pg { id: 1, t0: t, t1: t + 6.0, chips: 8, pg: 0.75 });
+        }
+        if k % 500 == 250 {
+            evs.push(Event::Capacity { t, chips: 512 - k / 10 });
+        }
+    }
+    let mut ml = MonitorLedger::new(100.0, 4);
+    for ev in &evs {
+        ml.ingest(ev);
+    }
+    // The bounded-memory guarantee: peak cells never exceed the ring
+    // bound, even though 161 windows (and their cells) streamed through.
+    assert_eq!(ml.windows_started(), 161);
+    assert!(ml.peak_cells() <= ml.ring_windows() * ml.peak_live_jobs());
+    assert!(ml.peak_cells() <= 4 * 2);
+    assert!(ml.evicted_cells() as usize >= ml.windows_started() - ml.ring_windows());
+    // ...and the whole-stream report is still exact.
+    let win = replay_batch(&evs, watermark(&evs), 100.0);
+    assert_reports_bit_identical(&ml.report(|_| true), &win.report(|_| true), "fleet");
+    assert_reports_bit_identical(&ml.report(|m| m.id == 2), &win.report(|m| m.id == 2), "job 2");
+}
+
+#[test]
+fn protocol_lines_round_trip_every_recorded_event() {
+    let stream = recorded_stream(0xCAFE, 0.5);
+    let mut n = 0;
+    for line in stream.lines() {
+        let Some(ev) = Event::parse(line).expect("recorded line parses") else {
+            continue;
+        };
+        assert_eq!(ev.format(), line, "format(parse(line)) reproduces the line");
+        n += 1;
+    }
+    assert!(n > 100, "expected a substantive stream, got {n} events");
+}
+
+#[test]
+fn recorder_and_primary_ledger_see_the_same_emission() {
+    // The recorder is a passive observer: attaching it must not perturb
+    // the primary ledger's accounting (same config, same seed, with and
+    // without the sink).
+    let mut cfg = SimConfig { seed: 0x0B5, duration_s: 0.5 * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 6.0;
+    let mut plain = Simulation::new(cfg.clone());
+    plain.run();
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut observed = Simulation::new(cfg);
+    observed.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    observed.run();
+    assert_reports_bit_identical(
+        &plain.fleet_goodput(),
+        &observed.fleet_goodput(),
+        "observer must not perturb the run",
+    );
+    // And the recorded stream carries the jobs the ledger accounted.
+    let mut stream = buf.lock().unwrap().clone();
+    stream.push_str("end\n");
+    let evs = parse_stream(&stream);
+    let mut sink_jobs = std::collections::BTreeSet::new();
+    for ev in &evs {
+        if let Event::Job(m) = ev {
+            sink_jobs.insert(m.id);
+        }
+    }
+    assert_eq!(sink_jobs.len(), observed.ledger.jobs.len());
+}

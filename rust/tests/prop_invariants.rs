@@ -216,7 +216,7 @@ fn prop_goodput_bounded_under_arbitrary_ledgers() {
                 let dur = rng.range_f64(0.1, 500.0);
                 let class = TimeClass::ALL[rng.below(7) as usize];
                 let chips = job.chips();
-                ledger.add_span(id, t, t + dur, chips, class);
+                ledger.add_span_auto(id, t, t + dur, chips, class);
                 if class == TimeClass::Productive {
                     ledger.add_pg_sample(id, t, t + dur, chips, rng.range_f64(0.0, 1.0));
                 }
