@@ -1,0 +1,148 @@
+//! Bench: fleet-monitor ingest — events/sec for a single-stream
+//! `MonitorLedger`, for the N-way `StreamMerger` pump feeding one
+//! ledger, and for the batch `WindowedLedger` replay of the merged
+//! interleaving, plus the peak ring-cell count that motivates the
+//! rolling-ring representation. Writes BENCH_monitor_ingest.json in
+//! the house bench-report format.
+
+use std::sync::{Arc, Mutex};
+
+use tpufleet::metrics::WindowedLedger;
+use tpufleet::monitor::merge::{interleave, StreamMerger, DEFAULT_REORDER_CAP};
+use tpufleet::monitor::proto::{Event, StreamRecorder};
+use tpufleet::monitor::MonitorLedger;
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::util::bench::Bench;
+use tpufleet::util::Json;
+
+const N_STREAMS: usize = 4;
+const WIDTH_S: f64 = 900.0;
+const RING: usize = 8;
+
+fn recorded_events(seed: u64, days: f64) -> Vec<Event> {
+    let mut cfg = SimConfig { seed, duration_s: days * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 8.0;
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    sim.run();
+    let text = buf.lock().unwrap().clone();
+    text.lines().filter_map(|l| Event::parse(l).expect("recorded line parses")).collect()
+}
+
+fn ingest_all(evs: &[Event], width_s: f64, ring: usize) -> MonitorLedger {
+    let mut ml = MonitorLedger::new(width_s, ring);
+    for ev in evs {
+        ml.ingest(ev);
+    }
+    ml
+}
+
+/// Pump all N streams through a live merge into one ledger, feeding
+/// each stream only while its reorder buffer has room (the same
+/// pull-gated loop `monitor --merge` runs).
+fn merged_pump(names: &[String], streams: &[Vec<Event>]) -> MonitorLedger {
+    let mut m = StreamMerger::new(names, DEFAULT_REORDER_CAP);
+    let mut ml = MonitorLedger::new(WIDTH_S, RING);
+    let mut idx = vec![0usize; streams.len()];
+    loop {
+        for (s, stream) in streams.iter().enumerate() {
+            while m.wants(s) && idx[s] < stream.len() {
+                m.push(s, stream[idx[s]].clone());
+                idx[s] += 1;
+            }
+            if idx[s] == stream.len() {
+                m.finish(s);
+            }
+        }
+        while let Some(ev) = m.pop() {
+            ml.ingest(&ev);
+        }
+        if m.done() {
+            return ml;
+        }
+    }
+}
+
+fn main() {
+    let days: f64 = std::env::var("MONITOR_BENCH_DAYS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    let names: Vec<String> = (0..N_STREAMS).map(|i| format!("cell-{i}")).collect();
+    let streams: Vec<Vec<Event>> =
+        (0..N_STREAMS).map(|i| recorded_events(0xB0_00 + i as u64, days)).collect();
+    let single = &streams[0];
+    let merged = interleave(&names, streams.clone());
+    let n_events: usize = streams.iter().map(Vec::len).sum();
+    println!(
+        "monitor_ingest: {days} days x {N_STREAMS} streams, {n_events} events \
+         ({} single-stream)",
+        single.len()
+    );
+
+    // Sanity before timing anything: the live pump and the batch
+    // interleave agree on the fleet MPG bit-for-bit.
+    let pump = merged_pump(&names, &streams);
+    let batch = ingest_all(&merged, WIDTH_S, RING);
+    assert_eq!(
+        pump.report(|_| true).mpg().to_bits(),
+        batch.report(|_| true).mpg().to_bits(),
+        "merged pump must match batch interleave"
+    );
+
+    let single_ingest = Bench::new("single_stream_ingest")
+        .iters(10)
+        .run(|| ingest_all(single, WIDTH_S, RING).span_count());
+    let merge_ingest = Bench::new("merged_4way_ingest")
+        .iters(10)
+        .run(|| merged_pump(&names, &streams).span_count());
+    let horizon = merged.iter().filter_map(Event::end_time).fold(0.0, f64::max);
+    let batch_replay = Bench::new("batch_windowed_replay").iters(10).run(|| {
+        let mut win = WindowedLedger::new(horizon, WIDTH_S);
+        for ev in &merged {
+            match *ev {
+                Event::Capacity { t, chips } => win.set_capacity(t, chips),
+                Event::Job(ref m) => win.ensure_job(m.clone()),
+                Event::Span { id, t0, t1, chips, class, layer } => {
+                    win.add_span(id, t0, t1, chips, class, layer)
+                }
+                Event::Pg { id, t0, t1, chips, pg } => win.add_pg_sample(id, t0, t1, chips, pg),
+                Event::End => {}
+            }
+        }
+        win.report(|_| true).mpg()
+    });
+
+    let events_per_s = |n: usize, median_s: f64| n as f64 / median_s.max(1e-12);
+    // Untimed final runs for the memory telemetry the report records.
+    let ml_single = ingest_all(single, WIDTH_S, RING);
+    let ml_merged = merged_pump(&names, &streams);
+    println!(
+        "peak ring cells: single {} vs {N_STREAMS}-way merged {} (ring bound {})",
+        ml_single.peak_cells(),
+        ml_merged.peak_cells(),
+        RING * ml_merged.peak_live_jobs()
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("monitor_ingest")),
+        ("days", Json::num(days)),
+        ("streams", Json::num(N_STREAMS as f64)),
+        ("width_s", Json::num(WIDTH_S)),
+        ("ring_windows", Json::num(RING as f64)),
+        ("events_total", Json::num(n_events as f64)),
+        ("events_single", Json::num(single.len() as f64)),
+        ("single_events_per_s", Json::num(events_per_s(single.len(), single_ingest.median_s))),
+        ("merged_events_per_s", Json::num(events_per_s(n_events, merge_ingest.median_s))),
+        ("batch_events_per_s", Json::num(events_per_s(n_events, batch_replay.median_s))),
+        ("single_peak_cells", Json::num(ml_single.peak_cells() as f64)),
+        ("merged_peak_cells", Json::num(ml_merged.peak_cells() as f64)),
+        ("merged_peak_live_jobs", Json::num(ml_merged.peak_live_jobs() as f64)),
+    ]);
+    let path = "BENCH_monitor_ingest.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("writing {path} failed: {e}"),
+    }
+}

@@ -12,7 +12,7 @@
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::hlo::{CostAnalysis, HloModule};
 use tpufleet::metrics::{goodput, WindowedLedger};
-use tpufleet::monitor::{proto, snapshot_json, MonitorLedger, StreamStats};
+use tpufleet::monitor::{http, merge, proto, series_json, snapshot_json, MonitorLedger, StreamStats};
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
@@ -32,7 +32,8 @@ USAGE: tpufleet <command> [options]
 COMMANDS:
   simulate   [--days N] [--seed S] [--arrivals-per-hour R] [--no-failures]
              run the fleet simulator; print the MPG decomposition by segment
-  figures    <fig1|fig4|fig6|fig12|fig13|fig14|fig15|fig16|table2|all>
+  figures    <fig1|fig4|fig6|fig12|fig13|fig14|fig15|fig16|table2
+             |attribution|monitor-series|all>
              [--csv DIR] [--seed S] [--workers W]
              regenerate paper figures/tables; `all` fans the independent
              generators out over the worker pool and streams them in order
@@ -92,9 +93,10 @@ COMMANDS:
              simulator; replay's --windowed accounts through the
              streaming ledger (bit-identical fleet report) and --out
              writes the per-layer attribution JSON
-  monitor    [--in FILE] [--width-s W] [--ring-windows N]
+  monitor    [--in FILE[,FILE..]] [--width-s W] [--ring-windows N]
              [--snapshot-every SECS] [--out FILE] [--batch] [--follow]
-             [--progress]
+             [--merge] [--stream-ids A,B,..] [--reorder-cap N]
+             [--listen ADDR] [--series-out FILE] [--progress]
              ingest a span/event stream (stdin, or --in FILE; --follow
              tails the file until an `end` line) through the rolling
              monitor ledger: O(ring-windows x live jobs) cells no matter
@@ -103,11 +105,20 @@ COMMANDS:
              stdout) at the end, and every SECS stream-seconds with
              --snapshot-every; --batch replays the same stream through
              the batch windowed ledger instead and emits a byte-identical
-             snapshot (the CI cross-mode `cmp` gate)
+             snapshot (the CI cross-mode `cmp` gate). --merge treats
+             --in A,B,C as N concurrent cell streams and interleaves
+             them deterministically under the cross-stream watermark
+             (= min of per-stream watermarks; bounded per-stream reorder
+             buffers of --reorder-cap events apply backpressure, and the
+             merged snapshot is byte-identical to --merge --batch);
+             --listen ADDR serves GET /snapshot /streams /series over
+             HTTP while ingesting; --series-out writes the rolling
+             per-window series JSON alongside the final snapshot
   monitor record [--days N] [--seed S] [--arrivals-per-hour R]
-             [--no-failures] [--out FILE]
+             [--no-failures] [--stream-id ID] [--out FILE]
              run the simulator with a stream recorder attached and write
-             the replayable span stream (line protocol; see README)
+             the replayable span stream (line protocol with a stream-id
+             framing header; see README)
 
 (`sweep-worker` is the internal subcommand `sweep --shards` spawns; it
 runs one shard manifest and writes a shard report for the coordinator.)
@@ -1295,8 +1306,21 @@ fn cmd_trace(args: &Args) -> i32 {
 
 /// Flag vocabulary for `monitor` stream ingest (the `record` subaction
 /// declares its own).
-const MONITOR_FLAGS: [&str; 8] =
-    ["in", "out", "width-s", "ring-windows", "snapshot-every", "batch", "follow", "progress"];
+const MONITOR_FLAGS: [&str; 13] = [
+    "in",
+    "out",
+    "width-s",
+    "ring-windows",
+    "snapshot-every",
+    "batch",
+    "follow",
+    "progress",
+    "merge",
+    "stream-ids",
+    "reorder-cap",
+    "listen",
+    "series-out",
+];
 
 /// Per-line `monitor` state shared by the stdin, file, and `--follow`
 /// readers: parse -> validate -> count -> account. Streaming mode folds
@@ -1320,6 +1344,16 @@ struct MonitorIngest {
     out: Option<String>,
     progress: bool,
     lines: u64,
+    /// Parsed events fed so far (the `/streams` telemetry row).
+    event_count: u64,
+    /// Stream id for `/streams`: the input's framing-header id, or its
+    /// path, or "stdin".
+    stream_name: String,
+    /// Streaming mode only: `--series-out` rolling-series JSON target.
+    series_out: Option<String>,
+    /// Streaming mode only: the `--listen` dashboard's render cache;
+    /// refreshed whenever a snapshot is emitted.
+    dash: Option<http::SharedDash>,
 }
 
 impl MonitorIngest {
@@ -1335,6 +1369,7 @@ impl MonitorIngest {
         if let Err(e) = self.validator.check(&ev) {
             return Err(format!("line {}: {e}", self.lines));
         }
+        self.event_count += 1;
         match ev {
             Event::Span { .. } => self.stats.spans += 1,
             Event::Pg { .. } => self.stats.pg_samples += 1,
@@ -1360,8 +1395,10 @@ impl MonitorIngest {
         Ok(done)
     }
 
-    /// Write one snapshot to `--out` (overwriting) or stdout.
-    fn emit(&self, is_final: bool) -> Result<(), String> {
+    /// The snapshot document at the current watermark, rendered. The
+    /// `--out` file and the dashboard's `GET /snapshot` both serve this
+    /// exact string — the byte-identity the CI smoke `cmp`s.
+    fn snapshot_text(&self, is_final: bool) -> String {
         let doc = if self.batch {
             let mut win = WindowedLedger::new(self.batch_watermark, self.ml.width_s());
             for ev in &self.events {
@@ -1383,13 +1420,66 @@ impl MonitorIngest {
             let report = self.ml.report(|_| true);
             snapshot_json(&report, self.ml.watermark_s(), self.ml.width_s(), &self.stats, is_final)
         };
-        let text = format!("{}\n", doc.to_string_pretty());
+        format!("{}\n", doc.to_string_pretty())
+    }
+
+    /// The `GET /series` body: the rolling ring as per-window reports.
+    fn series_text(&self) -> String {
+        let series = self.ml.recent_series(|_| true);
+        format!(
+            "{}\n",
+            series_json(&series, self.ml.width_s(), self.ml.watermark_s()).to_string_pretty()
+        )
+    }
+
+    /// The `GET /streams` body: a single-stream merger's telemetry shape
+    /// (one row, zero lag — the cross-stream watermark IS the watermark).
+    fn streams_text(&self, is_final: bool) -> String {
+        let info = merge::StreamInfo {
+            name: self.stream_name.clone(),
+            watermark_s: self.ml.watermark_s(),
+            lag_s: 0.0,
+            finished: is_final,
+            buffered: 0,
+            peak_buffered: 0,
+            events: self.event_count,
+            jobs: self.stats.jobs as u64,
+            spans: self.stats.spans,
+            pg_samples: self.stats.pg_samples,
+            cap_events: self.stats.cap_events,
+            chips: self.ml.current_capacity_chips(),
+        };
+        let doc = merge::streams_doc(self.ml.watermark_s(), &[info]);
+        format!("{}\n", doc.to_string_pretty())
+    }
+
+    /// Re-render the dashboard's endpoint bodies (no file writes) —
+    /// called once up front so `--listen` serves a valid (empty-stream)
+    /// snapshot before the first emit.
+    fn dash_refresh(&self, is_final: bool) {
+        if let Some(dash) = &self.dash {
+            let mut d = dash.lock().expect("dashboard state poisoned");
+            d.snapshot = self.snapshot_text(is_final);
+            d.series = self.series_text();
+            d.streams = self.streams_text(is_final);
+        }
+    }
+
+    /// Write one snapshot to `--out` (overwriting) or stdout, plus the
+    /// `--series-out` document and the dashboard cache where configured.
+    fn emit(&self, is_final: bool) -> Result<(), String> {
+        let text = self.snapshot_text(is_final);
         match &self.out {
             Some(path) => {
                 std::fs::write(path, &text).map_err(|e| format!("writing {path} failed: {e}"))?;
             }
             None => print!("{text}"),
         }
+        if let Some(path) = &self.series_out {
+            std::fs::write(path, self.series_text())
+                .map_err(|e| format!("writing {path} failed: {e}"))?;
+        }
+        self.dash_refresh(is_final);
         if self.progress {
             if self.batch {
                 eprintln!(
@@ -1481,9 +1571,53 @@ fn cmd_monitor(args: &Args) -> i32 {
         eprintln!("monitor: --snapshot-every requires streaming mode (drop --batch)");
         return 2;
     }
+    if batch && (args.get("listen").is_some() || args.get("series-out").is_some()) {
+        eprintln!("monitor: --listen/--series-out require streaming mode (drop --batch)");
+        return 2;
+    }
+    let merge_mode = args.has_flag("merge");
+    if !merge_mode && (args.get("stream-ids").is_some() || args.get("reorder-cap").is_some()) {
+        eprintln!("monitor: --stream-ids/--reorder-cap only apply with --merge");
+        return 2;
+    }
+    let dash = match args.get("listen") {
+        None => None,
+        Some(addr) => {
+            let listener = match std::net::TcpListener::bind(addr) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("monitor: binding {addr} failed: {e}");
+                    return 1;
+                }
+            };
+            match listener.local_addr() {
+                Ok(a) => eprintln!("monitor: dashboard listening on http://{a}"),
+                Err(_) => eprintln!("monitor: dashboard listening on http://{addr}"),
+            }
+            let dash = http::shared(http::DashState::default());
+            http::serve(listener, dash.clone());
+            Some(dash)
+        }
+    };
+    if merge_mode {
+        return cmd_monitor_merge(args, width_s, ring_windows, batch, follow, snapshot_every, dash);
+    }
+    let stream_name = match args.get("in") {
+        Some(path) if !follow => match stream_id_of(path) {
+            Ok(Some(id)) => id,
+            Ok(None) => path.to_string(),
+            Err(e) => {
+                eprintln!("monitor: {e}");
+                return 1;
+            }
+        },
+        // Follow mode: the file may not have its header yet.
+        Some(path) => path.to_string(),
+        None => "stdin".to_string(),
+    };
     let mut ing = MonitorIngest {
         ml: MonitorLedger::new(width_s, ring_windows),
-        validator: proto::Validator::default(),
+        validator: proto::Validator::labeled(&stream_name),
         stats: StreamStats::default(),
         batch,
         events: Vec::new(),
@@ -1493,7 +1627,12 @@ fn cmd_monitor(args: &Args) -> i32 {
         out: args.get("out").map(str::to_string),
         progress: args.has_flag("progress"),
         lines: 0,
+        event_count: 0,
+        stream_name,
+        series_out: args.get("series-out").map(str::to_string),
+        dash,
     };
+    ing.dash_refresh(false);
     let fed = if follow {
         monitor_follow(args.get("in").expect("checked above"), &mut ing)
     } else {
@@ -1529,9 +1668,291 @@ fn cmd_monitor(args: &Args) -> i32 {
     0
 }
 
+/// Read the stream-framing header id from a file's first line, if any.
+/// Errors only on a stream recorded by a FUTURE protocol version.
+fn stream_id_of(path: &str) -> Result<Option<String>, String> {
+    use std::io::BufRead as _;
+    let file = std::fs::File::open(path).map_err(|e| format!("opening {path} failed: {e}"))?;
+    let mut first = String::new();
+    std::io::BufReader::new(file)
+        .read_line(&mut first)
+        .map_err(|e| format!("reading {path} failed: {e}"))?;
+    match proto::parse_stream_header(&first) {
+        Some((v, _)) if v > proto::PROTO_VERSION => Err(format!(
+            "{path} is a v{v} stream; this build reads up to v{}",
+            proto::PROTO_VERSION
+        )),
+        Some((_, id)) => Ok(Some(id.to_string())),
+        None => Ok(None),
+    }
+}
+
+/// Incremental line reader shared by the merged one-shot and `--follow`
+/// paths: returns complete lines as they become available, holding a
+/// partial trailing line until the writer finishes it. In one-shot mode
+/// EOF flushes any final unterminated line and marks the reader done;
+/// in follow mode EOF just means "nothing yet".
+struct TailReader {
+    path: String,
+    reader: std::io::BufReader<std::fs::File>,
+    pending: String,
+    follow: bool,
+    eof: bool,
+}
+
+impl TailReader {
+    fn open(path: &str, follow: bool) -> Result<TailReader, String> {
+        let file = std::fs::File::open(path).map_err(|e| format!("opening {path} failed: {e}"))?;
+        Ok(TailReader {
+            path: path.to_string(),
+            reader: std::io::BufReader::new(file),
+            pending: String::new(),
+            follow,
+            eof: false,
+        })
+    }
+
+    /// One read attempt; `Ok(None)` means no complete line is available
+    /// right now (check `eof` to distinguish "done" from "not yet").
+    fn next_line(&mut self) -> Result<Option<String>, String> {
+        use std::io::BufRead as _;
+        let n = self
+            .reader
+            .read_line(&mut self.pending)
+            .map_err(|e| format!("reading {} failed: {e}", self.path))?;
+        if n == 0 {
+            if self.follow {
+                return Ok(None);
+            }
+            self.eof = true;
+            if self.pending.is_empty() {
+                return Ok(None);
+            }
+            return Ok(Some(std::mem::take(&mut self.pending)));
+        }
+        if !self.pending.ends_with('\n') {
+            return Ok(None);
+        }
+        Ok(Some(std::mem::take(&mut self.pending)))
+    }
+}
+
+/// Where `monitor --merge` renders to: `--out`/stdout, `--series-out`,
+/// and the `--listen` dashboard cache.
+struct MergedSinks {
+    out: Option<String>,
+    series_out: Option<String>,
+    dash: Option<http::SharedDash>,
+    progress: bool,
+}
+
+/// Write the merged snapshot (and series / dashboard documents) at the
+/// merged ledger's current watermark. Stream totals come from the
+/// ledger's own counters, so the live pump and the batch interleave
+/// replay — which ingest the identical event sequence — render
+/// byte-identical snapshots. `dash_only` refreshes the dashboard cache
+/// without touching `--out`/stdout (the pre-ingest priming pass).
+fn emit_merged(
+    ml: &MonitorLedger,
+    merger: &merge::StreamMerger,
+    sinks: &MergedSinks,
+    dash_only: bool,
+    is_final: bool,
+) -> Result<(), String> {
+    let stats = StreamStats {
+        jobs: ml.job_count(),
+        spans: ml.span_count(),
+        pg_samples: ml.pg_count(),
+        cap_events: ml.cap_events(),
+    };
+    let report = ml.report(|_| true);
+    let doc = snapshot_json(&report, ml.watermark_s(), ml.width_s(), &stats, is_final);
+    let text = format!("{}\n", doc.to_string_pretty());
+    if !dash_only {
+        match &sinks.out {
+            Some(path) => {
+                std::fs::write(path, &text).map_err(|e| format!("writing {path} failed: {e}"))?;
+            }
+            None => print!("{text}"),
+        }
+    }
+    let series_text = if sinks.series_out.is_some() || sinks.dash.is_some() {
+        let series = ml.recent_series(|_| true);
+        format!("{}\n", series_json(&series, ml.width_s(), ml.watermark_s()).to_string_pretty())
+    } else {
+        String::new()
+    };
+    if !dash_only {
+        if let Some(path) = &sinks.series_out {
+            std::fs::write(path, &series_text)
+                .map_err(|e| format!("writing {path} failed: {e}"))?;
+        }
+    }
+    if let Some(dash) = &sinks.dash {
+        let streams_text = format!("{}\n", merger.streams_json().to_string_pretty());
+        let mut d = dash.lock().expect("dashboard state poisoned");
+        d.snapshot = text.clone();
+        d.series = series_text;
+        d.streams = streams_text;
+    }
+    if sinks.progress && !dash_only {
+        eprintln!(
+            "monitor: merged {} streams t={:.1}s cross-watermark={:.1}s jobs={} cells={}",
+            merger.stream_count(),
+            ml.watermark_s(),
+            merger.cross_watermark_s(),
+            ml.job_count(),
+            ml.live_cells()
+        );
+    }
+    Ok(())
+}
+
+/// `monitor --merge`: pump N stream files through the [`merge::StreamMerger`]
+/// into one [`MonitorLedger`]. `--batch` buffers every stream completely
+/// (unbounded reorder buffers) before draining — the watermark-ordered
+/// interleaving reference — while the default path runs bounded buffers
+/// with pull-based backpressure; both ingest the identical merged
+/// sequence, so their snapshots are byte-identical (the CI
+/// dashboard-smoke `cmp` gate).
+fn cmd_monitor_merge(
+    args: &Args,
+    width_s: f64,
+    ring_windows: usize,
+    batch: bool,
+    follow: bool,
+    snapshot_every: Option<f64>,
+    dash: Option<http::SharedDash>,
+) -> i32 {
+    let Some(inputs) = args.get("in") else {
+        eprintln!("monitor: --merge requires --in FILE,FILE,.. (stdin cannot be merged)");
+        return 2;
+    };
+    let paths: Vec<String> =
+        inputs.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect();
+    if paths.is_empty() {
+        eprintln!("monitor: --merge requires at least one --in stream file");
+        return 2;
+    }
+    let ids = match args.get("stream-ids") {
+        Some(spec) => {
+            let ids: Vec<String> = spec
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect();
+            if ids.len() != paths.len() {
+                eprintln!(
+                    "monitor: --stream-ids names {} stream(s) but --in has {}",
+                    ids.len(),
+                    paths.len()
+                );
+                return 2;
+            }
+            ids
+        }
+        None => {
+            let mut ids = Vec::new();
+            for path in &paths {
+                // In follow mode the header may not be written yet; fall
+                // back to the path rather than racing the writer.
+                let id = if follow { None } else { stream_id_of(path).unwrap_or(None) };
+                ids.push(id.unwrap_or_else(|| path.clone()));
+            }
+            ids
+        }
+    };
+    let reorder_cap = args.get_usize("reorder-cap", merge::DEFAULT_REORDER_CAP);
+    if reorder_cap == 0 {
+        eprintln!("monitor: --reorder-cap must be at least 1");
+        return 2;
+    }
+    // Batch mode IS the unbounded interleave: every event buffered before
+    // the first pop.
+    let cap = if batch { usize::MAX } else { reorder_cap };
+    let sinks = MergedSinks {
+        out: args.get("out").map(str::to_string),
+        series_out: args.get("series-out").map(str::to_string),
+        dash,
+        progress: args.has_flag("progress"),
+    };
+    let run = || -> Result<(), String> {
+        let mut merger = merge::StreamMerger::new(&ids, cap);
+        let mut ml = MonitorLedger::new(width_s, ring_windows);
+        let mut readers = Vec::new();
+        for path in &paths {
+            readers.push(TailReader::open(path, follow)?);
+        }
+        let mut validators: Vec<proto::Validator> =
+            ids.iter().map(|id| proto::Validator::labeled(id)).collect();
+        let mut lines = vec![0u64; paths.len()];
+        let mut last_emit = 0.0_f64;
+        if sinks.dash.is_some() {
+            emit_merged(&ml, &merger, &sinks, true, false)?;
+        }
+        loop {
+            let mut progressed = false;
+            for s in 0..paths.len() {
+                while merger.wants(s) {
+                    match readers[s].next_line()? {
+                        Some(line) => {
+                            lines[s] += 1;
+                            let ev = proto::Event::parse(&line)
+                                .map_err(|e| format!("[{}] line {}: {e}", ids[s], lines[s]))?;
+                            let Some(ev) = ev else { continue };
+                            validators[s]
+                                .check(&ev)
+                                .map_err(|e| format!("line {}: {e}", lines[s]))?;
+                            merger.push(s, ev);
+                            progressed = true;
+                        }
+                        None => {
+                            if readers[s].eof {
+                                merger.finish(s);
+                                progressed = true;
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+            while let Some(ev) = merger.pop() {
+                ml.ingest(&ev);
+                progressed = true;
+                if let Some(every) = snapshot_every {
+                    if ml.watermark_s() - last_emit >= every {
+                        last_emit = ml.watermark_s();
+                        emit_merged(&ml, &merger, &sinks, false, false)?;
+                    }
+                }
+            }
+            if merger.done() {
+                break;
+            }
+            if !progressed {
+                if follow {
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                } else {
+                    return Err("merge stalled with no stream able to progress".to_string());
+                }
+            }
+        }
+        emit_merged(&ml, &merger, &sinks, false, true)
+    };
+    if let Err(e) = run() {
+        eprintln!("monitor: {e}");
+        return 1;
+    }
+    if let Some(out) = args.get("out") {
+        eprintln!("wrote {out}");
+    }
+    0
+}
+
 fn cmd_monitor_record(args: &Args) -> i32 {
     use std::sync::{Arc, Mutex};
-    let known = ["days", "seed", "arrivals-per-hour", "no-failures", "out"];
+    let known = ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out"];
     if let Some(code) = check_flags(args, "monitor record", &known) {
         return code;
     }
@@ -1550,12 +1971,15 @@ fn cmd_monitor_record(args: &Args) -> i32 {
         cfg.failures = false;
     }
     let out = args.get("out").unwrap_or("monitor_stream.txt");
-    eprintln!("recording {days} days (seed {})...", cfg.seed);
+    let default_id = format!("cell-seed{}", cfg.seed);
+    let stream_id = args.get("stream-id").unwrap_or(&default_id);
+    eprintln!("recording {days} days (seed {}) as stream `{stream_id}`...", cfg.seed);
     let buf = Arc::new(Mutex::new(String::new()));
     let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
     sim.attach_sink(Box::new(proto::StreamRecorder::sharing(buf.clone())));
     let res = sim.run();
-    let mut stream = buf.lock().expect("stream buffer poisoned").clone();
+    let mut stream = format!("{}\n", proto::stream_header(stream_id));
+    stream.push_str(&buf.lock().expect("stream buffer poisoned"));
     stream.push_str("end\n");
     if let Err(e) = std::fs::write(out, &stream) {
         eprintln!("writing {out} failed: {e}");
@@ -1579,4 +2003,49 @@ fn cmd_overlap(args: &Args) -> i32 {
     println!("  end-to-end speedup: {speedup:.2}x   (paper: up to 1.38x)");
     println!("  FLOPs utilization:  {:.0}%   (paper: 72%)", util * 100.0);
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    /// Satellite of the dashboard PR: every new `monitor` flag is in the
+    /// vocabulary, and a misspelling of any of them names the `monitor`
+    /// subcommand in the rejection.
+    #[test]
+    fn monitor_vocabulary_accepts_every_dashboard_flag() {
+        let a = parse(
+            "--in a.txt,b.txt --merge --stream-ids a,b --reorder-cap 64 \
+             --listen 127.0.0.1:0 --series-out s.json --snapshot-every 900 --out snap.json",
+        );
+        a.reject_unknown("monitor", &MONITOR_FLAGS).expect("all dashboard flags are known");
+    }
+
+    #[test]
+    fn misspelled_monitor_flags_name_the_monitor_subcommand() {
+        for (argv, bad) in [
+            ("--mergee --in a,b", "--mergee"),
+            ("--lissten 127.0.0.1:0", "--lissten"),
+            ("--stream-id a,b --merge", "--stream-id"),
+            ("--reorder-caps 9 --merge", "--reorder-caps"),
+            ("--series-outt s.json", "--series-outt"),
+        ] {
+            let err = parse(argv).reject_unknown("monitor", &MONITOR_FLAGS).unwrap_err();
+            assert!(err.starts_with("monitor: unknown flag(s)"), "{argv}: {err}");
+            assert!(err.contains(bad), "{argv}: {err}");
+        }
+    }
+
+    #[test]
+    fn monitor_record_vocabulary_includes_stream_id() {
+        let a = parse("--days 0.1 --seed 7 --stream-id cell-a --out s.txt");
+        let known = ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out"];
+        a.reject_unknown("monitor record", &known).expect("record flags are known");
+        let err = parse("--stream-ids a").reject_unknown("monitor record", &known).unwrap_err();
+        assert!(err.starts_with("monitor record: unknown flag(s) --stream-ids"), "{err}");
+    }
 }

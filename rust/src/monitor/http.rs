@@ -1,0 +1,166 @@
+//! Minimal std-only HTTP/1.1 endpoint for the fleet dashboard.
+//!
+//! `monitor --listen ADDR` serves three read-only documents:
+//!
+//! * `GET /snapshot` — the [`snapshot_json`](super::snapshot_json)
+//!   document, byte-identical to what `--snapshot-every` writes to
+//!   `--out` at the same watermark (both render from the SAME string,
+//!   stored here when the ingest loop emits);
+//! * `GET /streams` — per-stream watermark/lag/buffer telemetry
+//!   ([`merge::streams_doc`](super::merge::streams_doc));
+//! * `GET /series` — the rolling per-window series
+//!   ([`series_json`](super::series_json) over `recent_series`).
+//!
+//! The server is deliberately tiny: `std::net::TcpListener`, one accept
+//! thread, one thread per connection, `Connection: close` — no new
+//! dependencies. The ingest loop never touches a socket; it only
+//! replaces strings under a short [`Mutex`] hold. A stalled or
+//! misbehaving client therefore cannot block ingest: its handler thread
+//! parks on its own socket (bounded by read/write timeouts) while
+//! ingest keeps folding events.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The dashboard's shared render cache: pre-rendered JSON bodies,
+/// replaced wholesale by the ingest loop at snapshot cadence.
+#[derive(Debug, Default)]
+pub struct DashState {
+    pub snapshot: String,
+    pub streams: String,
+    pub series: String,
+}
+
+pub type SharedDash = Arc<Mutex<DashState>>;
+
+pub fn shared(initial: DashState) -> SharedDash {
+    Arc::new(Mutex::new(initial))
+}
+
+/// Spawn the accept loop. Each accepted connection gets its own handler
+/// thread; the returned handle is detached by callers (the listener
+/// lives until process exit).
+pub fn serve(listener: TcpListener, dash: SharedDash) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(conn) = conn else { continue };
+            let dash = dash.clone();
+            std::thread::spawn(move || {
+                let _ = handle(conn, &dash);
+            });
+        }
+    })
+}
+
+/// Serve one connection: parse the request line, drain headers, answer,
+/// close. Timeouts bound how long a stalled client can pin its thread.
+fn handle(conn: TcpStream, dash: &SharedDash) -> std::io::Result<()> {
+    conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+    conn.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(conn);
+    let mut request = String::new();
+    reader.read_line(&mut request)?;
+    let mut parts = request.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    loop {
+        let mut header = String::new();
+        let n = reader.read_line(&mut header)?;
+        if n == 0 || header == "\r\n" || header == "\n" {
+            break;
+        }
+    }
+    let mut conn = reader.into_inner();
+    if method != "GET" {
+        return respond(&mut conn, 405, "text/plain", "method not allowed\n");
+    }
+    // Clone under the lock, release, then write: a slow client socket
+    // must never extend the ingest loop's critical section.
+    let body = {
+        let state = dash.lock().expect("dashboard state poisoned");
+        match path.as_str() {
+            "/snapshot" => Some(state.snapshot.clone()),
+            "/streams" => Some(state.streams.clone()),
+            "/series" => Some(state.series.clone()),
+            _ => None,
+        }
+    };
+    match body {
+        Some(body) => respond(&mut conn, 200, "application/json", &body),
+        None => {
+            respond(&mut conn, 404, "text/plain", "not found; try /snapshot /streams /series\n")
+        }
+    }
+}
+
+fn respond(conn: &mut TcpStream, code: u16, ctype: &str, body: &str) -> std::io::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    write!(
+        conn,
+        "HTTP/1.1 {code} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )?;
+    conn.write_all(body.as_bytes())?;
+    conn.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read as _;
+
+    fn get(addr: std::net::SocketAddr, path: &str) -> (String, String) {
+        let mut conn = TcpStream::connect(addr).expect("connecting to dashboard");
+        write!(conn, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+        let mut response = String::new();
+        conn.read_to_string(&mut response).expect("reading response");
+        let (head, body) = response.split_once("\r\n\r\n").expect("header/body split");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn endpoints_serve_the_rendered_state_and_404_elsewhere() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding an ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let dash = shared(DashState {
+            snapshot: "{\"snap\": 1}\n".to_string(),
+            streams: "{\"streams\": []}\n".to_string(),
+            series: "{\"windows\": []}\n".to_string(),
+        });
+        serve(listener, dash.clone());
+        let (head, body) = get(addr, "/snapshot");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert!(head.contains("Content-Length: 12"), "{head}");
+        assert_eq!(body, "{\"snap\": 1}\n");
+        assert_eq!(get(addr, "/streams").1, "{\"streams\": []}\n");
+        assert_eq!(get(addr, "/series").1, "{\"windows\": []}\n");
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+        // An update lands on the next request — the file/endpoint
+        // byte-identity hinges on both reading the same string.
+        dash.lock().unwrap().snapshot = "{\"snap\": 2}\n".to_string();
+        assert_eq!(get(addr, "/snapshot").1, "{\"snap\": 2}\n");
+    }
+
+    #[test]
+    fn slow_clients_do_not_block_other_requests() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding an ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let dash = shared(DashState { snapshot: "ok\n".into(), ..Default::default() });
+        serve(listener, dash);
+        // Open a connection and send nothing: its handler thread parks
+        // on the read; a concurrent request must still be answered.
+        let stalled = TcpStream::connect(addr).expect("stalled connection");
+        let (head, body) = get(addr, "/snapshot");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "ok\n");
+        drop(stalled);
+    }
+}

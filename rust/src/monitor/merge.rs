@@ -1,0 +1,503 @@
+//! Multi-stream merge: N concurrent cell streams into one fleet ledger.
+//!
+//! Each cell of a fleet records its own [`proto`](super::proto) stream;
+//! the dashboard needs them as ONE event sequence a single
+//! [`MonitorLedger`](super::MonitorLedger) can ingest. [`StreamMerger`]
+//! produces that sequence deterministically:
+//!
+//! * every buffered event carries a **key** — its stream's watermark
+//!   *after* the event (the running `f64::max` of end-times; `job`/`end`
+//!   lines inherit the current watermark). Keys are non-decreasing
+//!   within a stream by construction;
+//! * [`pop`](StreamMerger::pop) emits the buffered head with the
+//!   smallest `(key, stream index)` — a k-way merge, stable within each
+//!   stream — but **only while every unfinished stream has a buffered
+//!   head**. An unfinished stream with an empty buffer could still
+//!   produce an event keyed below every buffered one, so merging pauses
+//!   (returns `None`) until it reports or finishes. This strictness is
+//!   what makes the emission order a pure function of the stream
+//!   *contents*: arrival schedules, lag, and buffer bounds cannot
+//!   reorder it, so a live merge is event-for-event identical to the
+//!   batch [`interleave`] of the complete streams — and therefore
+//!   `f64::to_bits`-identical through the ledger;
+//! * per-stream buffers are bounded: [`wants`](StreamMerger::wants)
+//!   goes `false` at `reorder_cap` buffered events, and pull-based
+//!   readers stop feeding that stream until the merge drains it. A
+//!   stalled stream therefore pauses merging with at most
+//!   `reorder_cap × (N - 1)` events held — never unbounded buffering.
+//!
+//! Two transforms are applied at emission time (identically in live and
+//! batch paths, so they cannot break bit-identity):
+//!
+//! * job ids are remapped `merged = id × N + stream` so cells that
+//!   number their jobs from the same base never collide (the identity
+//!   map when N = 1);
+//! * `cap` events become fleet totals — the sum of each stream's
+//!   last-emitted capacity — stamped at `max(t, previous merged cap t)`
+//!   so the merged stream keeps the ledgers' non-decreasing capacity
+//!   times even when one stream's cap is emitted between another's
+//!   (within one validated stream the clamp is a no-op, since cap times
+//!   never decrease and the merge never emits past a stream's own
+//!   buffered head).
+//!
+//! The **cross-stream watermark** is the min of per-stream watermarks:
+//! merged window cells are only final once every cell has reported past
+//! them, and a stream's `watermark − cross-watermark` is its lag — the
+//! `GET /streams` telemetry.
+
+use std::collections::VecDeque;
+
+use crate::util::Json;
+use crate::workload::JobId;
+
+use super::proto::Event;
+
+/// Default per-stream reorder-buffer bound (events), matching the CLI
+/// `--reorder-cap` default.
+pub const DEFAULT_REORDER_CAP: usize = 1024;
+
+/// The merged job id for stream-local `id` on stream `stream` of
+/// `n_streams`: collision-free across streams, identity when N = 1.
+pub fn merged_job_id(id: JobId, stream: usize, n_streams: usize) -> JobId {
+    id.checked_mul(n_streams as u64)
+        .and_then(|x| x.checked_add(stream as u64))
+        .expect("merged job id overflows u64")
+}
+
+#[derive(Debug)]
+struct StreamState {
+    name: String,
+    /// Running max of event end-times pushed so far.
+    watermark_s: f64,
+    /// Buffered `(key, event)` pairs awaiting merge; keys non-decreasing.
+    buf: VecDeque<(f64, Event)>,
+    finished: bool,
+    /// Last-pushed capacity (chips) — this stream's term in merged caps.
+    chips: u64,
+    peak_buffered: usize,
+    events: u64,
+    jobs: u64,
+    spans: u64,
+    pg_samples: u64,
+    cap_events: u64,
+}
+
+/// Point-in-time per-stream telemetry for `GET /streams`.
+#[derive(Clone, Debug)]
+pub struct StreamInfo {
+    pub name: String,
+    pub watermark_s: f64,
+    /// `watermark − cross-stream watermark`: how far this stream runs
+    /// ahead of the slowest one.
+    pub lag_s: f64,
+    pub finished: bool,
+    pub buffered: usize,
+    pub peak_buffered: usize,
+    pub events: u64,
+    pub jobs: u64,
+    pub spans: u64,
+    pub pg_samples: u64,
+    pub cap_events: u64,
+    pub chips: u64,
+}
+
+/// Deterministic k-way merge of N event streams with bounded per-stream
+/// reorder buffers. See the module docs for the emission-order contract.
+#[derive(Debug)]
+pub struct StreamMerger {
+    streams: Vec<StreamState>,
+    reorder_cap: usize,
+    /// Time of the last merged `cap` emitted — the clamp floor.
+    last_cap_t: f64,
+    emitted: u64,
+}
+
+impl StreamMerger {
+    pub fn new(names: &[String], reorder_cap: usize) -> StreamMerger {
+        assert!(!names.is_empty(), "need at least one stream");
+        assert!(reorder_cap >= 1, "reorder buffer must hold at least one event");
+        StreamMerger {
+            streams: names
+                .iter()
+                .map(|name| StreamState {
+                    name: name.clone(),
+                    watermark_s: 0.0,
+                    buf: VecDeque::new(),
+                    finished: false,
+                    chips: 0,
+                    peak_buffered: 0,
+                    events: 0,
+                    jobs: 0,
+                    spans: 0,
+                    pg_samples: 0,
+                    cap_events: 0,
+                })
+                .collect(),
+            reorder_cap,
+            last_cap_t: 0.0,
+            emitted: 0,
+        }
+    }
+
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Whether stream `s` may be fed another event: backpressure goes on
+    /// (`false`) once its reorder buffer is full or it has finished.
+    /// Pull-based readers gate every read on this.
+    pub fn wants(&self, s: usize) -> bool {
+        let st = &self.streams[s];
+        !st.finished && st.buf.len() < self.reorder_cap
+    }
+
+    /// Buffer one validated event from stream `s`. An `end` event marks
+    /// the stream finished (it is consumed, never merged). Callers must
+    /// gate on [`wants`](Self::wants); pushing past the bound panics.
+    pub fn push(&mut self, s: usize, ev: Event) {
+        let st = &mut self.streams[s];
+        assert!(!st.finished, "push to finished stream `{}`", st.name);
+        assert!(
+            st.buf.len() < self.reorder_cap,
+            "reorder buffer overflow on stream `{}` (cap {})",
+            st.name,
+            self.reorder_cap
+        );
+        st.events += 1;
+        match ev {
+            Event::End => {
+                st.finished = true;
+                return;
+            }
+            Event::Job(_) => st.jobs += 1,
+            Event::Span { .. } => st.spans += 1,
+            Event::Pg { .. } => st.pg_samples += 1,
+            Event::Capacity { .. } => st.cap_events += 1,
+        }
+        if let Some(t) = ev.end_time() {
+            st.watermark_s = st.watermark_s.max(t);
+        }
+        // Key = watermark AFTER the event: non-decreasing per stream, so
+        // the k-way merge below is a true merge of sorted runs.
+        st.buf.push_back((st.watermark_s, ev));
+        st.peak_buffered = st.peak_buffered.max(st.buf.len());
+    }
+
+    /// Mark stream `s` finished without an `end` event (EOF on a
+    /// non-follow file). Idempotent; buffered events still drain.
+    pub fn finish(&mut self, s: usize) {
+        self.streams[s].finished = true;
+    }
+
+    /// Emit the next merged event, or `None` when merging must pause:
+    /// either every buffer is drained, or some unfinished stream has an
+    /// empty buffer (the strict stall rule — see module docs).
+    pub fn pop(&mut self) -> Option<Event> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, st) in self.streams.iter().enumerate() {
+            match st.buf.front() {
+                Some(&(key, _)) => {
+                    let better = match best {
+                        None => true,
+                        // Strict `<` keeps the lowest stream index on
+                        // key ties (index order is the iteration order).
+                        Some((bk, _)) => key < bk,
+                    };
+                    if better {
+                        best = Some((key, i));
+                    }
+                }
+                None => {
+                    if !st.finished {
+                        return None;
+                    }
+                }
+            }
+        }
+        let (_, s) = best?;
+        let (_, ev) = self.streams[s].buf.pop_front().expect("front just observed");
+        self.emitted += 1;
+        Some(self.transform(s, ev))
+    }
+
+    /// The emission-time transforms: job-id remap and capacity summing.
+    fn transform(&mut self, s: usize, ev: Event) -> Event {
+        let n = self.streams.len();
+        match ev {
+            Event::Job(mut meta) => {
+                meta.id = merged_job_id(meta.id, s, n);
+                Event::Job(meta)
+            }
+            Event::Span { id, t0, t1, chips, class, layer } => {
+                Event::Span { id: merged_job_id(id, s, n), t0, t1, chips, class, layer }
+            }
+            Event::Pg { id, t0, t1, chips, pg } => {
+                Event::Pg { id: merged_job_id(id, s, n), t0, t1, chips, pg }
+            }
+            Event::Capacity { t, chips } => {
+                self.streams[s].chips = chips;
+                let total: u64 = self.streams.iter().map(|st| st.chips).sum();
+                let t = t.max(self.last_cap_t);
+                self.last_cap_t = t;
+                Event::Capacity { t, chips: total }
+            }
+            Event::End => unreachable!("end events are consumed at push"),
+        }
+    }
+
+    /// All streams finished and every buffer drained.
+    pub fn done(&self) -> bool {
+        self.streams.iter().all(|st| st.finished && st.buf.is_empty())
+    }
+
+    /// Cross-stream watermark: the min of per-stream watermarks. Merged
+    /// window cells at or below it are final — every cell has reported
+    /// past them.
+    pub fn cross_watermark_s(&self) -> f64 {
+        self.streams.iter().map(|st| st.watermark_s).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Events emitted by [`pop`](Self::pop) so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Per-stream telemetry rows (stream order preserved).
+    pub fn infos(&self) -> Vec<StreamInfo> {
+        let cross = self.cross_watermark_s();
+        self.streams
+            .iter()
+            .map(|st| StreamInfo {
+                name: st.name.clone(),
+                watermark_s: st.watermark_s,
+                lag_s: st.watermark_s - cross,
+                finished: st.finished,
+                buffered: st.buf.len(),
+                peak_buffered: st.peak_buffered,
+                events: st.events,
+                jobs: st.jobs,
+                spans: st.spans,
+                pg_samples: st.pg_samples,
+                cap_events: st.cap_events,
+                chips: st.chips,
+            })
+            .collect()
+    }
+
+    /// The `GET /streams` document.
+    pub fn streams_json(&self) -> Json {
+        streams_doc(self.cross_watermark_s(), &self.infos())
+    }
+}
+
+/// Render the `GET /streams` document from telemetry rows (the
+/// single-stream monitor path builds its one row by hand).
+pub fn streams_doc(cross_watermark_s: f64, infos: &[StreamInfo]) -> Json {
+    Json::obj(vec![
+        ("cross_watermark_s", Json::num(cross_watermark_s)),
+        ("stream_count", Json::num(infos.len() as f64)),
+        (
+            "streams",
+            Json::arr(infos.iter().map(|i| {
+                Json::obj(vec![
+                    ("id", Json::str(&i.name)),
+                    ("watermark_s", Json::num(i.watermark_s)),
+                    ("lag_s", Json::num(i.lag_s)),
+                    ("finished", Json::Bool(i.finished)),
+                    ("buffered", Json::num(i.buffered as f64)),
+                    ("peak_buffered", Json::num(i.peak_buffered as f64)),
+                    ("events", Json::num(i.events as f64)),
+                    ("jobs", Json::num(i.jobs as f64)),
+                    ("spans", Json::num(i.spans as f64)),
+                    ("pg_samples", Json::num(i.pg_samples as f64)),
+                    ("cap_events", Json::num(i.cap_events as f64)),
+                    ("chips", Json::num(i.chips as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// The watermark-ordered interleaving of complete streams — the batch
+/// reference a live merge must reproduce event for event: buffer
+/// everything (unbounded), finish every stream, drain. `tests/`
+/// replays this through one `MonitorLedger` and `cmp`s against the
+/// bounded live merge.
+pub fn interleave(names: &[String], streams: Vec<Vec<Event>>) -> Vec<Event> {
+    assert_eq!(names.len(), streams.len(), "one name per stream");
+    let mut m = StreamMerger::new(names, usize::MAX);
+    for (s, evs) in streams.into_iter().enumerate() {
+        for ev in evs {
+            m.push(s, ev);
+        }
+        m.finish(s);
+    }
+    let mut out = Vec::new();
+    while let Some(ev) = m.pop() {
+        out.push(ev);
+    }
+    assert!(m.done(), "all streams finished, so the merge must drain");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{StackLayer, TimeClass};
+
+    fn names(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("cell-{i}")).collect()
+    }
+
+    fn span(id: JobId, t0: f64, t1: f64) -> Event {
+        Event::Span {
+            id,
+            t0,
+            t1,
+            chips: 4,
+            class: TimeClass::Productive,
+            layer: StackLayer::Model,
+        }
+    }
+
+    fn job(id: JobId) -> Event {
+        match Event::parse(&format!("job {id} training jax-pathways transformer tpu-c small 64")) {
+            Ok(Some(ev)) => ev,
+            other => panic!("meta line: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn single_stream_merge_is_the_identity() {
+        let evs = vec![
+            Event::Capacity { t: 0.0, chips: 64 },
+            job(3),
+            span(3, 0.0, 5.0),
+            span(3, 5.0, 9.0),
+        ];
+        let merged = interleave(&names(1), vec![evs.clone()]);
+        assert_eq!(merged.len(), evs.len());
+        for (a, b) in merged.iter().zip(&evs) {
+            assert_eq!(a.format(), b.format(), "N=1 must not rewrite events");
+        }
+    }
+
+    #[test]
+    fn job_ids_are_remapped_collision_free() {
+        assert_eq!(merged_job_id(7, 0, 1), 7);
+        assert_eq!(merged_job_id(7, 0, 3), 21);
+        assert_eq!(merged_job_id(7, 2, 3), 23);
+        // Distinct (id, stream) pairs never collide.
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 0..50u64 {
+            for s in 0..5usize {
+                assert!(seen.insert(merged_job_id(id, s, 5)));
+            }
+        }
+    }
+
+    #[test]
+    fn merged_caps_are_fleet_totals_with_non_decreasing_times() {
+        // Stream 1's span to t=20 keys its cap at 20, so the cap (at
+        // t=10) merges AFTER stream 0's cap at t=12: the clamp stamps it
+        // at 12 so the merged stream keeps ledger capacity-time order.
+        let s0 =
+            vec![Event::Capacity { t: 0.0, chips: 100 }, Event::Capacity { t: 12.0, chips: 90 }];
+        let s1 = vec![job(1), span(1, 0.0, 20.0), Event::Capacity { t: 10.0, chips: 50 }];
+        let merged = interleave(&names(2), vec![s0, s1]);
+        let caps: Vec<(f64, u64)> = merged
+            .iter()
+            .filter_map(|ev| match *ev {
+                Event::Capacity { t, chips } => Some((t, chips)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(caps, vec![(0.0, 100), (12.0, 90), (12.0, 140)]);
+    }
+
+    #[test]
+    fn emission_order_is_independent_of_arrival_schedule() {
+        // Three streams, overlapping times. Reference: batch interleave.
+        let streams = vec![
+            vec![job(1), span(1, 0.0, 4.0), span(1, 4.0, 8.0), span(1, 8.0, 20.0)],
+            vec![job(1), span(1, 2.0, 3.0), span(1, 3.0, 9.0)],
+            vec![job(2), span(2, 1.0, 6.0), span(2, 6.0, 7.0), span(2, 7.0, 19.0)],
+        ];
+        let reference = interleave(&names(3), streams.clone());
+        // Adversarial live schedule: tiny buffers, stream 1 delayed — it
+        // only receives events when the merge is stalled waiting on it.
+        let mut m = StreamMerger::new(&names(3), 2);
+        let mut idx = [0usize; 3];
+        let mut out = Vec::new();
+        let mut stalled_rounds = 0;
+        loop {
+            // Feed the prompt streams first, the laggard only if stalled.
+            for s in [0usize, 2] {
+                while m.wants(s) && idx[s] < streams[s].len() {
+                    m.push(s, streams[s][idx[s]].clone());
+                    idx[s] += 1;
+                }
+                if idx[s] == streams[s].len() {
+                    m.finish(s);
+                }
+            }
+            let mut popped = false;
+            while let Some(ev) = m.pop() {
+                out.push(ev);
+                popped = true;
+            }
+            if m.done() {
+                break;
+            }
+            if !popped {
+                stalled_rounds += 1;
+                // The stall rule is doing its job: feed ONE laggard event.
+                if m.wants(1) && idx[1] < streams[1].len() {
+                    m.push(1, streams[1][idx[1]].clone());
+                    idx[1] += 1;
+                }
+                if idx[1] == streams[1].len() {
+                    m.finish(1);
+                }
+            }
+        }
+        assert!(stalled_rounds > 0, "the delayed stream must have stalled the merge");
+        assert_eq!(out.len(), reference.len());
+        for (a, b) in out.iter().zip(&reference) {
+            assert_eq!(a.format(), b.format(), "schedule must not change the merge");
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_buffering_and_stalls_on_empty_streams() {
+        let mut m = StreamMerger::new(&names(2), 3);
+        for k in 0..3 {
+            assert!(m.wants(0));
+            m.push(0, span(1, k as f64, k as f64 + 1.0));
+        }
+        // Stream 0's buffer is full; stream 1 is empty and unfinished.
+        assert!(!m.wants(0), "full buffer must shed backpressure");
+        assert!(m.pop().is_none(), "empty unfinished stream must stall the merge");
+        // Stream 1 finishing releases the stall without any events.
+        m.finish(1);
+        assert!(m.pop().is_some());
+        assert!(m.wants(0), "draining must reopen the buffer");
+        let infos = m.infos();
+        assert_eq!(infos[0].peak_buffered, 3);
+        assert_eq!(infos[0].buffered, 2);
+    }
+
+    #[test]
+    fn cross_watermark_is_the_min_and_lag_the_distance() {
+        let mut m = StreamMerger::new(&names(2), 8);
+        m.push(0, span(1, 0.0, 30.0));
+        m.push(1, span(1, 0.0, 10.0));
+        assert_eq!(m.cross_watermark_s(), 10.0);
+        let infos = m.infos();
+        assert_eq!(infos[0].lag_s, 20.0);
+        assert_eq!(infos[1].lag_s, 0.0);
+        let doc = m.streams_json();
+        assert_eq!(doc.get("cross_watermark_s").as_f64(), Some(10.0));
+        assert_eq!(doc.get("stream_count").as_f64(), Some(2.0));
+    }
+}

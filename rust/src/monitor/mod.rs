@@ -40,6 +40,8 @@
 //! simulation stream through the monitor must match the batch windowed
 //! replay byte-for-byte, with bounded cells on streams ≥ 10× the ring.
 
+pub mod http;
+pub mod merge;
 pub mod proto;
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -442,6 +444,12 @@ impl MonitorLedger {
     pub fn cap_events(&self) -> u64 {
         self.cap_events
     }
+
+    /// The most recent capacity step's chips (0 before any `cap` event)
+    /// — the dashboard's "current fleet size" telemetry.
+    pub fn current_capacity_chips(&self) -> u64 {
+        self.cap_steps.back().map(|&(_, chips)| chips).unwrap_or(0)
+    }
 }
 
 /// Mode-independent stream totals for the snapshot: both the streaming
@@ -505,6 +513,38 @@ pub fn snapshot_json(
                 ("pg_samples", Json::num(stats.pg_samples as f64)),
                 ("cap_events", Json::num(stats.cap_events as f64)),
             ]),
+        ),
+    ])
+}
+
+/// The `GET /series` document: one row per retained ring window,
+/// oldest-first — the rolling-plot feed behind the `monitor-series`
+/// figure. Pure function of `(window, report)` rows, so a live dashboard
+/// and a batch replay that retain the same windows render identical
+/// bytes.
+pub fn series_json(series: &[(Window, GoodputReport)], width_s: f64, watermark_s: f64) -> Json {
+    Json::obj(vec![
+        ("watermark_s", Json::num(watermark_s)),
+        ("width_s", Json::num(width_s)),
+        ("window_count", Json::num(series.len() as f64)),
+        (
+            "windows",
+            Json::arr(series.iter().map(|(w, r)| {
+                let att = AttributionReport::of(r);
+                Json::obj(vec![
+                    ("t0_s", Json::num(w.t0)),
+                    ("t1_s", Json::num(w.t1)),
+                    ("sg", Json::num(r.sg)),
+                    ("rg", Json::num(r.rg)),
+                    ("pg", Json::num(r.pg)),
+                    ("mpg", Json::num(r.mpg())),
+                    ("mpg_bits", Json::f64b(r.mpg())),
+                    ("capacity_cs", Json::num(r.capacity_cs)),
+                    ("productive_cs", Json::num(r.productive_cs)),
+                    ("job_count", Json::num(r.job_count as f64)),
+                    ("bottleneck", Json::str(att.bottleneck().name())),
+                ])
+            })),
         ),
     ])
 }
@@ -685,5 +725,24 @@ mod tests {
         let doc = Json::parse(&a.to_string_pretty()).expect("snapshot parses");
         assert_eq!(doc.get("final").as_bool(), Some(true));
         assert!(doc.get("fleet").get("mpg").as_f64().is_some());
+    }
+
+    #[test]
+    fn series_json_carries_one_row_per_retained_window() {
+        let mut ml = MonitorLedger::new(10.0, 64);
+        for ev in tape() {
+            ml.ingest(&ev);
+        }
+        let series = ml.recent_series(|_| true);
+        let doc = series_json(&series, ml.width_s(), ml.watermark_s());
+        let parsed = Json::parse(&doc.to_string_pretty()).expect("series parses");
+        assert_eq!(parsed.get("window_count").as_f64(), Some(series.len() as f64));
+        let rows = parsed.get("windows").as_arr().expect("windows array");
+        assert_eq!(rows.len(), series.len());
+        for (row, (w, r)) in rows.iter().zip(&series) {
+            assert_eq!(row.get("t0_s").as_f64(), Some(w.t0));
+            assert_eq!(row.get("mpg").as_f64(), Some(r.mpg()));
+            assert!(row.get("bottleneck").as_str().is_some());
+        }
     }
 }

@@ -31,6 +31,27 @@ use crate::fleet::ChipGeneration;
 use crate::metrics::{JobMeta, SpanSink, StackLayer, TimeClass};
 use crate::workload::{Framework, JobId, ModelArch, Phase, SizeClass};
 
+/// Protocol version. The multi-stream framing (PR 8) is carried in a
+/// `#` comment header, which v1 readers already skip — backward
+/// compatible, so the version stays 1.
+pub const PROTO_VERSION: u32 = 1;
+
+/// The stream-framing header line: a comment carrying the protocol
+/// version and the recording cell's stream id. Being a comment, every
+/// reader (old and new) skips it during event parsing; the merge CLI
+/// reads it up front to name the stream in errors and telemetry.
+pub fn stream_header(id: &str) -> String {
+    format!("# tpufleet-monitor-stream v{PROTO_VERSION} id={id}")
+}
+
+/// Recover `(version, stream id)` from a [`stream_header`] line, `None`
+/// for anything else (including ordinary comments).
+pub fn parse_stream_header(line: &str) -> Option<(u32, &str)> {
+    let rest = line.trim().strip_prefix("# tpufleet-monitor-stream v")?;
+    let (version, id) = rest.split_once(" id=")?;
+    Some((version.parse().ok()?, id.trim()))
+}
+
 /// One parsed line of the monitor stream.
 #[derive(Clone, Debug)]
 pub enum Event {
@@ -201,9 +222,25 @@ fn name<T>(tok: &str, what: &str, from: impl Fn(&str) -> Option<T>) -> Result<T,
 pub struct Validator {
     jobs: BTreeSet<JobId>,
     last_cap_t: Option<f64>,
+    /// Stream id (or input path) prefixed to every error, so a merge of
+    /// several inputs reports WHICH stream is corrupt, not just a line
+    /// number.
+    label: Option<String>,
 }
 
 impl Validator {
+    /// A validator whose errors carry the stream's id or input path.
+    pub fn labeled(label: &str) -> Validator {
+        Validator { label: Some(label.to_string()), ..Validator::default() }
+    }
+
+    fn fail(&self, msg: String) -> Result<(), String> {
+        match &self.label {
+            Some(label) => Err(format!("[{label}] {msg}")),
+            None => Err(msg),
+        }
+    }
+
     pub fn check(&mut self, ev: &Event) -> Result<(), String> {
         match ev {
             Event::Job(m) => {
@@ -211,18 +248,18 @@ impl Validator {
             }
             Event::Span { id, .. } => {
                 if !self.jobs.contains(id) {
-                    return Err(format!("span for undeclared job {id} (missing `job` line)"));
+                    return self.fail(format!("span for undeclared job {id} (missing `job` line)"));
                 }
             }
             Event::Pg { id, .. } => {
                 if !self.jobs.contains(id) {
-                    return Err(format!("pg for undeclared job {id} (missing `job` line)"));
+                    return self.fail(format!("pg for undeclared job {id} (missing `job` line)"));
                 }
             }
             Event::Capacity { t, .. } => {
                 if let Some(last) = self.last_cap_t {
                     if *t < last {
-                        return Err(format!("cap out of order ({t} after {last})"));
+                        return self.fail(format!("cap out of order ({t} after {last})"));
                     }
                 }
                 self.last_cap_t = Some(*t);
@@ -345,5 +382,27 @@ mod tests {
         v.check(&Event::Capacity { t: 10.0, chips: 1 }).unwrap();
         let err = v.check(&Event::Capacity { t: 4.0, chips: 2 }).unwrap_err();
         assert!(err.contains("out of order"));
+    }
+
+    #[test]
+    fn labeled_validator_names_the_stream_in_every_error() {
+        let mut v = Validator::labeled("cell-b.txt");
+        let span = Event::parse("span 9 0 1 4 lost hardware").unwrap().unwrap();
+        let err = v.check(&span).unwrap_err();
+        assert!(err.starts_with("[cell-b.txt] "), "{err}");
+        assert!(err.contains("undeclared job 9"), "{err}");
+        v.check(&Event::Capacity { t: 10.0, chips: 1 }).unwrap();
+        let err = v.check(&Event::Capacity { t: 4.0, chips: 2 }).unwrap_err();
+        assert!(err.starts_with("[cell-b.txt] "), "{err}");
+    }
+
+    #[test]
+    fn stream_header_round_trips_and_parses_as_a_comment() {
+        let line = stream_header("cell-7");
+        assert_eq!(parse_stream_header(&line), Some((PROTO_VERSION, "cell-7")));
+        // v1 readers skip it: the framing is backward compatible.
+        assert!(Event::parse(&line).unwrap().is_none());
+        assert_eq!(parse_stream_header("# just a comment"), None);
+        assert_eq!(parse_stream_header("cap 0 64"), None);
     }
 }

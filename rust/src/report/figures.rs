@@ -788,12 +788,89 @@ fn attribution_impl(seed: u64, workers: usize, days: f64) -> AttributionFigure {
 }
 
 // ---------------------------------------------------------------------------
+// Monitor series — rolling per-window MPG from a recorded stream
+// ---------------------------------------------------------------------------
+
+pub struct MonitorSeriesFigure {
+    pub windows: Vec<crate::metrics::Window>,
+    pub reports: Vec<crate::metrics::GoodputReport>,
+    pub table: Table,
+}
+
+/// The fleet dashboard's rolling plot as a figure: record a 1-day
+/// simulation stream and replay it through the monitor ledger, then
+/// tabulate `recent_series` — per-window SG/RG/PG/MPG plus the window's
+/// bottleneck layer (the `GET /series` document, rendered for the
+/// report layer).
+pub fn monitor_series(seed: u64) -> MonitorSeriesFigure {
+    use crate::monitor::proto::StreamRecorder;
+    use std::sync::{Arc, Mutex};
+    let mut cfg = SimConfig { seed, duration_s: DAY_S, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 10.0;
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = crate::sim::Simulation::new(cfg)
+        .ledger_mode(crate::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    sim.run();
+    let stream = buf.lock().expect("stream buffer poisoned").clone();
+    monitor_series_from_stream(&stream, 2.0 * 3600.0)
+}
+
+/// Tabulate the rolling series of a recorded stream with the ring sized
+/// to retain every window, so the figure covers the whole stream; a live
+/// dashboard with a smaller ring sees a suffix of these rows.
+pub fn monitor_series_from_stream(stream: &str, width_s: f64) -> MonitorSeriesFigure {
+    use crate::metrics::AttributionReport;
+    use crate::monitor::proto::{Event, Validator};
+    use crate::monitor::MonitorLedger;
+    let mut validator = Validator::default();
+    let mut evs = Vec::new();
+    let mut horizon = 0.0_f64;
+    for (i, line) in stream.lines().enumerate() {
+        let ev = Event::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        let Some(ev) = ev else { continue };
+        validator.check(&ev).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        if let Some(t) = ev.end_time() {
+            horizon = horizon.max(t);
+        }
+        evs.push(ev);
+    }
+    let ring = ((horizon / width_s).ceil() as usize + 1).max(1);
+    let mut ml = MonitorLedger::new(width_s, ring);
+    for ev in &evs {
+        ml.ingest(ev);
+    }
+    let series = ml.recent_series(|_| true);
+    let mut table = Table::new(
+        "Rolling fleet MPG (monitor recent_series, one row per window)",
+        &["t0 (h)", "t1 (h)", "SG", "RG", "PG", "MPG", "jobs", "bottleneck"],
+    );
+    let mut windows = Vec::new();
+    let mut reports = Vec::new();
+    for (w, r) in series {
+        table.row(vec![
+            f(w.t0 / 3600.0, 1),
+            f(w.t1 / 3600.0, 1),
+            f(r.sg, 3),
+            f(r.rg, 3),
+            f(r.pg, 3),
+            f(r.mpg(), 3),
+            format!("{}", r.job_count),
+            AttributionReport::of(&r).bottleneck().name().to_string(),
+        ]);
+        windows.push(w);
+        reports.push(r);
+    }
+    MonitorSeriesFigure { windows, reports, table }
+}
+
+// ---------------------------------------------------------------------------
 // Figure registry — the `figures` CLI fan-out
 // ---------------------------------------------------------------------------
 
 /// Every figure/table generator name, in the paper's order. `figures all`
 /// fans exactly this list out over the `util::pool` substrate.
-pub const FIGURE_NAMES: [&str; 10] = [
+pub const FIGURE_NAMES: [&str; 11] = [
     "fig1",
     "fig4",
     "fig6",
@@ -804,6 +881,7 @@ pub const FIGURE_NAMES: [&str; 10] = [
     "fig16",
     "table2",
     "attribution",
+    "monitor-series",
 ];
 
 /// A deferred figure generator — the unit of work the `figures` CLI
@@ -834,6 +912,7 @@ pub fn generator(name: &str, seed: u64, inner_workers: usize) -> Option<FigureGe
         "attribution" => {
             Box::new(move || attribution_waterfall_with_workers(seed, inner_workers).table)
         }
+        "monitor-series" => Box::new(move || monitor_series(seed).table),
         _ => return None,
     })
 }
@@ -1007,6 +1086,23 @@ mod tests {
                 assert!(r.mpg_if_ideal >= mpg - 1e-12, "{name}/{}", r.layer.name());
             }
         }
+    }
+
+    #[test]
+    fn monitor_series_shape_contiguous_windows_with_sane_goodput() {
+        let fig = monitor_series(0x5E1);
+        assert!(fig.windows.len() >= 12, "a 1-day stream at 2h windows: {}", fig.windows.len());
+        assert_eq!(fig.windows.len(), fig.reports.len());
+        assert_eq!(fig.table.rows.len(), fig.windows.len());
+        for pair in fig.windows.windows(2) {
+            assert_eq!(pair[0].t1.to_bits(), pair[1].t0.to_bits(), "windows must be contiguous");
+        }
+        for r in &fig.reports {
+            for v in [r.sg, r.rg, r.pg, r.mpg()] {
+                assert!((0.0..=1.0 + 1e-9).contains(&v), "goodput ratio {v} outside [0, 1]");
+            }
+        }
+        assert!(fig.reports.iter().any(|r| r.job_count > 0), "some window must have jobs");
     }
 
     #[test]

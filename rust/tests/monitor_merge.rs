@@ -1,0 +1,310 @@
+//! Fleet-dashboard contracts: the N-stream live merge (bounded reorder
+//! buffers, arbitrary per-stream lag) must ingest into a report and
+//! snapshot `f64::to_bits`-identical to batch-replaying the
+//! watermark-ordered interleaving through one [`MonitorLedger`], for
+//! N ∈ {1, 2, 5}; and the `monitor --merge` / `--listen` CLI must hold
+//! the same byte-identity on the real binary, with `GET /snapshot`
+//! serving exactly the `--out` file's bytes at the same watermark.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+
+use tpufleet::monitor::merge::{self, StreamMerger};
+use tpufleet::monitor::proto::{Event, StreamRecorder, Validator};
+use tpufleet::monitor::{snapshot_json, MonitorLedger, StreamStats};
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::testkit::assert_reports_bit_identical;
+use tpufleet::util::Json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tpufleet")
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tpufleet-monitor-merge-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Record one cell's simulation stream as parsed, validated events.
+fn recorded_events(seed: u64, days: f64) -> Vec<Event> {
+    let mut cfg = SimConfig { seed, duration_s: days * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 8.0;
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    sim.run();
+    let text = buf.lock().unwrap().clone();
+    let mut validator = Validator::default();
+    let mut evs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(ev) = Event::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1)) {
+            validator.check(&ev).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+            evs.push(ev);
+        }
+    }
+    evs
+}
+
+fn names(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("cell-{i}")).collect()
+}
+
+fn replay(evs: &[Event], width_s: f64, ring: usize) -> MonitorLedger {
+    let mut ml = MonitorLedger::new(width_s, ring);
+    for ev in evs {
+        ml.ingest(ev);
+    }
+    ml
+}
+
+fn snapshot_bytes(ml: &MonitorLedger) -> String {
+    let stats = StreamStats {
+        jobs: ml.job_count(),
+        spans: ml.span_count(),
+        pg_samples: ml.pg_count(),
+        cap_events: ml.cap_events(),
+    };
+    snapshot_json(&ml.report(|_| true), ml.watermark_s(), ml.width_s(), &stats, true)
+        .to_string_pretty()
+}
+
+/// Live-pump the merge under an adversarial schedule: every stream but
+/// `laggard` is fed greedily (up to the reorder cap); the laggard only
+/// receives ONE event each time the merge is completely stalled on it.
+/// Returns the emitted sequence plus the final per-stream telemetry.
+fn pump_with_lag(
+    streams: &[Vec<Event>],
+    cap: usize,
+    laggard: usize,
+) -> (Vec<Event>, Vec<merge::StreamInfo>, usize) {
+    let mut m = StreamMerger::new(&names(streams.len()), cap);
+    let mut idx = vec![0usize; streams.len()];
+    let mut fed_done = vec![false; streams.len()];
+    let mut out = Vec::new();
+    let mut stalls = 0usize;
+    loop {
+        let mut progressed = false;
+        for (s, stream) in streams.iter().enumerate() {
+            if s == laggard {
+                continue;
+            }
+            while m.wants(s) && idx[s] < stream.len() {
+                m.push(s, stream[idx[s]].clone());
+                idx[s] += 1;
+                progressed = true;
+            }
+            if idx[s] == stream.len() && !fed_done[s] {
+                m.finish(s);
+                fed_done[s] = true;
+                progressed = true;
+            }
+        }
+        while let Some(ev) = m.pop() {
+            out.push(ev);
+            progressed = true;
+        }
+        if m.done() {
+            break;
+        }
+        if !progressed {
+            // Only the laggard can unblock the merge now.
+            stalls += 1;
+            if idx[laggard] < streams[laggard].len() {
+                m.push(laggard, streams[laggard][idx[laggard]].clone());
+                idx[laggard] += 1;
+            } else {
+                assert!(!fed_done[laggard], "stalled with every stream exhausted");
+                m.finish(laggard);
+                fed_done[laggard] = true;
+            }
+        }
+    }
+    let infos = m.infos();
+    (out, infos, stalls)
+}
+
+#[test]
+fn merged_stream_is_bit_identical_to_batch_interleave_for_n_1_2_5() {
+    const WIDTH_S: f64 = 1800.0;
+    const RING: usize = 8;
+    const CAP: usize = 16;
+    for n in [1usize, 2, 5] {
+        let streams: Vec<Vec<Event>> =
+            (0..n).map(|i| recorded_events(0x3000 + i as u64, 0.25)).collect();
+        // Batch reference: the watermark-ordered interleaving of the
+        // complete streams through one ledger.
+        let reference = merge::interleave(&names(n), streams.clone());
+        // The merged sequence is itself a valid stream: remapped ids are
+        // declared before use and merged cap times never decrease.
+        let mut validator = Validator::labeled("merged");
+        for ev in &reference {
+            validator.check(ev).expect("merged stream must validate");
+        }
+        let batch = replay(&reference, WIDTH_S, RING);
+        // Live pump: bounded buffers, stream 0 delayed arbitrarily.
+        let (live_seq, infos, stalls) = pump_with_lag(&streams, CAP, 0);
+        assert_eq!(live_seq.len(), reference.len(), "N={n}");
+        for (a, b) in live_seq.iter().zip(&reference) {
+            assert_eq!(a.format(), b.format(), "N={n}: schedule changed the merge order");
+        }
+        let live = replay(&live_seq, WIDTH_S, RING);
+        assert!(live.evicted_cells() > 0, "N={n}: a 6h stream must overflow a 4h ring");
+        assert_reports_bit_identical(&batch.report(|_| true), &live.report(|_| true), "fleet");
+        assert_eq!(snapshot_bytes(&batch), snapshot_bytes(&live), "N={n} snapshot bytes");
+        if n > 1 {
+            assert!(stalls > 0, "N={n}: the delayed stream must stall the merge");
+            assert!(
+                infos.iter().any(|i| i.peak_buffered == CAP),
+                "N={n}: some prompt stream must fill its reorder buffer \
+                 (peaks: {:?})",
+                infos.iter().map(|i| i.peak_buffered).collect::<Vec<_>>()
+            );
+            assert!(
+                infos.iter().all(|i| i.peak_buffered <= CAP),
+                "N={n}: no buffer may exceed the bound"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_cli_snapshot_matches_merge_batch_bytewise() {
+    let dir = scratch("cli");
+    let mut stream_args = String::new();
+    for (i, seed) in [0x51u64, 0x52, 0x53].iter().enumerate() {
+        let out = dir.join(format!("cell{i}.txt"));
+        let ok = Command::new(bin())
+            .args(["monitor", "record", "--days", "0.1", "--arrivals-per-hour", "6"])
+            .args(["--seed", &seed.to_string()])
+            .args(["--stream-id", &format!("cell-{i}")])
+            .args(["--out", &out.display().to_string()])
+            .status()
+            .expect("spawning tpufleet")
+            .success();
+        assert!(ok, "monitor record failed");
+        if i > 0 {
+            stream_args.push(',');
+        }
+        stream_args.push_str(&out.display().to_string());
+    }
+    let live = dir.join("merged_live.json");
+    let batch = dir.join("merged_batch.json");
+    for (flag, out) in [(None, &live), (Some("--batch"), &batch)] {
+        let mut cmd = Command::new(bin());
+        cmd.args(["monitor", "--merge", "--in", &stream_args]);
+        cmd.args(["--width-s", "900", "--ring-windows", "4", "--reorder-cap", "32"]);
+        if let Some(flag) = flag {
+            cmd.arg(flag);
+        }
+        cmd.args(["--out", &out.display().to_string()]);
+        let output = cmd.output().expect("spawning tpufleet");
+        assert!(
+            output.status.success(),
+            "monitor --merge failed: {}",
+            String::from_utf8_lossy(&output.stderr)
+        );
+    }
+    assert_eq!(read(&live), read(&batch), "live merge vs batch interleave snapshot bytes");
+    let doc = Json::parse(&read(&live)).expect("merged snapshot parses");
+    assert_eq!(doc.get("final").as_bool(), Some(true));
+    assert!(doc.get("fleet").get("mpg").as_f64().is_some());
+}
+
+/// Issue one HTTP GET against the dashboard and return (status line, body).
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    use std::io::{Read as _, Write as _};
+    let mut conn = std::net::TcpStream::connect(addr).expect("connecting to dashboard");
+    write!(conn, "GET {path} HTTP/1.1\r\nHost: test\r\n\r\n").unwrap();
+    let mut response = String::new();
+    conn.read_to_string(&mut response).expect("reading response");
+    let (head, body) = response.split_once("\r\n\r\n").expect("header/body split");
+    (head.lines().next().unwrap_or("").to_string(), body.to_string())
+}
+
+#[test]
+fn listen_endpoint_serves_the_snapshot_file_bytes() {
+    use std::io::BufRead as _;
+    let dir = scratch("listen");
+    let stream_path = dir.join("stream.txt");
+    let snap_path = dir.join("snap.json");
+    // A finished recorded stream, minus the `end` line so the follower
+    // keeps serving while we probe the endpoints.
+    let record_ok = Command::new(bin())
+        .args(["monitor", "record", "--days", "0.1", "--seed", "77", "--arrivals-per-hour", "6"])
+        .args(["--out", &stream_path.display().to_string()])
+        .status()
+        .expect("spawning tpufleet")
+        .success();
+    assert!(record_ok);
+    let full = read(&stream_path);
+    let partial: String = full.lines().filter(|l| *l != "end").map(|l| format!("{l}\n")).collect();
+    std::fs::write(&stream_path, &partial).unwrap();
+    let mut child = Command::new(bin())
+        .args(["monitor", "--in", &stream_path.display().to_string(), "--follow"])
+        .args(["--width-s", "900", "--ring-windows", "4", "--snapshot-every", "600"])
+        .args(["--listen", "127.0.0.1:0"])
+        .args(["--out", &snap_path.display().to_string()])
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .expect("spawning follower");
+    // The ephemeral port is announced on stderr.
+    let mut stderr = std::io::BufReader::new(child.stderr.take().expect("piped stderr"));
+    let addr = loop {
+        let mut line = String::new();
+        assert!(stderr.read_line(&mut line).unwrap() > 0, "follower exited before listening");
+        if let Some(rest) = line.trim().strip_prefix("monitor: dashboard listening on http://") {
+            break rest.to_string();
+        }
+    };
+    // Once the follower idles at EOF, the last emit wrote --out and the
+    // dashboard cache from the same rendered string: poll until the
+    // endpoint serves exactly the file's bytes.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let body = loop {
+        assert!(std::time::Instant::now() < deadline, "endpoint never matched the file");
+        std::thread::sleep(std::time::Duration::from_millis(150));
+        let (status, body) = http_get(&addr, "/snapshot");
+        assert!(status.contains("200"), "{status}");
+        if !body.is_empty() && snap_path.exists() && body == read(&snap_path) {
+            break body;
+        }
+    };
+    let doc = Json::parse(&body).expect("snapshot JSON parses");
+    assert_eq!(doc.get("final").as_bool(), Some(false));
+    assert!(doc.get("fleet").get("mpg").as_f64().is_some());
+    // The other endpoints serve well-formed documents too.
+    let (status, streams) = http_get(&addr, "/streams");
+    assert!(status.contains("200"), "{status}");
+    let streams = Json::parse(&streams).expect("streams JSON parses");
+    assert_eq!(streams.get("stream_count").as_f64(), Some(1.0));
+    let (status, series) = http_get(&addr, "/series");
+    assert!(status.contains("200"), "{status}");
+    assert!(Json::parse(&series).expect("series JSON parses").get("windows").as_arr().is_some());
+    let (status, _) = http_get(&addr, "/nope");
+    assert!(status.contains("404"), "{status}");
+    // Land the `end` line: the follower finishes and writes the final
+    // snapshot, which must match a one-shot replay of the full stream.
+    std::fs::write(&stream_path, &full).unwrap();
+    let status = child.wait().expect("waiting for follower");
+    assert!(status.success());
+    let once_path = dir.join("snap_once.json");
+    let full_path = dir.join("full.txt");
+    std::fs::write(&full_path, &full).unwrap();
+    let ok = Command::new(bin())
+        .args(["monitor", "--in", &full_path.display().to_string()])
+        .args(["--width-s", "900", "--ring-windows", "4"])
+        .args(["--out", &once_path.display().to_string()])
+        .status()
+        .expect("spawning tpufleet")
+        .success();
+    assert!(ok);
+    assert_eq!(read(&snap_path), read(&once_path), "final follow snapshot vs one-shot replay");
+}

@@ -155,6 +155,59 @@ fn protocol_lines_round_trip_every_recorded_event() {
 }
 
 #[test]
+fn follow_mode_tail_ingest_matches_one_shot_replay() {
+    // Satellite contract for `monitor --follow`: a follower tailing a
+    // file that is being appended to concurrently must land on exactly
+    // the snapshot a one-shot replay of the finished stream produces.
+    use std::io::Write as _;
+    use std::process::Command;
+    let bin = env!("CARGO_BIN_EXE_tpufleet");
+    let dir = std::env::temp_dir().join(format!("tpufleet-follow-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    let stream = recorded_stream(0xF011, 0.25);
+    let lines: Vec<&str> = stream.lines().collect();
+    let full_path = dir.join("full.txt");
+    let tail_path = dir.join("tail.txt");
+    std::fs::write(&full_path, &stream).unwrap();
+    // Seed the tailed file with the first 40%, then start the follower.
+    let head = lines.len() * 2 / 5;
+    let seed_text: String = lines[..head].iter().map(|l| format!("{l}\n")).collect();
+    std::fs::write(&tail_path, &seed_text).unwrap();
+    let follow_snap = dir.join("follow.json");
+    let mut child = Command::new(bin)
+        .args(["monitor", "--in", &tail_path.display().to_string(), "--follow"])
+        .args(["--width-s", "1800", "--ring-windows", "6"])
+        .args(["--out", &follow_snap.display().to_string()])
+        .spawn()
+        .expect("spawning follower");
+    // Append the rest in a few bursts while the follower is reading;
+    // the last burst carries the `end` line that lets it finish.
+    let mut file = std::fs::OpenOptions::new().append(true).open(&tail_path).unwrap();
+    for chunk in lines[head..].chunks(lines.len() / 4 + 1) {
+        std::thread::sleep(std::time::Duration::from_millis(250));
+        let text: String = chunk.iter().map(|l| format!("{l}\n")).collect();
+        file.write_all(text.as_bytes()).unwrap();
+        file.flush().unwrap();
+    }
+    drop(file);
+    let status = child.wait().expect("waiting for follower");
+    assert!(status.success(), "follower exited with {status}");
+    let once_snap = dir.join("once.json");
+    let ok = Command::new(bin)
+        .args(["monitor", "--in", &full_path.display().to_string()])
+        .args(["--width-s", "1800", "--ring-windows", "6"])
+        .args(["--out", &once_snap.display().to_string()])
+        .status()
+        .expect("spawning one-shot monitor")
+        .success();
+    assert!(ok, "one-shot monitor failed");
+    let follow = std::fs::read_to_string(&follow_snap).unwrap();
+    let once = std::fs::read_to_string(&once_snap).unwrap();
+    assert_eq!(follow, once, "tail ingest must converge on the one-shot snapshot bytes");
+}
+
+#[test]
 fn recorder_and_primary_ledger_see_the_same_emission() {
     // The recorder is a passive observer: attaching it must not perturb
     // the primary ledger's accounting (same config, same seed, with and
