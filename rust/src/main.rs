@@ -12,7 +12,9 @@
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::hlo::{CostAnalysis, HloModule};
 use tpufleet::metrics::{goodput, WindowedLedger};
-use tpufleet::monitor::{http, merge, proto, series_json, snapshot_json, MonitorLedger, StreamStats};
+use tpufleet::monitor::{
+    ckpt, http, merge, proto, series_json, snapshot_json, MonitorLedger, StreamStats,
+};
 use tpufleet::report::{self, figures};
 use tpufleet::roofline;
 use tpufleet::runtime::{Engine, Manifest, Trainer};
@@ -591,6 +593,11 @@ fn sweep_spec_json(args: &Args, total: usize) -> tpufleet::util::Json {
             "arrivals_per_hour",
             Json::num(args.get_f64("arrivals-per-hour", SWEEP_DEFAULT_ARRIVALS)),
         ),
+        // The *configured* retry budget (not attempts actually used —
+        // those are run-dependent telemetry and live on stderr only), so
+        // a faulted run that recovers emits a report byte-identical to
+        // the clean run under the same flags.
+        ("retries", Json::num(args.get_usize("retries", 0) as f64)),
         ("behavior_version", Json::num(SIM_BEHAVIOR_VERSION as f64)),
         ("variant_count", Json::num(total as f64)),
     ])
@@ -600,14 +607,33 @@ fn print_cache_stats(cache: &SweepCache, hits: u64, misses: u64) {
     let st = cache.stats();
     eprintln!(
         "cache stats: {hits} hits / {misses} misses this run; {} entries, {:.2} MiB \
-         in {}, entry age {:.0}s-{:.0}s; {} evicted by this process",
+         in {}, entry age {:.0}s-{:.0}s; {} evicted by this process; \
+         {} corrupt quarantined",
         st.entries,
         st.bytes as f64 / (1024.0 * 1024.0),
         cache.dir().display(),
         st.newest_age_s,
         st.oldest_age_s,
         st.evictions,
+        st.corrupt,
     );
+}
+
+/// Post-sweep quarantine telemetry: unreadable entries the run (or a
+/// previous one) renamed aside. Unconditional — unlike `--cache-stats`,
+/// corruption is worth a line even when nobody asked.
+fn warn_corrupt_entries(cache: &Option<SweepCache>) {
+    if let Some(c) = cache {
+        let corrupt = c.stats().corrupt;
+        if corrupt > 0 {
+            eprintln!(
+                "cache: {corrupt} corrupt entr{} quarantined as .corrupt in {} \
+                 (re-simulated on miss; delete the .corrupt files to reclaim space)",
+                if corrupt == 1 { "y" } else { "ies" },
+                c.dir().display(),
+            );
+        }
+    }
 }
 
 /// Build the sweep grid from the CLI axes. Prints the offending flag and
@@ -705,7 +731,7 @@ fn build_sweep_spec(args: &Args) -> Result<SweepSpec, i32> {
     Ok(spec)
 }
 
-const SWEEP_FLAGS: [&str; 20] = [
+const SWEEP_FLAGS: [&str; 22] = [
     "days",
     "seed",
     "workers",
@@ -723,6 +749,8 @@ const SWEEP_FLAGS: [&str; 20] = [
     "cache-stats",
     "shards",
     "shard-cmd",
+    "retries",
+    "inject-faults",
     "windowed",
     "full-ledger",
     "materialize-trace",
@@ -731,6 +759,11 @@ const SWEEP_FLAGS: [&str; 20] = [
 fn cmd_sweep(args: &Args) -> i32 {
     if let Some(code) = check_flags(args, "sweep", &SWEEP_FLAGS) {
         return code;
+    }
+    // Hidden chaos-test path: arm the fault registry before any site is
+    // hit (equivalent to exporting TPUFLEET_FAULTS).
+    if let Some(spec) = args.get("inject-faults") {
+        tpufleet::util::fault::install(spec);
     }
     // `--windowed` names the default accounting explicitly (the same
     // spelling attribution, trace replay, and monitor use); it cannot be
@@ -902,6 +935,7 @@ fn cmd_sweep_serial(args: &Args, spec: SweepSpec) -> i32 {
         "done in {:.2}s ({hits}/{total} cache hits); wrote {out_path}",
         t0.elapsed().as_secs_f64()
     );
+    warn_corrupt_entries(&cache);
     if args.has_flag("cache-stats") {
         match &cache {
             Some(c) => print_cache_stats(c, hits as u64, (total - hits) as u64),
@@ -926,6 +960,22 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
 
     let out_path = args.get("out").unwrap_or("sweep_report.json").to_string();
     let progress = args.has_flag("progress");
+    // A bare `--retries` (no value) parses as a flag; silently running
+    // without a retry budget would defeat the operator's intent.
+    if args.has_flag("retries") {
+        eprintln!("bad --retries value: the flag requires an integer >= 0");
+        return 2;
+    }
+    let retries: u32 = match args.get("retries") {
+        None => 0,
+        Some(s) => match s.parse() {
+            Ok(n) => n,
+            Err(_) => {
+                eprintln!("bad --retries value: {s} (want an integer >= 0)");
+                return 2;
+            }
+        },
+    };
     let cache = match sweep_cache_from_args(args) {
         Ok(cache) => cache,
         Err(code) => return code,
@@ -987,6 +1037,12 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
         if args.has_flag("full-ledger") {
             argv.push("--full-ledger".to_string());
         }
+        // Chaos specs given via the CLI (rather than TPUFLEET_FAULTS,
+        // which subprocesses inherit) must reach the workers explicitly.
+        if let Some(spec) = args.get("inject-faults") {
+            argv.push("--inject-faults".to_string());
+            argv.push(spec.to_string());
+        }
         cmds.push(argv);
     }
 
@@ -998,22 +1054,31 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
         }
     );
     let t0 = std::time::Instant::now();
-    let done = AtomicUsize::new(0);
-    let hits = AtomicUsize::new(0);
+    // Progress counters are PER SHARD so a retried shard's replayed
+    // progress lines (its finished variants stream back as cache hits)
+    // reset instead of double-counting; the displayed totals are sums.
+    let done: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+    let hits: Vec<AtomicUsize> = (0..shards).map(|_| AtomicUsize::new(0)).collect();
+    let sum = |v: &[AtomicUsize]| -> usize { v.iter().map(|c| c.load(Ordering::Relaxed)).sum() };
     // Workers speak the per-variant progress protocol on stdout; anything
     // else they print is forwarded tagged with the shard index. The
     // aggregate ETA mirrors the serial path: rate from simulated variants
     // only, so a partially warm cache doesn't fake a wildly optimistic
-    // finish time.
-    let statuses =
-        subproc::run_all_streaming(&cmds, |k, line| match shard::parse_progress_line(line) {
+    // finish time. A dead worker is re-spawned up to `--retries` times
+    // with bounded deterministic backoff; it resumes from the shared
+    // cache, so the merged report stays byte-identical to a clean run.
+    let outcomes = subproc::run_supervised(
+        &cmds,
+        retries,
+        |k, line| match shard::parse_progress_line(line) {
             Some((cached, name)) => {
-                let d = done.fetch_add(1, Ordering::Relaxed) + 1;
+                done[k].fetch_add(1, Ordering::Relaxed);
                 if cached {
-                    hits.fetch_add(1, Ordering::Relaxed);
+                    hits[k].fetch_add(1, Ordering::Relaxed);
                 }
                 if progress {
-                    let h = hits.load(Ordering::Relaxed);
+                    let d = sum(&done);
+                    let h = sum(&hits);
                     let elapsed = t0.elapsed().as_secs_f64();
                     let simmed = d.saturating_sub(h);
                     let eta = if simmed > 0 {
@@ -1029,23 +1094,43 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
                 }
             }
             None => eprintln!("[shard {k}] {line}"),
-        });
+        },
+        |k, attempt, failure, delay| {
+            // The dead child's stdout is drained before this fires, so
+            // zeroing the shard's counters races nothing.
+            done[k].store(0, Ordering::Relaxed);
+            hits[k].store(0, Ordering::Relaxed);
+            eprintln!(
+                "shard {k} attempt {} failed ({failure}); respawning in {}ms \
+                 (attempt {} of {}, resuming from the shared cache)",
+                attempt + 1,
+                delay.as_millis(),
+                attempt + 2,
+                retries + 1,
+            );
+        },
+    );
     let mut failed = false;
-    for (k, st) in statuses.iter().enumerate() {
-        match st {
-            Ok(s) if s.success() => {}
-            Ok(s) => {
+    for (k, oc) in outcomes.iter().enumerate() {
+        match &oc.result {
+            Ok(s) if s.success() => {
+                if oc.attempts > 1 {
+                    eprintln!("shard {k} recovered on attempt {} of {}", oc.attempts, retries + 1);
+                }
+            }
+            _ => {
                 let hint = if cache.is_some() {
                     "finished variants persist in the cache — re-run the same \
                      command to resume"
                 } else {
                     "cache is off (--no-cache), so a re-run recomputes its variants"
                 };
-                eprintln!("shard {k} failed ({s}); {hint}");
-                failed = true;
-            }
-            Err(e) => {
-                eprintln!("shard {k} failed to start: {e}");
+                let err = shard::ShardFailure {
+                    shard: k,
+                    attempts: oc.attempts,
+                    statuses: oc.failures.clone(),
+                };
+                eprintln!("{err}; {hint}");
                 failed = true;
             }
         }
@@ -1130,6 +1215,7 @@ fn cmd_sweep_coordinator(args: &Args, spec: SweepSpec, shards: usize) -> i32 {
          wrote {out_path}",
         t0.elapsed().as_secs_f64()
     );
+    warn_corrupt_entries(&cache);
     if args.has_flag("cache-stats") {
         match &cache {
             Some(c) => print_cache_stats(c, cache_hits as u64, (total - cache_hits) as u64),
@@ -1149,10 +1235,22 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
 
     const WORKER_USAGE: &str =
         "usage: tpufleet sweep-worker --manifest FILE --out FILE \
-         [--cache-dir DIR | --no-cache] [--cache-max-mb N] [--full-ledger]";
-    let known = ["manifest", "out", "cache-dir", "no-cache", "cache-max-mb", "full-ledger"];
+         [--cache-dir DIR | --no-cache] [--cache-max-mb N] [--full-ledger] \
+         [--inject-faults SPEC]";
+    let known = [
+        "manifest",
+        "out",
+        "cache-dir",
+        "no-cache",
+        "cache-max-mb",
+        "full-ledger",
+        "inject-faults",
+    ];
     if let Some(code) = check_flags(args, "sweep-worker", &known) {
         return code;
+    }
+    if let Some(spec) = args.get("inject-faults") {
+        tpufleet::util::fault::install(spec);
     }
     let Some(manifest_path) = args.get("manifest") else {
         eprintln!("{WORKER_USAGE}");
@@ -1175,12 +1273,6 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
             return 2;
         }
     };
-    // Test hook: exit abruptly after N variants, simulating a worker
-    // killed mid-run. Finished variants are already in the shared cache,
-    // so the coordinator's re-run resumes instead of recomputing.
-    let fail_after: Option<usize> = std::env::var("TPUFLEET_SHARD_FAIL_AFTER")
-        .ok()
-        .and_then(|s| s.parse().ok());
     let indices: Vec<usize> = task.variants.iter().map(|(i, _)| *i).collect();
     let mut rows: Vec<(usize, bool, Json)> = Vec::new();
     let stdout = std::io::stdout();
@@ -1191,8 +1283,12 @@ fn cmd_sweep_worker(args: &Args) -> i32 {
         let mut lock = stdout.lock();
         let _ = writeln!(lock, "{}", shard::progress_line(s.cached, &s.name));
         let _ = lock.flush();
-        if fail_after.is_some_and(|n| rows.len() >= n) {
-            std::process::exit(86);
+        // Chaos site: die abruptly after a completed variant (subsumes
+        // the legacy TPUFLEET_SHARD_FAIL_AFTER hook). Finished variants
+        // are already in the shared cache, so a supervisor re-spawn (or
+        // an operator re-run) resumes instead of recomputing.
+        if tpufleet::util::fault::fire(tpufleet::util::fault::Site::ShardWorkerExit) {
+            std::process::exit(tpufleet::util::fault::INJECTED_EXIT_CODE);
         }
     });
     let report = shard::shard_report(&task, &rows);
@@ -1306,7 +1402,7 @@ fn cmd_trace(args: &Args) -> i32 {
 
 /// Flag vocabulary for `monitor` stream ingest (the `record` subaction
 /// declares its own).
-const MONITOR_FLAGS: [&str; 13] = [
+const MONITOR_FLAGS: [&str; 17] = [
     "in",
     "out",
     "width-s",
@@ -1320,6 +1416,10 @@ const MONITOR_FLAGS: [&str; 13] = [
     "reorder-cap",
     "listen",
     "series-out",
+    "checkpoint",
+    "resume",
+    "quarantine",
+    "inject-faults",
 ];
 
 /// Per-line `monitor` state shared by the stdin, file, and `--follow`
@@ -1354,6 +1454,9 @@ struct MonitorIngest {
     /// Streaming mode only: the `--listen` dashboard's render cache;
     /// refreshed whenever a snapshot is emitted.
     dash: Option<http::SharedDash>,
+    /// Streaming mode only: `--checkpoint FILE`, written atomically at
+    /// every snapshot emission so a killed monitor can `--resume`.
+    ckpt: Option<String>,
 }
 
 impl MonitorIngest {
@@ -1390,9 +1493,90 @@ impl MonitorIngest {
             if self.ml.watermark_s() - self.last_emit >= every {
                 self.last_emit = self.ml.watermark_s();
                 self.emit(false)?;
+                self.write_ckpt()?;
+                // Chaos site: die right after a completed snapshot +
+                // checkpoint, the worst honest crash point (anything
+                // later is covered by the checkpoint just written).
+                if tpufleet::util::fault::fire(tpufleet::util::fault::Site::MonitorExit) {
+                    std::process::exit(tpufleet::util::fault::INJECTED_EXIT_CODE);
+                }
             }
         }
         Ok(done)
+    }
+
+    /// Write the crash-safe checkpoint (no-op without `--checkpoint`):
+    /// ledger + validator state, raw lines consumed, and the emit
+    /// watermark — everything `--resume` needs to continue the exact
+    /// addition chains mid-stream.
+    fn write_ckpt(&self) -> Result<(), String> {
+        use tpufleet::util::Json;
+        let Some(path) = &self.ckpt else {
+            return Ok(());
+        };
+        let Json::Obj(mut doc) = ckpt::header_json() else {
+            unreachable!("checkpoint header is an object")
+        };
+        doc.insert("mode".to_string(), Json::str("single"));
+        doc.insert("lines".to_string(), Json::num(self.lines as f64));
+        doc.insert("event_count".to_string(), Json::num(self.event_count as f64));
+        doc.insert("last_emit".to_string(), Json::f64b(self.last_emit));
+        doc.insert("stream_name".to_string(), Json::str(&self.stream_name));
+        doc.insert("ledger".to_string(), self.ml.ckpt_json());
+        doc.insert("validator".to_string(), self.validator.ckpt_json());
+        doc.insert(
+            "stats".to_string(),
+            Json::obj(vec![
+                ("jobs", Json::num(self.stats.jobs as f64)),
+                ("spans", Json::num(self.stats.spans as f64)),
+                ("pg_samples", Json::num(self.stats.pg_samples as f64)),
+                ("cap_events", Json::num(self.stats.cap_events as f64)),
+            ]),
+        );
+        ckpt::write_atomic(std::path::Path::new(path), &Json::Obj(doc))
+            .map_err(|e| format!("writing checkpoint {path} failed: {e}"))
+    }
+
+    /// Restore ingest state from a `--resume` checkpoint document
+    /// (version header already checked). Returns the number of raw
+    /// input lines the dead process had consumed — the caller skips
+    /// exactly that many before feeding.
+    fn restore(&mut self, doc: &tpufleet::util::Json) -> Result<u64, String> {
+        use tpufleet::util::Json;
+        if doc.get("mode").as_str() != Some("single") {
+            return Err("checkpoint was taken by a --merge monitor; add --merge".to_string());
+        }
+        let ml = MonitorLedger::from_ckpt(doc.get("ledger"))?;
+        if ml.width_s().to_bits() != self.ml.width_s().to_bits()
+            || ml.ring_windows() != self.ml.ring_windows()
+        {
+            return Err(format!(
+                "checkpoint was taken at --width-s {} --ring-windows {}; \
+                 resume with the same values (got --width-s {} --ring-windows {})",
+                ml.width_s(),
+                ml.ring_windows(),
+                self.ml.width_s(),
+                self.ml.ring_windows()
+            ));
+        }
+        self.ml = ml;
+        self.validator = proto::Validator::from_ckpt(doc.get("validator"))?;
+        let lines = doc.get("lines").as_u64().ok_or("checkpoint: bad `lines`")?;
+        self.lines = lines;
+        self.event_count =
+            doc.get("event_count").as_u64().ok_or("checkpoint: bad `event_count`")?;
+        self.last_emit = doc.get("last_emit").as_f64b().ok_or("checkpoint: bad `last_emit`")?;
+        let stats = doc.get("stats");
+        self.stats = StreamStats {
+            jobs: stats.get("jobs").as_u64().ok_or("checkpoint: bad `stats`")? as usize,
+            spans: stats.get("spans").as_u64().ok_or("checkpoint: bad `stats`")?,
+            pg_samples: stats.get("pg_samples").as_u64().ok_or("checkpoint: bad `stats`")?,
+            cap_events: stats.get("cap_events").as_u64().ok_or("checkpoint: bad `stats`")?,
+        };
+        if let Some(name) = doc.get("stream_name").as_str() {
+            self.stream_name = name.to_string();
+        }
+        Ok(lines)
     }
 
     /// The snapshot document at the current watermark, rendered. The
@@ -1440,6 +1624,7 @@ impl MonitorIngest {
             watermark_s: self.ml.watermark_s(),
             lag_s: 0.0,
             finished: is_final,
+            quarantined: None,
             buffered: 0,
             peak_buffered: 0,
             events: self.event_count,
@@ -1504,24 +1689,21 @@ impl MonitorIngest {
 
 /// Tail `path` like `tail -f`, feeding complete lines as the writer
 /// lands them, until the `end` line (or a stream error). A partial
-/// trailing line is held until the writer finishes it.
-fn monitor_follow(path: &str, ing: &mut MonitorIngest) -> Result<(), String> {
-    use std::io::BufRead as _;
-    let file = std::fs::File::open(path).map_err(|e| format!("opening {path} failed: {e}"))?;
-    let mut reader = std::io::BufReader::new(file);
-    let mut pending = String::new();
+/// trailing line is held until the writer finishes it; `skip_lines`
+/// complete lines are discarded first (`--resume` replays past what the
+/// dead process already ingested).
+fn monitor_follow(path: &str, ing: &mut MonitorIngest, skip_lines: u64) -> Result<(), String> {
+    let mut reader = TailReader::open(path, true)?;
+    let mut skip = skip_lines;
     loop {
-        let n = reader
-            .read_line(&mut pending)
-            .map_err(|e| format!("reading {path} failed: {e}"))?;
-        if n == 0 || !pending.ends_with('\n') {
-            std::thread::sleep(std::time::Duration::from_millis(200));
-            continue;
-        }
-        let done = ing.feed(&pending)?;
-        pending.clear();
-        if done {
-            return Ok(());
+        match reader.next_line()? {
+            None => std::thread::sleep(std::time::Duration::from_millis(200)),
+            Some(_) if skip > 0 => skip -= 1,
+            Some(line) => {
+                if ing.feed(&line)? {
+                    return Ok(());
+                }
+            }
         }
     }
 }
@@ -1536,6 +1718,9 @@ fn cmd_monitor(args: &Args) -> i32 {
     }
     if let Some(code) = check_flags(args, "monitor", &MONITOR_FLAGS) {
         return code;
+    }
+    if let Some(spec) = args.get("inject-faults") {
+        tpufleet::util::fault::install(spec);
     }
     let width_s = args.get_f64("width-s", 3600.0);
     if !width_s.is_finite() || width_s <= 0.0 {
@@ -1580,6 +1765,17 @@ fn cmd_monitor(args: &Args) -> i32 {
         eprintln!("monitor: --stream-ids/--reorder-cap only apply with --merge");
         return 2;
     }
+    let quarantine = args.has_flag("quarantine");
+    if quarantine && !merge_mode {
+        eprintln!("monitor: --quarantine only applies with --merge (a single bad stream IS the run)");
+        return 2;
+    }
+    let ckpt_path = args.get("checkpoint").map(str::to_string);
+    let resume_path = args.get("resume").map(str::to_string);
+    if batch && (ckpt_path.is_some() || resume_path.is_some()) {
+        eprintln!("monitor: --checkpoint/--resume require streaming mode (drop --batch)");
+        return 2;
+    }
     let dash = match args.get("listen") {
         None => None,
         Some(addr) => {
@@ -1600,7 +1796,18 @@ fn cmd_monitor(args: &Args) -> i32 {
         }
     };
     if merge_mode {
-        return cmd_monitor_merge(args, width_s, ring_windows, batch, follow, snapshot_every, dash);
+        let opts = MergeOpts {
+            width_s,
+            ring_windows,
+            batch,
+            follow,
+            snapshot_every,
+            dash,
+            ckpt: ckpt_path,
+            resume: resume_path,
+            quarantine,
+        };
+        return cmd_monitor_merge(args, opts);
     }
     let stream_name = match args.get("in") {
         Some(path) if !follow => match stream_id_of(path) {
@@ -1631,10 +1838,26 @@ fn cmd_monitor(args: &Args) -> i32 {
         stream_name,
         series_out: args.get("series-out").map(str::to_string),
         dash,
+        ckpt: ckpt_path,
     };
+    let mut skip_lines = 0u64;
+    if let Some(path) = &resume_path {
+        let restored = ckpt::read(std::path::Path::new(path)).and_then(|doc| ing.restore(&doc));
+        match restored {
+            Ok(n) => skip_lines = n,
+            Err(e) => {
+                eprintln!("monitor: {e}");
+                return 1;
+            }
+        }
+        eprintln!(
+            "monitor: resumed from {path} at line {skip_lines}, watermark {:.1}s",
+            ing.ml.watermark_s()
+        );
+    }
     ing.dash_refresh(false);
     let fed = if follow {
-        monitor_follow(args.get("in").expect("checked above"), &mut ing)
+        monitor_follow(args.get("in").expect("checked above"), &mut ing, skip_lines)
     } else {
         let text = match args.get("in") {
             Some(path) => {
@@ -1649,7 +1872,7 @@ fn cmd_monitor(args: &Args) -> i32 {
             }
         };
         text.and_then(|text| {
-            for line in text.lines() {
+            for line in text.lines().skip(skip_lines as usize) {
                 if ing.feed(line)? {
                     break;
                 }
@@ -1657,7 +1880,7 @@ fn cmd_monitor(args: &Args) -> i32 {
             Ok(())
         })
     };
-    let done = fed.and_then(|()| ing.emit(true));
+    let done = fed.and_then(|()| ing.emit(true)).and_then(|()| ing.write_ckpt());
     if let Err(e) = done {
         eprintln!("monitor: {e}");
         return 1;
@@ -1687,15 +1910,25 @@ fn stream_id_of(path: &str) -> Result<Option<String>, String> {
     }
 }
 
-/// Incremental line reader shared by the merged one-shot and `--follow`
-/// paths: returns complete lines as they become available, holding a
-/// partial trailing line until the writer finishes it. In one-shot mode
-/// EOF flushes any final unterminated line and marks the reader done;
-/// in follow mode EOF just means "nothing yet".
+/// Incremental line reader shared by the single-stream `--follow`, the
+/// merged one-shot, and the merged `--follow` paths: returns complete
+/// lines as they become available, holding a partial trailing line until
+/// the writer finishes it. In one-shot mode EOF flushes any final
+/// unterminated line and marks the reader done; in follow mode EOF just
+/// means "nothing yet".
+///
+/// Reads are BYTE-based (`read_until`), not `String::read_line`: a
+/// writer caught mid-way through a multi-byte UTF-8 character must look
+/// like "line not finished yet", not a stream error — `read_line` would
+/// fail with `InvalidData` AND lose the bytes it had consumed. Only a
+/// complete (newline-terminated) line is converted, lossily: the
+/// protocol is ASCII, so replacement characters only ever appear in
+/// corrupt lines, which then fail `Event::parse` with a line-numbered
+/// error (or quarantine, under `--quarantine`).
 struct TailReader {
     path: String,
     reader: std::io::BufReader<std::fs::File>,
-    pending: String,
+    pending: Vec<u8>,
     follow: bool,
     eof: bool,
 }
@@ -1706,7 +1939,7 @@ impl TailReader {
         Ok(TailReader {
             path: path.to_string(),
             reader: std::io::BufReader::new(file),
-            pending: String::new(),
+            pending: Vec::new(),
             follow,
             eof: false,
         })
@@ -1718,8 +1951,11 @@ impl TailReader {
         use std::io::BufRead as _;
         let n = self
             .reader
-            .read_line(&mut self.pending)
+            .read_until(b'\n', &mut self.pending)
             .map_err(|e| format!("reading {} failed: {e}", self.path))?;
+        let take = |pending: &mut Vec<u8>| {
+            String::from_utf8_lossy(&std::mem::take(pending)).into_owned()
+        };
         if n == 0 {
             if self.follow {
                 return Ok(None);
@@ -1728,12 +1964,12 @@ impl TailReader {
             if self.pending.is_empty() {
                 return Ok(None);
             }
-            return Ok(Some(std::mem::take(&mut self.pending)));
+            return Ok(Some(take(&mut self.pending)));
         }
-        if !self.pending.ends_with('\n') {
+        if self.pending.last() != Some(&b'\n') {
             return Ok(None);
         }
-        Ok(Some(std::mem::take(&mut self.pending)))
+        Ok(Some(take(&mut self.pending)))
     }
 }
 
@@ -1808,6 +2044,107 @@ fn emit_merged(
     Ok(())
 }
 
+/// `monitor --merge` options resolved by [`cmd_monitor`] (bundled so the
+/// merge entrypoint keeps a readable signature).
+struct MergeOpts {
+    width_s: f64,
+    ring_windows: usize,
+    batch: bool,
+    follow: bool,
+    snapshot_every: Option<f64>,
+    dash: Option<http::SharedDash>,
+    ckpt: Option<String>,
+    resume: Option<String>,
+    quarantine: bool,
+}
+
+/// State restored from a `--merge` checkpoint: everything the dead
+/// process held, plus how many raw lines of each input it had consumed.
+struct MergeResume {
+    merger: merge::StreamMerger,
+    ml: MonitorLedger,
+    validators: Vec<proto::Validator>,
+    lines: Vec<u64>,
+    last_emit: f64,
+}
+
+/// Write the merged-monitor checkpoint: ledger + merger + per-stream
+/// validator state and consumed-line counts, under the version header.
+fn write_merge_ckpt(
+    path: &str,
+    ml: &MonitorLedger,
+    merger: &merge::StreamMerger,
+    validators: &[proto::Validator],
+    lines: &[u64],
+    last_emit: f64,
+) -> Result<(), String> {
+    use tpufleet::util::Json;
+    let Json::Obj(mut doc) = ckpt::header_json() else {
+        unreachable!("checkpoint header is an object")
+    };
+    doc.insert("mode".to_string(), Json::str("merge"));
+    doc.insert("lines".to_string(), Json::arr(lines.iter().map(|&n| Json::num(n as f64))));
+    doc.insert("last_emit".to_string(), Json::f64b(last_emit));
+    doc.insert("ledger".to_string(), ml.ckpt_json());
+    doc.insert("merger".to_string(), merger.ckpt_json());
+    doc.insert(
+        "validators".to_string(),
+        Json::arr(validators.iter().map(|v| v.ckpt_json())),
+    );
+    ckpt::write_atomic(std::path::Path::new(path), &Json::Obj(doc))
+        .map_err(|e| format!("writing checkpoint {path} failed: {e}"))
+}
+
+/// Read and validate a `--merge` checkpoint against this invocation's
+/// stream list and window geometry.
+fn read_merge_ckpt(
+    path: &str,
+    ids: &[String],
+    width_s: f64,
+    ring_windows: usize,
+) -> Result<MergeResume, String> {
+    let doc = ckpt::read(std::path::Path::new(path))?;
+    if doc.get("mode").as_str() != Some("merge") {
+        return Err("checkpoint was taken by a single-stream monitor; drop --merge".to_string());
+    }
+    let ml = MonitorLedger::from_ckpt(doc.get("ledger"))?;
+    if ml.width_s().to_bits() != width_s.to_bits() || ml.ring_windows() != ring_windows {
+        return Err(format!(
+            "checkpoint was taken at --width-s {} --ring-windows {}; \
+             resume with the same values (got --width-s {width_s} --ring-windows {ring_windows})",
+            ml.width_s(),
+            ml.ring_windows()
+        ));
+    }
+    let merger = merge::StreamMerger::from_ckpt(doc.get("merger"))?;
+    if merger.stream_count() != ids.len() {
+        return Err(format!(
+            "checkpoint merges {} stream(s) but --in names {}",
+            merger.stream_count(),
+            ids.len()
+        ));
+    }
+    let validators = doc
+        .get("validators")
+        .as_arr()
+        .ok_or("checkpoint: bad `validators`")?
+        .iter()
+        .map(proto::Validator::from_ckpt)
+        .collect::<Result<Vec<_>, String>>()?;
+    let lines = doc
+        .get("lines")
+        .as_arr()
+        .ok_or("checkpoint: bad `lines`")?
+        .iter()
+        .map(|v| v.as_u64().ok_or_else(|| "checkpoint: bad `lines`".to_string()))
+        .collect::<Result<Vec<u64>, String>>()?;
+    if validators.len() != ids.len() || lines.len() != ids.len() {
+        return Err("checkpoint stream counts disagree with --in".to_string());
+    }
+    let last_emit = doc.get("last_emit").as_f64b().ok_or("checkpoint: bad `last_emit`")?;
+    Ok(MergeResume { merger, ml, validators, lines, last_emit })
+}
+
 /// `monitor --merge`: pump N stream files through the [`merge::StreamMerger`]
 /// into one [`MonitorLedger`]. `--batch` buffers every stream completely
 /// (unbounded reorder buffers) before draining — the watermark-ordered
@@ -1815,15 +2152,18 @@ fn emit_merged(
 /// with pull-based backpressure; both ingest the identical merged
 /// sequence, so their snapshots are byte-identical (the CI
 /// dashboard-smoke `cmp` gate).
-fn cmd_monitor_merge(
-    args: &Args,
-    width_s: f64,
-    ring_windows: usize,
-    batch: bool,
-    follow: bool,
-    snapshot_every: Option<f64>,
-    dash: Option<http::SharedDash>,
-) -> i32 {
+fn cmd_monitor_merge(args: &Args, opts: MergeOpts) -> i32 {
+    let MergeOpts {
+        width_s,
+        ring_windows,
+        batch,
+        follow,
+        snapshot_every,
+        dash,
+        ckpt: ckpt_path,
+        resume,
+        quarantine,
+    } = opts;
     let Some(inputs) = args.get("in") else {
         eprintln!("monitor: --merge requires --in FILE,FILE,.. (stdin cannot be merged)");
         return 2;
@@ -1878,16 +2218,48 @@ fn cmd_monitor_merge(
         progress: args.has_flag("progress"),
     };
     let run = || -> Result<(), String> {
-        let mut merger = merge::StreamMerger::new(&ids, cap);
-        let mut ml = MonitorLedger::new(width_s, ring_windows);
+        let (mut merger, mut ml, mut validators, mut lines, mut last_emit) = match &resume {
+            None => (
+                merge::StreamMerger::new(&ids, cap),
+                MonitorLedger::new(width_s, ring_windows),
+                ids.iter().map(|id| proto::Validator::labeled(id)).collect::<Vec<_>>(),
+                vec![0u64; paths.len()],
+                0.0_f64,
+            ),
+            Some(path) => {
+                let r = read_merge_ckpt(path, &ids, width_s, ring_windows)?;
+                eprintln!(
+                    "monitor: resumed {} streams from {path}, watermark {:.1}s",
+                    ids.len(),
+                    r.ml.watermark_s()
+                );
+                (r.merger, r.ml, r.validators, r.lines, r.last_emit)
+            }
+        };
         let mut readers = Vec::new();
         for path in &paths {
             readers.push(TailReader::open(path, follow)?);
         }
-        let mut validators: Vec<proto::Validator> =
-            ids.iter().map(|id| proto::Validator::labeled(id)).collect();
-        let mut lines = vec![0u64; paths.len()];
-        let mut last_emit = 0.0_f64;
+        // Skip the raw lines the checkpointed process already consumed
+        // (complete lines only — a torn tail was never counted).
+        for (s, reader) in readers.iter_mut().enumerate() {
+            let mut remaining = lines[s];
+            while remaining > 0 {
+                match reader.next_line()? {
+                    Some(_) => remaining -= 1,
+                    None if reader.eof => {
+                        return Err(format!(
+                            "[{}] is shorter than the checkpoint consumed ({} lines)",
+                            ids[s], lines[s]
+                        ));
+                    }
+                    None if follow => {
+                        std::thread::sleep(std::time::Duration::from_millis(200));
+                    }
+                    None => {}
+                }
+            }
+        }
         if sinks.dash.is_some() {
             emit_merged(&ml, &merger, &sinks, true, false)?;
         }
@@ -1898,14 +2270,34 @@ fn cmd_monitor_merge(
                     match readers[s].next_line()? {
                         Some(line) => {
                             lines[s] += 1;
-                            let ev = proto::Event::parse(&line)
-                                .map_err(|e| format!("[{}] line {}: {e}", ids[s], lines[s]))?;
-                            let Some(ev) = ev else { continue };
-                            validators[s]
-                                .check(&ev)
-                                .map_err(|e| format!("line {}: {e}", lines[s]))?;
-                            merger.push(s, ev);
-                            progressed = true;
+                            let checked = proto::Event::parse(&line)
+                                .map_err(|e| format!("[{}] line {}: {e}", ids[s], lines[s]))
+                                .and_then(|ev| {
+                                    if let Some(ev) = &ev {
+                                        validators[s]
+                                            .check(ev)
+                                            .map_err(|e| format!("line {}: {e}", lines[s]))?;
+                                    }
+                                    Ok(ev)
+                                });
+                            match checked {
+                                Ok(None) => continue,
+                                Ok(Some(ev)) => {
+                                    merger.push(s, ev);
+                                    progressed = true;
+                                }
+                                Err(e) if quarantine => {
+                                    eprintln!(
+                                        "monitor: quarantining stream `{}`: {e} \
+                                         (merge continues without it)",
+                                        ids[s]
+                                    );
+                                    merger.quarantine(s, &e);
+                                    progressed = true;
+                                    break;
+                                }
+                                Err(e) => return Err(e),
+                            }
                         }
                         None => {
                             if readers[s].eof {
@@ -1924,6 +2316,14 @@ fn cmd_monitor_merge(
                     if ml.watermark_s() - last_emit >= every {
                         last_emit = ml.watermark_s();
                         emit_merged(&ml, &merger, &sinks, false, false)?;
+                        if let Some(path) = &ckpt_path {
+                            write_merge_ckpt(path, &ml, &merger, &validators, &lines, last_emit)?;
+                        }
+                        // Chaos site: die right after snapshot +
+                        // checkpoint (see the single-stream path).
+                        if tpufleet::util::fault::fire(tpufleet::util::fault::Site::MonitorExit) {
+                            std::process::exit(tpufleet::util::fault::INJECTED_EXIT_CODE);
+                        }
                     }
                 }
             }
@@ -1938,7 +2338,14 @@ fn cmd_monitor_merge(
                 }
             }
         }
-        emit_merged(&ml, &merger, &sinks, false, true)
+        for (name, reason) in merger.quarantined() {
+            eprintln!("monitor: stream `{name}` stayed quarantined to the end: {reason}");
+        }
+        emit_merged(&ml, &merger, &sinks, false, true)?;
+        if let Some(path) = &ckpt_path {
+            write_merge_ckpt(path, &ml, &merger, &validators, &lines, last_emit)?;
+        }
+        Ok(())
     };
     if let Err(e) = run() {
         eprintln!("monitor: {e}");
@@ -1952,9 +2359,13 @@ fn cmd_monitor_merge(
 
 fn cmd_monitor_record(args: &Args) -> i32 {
     use std::sync::{Arc, Mutex};
-    let known = ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out"];
+    let known =
+        ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out", "inject-faults"];
     if let Some(code) = check_flags(args, "monitor record", &known) {
         return code;
+    }
+    if let Some(spec) = args.get("inject-faults") {
+        tpufleet::util::fault::install(spec);
     }
     if args.positional.len() > 1 {
         eprintln!("usage: tpufleet monitor record [--days N] [--seed S] [--out FILE]");
@@ -2025,6 +2436,20 @@ mod tests {
         a.reject_unknown("monitor", &MONITOR_FLAGS).expect("all dashboard flags are known");
     }
 
+    /// Satellite of the fault-tolerance PR: the checkpoint/resume and
+    /// chaos flags are in the monitor vocabulary.
+    #[test]
+    fn monitor_vocabulary_accepts_every_fault_tolerance_flag() {
+        let a = parse(
+            "--in a.txt,b.txt --merge --stream-ids a,b --quarantine \
+             --checkpoint mon.ckpt --resume mon.ckpt --snapshot-every 900 \
+             --inject-faults monitor-exit:after=3",
+        );
+        a.reject_unknown("monitor", &MONITOR_FLAGS).expect("fault-tolerance flags are known");
+        let err = parse("--checkpoints c").reject_unknown("monitor", &MONITOR_FLAGS).unwrap_err();
+        assert!(err.contains("--checkpoints"), "{err}");
+    }
+
     #[test]
     fn misspelled_monitor_flags_name_the_monitor_subcommand() {
         for (argv, bad) in [
@@ -2042,10 +2467,60 @@ mod tests {
 
     #[test]
     fn monitor_record_vocabulary_includes_stream_id() {
-        let a = parse("--days 0.1 --seed 7 --stream-id cell-a --out s.txt");
-        let known = ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out"];
+        let a = parse(
+            "--days 0.1 --seed 7 --stream-id cell-a --out s.txt \
+             --inject-faults stream-garble:after=40",
+        );
+        let known =
+            ["days", "seed", "arrivals-per-hour", "no-failures", "stream-id", "out", "inject-faults"];
         a.reject_unknown("monitor record", &known).expect("record flags are known");
         let err = parse("--stream-ids a").reject_unknown("monitor record", &known).unwrap_err();
         assert!(err.starts_with("monitor record: unknown flag(s) --stream-ids"), "{err}");
+    }
+
+    /// Satellite (b): a writer appending ONE BYTE at a time — the worst
+    /// legal tail — must never surface a partial line, a split multi-byte
+    /// character, or a stream error. Complete lines come out exactly as
+    /// written; in one-shot mode a final unterminated line is flushed at
+    /// EOF, in follow mode it is held forever.
+    #[test]
+    fn tail_reader_survives_byte_at_a_time_writes() {
+        use std::io::Write as _;
+        let dir = std::env::temp_dir().join(format!("tpufleet-tail-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.txt");
+        let text = "span 1 0.5 1.5 4 compile\npg 1 1.0 0.9 caf\u{e9}\ntail";
+        std::fs::write(&path, b"").unwrap();
+        let mut reader = TailReader::open(path.to_str().unwrap(), true).unwrap();
+        let mut file = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        let mut seen = Vec::new();
+        for b in text.as_bytes() {
+            file.write_all(&[*b]).unwrap();
+            file.flush().unwrap();
+            // Drain everything available after each single byte.
+            while let Some(line) = reader.next_line().unwrap() {
+                seen.push(line);
+            }
+            assert!(!reader.eof, "follow mode never reports EOF");
+        }
+        assert_eq!(
+            seen,
+            ["span 1 0.5 1.5 4 compile\n", "pg 1 1.0 0.9 caf\u{e9}\n"],
+            "only complete lines surface, multi-byte chars intact"
+        );
+        // One-shot mode: the same bytes, with the unterminated tail
+        // flushed at EOF.
+        let mut oneshot = TailReader::open(path.to_str().unwrap(), false).unwrap();
+        let mut all = Vec::new();
+        loop {
+            match oneshot.next_line().unwrap() {
+                Some(line) => all.push(line),
+                None if oneshot.eof => break,
+                None => {}
+            }
+        }
+        assert_eq!(all.last().map(String::as_str), Some("tail"));
+        assert_eq!(all.len(), 3);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

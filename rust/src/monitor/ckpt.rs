@@ -1,0 +1,189 @@
+//! Crash-safe monitor checkpoints: the serialized rolling state of a
+//! `monitor` run, written atomically at snapshot time so a killed
+//! process can `--resume` and produce `f64::to_bits`-identical snapshots
+//! to an uninterrupted run.
+//!
+//! # Format
+//!
+//! One JSON document. Every float crosses the file as an f64 bit
+//! pattern ([`Json::f64b`]) — decimal round-trips are not trusted with
+//! the bit-identity contract — and the header pins three versions:
+//!
+//! * [`CKPT_VERSION`] — this layout; bumped whenever a field changes.
+//! * [`proto::PROTO_VERSION`] — the stream protocol the consumed-line
+//!   counts were measured against.
+//! * [`SIM_BEHAVIOR_VERSION`] — the simulation behavior the recorded
+//!   streams came from.
+//!
+//! [`check_header`] refuses any skew outright: resuming across a format
+//! or behavior change would silently desynchronize the resumed ledger
+//! from the stream bytes, which is strictly worse than starting over.
+//! (This versioning is the checkpoint's own — adding it bumps nothing
+//! else, and `SIM_BEHAVIOR_VERSION` itself stays untouched.)
+//!
+//! The body layout belongs to the states being carried:
+//! `MonitorLedger::ckpt_json`, `StreamMerger::ckpt_json`,
+//! `Validator::ckpt_json`, and the per-input consumed-line counts the
+//! CLI records so `--resume` can skip exactly the raw lines the dead
+//! process already ingested.
+
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::metrics::reduce::{CellAccum, N_CLASSES};
+use crate::metrics::stack::N_LAYERS;
+use crate::sim::cache::SIM_BEHAVIOR_VERSION;
+use crate::util::Json;
+
+use super::proto;
+
+/// Checkpoint layout version. Readers refuse anything else.
+pub const CKPT_VERSION: u32 = 1;
+
+/// The version header every checkpoint document carries.
+pub fn header_json() -> Json {
+    Json::obj(vec![
+        ("ckpt_version", Json::num(CKPT_VERSION as f64)),
+        ("proto_version", Json::num(proto::PROTO_VERSION as f64)),
+        ("behavior_version", Json::num(SIM_BEHAVIOR_VERSION as f64)),
+    ])
+}
+
+/// Refuse version skew: a checkpoint written by a different layout,
+/// protocol, or simulation behavior is unusable, and the error says
+/// which version disagrees and what to do (re-run without `--resume`).
+pub fn check_header(doc: &Json) -> Result<(), String> {
+    let pairs = [
+        ("ckpt_version", CKPT_VERSION as u64),
+        ("proto_version", proto::PROTO_VERSION as u64),
+        ("behavior_version", SIM_BEHAVIOR_VERSION),
+    ];
+    for (key, want) in pairs {
+        let got = doc
+            .get(key)
+            .as_u64()
+            .ok_or_else(|| format!("checkpoint missing `{key}` (not a monitor checkpoint?)"))?;
+        if got != want {
+            return Err(format!(
+                "checkpoint {key} {got} does not match this binary's {want}; \
+                 refusing to resume across a version change — re-run without --resume"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Serialize one [`CellAccum`]. All accumulators are f64 bit patterns;
+/// the job count is exact as a JSON number (cells count jobs, not
+/// atoms).
+pub fn cell_json(c: &CellAccum) -> Json {
+    Json::obj(vec![
+        ("class_cs", Json::arr(c.class_cs.iter().map(|&x| Json::f64b(x)))),
+        ("layer_cs", Json::arr(c.layer_cs.iter().map(|&x| Json::f64b(x)))),
+        ("pg_w", Json::f64b(c.pg_w)),
+        ("pg_sum", Json::f64b(c.pg_sum)),
+        ("job_count", Json::num(c.job_count as f64)),
+    ])
+}
+
+/// Restore a [`CellAccum`] from [`cell_json`] output.
+pub fn cell_from(j: &Json) -> Result<CellAccum, String> {
+    fn floats<const N: usize>(j: &Json, what: &str) -> Result<[f64; N], String> {
+        let arr = j.as_arr().ok_or_else(|| format!("cell checkpoint missing `{what}`"))?;
+        if arr.len() != N {
+            return Err(format!("cell checkpoint `{what}` has {} entries, want {N}", arr.len()));
+        }
+        let mut out = [0.0; N];
+        for (slot, v) in out.iter_mut().zip(arr) {
+            *slot = v.as_f64b().ok_or_else(|| format!("bad f64 bits in cell `{what}`"))?;
+        }
+        Ok(out)
+    }
+    Ok(CellAccum {
+        class_cs: floats::<N_CLASSES>(j.get("class_cs"), "class_cs")?,
+        layer_cs: floats::<N_LAYERS>(j.get("layer_cs"), "layer_cs")?,
+        pg_w: j.get("pg_w").as_f64b().ok_or("cell checkpoint missing `pg_w`")?,
+        pg_sum: j.get("pg_sum").as_f64b().ok_or("cell checkpoint missing `pg_sum`")?,
+        job_count: j
+            .get("job_count")
+            .as_u64()
+            .ok_or("cell checkpoint missing `job_count`")? as usize,
+    })
+}
+
+/// Write `doc` to `path` atomically: full bytes to `<path>.tmp` in the
+/// same directory, flush, then rename over the target. A crash mid-write
+/// leaves either the previous complete checkpoint or a stray `.tmp` —
+/// never a torn file that `--resume` could half-parse.
+pub fn write_atomic(path: &Path, doc: &Json) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(doc.to_string_pretty().as_bytes())?;
+        f.write_all(b"\n")?;
+        f.flush()?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+/// Read and parse a checkpoint, enforcing the version header.
+pub fn read(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read checkpoint {}: {e}", path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| format!("checkpoint {} is not valid JSON: {e:?}", path.display()))?;
+    check_header(&doc)?;
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_round_trips_bit_exactly() {
+        let mut c = CellAccum::default();
+        c.class_cs[0] = 1.0 / 3.0;
+        c.class_cs[N_CLASSES - 1] = 86_400.123_456_789;
+        c.layer_cs[2] = 2.0_f64.powi(-53);
+        c.pg_w = 1e-300;
+        c.pg_sum = 0.999_999_999_999_999_9;
+        c.job_count = 7;
+        let j = cell_json(&c);
+        let r = cell_from(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(c, r);
+        for (a, b) in c.class_cs.iter().zip(&r.class_cs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(c.pg_w.to_bits(), r.pg_w.to_bits());
+    }
+
+    #[test]
+    fn header_skew_is_refused_with_the_offending_version_named() {
+        check_header(&header_json()).unwrap();
+        let mut doc = header_json();
+        if let Json::Obj(m) = &mut doc {
+            m.insert("ckpt_version".into(), Json::num(99.0));
+        }
+        let err = check_header(&doc).unwrap_err();
+        assert!(err.contains("ckpt_version 99"), "{err}");
+        assert!(err.contains("re-run without --resume"), "{err}");
+        let err = check_header(&Json::obj(vec![])).unwrap_err();
+        assert!(err.contains("not a monitor checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("tpufleet-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mon.ckpt");
+        let doc = header_json();
+        write_atomic(&path, &doc).unwrap();
+        write_atomic(&path, &doc).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        let back = read(&path).unwrap();
+        assert_eq!(back.get("ckpt_version").as_u64(), Some(CKPT_VERSION as u64));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

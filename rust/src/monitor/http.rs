@@ -18,11 +18,34 @@
 //! misbehaving client therefore cannot block ingest: its handler thread
 //! parks on its own socket (bounded by read/write timeouts) while
 //! ingest keeps folding events.
+//!
+//! Abuse is bounded on three axes, each with a test:
+//!
+//! * request line and header block are size-capped ([`MAX_REQUEST_LINE`],
+//!   [`MAX_HEADER_BYTES`]) — an endless header stream earns `431` and a
+//!   closed socket instead of unbounded buffering;
+//! * concurrent connections are capped ([`MAX_CONNECTIONS`]) — a
+//!   slowloris fleet holding sockets open earns later clients a fast
+//!   `503` rather than thread exhaustion (each held thread is itself
+//!   bounded by the 10s timeouts, so slots drain);
+//! * read/write timeouts (10s) bound every handler thread's lifetime.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Longest accepted request line, bytes. Real dashboard requests are
+/// ~30 bytes; 8 KiB matches common server defaults.
+pub const MAX_REQUEST_LINE: usize = 8192;
+
+/// Longest accepted header block, bytes (all headers combined).
+pub const MAX_HEADER_BYTES: usize = 32 * 1024;
+
+/// Concurrent connection cap. The dashboard has a handful of human
+/// readers; anything past this is load shedding, answered with `503`.
+pub const MAX_CONNECTIONS: usize = 64;
 
 /// The dashboard's shared render cache: pre-rendered JSON bodies,
 /// replaced wholesale by the ingest loop at snapshot cadence.
@@ -39,37 +62,126 @@ pub fn shared(initial: DashState) -> SharedDash {
     Arc::new(Mutex::new(initial))
 }
 
-/// Spawn the accept loop. Each accepted connection gets its own handler
-/// thread; the returned handle is detached by callers (the listener
-/// lives until process exit).
+/// RAII connection slot: taken before the handler thread spawns,
+/// released when the handler finishes (or panics — Drop runs either
+/// way), so the count can never leak slots.
+struct Slot(Arc<AtomicUsize>);
+
+impl Slot {
+    /// Claim a slot, or `None` when `limit` handlers are already live.
+    fn take(active: &Arc<AtomicUsize>, limit: usize) -> Option<Slot> {
+        let mut cur = active.load(Ordering::Relaxed);
+        loop {
+            if cur >= limit {
+                return None;
+            }
+            match active.compare_exchange_weak(cur, cur + 1, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return Some(Slot(active.clone())),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+}
+
+impl Drop for Slot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Spawn the accept loop with the default [`MAX_CONNECTIONS`] bound.
+/// Each accepted connection gets its own handler thread; the returned
+/// handle is detached by callers (the listener lives until process
+/// exit).
 pub fn serve(listener: TcpListener, dash: SharedDash) -> std::thread::JoinHandle<()> {
+    serve_with_limit(listener, dash, MAX_CONNECTIONS)
+}
+
+/// [`serve`] with an explicit connection bound (tests shrink it to
+/// exercise the `503` path without opening 64 sockets).
+pub fn serve_with_limit(
+    listener: TcpListener,
+    dash: SharedDash,
+    limit: usize,
+) -> std::thread::JoinHandle<()> {
+    assert!(limit >= 1, "connection limit must admit at least one client");
     std::thread::spawn(move || {
+        let active = Arc::new(AtomicUsize::new(0));
         for conn in listener.incoming() {
-            let Ok(conn) = conn else { continue };
-            let dash = dash.clone();
-            std::thread::spawn(move || {
-                let _ = handle(conn, &dash);
-            });
+            let Ok(mut conn) = conn else { continue };
+            match Slot::take(&active, limit) {
+                Some(slot) => {
+                    let dash = dash.clone();
+                    std::thread::spawn(move || {
+                        let _slot = slot;
+                        let _ = handle(conn, &dash);
+                    });
+                }
+                None => {
+                    // Shed load inline: a one-line refusal is cheaper
+                    // than the thread it replaces, and the write timeout
+                    // still bounds a client that won't read it.
+                    let _ = conn.set_write_timeout(Some(Duration::from_secs(10)));
+                    let _ = respond(&mut conn, 503, "text/plain", "server busy; retry\n");
+                }
+            }
         }
     })
 }
 
+/// Read one CRLF/LF-terminated line with a byte budget. Returns
+/// `Ok(None)` when the line exceeds `max` — the caller answers `431`
+/// and hangs up rather than buffering an attacker-controlled amount.
+fn bounded_line(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::io::Result<Option<String>> {
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 1];
+    while raw.len() <= max {
+        let n = reader.read(&mut chunk)?;
+        if n == 0 || chunk[0] == b'\n' {
+            return Ok(Some(String::from_utf8_lossy(&raw).into_owned()));
+        }
+        raw.push(chunk[0]);
+    }
+    Ok(None)
+}
+
 /// Serve one connection: parse the request line, drain headers, answer,
-/// close. Timeouts bound how long a stalled client can pin its thread.
+/// close. Timeouts bound how long a stalled client can pin its thread;
+/// the line/header caps bound how much it can make us buffer.
 fn handle(conn: TcpStream, dash: &SharedDash) -> std::io::Result<()> {
     conn.set_read_timeout(Some(Duration::from_secs(10)))?;
     conn.set_write_timeout(Some(Duration::from_secs(10)))?;
+    if crate::util::fault::fire(crate::util::fault::Site::HttpDrop) {
+        // Injected connection drop: hang up before reading a byte, the
+        // way a crashed handler or a mid-handshake network fault looks
+        // to the client.
+        return Ok(());
+    }
     let mut reader = BufReader::new(conn);
-    let mut request = String::new();
-    reader.read_line(&mut request)?;
+    let Some(request) = bounded_line(&mut reader, MAX_REQUEST_LINE)? else {
+        let mut conn = reader.into_inner();
+        return respond(&mut conn, 431, "text/plain", "request line too long\n");
+    };
     let mut parts = request.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
+    let mut header_bytes = 0usize;
     loop {
-        let mut header = String::new();
-        let n = reader.read_line(&mut header)?;
-        if n == 0 || header == "\r\n" || header == "\n" {
+        let Some(header) = bounded_line(&mut reader, MAX_HEADER_BYTES)? else {
+            let mut conn = reader.into_inner();
+            return respond(&mut conn, 431, "text/plain", "headers too large\n");
+        };
+        if header.is_empty() || header == "\r" {
             break;
+        }
+        header_bytes += header.len() + 1;
+        if header_bytes > MAX_HEADER_BYTES {
+            let mut conn = reader.into_inner();
+            return respond(&mut conn, 431, "text/plain", "headers too large\n");
         }
     }
     let mut conn = reader.into_inner();
@@ -100,6 +212,8 @@ fn respond(conn: &mut TcpStream, code: u16, ctype: &str, body: &str) -> std::io:
         200 => "OK",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        431 => "Request Header Fields Too Large",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     write!(
@@ -162,5 +276,61 @@ mod tests {
         assert!(head.starts_with("HTTP/1.1 200"), "{head}");
         assert_eq!(body, "ok\n");
         drop(stalled);
+    }
+
+    #[test]
+    fn oversized_request_line_and_headers_earn_431() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding an ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        serve(listener, shared(DashState { snapshot: "ok\n".into(), ..Default::default() }));
+        // Request line past the cap: exactly the bytes the server will
+        // consume before refusing (it stops reading at max + 1, so
+        // sending no more keeps the close clean).
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(&vec![b'x'; MAX_REQUEST_LINE + 1]).unwrap();
+        let mut response = String::new();
+        conn.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 431"), "{response}");
+        assert!(response.contains("request line too long"), "{response}");
+        // Header flood past the aggregate cap: enough complete header
+        // lines to trip the counter on the last one, then stop — the
+        // server reads them all, answers 431, and hangs up.
+        let mut conn = TcpStream::connect(addr).unwrap();
+        write!(conn, "GET /snapshot HTTP/1.1\r\n").unwrap();
+        let filler = format!("X-Filler: {}\r\n", "y".repeat(1000));
+        for _ in 0..(MAX_HEADER_BYTES / filler.len() + 1) {
+            write!(conn, "{filler}").unwrap();
+        }
+        let mut response = String::new();
+        conn.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 431"), "{response}");
+        assert!(response.contains("headers too large"), "{response}");
+        // A normal request still works afterwards.
+        assert_eq!(get(addr, "/snapshot").1, "ok\n");
+    }
+
+    #[test]
+    fn connections_past_the_limit_are_shed_with_503() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("binding an ephemeral port");
+        let addr = listener.local_addr().unwrap();
+        let dash = shared(DashState { snapshot: "ok\n".into(), ..Default::default() });
+        serve_with_limit(listener, dash, 2);
+        // Two slowloris connections occupy both slots (send nothing; the
+        // handlers park on their 10s read timeouts).
+        let hold_a = TcpStream::connect(addr).unwrap();
+        let hold_b = TcpStream::connect(addr).unwrap();
+        // Give the accept loop a moment to hand both off to handlers.
+        std::thread::sleep(Duration::from_millis(200));
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut response = String::new();
+        conn.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 503"), "{response}");
+        // Releasing a slot restores service.
+        drop(hold_a);
+        drop(hold_b);
+        std::thread::sleep(Duration::from_millis(200));
+        let (head, body) = get(addr, "/snapshot");
+        assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+        assert_eq!(body, "ok\n");
     }
 }

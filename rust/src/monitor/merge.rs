@@ -72,6 +72,11 @@ struct StreamState {
     /// Buffered `(key, event)` pairs awaiting merge; keys non-decreasing.
     buf: VecDeque<(f64, Event)>,
     finished: bool,
+    /// The validation error that quarantined this stream, if any.
+    /// Quarantined streams are finished AND excluded from the
+    /// cross-stream watermark — a cell whose stream went bad must not
+    /// pin fleet finality forever.
+    quarantined: Option<String>,
     /// Last-pushed capacity (chips) — this stream's term in merged caps.
     chips: u64,
     peak_buffered: usize,
@@ -91,6 +96,8 @@ pub struct StreamInfo {
     /// ahead of the slowest one.
     pub lag_s: f64,
     pub finished: bool,
+    /// `Some(error)` when the stream was isolated by `--quarantine`.
+    pub quarantined: Option<String>,
     pub buffered: usize,
     pub peak_buffered: usize,
     pub events: u64,
@@ -124,6 +131,7 @@ impl StreamMerger {
                     watermark_s: 0.0,
                     buf: VecDeque::new(),
                     finished: false,
+                    quarantined: None,
                     chips: 0,
                     peak_buffered: 0,
                     events: 0,
@@ -189,6 +197,30 @@ impl StreamMerger {
         self.streams[s].finished = true;
     }
 
+    /// Isolate a validation-failing stream instead of aborting the
+    /// merge (`--quarantine` mode). The stream is finished (no more
+    /// events accepted), its already-validated buffered events still
+    /// drain in order, and its watermark stops counting toward
+    /// [`cross_watermark_s`](Self::cross_watermark_s) — a dead cell
+    /// must not freeze fleet finality. Its last capacity term stays in
+    /// merged totals (the cell's chips did not vanish; its stream did).
+    /// Idempotent: the first reason wins.
+    pub fn quarantine(&mut self, s: usize, reason: &str) {
+        let st = &mut self.streams[s];
+        st.finished = true;
+        if st.quarantined.is_none() {
+            st.quarantined = Some(reason.to_string());
+        }
+    }
+
+    /// Streams currently quarantined, as `(name, reason)` rows.
+    pub fn quarantined(&self) -> Vec<(String, String)> {
+        self.streams
+            .iter()
+            .filter_map(|st| st.quarantined.as_ref().map(|e| (st.name.clone(), e.clone())))
+            .collect()
+    }
+
     /// Emit the next merged event, or `None` when merging must pause:
     /// either every buffer is drained, or some unfinished stream has an
     /// empty buffer (the strict stall rule — see module docs).
@@ -250,11 +282,22 @@ impl StreamMerger {
         self.streams.iter().all(|st| st.finished && st.buf.is_empty())
     }
 
-    /// Cross-stream watermark: the min of per-stream watermarks. Merged
-    /// window cells at or below it are final — every cell has reported
-    /// past them.
+    /// Cross-stream watermark: the min of per-stream watermarks over
+    /// healthy streams (quarantined ones are excluded — their watermark
+    /// is frozen where the stream went bad). All streams quarantined
+    /// degenerates to 0.0: nothing is advancing, nothing is final.
     pub fn cross_watermark_s(&self) -> f64 {
-        self.streams.iter().map(|st| st.watermark_s).fold(f64::INFINITY, f64::min)
+        let cross = self
+            .streams
+            .iter()
+            .filter(|st| st.quarantined.is_none())
+            .map(|st| st.watermark_s)
+            .fold(f64::INFINITY, f64::min);
+        if cross.is_finite() {
+            cross
+        } else {
+            0.0
+        }
     }
 
     /// Events emitted by [`pop`](Self::pop) so far.
@@ -272,6 +315,7 @@ impl StreamMerger {
                 watermark_s: st.watermark_s,
                 lag_s: st.watermark_s - cross,
                 finished: st.finished,
+                quarantined: st.quarantined.clone(),
                 buffered: st.buf.len(),
                 peak_buffered: st.peak_buffered,
                 events: st.events,
@@ -287,6 +331,117 @@ impl StreamMerger {
     /// The `GET /streams` document.
     pub fn streams_json(&self) -> Json {
         streams_doc(self.cross_watermark_s(), &self.infos())
+    }
+
+    /// Serialize the merge state for a crash-safe checkpoint. Buffered
+    /// events ride as protocol lines (the codec that round-trips floats
+    /// bit-exactly) with their merge keys as f64 bit patterns — a
+    /// resumed merge emits the exact sequence the uninterrupted one
+    /// would. `reorder_cap` is hex-encoded: the batch interleave path
+    /// uses `usize::MAX`, which a JSON double cannot carry.
+    pub fn ckpt_json(&self) -> Json {
+        let streams = Json::arr(self.streams.iter().map(|st| {
+            Json::obj(vec![
+                ("name", Json::str(&st.name)),
+                ("watermark_s", Json::f64b(st.watermark_s)),
+                (
+                    "buf",
+                    Json::arr(
+                        st.buf
+                            .iter()
+                            .map(|(k, ev)| Json::arr([Json::f64b(*k), Json::str(&ev.format())])),
+                    ),
+                ),
+                ("finished", Json::Bool(st.finished)),
+                (
+                    "quarantined",
+                    match &st.quarantined {
+                        Some(e) => Json::str(e),
+                        None => Json::Null,
+                    },
+                ),
+                ("chips", Json::num(st.chips as f64)),
+                ("peak_buffered", Json::num(st.peak_buffered as f64)),
+                ("events", Json::num(st.events as f64)),
+                ("jobs", Json::num(st.jobs as f64)),
+                ("spans", Json::num(st.spans as f64)),
+                ("pg_samples", Json::num(st.pg_samples as f64)),
+                ("cap_events", Json::num(st.cap_events as f64)),
+            ])
+        }));
+        Json::obj(vec![
+            ("reorder_cap", Json::u64_hex(self.reorder_cap as u64)),
+            ("last_cap_t", Json::f64b(self.last_cap_t)),
+            ("emitted", Json::num(self.emitted as f64)),
+            ("streams", streams),
+        ])
+    }
+
+    /// Restore a merger from [`StreamMerger::ckpt_json`] output.
+    pub fn from_ckpt(j: &Json) -> Result<StreamMerger, String> {
+        fn count(j: &Json, what: &str) -> Result<u64, String> {
+            j.as_u64().ok_or_else(|| format!("merge checkpoint: bad `{what}`"))
+        }
+        fn bits(j: &Json, what: &str) -> Result<f64, String> {
+            j.as_f64b().ok_or_else(|| format!("merge checkpoint: bad `{what}`"))
+        }
+        let mut streams = Vec::new();
+        for sj in j.get("streams").as_arr().ok_or("merge checkpoint: bad `streams`")? {
+            let mut buf = VecDeque::new();
+            for pair in sj.get("buf").as_arr().ok_or("merge checkpoint: bad `buf`")? {
+                let pair = pair.as_arr().filter(|a| a.len() == 2);
+                let pair = pair.ok_or("merge checkpoint: bad buffered event")?;
+                let line = pair[1].as_str().ok_or("merge checkpoint: bad buffered event")?;
+                let ev = match Event::parse(line) {
+                    Ok(Some(ev)) => ev,
+                    _ => return Err(format!("merge checkpoint: bad buffered line `{line}`")),
+                };
+                buf.push_back((bits(&pair[0], "buf key")?, ev));
+            }
+            let quarantined = match sj.get("quarantined") {
+                Json::Null => None,
+                v => Some(
+                    v.as_str().ok_or("merge checkpoint: bad `quarantined`")?.to_string(),
+                ),
+            };
+            streams.push(StreamState {
+                name: sj
+                    .get("name")
+                    .as_str()
+                    .ok_or("merge checkpoint: bad stream `name`")?
+                    .to_string(),
+                watermark_s: bits(sj.get("watermark_s"), "watermark_s")?,
+                buf,
+                finished: sj
+                    .get("finished")
+                    .as_bool()
+                    .ok_or("merge checkpoint: bad `finished`")?,
+                quarantined,
+                chips: count(sj.get("chips"), "chips")?,
+                peak_buffered: count(sj.get("peak_buffered"), "peak_buffered")? as usize,
+                events: count(sj.get("events"), "events")?,
+                jobs: count(sj.get("jobs"), "jobs")?,
+                spans: count(sj.get("spans"), "spans")?,
+                pg_samples: count(sj.get("pg_samples"), "pg_samples")?,
+                cap_events: count(sj.get("cap_events"), "cap_events")?,
+            });
+        }
+        if streams.is_empty() {
+            return Err("merge checkpoint: no streams".to_string());
+        }
+        let reorder_cap = j
+            .get("reorder_cap")
+            .as_u64_hex()
+            .ok_or("merge checkpoint: bad `reorder_cap`")? as usize;
+        if reorder_cap == 0 {
+            return Err("merge checkpoint: zero reorder cap".to_string());
+        }
+        Ok(StreamMerger {
+            streams,
+            reorder_cap,
+            last_cap_t: bits(j.get("last_cap_t"), "last_cap_t")?,
+            emitted: count(j.get("emitted"), "emitted")?,
+        })
     }
 }
 
@@ -304,6 +459,14 @@ pub fn streams_doc(cross_watermark_s: f64, infos: &[StreamInfo]) -> Json {
                     ("watermark_s", Json::num(i.watermark_s)),
                     ("lag_s", Json::num(i.lag_s)),
                     ("finished", Json::Bool(i.finished)),
+                    ("quarantined", Json::Bool(i.quarantined.is_some())),
+                    (
+                        "error",
+                        match &i.quarantined {
+                            Some(e) => Json::str(e),
+                            None => Json::Null,
+                        },
+                    ),
                     ("buffered", Json::num(i.buffered as f64)),
                     ("peak_buffered", Json::num(i.peak_buffered as f64)),
                     ("events", Json::num(i.events as f64)),
@@ -485,6 +648,82 @@ mod tests {
         let infos = m.infos();
         assert_eq!(infos[0].peak_buffered, 3);
         assert_eq!(infos[0].buffered, 2);
+    }
+
+    #[test]
+    fn quarantine_isolates_a_stream_without_stalling_the_merge() {
+        let mut m = StreamMerger::new(&names(2), 8);
+        m.push(0, job(1));
+        m.push(0, span(1, 0.0, 5.0));
+        m.push(1, job(1));
+        m.push(1, span(1, 0.0, 30.0));
+        // Stream 1 goes bad: its buffered (validated) events still
+        // drain, but it stops gating the merge and the cross watermark.
+        m.quarantine(1, "[cell-1] unknown event `garbled`");
+        assert!(!m.wants(1), "quarantined stream must not accept more events");
+        assert_eq!(m.cross_watermark_s(), 5.0, "cross watermark excludes the quarantined stream");
+        m.finish(0);
+        let mut drained = 0;
+        while m.pop().is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, 4, "buffered events drain after quarantine");
+        assert!(m.done());
+        let q = m.quarantined();
+        assert_eq!(q.len(), 1);
+        assert_eq!(q[0].0, "cell-1");
+        assert!(q[0].1.contains("garbled"));
+        let doc = m.streams_json();
+        let rows = doc.get("streams").as_arr().unwrap();
+        assert_eq!(rows[0].get("quarantined").as_bool(), Some(false));
+        assert_eq!(rows[1].get("quarantined").as_bool(), Some(true));
+        assert!(rows[1].get("error").as_str().unwrap().contains("garbled"));
+        // Both streams quarantined: nothing advances, cross degenerates.
+        m.quarantine(0, "also bad");
+        assert_eq!(m.cross_watermark_s(), 0.0);
+        // First reason wins on repeat quarantine.
+        m.quarantine(1, "second reason");
+        assert!(m.quarantined()[1].1.contains("garbled"));
+    }
+
+    #[test]
+    fn merge_checkpoint_round_trips_and_resumes_identically() {
+        let streams = vec![
+            vec![job(1), span(1, 0.0, 4.0), span(1, 4.0, 8.0), span(1, 8.0, 20.0)],
+            vec![job(1), span(1, 2.0, 3.0), span(1, 3.0, 9.0)],
+        ];
+        let reference = interleave(&names(2), streams.clone());
+        // Feed partially, emit a couple, checkpoint mid-merge.
+        let mut m = StreamMerger::new(&names(2), 8);
+        m.push(0, streams[0][0].clone());
+        m.push(0, streams[0][1].clone());
+        m.push(1, streams[1][0].clone());
+        m.push(1, streams[1][1].clone());
+        let mut out = Vec::new();
+        out.push(m.pop().expect("mergeable"));
+        out.push(m.pop().expect("mergeable"));
+        let doc = Json::parse(&m.ckpt_json().to_string_pretty()).expect("ckpt parses");
+        let mut r = StreamMerger::from_ckpt(&doc).expect("ckpt restores");
+        assert_eq!(r.emitted(), m.emitted());
+        assert_eq!(r.stream_count(), 2);
+        // Continue on the RESTORED merger with the remaining events.
+        for ev in &streams[0][2..] {
+            r.push(0, ev.clone());
+        }
+        for ev in &streams[1][2..] {
+            r.push(1, ev.clone());
+        }
+        r.finish(0);
+        r.finish(1);
+        while let Some(ev) = r.pop() {
+            out.push(ev);
+        }
+        assert!(r.done());
+        assert_eq!(out.len(), reference.len());
+        for (a, b) in out.iter().zip(&reference) {
+            assert_eq!(a.format(), b.format(), "resumed merge must match the one-shot merge");
+        }
+        assert!(StreamMerger::from_ckpt(&Json::Null).is_err());
     }
 
     #[test]

@@ -40,6 +40,7 @@
 //! simulation stream through the monitor must match the batch windowed
 //! replay byte-for-byte, with bounded cells on streams ≥ 10× the ring.
 
+pub mod ckpt;
 pub mod http;
 pub mod merge;
 pub mod proto;
@@ -450,6 +451,122 @@ impl MonitorLedger {
     pub fn current_capacity_chips(&self) -> u64 {
         self.cap_steps.back().map(|&(_, chips)| chips).unwrap_or(0)
     }
+
+    /// Serialize the full rolling state for a crash-safe checkpoint.
+    /// Floats travel as f64 bit patterns and window boundaries as their
+    /// chained *values* (re-deriving `k * width` on resume could differ
+    /// in the last ulp), so a restored ledger continues the exact
+    /// addition chains the bit-identity contract depends on. Job metas
+    /// ride as `job` protocol lines — the codec that already round-trips
+    /// every field.
+    pub fn ckpt_json(&self) -> Json {
+        let jobs = Json::arr(self.jobs.values().map(|j| {
+            Json::obj(vec![
+                ("meta", Json::str(&Event::Job(j.meta.clone()).format())),
+                ("total", ckpt::cell_json(&j.total)),
+                ("first_window", Json::num(j.first_window as f64)),
+                ("ring", Json::arr(j.ring.iter().map(ckpt::cell_json))),
+            ])
+        }));
+        let cap_steps = Json::arr(
+            self.cap_steps
+                .iter()
+                .map(|&(t, chips)| Json::arr([Json::f64b(t), Json::num(chips as f64)])),
+        );
+        Json::obj(vec![
+            ("width_s", Json::f64b(self.width_s)),
+            ("ring_windows", Json::num(self.ring_windows as f64)),
+            ("boundaries", Json::arr(self.boundaries.iter().map(|&b| Json::f64b(b)))),
+            ("ring_start", Json::num(self.ring_start as f64)),
+            ("windows_started", Json::num(self.windows_started as f64)),
+            ("watermark_s", Json::f64b(self.watermark_s)),
+            ("jobs", jobs),
+            ("cap_steps", cap_steps),
+            ("cap_prefix_cs", Json::f64b(self.cap_prefix_cs)),
+            ("peak_cells", Json::num(self.peak_cells as f64)),
+            ("peak_live_jobs", Json::num(self.peak_live_jobs as f64)),
+            ("evicted_cells", Json::num(self.evicted_cells as f64)),
+            ("span_count", Json::num(self.span_count as f64)),
+            ("pg_count", Json::num(self.pg_count as f64)),
+            ("cap_events", Json::num(self.cap_events as f64)),
+        ])
+    }
+
+    /// Restore a ledger from [`MonitorLedger::ckpt_json`] output. The
+    /// live set and cell count are recomputed from the restored rings
+    /// (they are derived state: live == jobs with a non-empty ring).
+    pub fn from_ckpt(j: &Json) -> Result<MonitorLedger, String> {
+        fn count(j: &Json, what: &str) -> Result<u64, String> {
+            j.as_u64().ok_or_else(|| format!("monitor checkpoint: bad `{what}`"))
+        }
+        fn bits(j: &Json, what: &str) -> Result<f64, String> {
+            j.as_f64b().ok_or_else(|| format!("monitor checkpoint: bad `{what}`"))
+        }
+        let width_s = bits(j.get("width_s"), "width_s")?;
+        let ring_windows = count(j.get("ring_windows"), "ring_windows")? as usize;
+        if !width_s.is_finite() || width_s <= 0.0 || ring_windows == 0 {
+            return Err("monitor checkpoint: invalid width/ring".to_string());
+        }
+        let boundaries = j
+            .get("boundaries")
+            .as_arr()
+            .ok_or("monitor checkpoint: bad `boundaries`")?
+            .iter()
+            .map(|b| bits(b, "boundaries"))
+            .collect::<Result<VecDeque<f64>, _>>()?;
+        if boundaries.is_empty() {
+            return Err("monitor checkpoint: empty boundary chain".to_string());
+        }
+        let mut jobs = BTreeMap::new();
+        let mut live = BTreeSet::new();
+        let mut live_cells = 0usize;
+        for jj in j.get("jobs").as_arr().ok_or("monitor checkpoint: bad `jobs`")? {
+            let line = jj.get("meta").as_str().ok_or("monitor checkpoint: bad job `meta`")?;
+            let meta = match Event::parse(line) {
+                Ok(Some(Event::Job(m))) => m,
+                _ => return Err(format!("monitor checkpoint: bad job line `{line}`")),
+            };
+            let total = ckpt::cell_from(jj.get("total"))?;
+            let first_window = count(jj.get("first_window"), "first_window")? as usize;
+            let ring = jj
+                .get("ring")
+                .as_arr()
+                .ok_or("monitor checkpoint: bad job `ring`")?
+                .iter()
+                .map(ckpt::cell_from)
+                .collect::<Result<VecDeque<CellAccum>, _>>()?;
+            if !ring.is_empty() {
+                live.insert(meta.id);
+            }
+            live_cells += ring.len();
+            jobs.insert(meta.id, MonitorJob { meta, total, first_window, ring });
+        }
+        let mut cap_steps = VecDeque::new();
+        for step in j.get("cap_steps").as_arr().ok_or("monitor checkpoint: bad `cap_steps`")? {
+            let pair = step.as_arr().filter(|a| a.len() == 2);
+            let pair = pair.ok_or("monitor checkpoint: bad capacity step")?;
+            cap_steps.push_back((bits(&pair[0], "cap_steps")?, count(&pair[1], "cap_steps")?));
+        }
+        Ok(MonitorLedger {
+            width_s,
+            ring_windows,
+            boundaries,
+            ring_start: count(j.get("ring_start"), "ring_start")? as usize,
+            windows_started: count(j.get("windows_started"), "windows_started")? as usize,
+            watermark_s: bits(j.get("watermark_s"), "watermark_s")?,
+            jobs,
+            live,
+            cap_steps,
+            cap_prefix_cs: bits(j.get("cap_prefix_cs"), "cap_prefix_cs")?,
+            live_cells,
+            peak_cells: count(j.get("peak_cells"), "peak_cells")? as usize,
+            peak_live_jobs: count(j.get("peak_live_jobs"), "peak_live_jobs")? as usize,
+            evicted_cells: count(j.get("evicted_cells"), "evicted_cells")?,
+            span_count: count(j.get("span_count"), "span_count")?,
+            pg_count: count(j.get("pg_count"), "pg_count")?,
+            cap_events: count(j.get("cap_events"), "cap_events")?,
+        })
+    }
 }
 
 /// Mode-independent stream totals for the snapshot: both the streaming
@@ -725,6 +842,36 @@ mod tests {
         let doc = Json::parse(&a.to_string_pretty()).expect("snapshot parses");
         assert_eq!(doc.get("final").as_bool(), Some(true));
         assert!(doc.get("fleet").get("mpg").as_f64().is_some());
+    }
+
+    #[test]
+    fn checkpoint_round_trip_mid_stream_is_bit_identical() {
+        let evs = tape();
+        // Checkpoint at an awkward index (mid-ring, after evictions) and
+        // ingest the tail into both the original and the restored ledger.
+        let cut = evs.len() * 2 / 3;
+        let mut ml = MonitorLedger::new(10.0, 4);
+        for ev in &evs[..cut] {
+            ml.ingest(ev);
+        }
+        let doc = Json::parse(&ml.ckpt_json().to_string_pretty()).expect("ckpt parses");
+        let mut resumed = MonitorLedger::from_ckpt(&doc).expect("ckpt restores");
+        assert_eq!(resumed.live_cells(), ml.live_cells());
+        assert_eq!(resumed.live_job_count(), ml.live_job_count());
+        for ev in &evs[cut..] {
+            ml.ingest(ev);
+            resumed.ingest(ev);
+        }
+        assert_reports_bit_identical(&ml.report(|_| true), &resumed.report(|_| true), "resumed");
+        assert_eq!(ml.watermark_s().to_bits(), resumed.watermark_s().to_bits());
+        let a = ml.recent_series(|_| true);
+        let b = resumed.recent_series(|_| true);
+        assert_eq!(
+            series_json(&a, ml.width_s(), ml.watermark_s()).to_string_pretty(),
+            series_json(&b, resumed.width_s(), resumed.watermark_s()).to_string_pretty()
+        );
+        // Version-skew and junk are refused, not mis-restored.
+        assert!(MonitorLedger::from_ckpt(&Json::Null).is_err());
     }
 
     #[test]

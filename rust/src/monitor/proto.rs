@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::fleet::ChipGeneration;
 use crate::metrics::{JobMeta, SpanSink, StackLayer, TimeClass};
+use crate::util::Json;
 use crate::workload::{Framework, JobId, ModelArch, Phase, SizeClass};
 
 /// Protocol version. The multi-stream framing (PR 8) is carried in a
@@ -273,6 +274,57 @@ impl Validator {
     pub fn job_count(&self) -> usize {
         self.jobs.len()
     }
+
+    /// Checkpoint this validator's state. `last_cap_t` is carried as an
+    /// f64 bit pattern so the cap-ordering check resumes with the exact
+    /// value it would hold mid-stream (a decimal round-trip could admit
+    /// or reject a boundary cap line the uninterrupted run would not).
+    pub fn ckpt_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "jobs",
+                Json::Arr(self.jobs.iter().map(|id| Json::num(*id as f64)).collect()),
+            ),
+            (
+                "last_cap_t",
+                match self.last_cap_t {
+                    Some(t) => Json::f64b(t),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "label",
+                match &self.label {
+                    Some(l) => Json::str(l),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Restore a validator from [`Validator::ckpt_json`] output.
+    pub fn from_ckpt(j: &Json) -> Result<Validator, String> {
+        let jobs = j
+            .get("jobs")
+            .as_arr()
+            .ok_or("validator checkpoint missing `jobs`")?
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .map(|x| x as JobId)
+                    .ok_or_else(|| "bad job id in validator checkpoint".to_string())
+            })
+            .collect::<Result<BTreeSet<JobId>, String>>()?;
+        let last_cap_t = match j.get("last_cap_t") {
+            Json::Null => None,
+            v => Some(v.as_f64b().ok_or("bad `last_cap_t` in validator checkpoint")?),
+        };
+        let label = match j.get("label") {
+            Json::Null => None,
+            v => Some(v.as_str().ok_or("bad `label` in validator checkpoint")?.to_string()),
+        };
+        Ok(Validator { jobs, last_cap_t, label })
+    }
 }
 
 /// A [`SpanSink`] that serializes the emission into a shared line-protocol
@@ -292,8 +344,19 @@ impl StreamRecorder {
     }
 
     fn push(&mut self, ev: &Event) {
+        let mut line = ev.format();
+        // Chaos sites: damage the serialized line the way a torn write or
+        // a flaky link would — truncate its tail, or garble it into a
+        // token no reader accepts — so downstream validation/quarantine
+        // paths can be driven deterministically.
+        if crate::util::fault::fire(crate::util::fault::Site::StreamTruncate) {
+            line.truncate(line.len() / 2);
+        }
+        if crate::util::fault::fire(crate::util::fault::Site::StreamGarble) {
+            line = format!("garbled {line}");
+        }
         let mut buf = self.buf.lock().expect("stream buffer poisoned");
-        buf.push_str(&ev.format());
+        buf.push_str(&line);
         buf.push('\n');
     }
 }
@@ -394,6 +457,35 @@ mod tests {
         v.check(&Event::Capacity { t: 10.0, chips: 1 }).unwrap();
         let err = v.check(&Event::Capacity { t: 4.0, chips: 2 }).unwrap_err();
         assert!(err.starts_with("[cell-b.txt] "), "{err}");
+    }
+
+    #[test]
+    fn validator_checkpoint_round_trips_mid_stream() {
+        let mut v = Validator::labeled("cell-a");
+        let job = Event::parse("job 9 training jax-pathways transformer tpu-c small 64")
+            .unwrap()
+            .unwrap();
+        v.check(&job).unwrap();
+        v.check(&Event::Capacity { t: 1.0 / 3.0, chips: 5 }).unwrap();
+        let mut r = Validator::from_ckpt(&v.ckpt_json()).unwrap();
+        assert_eq!(r.job_count(), 1);
+        let span = Event::parse("span 9 0 1 4 lost hardware").unwrap().unwrap();
+        r.check(&span).unwrap();
+        // The restored cap watermark is bit-exact: a cap line below 1/3
+        // still fails, with the label intact.
+        let err = r.check(&Event::Capacity { t: 0.2, chips: 2 }).unwrap_err();
+        assert!(err.starts_with("[cell-a] "), "{err}");
+        assert!(err.contains("out of order"), "{err}");
+        assert_eq!(
+            r.ckpt_json().to_string_compact(),
+            v.ckpt_json().to_string_compact(),
+            "failed checks must not mutate state"
+        );
+        // A fresh (unlabeled, empty) validator round-trips too.
+        let empty = Validator::default();
+        let r2 = Validator::from_ckpt(&empty.ckpt_json()).unwrap();
+        assert_eq!(r2.job_count(), 0);
+        assert!(Validator::from_ckpt(&Json::Null).is_err());
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //! a hit is *exactly* what re-simulating would produce. Entries live as
 //! one JSON file per key under `.sweep-cache/` (see [`DEFAULT_DIR`]);
 //! f64s are stored as bit-pattern hex so a round trip is bit-exact.
-//! Corrupt, truncated, or version-skewed entries simply read as misses
-//! and the variant is re-simulated.
+//! Corrupt, truncated, or version-skewed entries read as misses and the
+//! variant is re-simulated; the bad file is renamed aside to
+//! `<entry>.corrupt` (kept for forensics, counted in [`CacheStats`])
+//! instead of being silently re-missed forever.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -441,6 +443,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Unreadable entries quarantined as `<entry>.corrupt` still sitting
+    /// in the directory (a scan count, so corruption a *worker* process
+    /// hit shows up in the coordinator's stats too).
+    pub corrupt: u64,
 }
 
 /// A directory of cached sweep results, one JSON file per key.
@@ -480,15 +486,18 @@ impl SweepCache {
     /// Read an entry. Every failure mode — missing file, truncated or
     /// corrupt JSON, version skew, key mismatch (a hash collision on the
     /// file name with different embedded key) — degrades to a miss so the
-    /// caller falls back to re-simulation. Hits refresh the entry's mtime
-    /// (best-effort) so LRU eviction under [`Self::with_max_bytes`]
-    /// prefers genuinely cold entries.
+    /// caller falls back to re-simulation. An entry that *exists* but
+    /// fails to decode is additionally renamed aside to `<entry>.corrupt`
+    /// (best-effort): the corruption becomes visible telemetry instead of
+    /// a silent perpetual miss, and the re-simulated store is never raced
+    /// by a half-dead file. Hits refresh the entry's mtime (best-effort)
+    /// so LRU eviction under [`Self::with_max_bytes`] prefers genuinely
+    /// cold entries.
     pub fn lookup(&self, key: &CacheKey) -> Option<CachedRun> {
         let path = self.dir.join(key.file_name());
-        let hit = std::fs::read_to_string(&path)
-            .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .and_then(|j| decode(&j, key));
+        let text = std::fs::read_to_string(&path).ok();
+        let hit =
+            text.as_deref().and_then(|t| Json::parse(t).ok()).and_then(|j| decode(&j, key));
         if hit.is_some() {
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
             if let Ok(f) = std::fs::File::open(&path) {
@@ -496,6 +505,10 @@ impl SweepCache {
             }
         } else {
             self.counters.misses.fetch_add(1, Ordering::Relaxed);
+            if text.is_some() {
+                let aside = self.dir.join(format!("{}.corrupt", key.file_name()));
+                let _ = std::fs::rename(&path, &aside);
+            }
         }
         hit
     }
@@ -524,6 +537,15 @@ impl SweepCache {
         }
         let file_name = key.file_name();
         let ok = std::fs::rename(&tmp, self.dir.join(&file_name)).is_ok();
+        // Chaos site: tear the entry just published (what a crash would
+        // leave behind WITHOUT the atomic rename). The next lookup must
+        // quarantine it and re-simulate — never serve it.
+        if ok && crate::util::fault::fire(crate::util::fault::Site::CacheCorrupt) {
+            let entry = self.dir.join(&file_name);
+            if let Ok(full) = std::fs::read_to_string(&entry) {
+                let _ = std::fs::write(&entry, &full[..full.len() / 2]);
+            }
+        }
         if ok {
             if let Some(cap) = self.max_bytes {
                 if self.note_stored_bytes(payload_len) > cap {
@@ -623,7 +645,13 @@ impl SweepCache {
         let mut oldest: Option<f64> = None;
         let mut newest: Option<f64> = None;
         for e in rd.flatten() {
-            if !e.file_name().to_string_lossy().ends_with(".json") {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".corrupt") {
+                st.corrupt += 1;
+                continue;
+            }
+            if !name.ends_with(".json") {
                 continue;
             }
             let Ok(md) = e.metadata() else { continue };
@@ -990,11 +1018,15 @@ mod tests {
         let key = CacheKey { cfg_hash: 7, seed: 7 };
         cache.store(&key, &sample_run());
         let path = cache.dir().join(key.file_name());
+        let aside = cache.dir().join(format!("{}.corrupt", key.file_name()));
 
         // Truncated JSON (a crashed writer without the atomic rename).
         let full = std::fs::read_to_string(&path).unwrap();
         std::fs::write(&path, &full[..full.len() / 2]).unwrap();
         assert!(cache.lookup(&key).is_none(), "truncated entry must miss");
+        assert!(!path.exists(), "unreadable entry must be renamed aside");
+        assert!(aside.exists(), "quarantined entry must be kept as <entry>.corrupt");
+        assert_eq!(cache.stats().corrupt, 1, "stats must count quarantined entries");
 
         // Valid JSON, wrong version.
         let skewed =
@@ -1027,6 +1059,16 @@ mod tests {
         let forged = full.replace(&format!("{:016x}", 7u64), &format!("{:016x}", 8u64));
         std::fs::write(&path, forged).unwrap();
         assert!(cache.lookup(&key).is_none(), "key mismatch must miss");
+
+        // Every stage quarantined the same key, so exactly one `.corrupt`
+        // file sits in the directory — and a re-store + hit works again.
+        assert_eq!(cache.stats().corrupt, 1);
+        assert!(cache.store(&key, &sample_run()));
+        assert!(cache.lookup(&key).is_some(), "fresh entry must hit after quarantine");
+        // A plain missing entry is a miss, NOT corruption: nothing to
+        // quarantine.
+        assert!(cache.lookup(&CacheKey { cfg_hash: 77, seed: 77 }).is_none());
+        assert_eq!(cache.stats().corrupt, 1);
         cache.clear().unwrap();
     }
 }

@@ -891,6 +891,38 @@ pub fn write_report_footer(out: &mut impl Write) -> io::Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Structured partial failure
+// ---------------------------------------------------------------------------
+
+/// A shard that stayed dead after its whole retry budget: which shard,
+/// how many attempts ran, and every attempt's exit status in order. The
+/// coordinator surfaces this (plus a resume hint) instead of an
+/// anonymous "a worker failed" — at fleet scale, *which* worker died
+/// *how* is the actionable part.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardFailure {
+    pub shard: usize,
+    pub attempts: u32,
+    /// Display form of each failed attempt's status, attempt order.
+    pub statuses: Vec<String>,
+}
+
+impl std::fmt::Display for ShardFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shard {} failed after {} attempt{} [{}]",
+            self.shard,
+            self.attempts,
+            if self.attempts == 1 { "" } else { "s" },
+            self.statuses.join("; "),
+        )
+    }
+}
+
+impl std::error::Error for ShardFailure {}
+
+// ---------------------------------------------------------------------------
 // Worker progress protocol
 // ---------------------------------------------------------------------------
 
@@ -1313,6 +1345,29 @@ mod tests {
         }
         let err = merge_shard_reports(&skewed, spec.len()).unwrap_err().to_string();
         assert!(err.contains("behavior_version"), "{err}");
+    }
+
+    #[test]
+    fn shard_failure_names_shard_attempts_and_statuses() {
+        let f = ShardFailure {
+            shard: 1,
+            attempts: 3,
+            statuses: vec![
+                "exit status: 86".to_string(),
+                "exit status: 86".to_string(),
+                "exit status: 1".to_string(),
+            ],
+        };
+        let msg = f.to_string();
+        assert!(msg.contains("shard 1"), "{msg}");
+        assert!(msg.contains("3 attempts"), "{msg}");
+        assert!(msg.contains("exit status: 86; exit status: 86; exit status: 1"), "{msg}");
+        let one = ShardFailure {
+            shard: 0,
+            attempts: 1,
+            statuses: vec!["exit status: 9".to_string()],
+        };
+        assert!(one.to_string().contains("1 attempt ["), "{}", one.to_string());
     }
 
     #[test]

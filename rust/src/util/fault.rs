@@ -1,0 +1,386 @@
+//! Deterministic, seeded fault injection for chaos tests.
+//!
+//! A fleet pipeline that *measures* lost goodput must itself survive the
+//! faults it accounts for — killed shard workers, torn cache entries,
+//! garbled stream lines, dropped dashboard connections. This module puts
+//! a named injection **site** at each of those process/IO boundaries and
+//! a process-wide registry of **rules** deciding which hits of a site
+//! actually fire. Rules come from the `TPUFLEET_FAULTS` environment
+//! variable (or `--inject-faults` on the hidden test paths), so a chaos
+//! run is an ordinary invocation plus one env var — and because every
+//! trigger is a pure function of the per-site hit counter (and, for
+//! probabilistic rules, an explicit seed), the same spec replays the
+//! same faults every time. Chaos tests are reproducible, never flaky.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! TPUFLEET_FAULTS = rule ( "," rule )*
+//! rule            = site ( ":" key "=" value )+
+//! site            = shard-worker-exit | cache-corrupt | stream-truncate
+//!                 | stream-garble | http-drop | monitor-exit
+//! key             = after | every | prob | seed | attempt
+//! ```
+//!
+//! Exactly one of `after=N` (every hit from the N-th on, 1-based),
+//! `every=N` (hits N, 2N, 3N, ...), or `prob=P` (each hit independently
+//! with probability P, derandomized via `seed=S`) must be given.
+//! `attempt=A` restricts the rule to the process whose
+//! `TPUFLEET_FAULT_ATTEMPT` is A — the shard supervisor exports the
+//! attempt index on each (re)spawn, so `shard-worker-exit:after=1:attempt=0`
+//! kills only first attempts and lets retries complete.
+//!
+//! The legacy `TPUFLEET_SHARD_FAIL_AFTER=N` hook is subsumed: when
+//! `TPUFLEET_FAULTS` is unset it is read as `shard-worker-exit:after=N`.
+//!
+//! A malformed spec panics with the offending rule: a chaos test whose
+//! fault never arms must fail loudly, not pass vacuously.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Primary spec env var, `rule,rule,...` per the module grammar.
+pub const ENV_SPEC: &str = "TPUFLEET_FAULTS";
+
+/// Attempt index exported by the shard supervisor on each (re)spawn;
+/// matched against a rule's `attempt=A` filter. Absent reads as 0.
+pub const ENV_ATTEMPT: &str = "TPUFLEET_FAULT_ATTEMPT";
+
+/// Legacy hook (PR 2): worker exits after N completed variants.
+pub const ENV_LEGACY_SHARD_FAIL: &str = "TPUFLEET_SHARD_FAIL_AFTER";
+
+/// Exit code of a worker/monitor killed by an injected exit fault —
+/// distinguishable from panics (101) and real errors (1) in supervisor
+/// telemetry and chaos-test assertions.
+pub const INJECTED_EXIT_CODE: i32 = 86;
+
+/// Named injection sites, one per process/IO boundary the pipeline
+/// crosses. Adding a site here (plus one `fire` call at the boundary) is
+/// the whole integration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Sweep worker subprocess: `exit(86)` after a completed variant.
+    ShardWorkerExit,
+    /// Sweep cache: truncate the entry file just written.
+    CacheCorrupt,
+    /// Stream recorder: drop the tail of an emitted event line.
+    StreamTruncate,
+    /// Stream recorder: scramble an emitted event line.
+    StreamGarble,
+    /// Dashboard HTTP server: drop the connection before responding.
+    HttpDrop,
+    /// Monitor ingest loop: `exit(86)` after an ingested line.
+    MonitorExit,
+}
+
+impl Site {
+    pub const ALL: [Site; 6] = [
+        Site::ShardWorkerExit,
+        Site::CacheCorrupt,
+        Site::StreamTruncate,
+        Site::StreamGarble,
+        Site::HttpDrop,
+        Site::MonitorExit,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::ShardWorkerExit => "shard-worker-exit",
+            Site::CacheCorrupt => "cache-corrupt",
+            Site::StreamTruncate => "stream-truncate",
+            Site::StreamGarble => "stream-garble",
+            Site::HttpDrop => "http-drop",
+            Site::MonitorExit => "monitor-exit",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|site| site.name() == s)
+    }
+}
+
+/// When a rule fires, as a pure function of the site's 1-based hit
+/// counter (and, for `Prob`, an explicit seed).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    /// Hits `n, n+1, n+2, ...` fire (so `after=1` = every hit, matching
+    /// the legacy fail-after-N-variants semantics).
+    After(u64),
+    /// Hits `n, 2n, 3n, ...` fire.
+    Every(u64),
+    /// Each hit fires independently with probability `p`, derandomized
+    /// by hashing `(seed, site, hit)`.
+    Prob { p: f64, seed: u64 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Rule {
+    site: Site,
+    trigger: Trigger,
+    /// Only fire in the process whose [`ENV_ATTEMPT`] equals this.
+    attempt: Option<u64>,
+}
+
+/// FNV-1a over the rule seed, site index, and hit counter: a stable,
+/// dependency-free hash for derandomized `prob=` triggers.
+fn prob_hash(seed: u64, site: usize, hit: u64) -> u64 {
+    let mut state: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in [seed, site as u64, hit] {
+        for b in x.to_le_bytes() {
+            state ^= b as u64;
+            state = state.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    state
+}
+
+fn parse_rule(entry: &str) -> Result<Rule, String> {
+    let mut parts = entry.split(':');
+    let site_name = parts.next().unwrap_or("");
+    let site = Site::parse(site_name).ok_or_else(|| {
+        format!(
+            "unknown fault site '{site_name}' in '{entry}' (sites: {})",
+            Site::ALL.map(Site::name).join(", ")
+        )
+    })?;
+    let mut trigger: Option<Trigger> = None;
+    let mut seed: u64 = 0;
+    let mut attempt: Option<u64> = None;
+    for kv in parts {
+        let (key, value) = kv
+            .split_once('=')
+            .ok_or_else(|| format!("expected key=value, got '{kv}' in '{entry}'"))?;
+        let set = |t: Trigger, cur: &mut Option<Trigger>| -> Result<(), String> {
+            if cur.is_some() {
+                return Err(format!("multiple triggers in '{entry}'"));
+            }
+            *cur = Some(t);
+            Ok(())
+        };
+        match key {
+            "after" => {
+                let n = value.parse().map_err(|_| format!("bad after={value}"))?;
+                set(Trigger::After(n), &mut trigger)?;
+            }
+            "every" => {
+                let n: u64 = value.parse().map_err(|_| format!("bad every={value}"))?;
+                if n == 0 {
+                    return Err(format!("every=0 never fires in '{entry}'"));
+                }
+                set(Trigger::Every(n), &mut trigger)?;
+            }
+            "prob" => {
+                let p: f64 = value.parse().map_err(|_| format!("bad prob={value}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("prob={p} outside [0, 1] in '{entry}'"));
+                }
+                set(Trigger::Prob { p, seed: 0 }, &mut trigger)?;
+            }
+            "seed" => {
+                seed = value.parse().map_err(|_| format!("bad seed={value}"))?;
+            }
+            "attempt" => {
+                attempt =
+                    Some(value.parse().map_err(|_| format!("bad attempt={value}"))?);
+            }
+            other => return Err(format!("unknown key '{other}' in '{entry}'")),
+        }
+    }
+    let mut trigger =
+        trigger.ok_or_else(|| format!("'{entry}' needs one of after=/every=/prob="))?;
+    if let Trigger::Prob { p, .. } = trigger {
+        trigger = Trigger::Prob { p, seed };
+    }
+    Ok(Rule { site, trigger, attempt })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<Rule>, String> {
+    spec.split(',')
+        .map(str::trim)
+        .filter(|e| !e.is_empty())
+        .map(parse_rule)
+        .collect()
+}
+
+/// The process-wide fault registry: parsed rules, this process's attempt
+/// index, and one hit counter per site.
+pub struct Registry {
+    rules: Vec<Rule>,
+    attempt: u64,
+    hits: [AtomicU64; Site::ALL.len()],
+}
+
+impl Registry {
+    fn from_rules(rules: Vec<Rule>, attempt: u64) -> Registry {
+        Registry { rules, attempt, hits: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Parse a spec string into a registry (exposed for tests; production
+    /// code goes through [`fire`] / [`install`]).
+    pub fn parse(spec: &str, attempt: u64) -> Result<Registry, String> {
+        Ok(Registry::from_rules(parse_spec(spec)?, attempt))
+    }
+
+    /// Record one hit of `site` and decide whether a fault fires there.
+    pub fn fire(&self, site: Site) -> bool {
+        if self.rules.is_empty() {
+            return false;
+        }
+        let hit = self.hits[site.index()].fetch_add(1, Ordering::Relaxed) + 1;
+        self.rules.iter().any(|r| {
+            r.site == site
+                && r.attempt.is_none_or(|a| a == self.attempt)
+                && match r.trigger {
+                    Trigger::After(n) => hit >= n,
+                    Trigger::Every(n) => hit % n == 0,
+                    Trigger::Prob { p, seed } => {
+                        (prob_hash(seed, site.index(), hit) as f64)
+                            < p * (u64::MAX as f64)
+                    }
+                }
+        })
+    }
+
+    /// Any rules armed at all? (Cheap guard for telemetry lines.)
+    pub fn armed(&self) -> bool {
+        !self.rules.is_empty()
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+fn attempt_from_env() -> u64 {
+    std::env::var(ENV_ATTEMPT).ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+/// Install an explicit spec (the `--inject-faults SPEC` path). Must run
+/// before the first [`fire`] call; panics on a malformed spec or if the
+/// registry was already initialized from the environment.
+pub fn install(spec: &str) {
+    let reg = match Registry::parse(spec, attempt_from_env()) {
+        Ok(reg) => reg,
+        Err(e) => panic!("--inject-faults: {e}"),
+    };
+    if GLOBAL.set(reg).is_err() {
+        panic!("--inject-faults: fault registry already initialized");
+    }
+}
+
+/// The process registry, initialized on first use from [`ENV_SPEC`] (or
+/// the legacy [`ENV_LEGACY_SHARD_FAIL`] hook when the former is unset).
+/// Panics on a malformed spec — a chaos test whose fault never arms must
+/// fail loudly, not pass vacuously.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(|| {
+        let attempt = attempt_from_env();
+        if let Ok(spec) = std::env::var(ENV_SPEC) {
+            match Registry::parse(&spec, attempt) {
+                Ok(reg) => reg,
+                Err(e) => panic!("{ENV_SPEC}: {e}"),
+            }
+        } else if let Some(n) =
+            std::env::var(ENV_LEGACY_SHARD_FAIL).ok().and_then(|s| s.parse::<u64>().ok())
+        {
+            let legacy =
+                Rule { site: Site::ShardWorkerExit, trigger: Trigger::After(n), attempt: None };
+            Registry::from_rules(vec![legacy], attempt)
+        } else {
+            Registry::from_rules(Vec::new(), attempt)
+        }
+    })
+}
+
+/// Record one hit of `site` on the process registry; true = inject.
+pub fn fire(site: Site) -> bool {
+    global().fire(site)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_registry_never_fires() {
+        let reg = Registry::parse("", 0).expect("empty spec parses");
+        assert!(!reg.armed());
+        for site in Site::ALL {
+            for _ in 0..10 {
+                assert!(!reg.fire(site));
+            }
+        }
+    }
+
+    #[test]
+    fn after_fires_from_nth_hit_on() {
+        let reg = Registry::parse("shard-worker-exit:after=3", 0).unwrap();
+        let fired: Vec<bool> =
+            (0..5).map(|_| reg.fire(Site::ShardWorkerExit)).collect();
+        assert_eq!(fired, [false, false, true, true, true]);
+        // Other sites are untouched.
+        assert!(!reg.fire(Site::CacheCorrupt));
+    }
+
+    #[test]
+    fn every_fires_on_multiples() {
+        let reg = Registry::parse("monitor-exit:every=2", 0).unwrap();
+        let fired: Vec<bool> = (0..6).map(|_| reg.fire(Site::MonitorExit)).collect();
+        assert_eq!(fired, [false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn prob_is_deterministic_for_a_seed() {
+        let a = Registry::parse("http-drop:prob=0.5:seed=7", 0).unwrap();
+        let b = Registry::parse("http-drop:prob=0.5:seed=7", 0).unwrap();
+        let fa: Vec<bool> = (0..64).map(|_| a.fire(Site::HttpDrop)).collect();
+        let fb: Vec<bool> = (0..64).map(|_| b.fire(Site::HttpDrop)).collect();
+        assert_eq!(fa, fb, "same seed must replay the same faults");
+        let hits = fa.iter().filter(|&&x| x).count();
+        assert!(hits > 8 && hits < 56, "p=0.5 over 64 hits fired {hits} times");
+        // prob=0 and prob=1 are the degenerate anchors.
+        let never = Registry::parse("http-drop:prob=0", 0).unwrap();
+        assert!((0..32).all(|_| !never.fire(Site::HttpDrop)));
+        let always = Registry::parse("http-drop:prob=1", 0).unwrap();
+        assert!((0..32).all(|_| always.fire(Site::HttpDrop)));
+    }
+
+    #[test]
+    fn attempt_filter_gates_on_process_attempt() {
+        let first = Registry::parse("shard-worker-exit:after=1:attempt=0", 0).unwrap();
+        assert!(first.fire(Site::ShardWorkerExit), "attempt 0 must fire");
+        let retry = Registry::parse("shard-worker-exit:after=1:attempt=0", 1).unwrap();
+        assert!(!retry.fire(Site::ShardWorkerExit), "attempt 1 must be spared");
+    }
+
+    #[test]
+    fn multiple_rules_and_sites_parse() {
+        let reg = Registry::parse(
+            "shard-worker-exit:after=1:attempt=0, cache-corrupt:after=2, stream-garble:every=5",
+            0,
+        )
+        .unwrap();
+        assert!(reg.armed());
+        assert!(!reg.fire(Site::CacheCorrupt));
+        assert!(reg.fire(Site::CacheCorrupt));
+        assert!(!reg.fire(Site::StreamGarble));
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "unknown-site:after=1",
+            "cache-corrupt",
+            "cache-corrupt:after=1:every=2",
+            "cache-corrupt:after=x",
+            "cache-corrupt:prob=1.5",
+            "cache-corrupt:every=0",
+            "cache-corrupt:frequency=2",
+            "cache-corrupt:after",
+        ] {
+            assert!(Registry::parse(bad, 0).is_err(), "'{bad}' must be rejected");
+        }
+    }
+}

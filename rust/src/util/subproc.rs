@@ -10,6 +10,9 @@
 
 use std::io::{BufRead, BufReader};
 use std::process::{Command, ExitStatus, Stdio};
+use std::time::Duration;
+
+use super::fault;
 
 /// Build a `Command` from an argv-style vector (`argv[0]` is the
 /// program). Panics on an empty argv — an empty worker command is a
@@ -51,7 +54,25 @@ fn run_one<F>(i: usize, argv: &[String], on_line: &F) -> std::io::Result<ExitSta
 where
     F: Fn(usize, &str) + Sync,
 {
-    let mut child = command(argv).stdout(Stdio::piped()).spawn()?;
+    run_one_attempt(i, argv, 0, on_line)
+}
+
+fn run_one_attempt<F>(
+    i: usize,
+    argv: &[String],
+    attempt: u32,
+    on_line: &F,
+) -> std::io::Result<ExitStatus>
+where
+    F: Fn(usize, &str) + Sync,
+{
+    // The attempt index rides on the environment so fault-injection rules
+    // with an `attempt=A` filter can kill first attempts and spare
+    // retries (deterministic chaos, not a coin flip per respawn).
+    let mut child = command(argv)
+        .env(fault::ENV_ATTEMPT, attempt.to_string())
+        .stdout(Stdio::piped())
+        .spawn()?;
     // The pipe closes when the child exits (or dies), ending this loop;
     // read errors are treated as end-of-stream, not failures — the exit
     // status below is the authoritative outcome.
@@ -64,6 +85,85 @@ where
         }
     }
     child.wait()
+}
+
+/// Outcome of one supervised command: how many attempts ran, each failed
+/// attempt's status (display form, spawn errors included), and the final
+/// attempt's result.
+#[derive(Debug)]
+pub struct Supervised {
+    pub attempts: u32,
+    pub failures: Vec<String>,
+    pub result: std::io::Result<ExitStatus>,
+}
+
+impl Supervised {
+    pub fn succeeded(&self) -> bool {
+        self.result.as_ref().is_ok_and(|s| s.success())
+    }
+}
+
+/// Deterministic bounded backoff before re-spawning a dead worker:
+/// 250ms, 500ms, 1s, 2s, 4s, then capped at 5s. No jitter — two chaos
+/// runs of the same spec retry on the same schedule.
+pub fn retry_backoff(attempt: u32) -> Duration {
+    Duration::from_millis((250u64 << attempt.min(5)).min(5000))
+}
+
+/// [`run_all_streaming`] with a per-command retry supervisor: a command
+/// that exits nonzero (or fails to spawn) is re-run up to `retries` more
+/// times, sleeping [`retry_backoff`] between attempts. Each (re)spawn
+/// exports its attempt index via [`fault::ENV_ATTEMPT`]. `on_retry`
+/// fires `(index, failed attempt, status text, upcoming delay)` after an
+/// attempt fails and before the backoff sleep — by then the dead child's
+/// stdout is fully drained, so the caller can safely reset per-command
+/// progress state there.
+pub fn run_supervised<F, R>(
+    cmds: &[Vec<String>],
+    retries: u32,
+    on_line: F,
+    on_retry: R,
+) -> Vec<Supervised>
+where
+    F: Fn(usize, &str) + Sync,
+    R: Fn(usize, u32, &str, Duration) + Sync,
+{
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = cmds
+            .iter()
+            .enumerate()
+            .map(|(i, argv)| {
+                let on_line = &on_line;
+                let on_retry = &on_retry;
+                scope.spawn(move || {
+                    let mut failures: Vec<String> = Vec::new();
+                    let mut attempt = 0u32;
+                    loop {
+                        let result = run_one_attempt(i, argv, attempt, on_line);
+                        let failure = match &result {
+                            Ok(st) if st.success() => {
+                                return Supervised { attempts: attempt + 1, failures, result }
+                            }
+                            Ok(st) => st.to_string(),
+                            Err(e) => format!("spawn failed: {e}"),
+                        };
+                        failures.push(failure.clone());
+                        if attempt >= retries {
+                            return Supervised { attempts: attempt + 1, failures, result };
+                        }
+                        let delay = retry_backoff(attempt);
+                        on_retry(i, attempt, &failure, delay);
+                        std::thread::sleep(delay);
+                        attempt += 1;
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("supervisor thread panicked"))
+            .collect()
+    })
 }
 
 #[cfg(test)]
@@ -89,6 +189,50 @@ mod tests {
         lines.sort();
         let want = vec![(0, "a0".to_string()), (0, "a1".to_string()), (1, "b0".to_string())];
         assert_eq!(lines, want);
+    }
+
+    #[test]
+    fn supervisor_retries_until_success_and_reports_attempts() {
+        // Attempt 0 dies with the injected-fault exit code; attempt 1
+        // succeeds (the supervisor exports TPUFLEET_FAULT_ATTEMPT).
+        let script = r#"[ "${TPUFLEET_FAULT_ATTEMPT}" = "0" ] && exit 86; echo recovered"#;
+        let cmds: Vec<Vec<String>> =
+            vec![vec!["sh".into(), "-c".into(), script.into()]];
+        let lines: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let retries: Mutex<Vec<(usize, u32, String)>> = Mutex::new(Vec::new());
+        let outcomes = run_supervised(
+            &cmds,
+            2,
+            |_, l| lines.lock().unwrap().push(l.to_string()),
+            |i, attempt, failure, _delay| {
+                retries.lock().unwrap().push((i, attempt, failure.to_string()));
+            },
+        );
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].succeeded(), "retry must recover: {:?}", outcomes[0]);
+        assert_eq!(outcomes[0].attempts, 2);
+        assert_eq!(outcomes[0].failures.len(), 1);
+        assert!(outcomes[0].failures[0].contains("86"), "{:?}", outcomes[0].failures);
+        assert_eq!(lines.into_inner().unwrap(), vec!["recovered".to_string()]);
+        let retries = retries.into_inner().unwrap();
+        assert_eq!(retries.len(), 1);
+        assert_eq!((retries[0].0, retries[0].1), (0, 0));
+    }
+
+    #[test]
+    fn supervisor_exhausts_retries_and_keeps_every_status() {
+        let cmds: Vec<Vec<String>> = vec![vec!["sh".into(), "-c".into(), "exit 7".into()]];
+        let outcomes = run_supervised(&cmds, 1, |_, _| {}, |_, _, _, _| {});
+        assert!(!outcomes[0].succeeded());
+        assert_eq!(outcomes[0].attempts, 2, "1 retry = 2 attempts");
+        assert_eq!(outcomes[0].failures.len(), 2);
+        assert!(outcomes[0].failures.iter().all(|f| f.contains('7')));
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_deterministic() {
+        let ms: Vec<u64> = (0..8).map(|a| retry_backoff(a).as_millis() as u64).collect();
+        assert_eq!(ms, [250, 500, 1000, 2000, 4000, 5000, 5000, 5000]);
     }
 
     #[test]

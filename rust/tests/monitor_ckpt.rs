@@ -1,0 +1,258 @@
+//! Crash/resume contracts: a monitor checkpointed at ANY event index and
+//! resumed must produce `f64::to_bits`-identical reports and snapshot
+//! bytes to the uninterrupted run, for 1-, 2-, and 5-stream merges
+//! (property-tested over random cut points); and on the real binary a
+//! `monitor --checkpoint` killed by an injected `monitor-exit` fault must
+//! `--resume` to a final snapshot byte-identical to a run that never
+//! died, while `--merge --quarantine` must survive a garbled stream that
+//! kills strict mode.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+
+use tpufleet::monitor::merge;
+use tpufleet::monitor::proto::{Event, StreamRecorder, Validator};
+use tpufleet::monitor::{snapshot_json, MonitorLedger, StreamStats};
+use tpufleet::sim::{SimConfig, Simulation};
+use tpufleet::testkit::{assert_reports_bit_identical, check};
+use tpufleet::util::fault::INJECTED_EXIT_CODE;
+use tpufleet::util::Json;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tpufleet")
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("tpufleet-monitor-ckpt-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("creating scratch dir");
+    dir
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Record one cell's simulation stream as parsed, validated events.
+fn recorded_events(seed: u64, days: f64) -> Vec<Event> {
+    let mut cfg = SimConfig { seed, duration_s: days * 86400.0, ..Default::default() };
+    cfg.generator.arrivals_per_hour = 8.0;
+    let buf = Arc::new(Mutex::new(String::new()));
+    let mut sim = Simulation::new(cfg).ledger_mode(tpufleet::sim::sweep::summary_ledger_mode());
+    sim.attach_sink(Box::new(StreamRecorder::sharing(buf.clone())));
+    sim.run();
+    let text = buf.lock().unwrap().clone();
+    let mut validator = Validator::default();
+    let mut evs = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(ev) = Event::parse(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1)) {
+            validator.check(&ev).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+            evs.push(ev);
+        }
+    }
+    evs
+}
+
+fn snapshot_bytes(ml: &MonitorLedger) -> String {
+    let stats = StreamStats {
+        jobs: ml.job_count(),
+        spans: ml.span_count(),
+        pg_samples: ml.pg_count(),
+        cap_events: ml.cap_events(),
+    };
+    snapshot_json(&ml.report(|_| true), ml.watermark_s(), ml.width_s(), &stats, true)
+        .to_string_pretty()
+}
+
+/// Satellite (d): checkpoint/restore at a RANDOM event index — through
+/// the full serialize -> bytes -> parse -> restore path, exactly what a
+/// crash-and-`--resume` exercises — then ingest the rest into both the
+/// original and the restored ledger. Reports, watermarks, and rendered
+/// snapshot bytes must come out bit-identical to a run that never
+/// stopped, for N ∈ {1, 2, 5} merged streams.
+#[test]
+fn checkpoint_at_any_event_index_resumes_bit_identically() {
+    const WIDTH_S: f64 = 1800.0;
+    const RING: usize = 6;
+    for n in [1usize, 2, 5] {
+        let names: Vec<String> = (0..n).map(|i| format!("cell-{i}")).collect();
+        let streams: Vec<Vec<Event>> =
+            (0..n).map(|i| recorded_events(0x9100 + i as u64, 0.2)).collect();
+        let reference = merge::interleave(&names, streams);
+        let mut full = MonitorLedger::new(WIDTH_S, RING);
+        let mut full_validator = Validator::labeled("merged");
+        for ev in &reference {
+            full_validator.check(ev).expect("merged stream validates");
+            full.ingest(ev);
+        }
+        let want = snapshot_bytes(&full);
+        let total = reference.len() as u64;
+        check(12, 0x51EE_D000 + n as u64, |rng| {
+            let cut = rng.below(total + 1) as usize;
+            let mut ml = MonitorLedger::new(WIDTH_S, RING);
+            let mut validator = Validator::labeled("merged");
+            for ev in &reference[..cut] {
+                validator.check(ev).unwrap();
+                ml.ingest(ev);
+            }
+            let ledger_text = ml.ckpt_json().to_string_pretty();
+            let validator_text = validator.ckpt_json().to_string_pretty();
+            let mut resumed =
+                MonitorLedger::from_ckpt(&Json::parse(&ledger_text).unwrap()).unwrap();
+            let mut resumed_validator =
+                Validator::from_ckpt(&Json::parse(&validator_text).unwrap()).unwrap();
+            for ev in &reference[cut..] {
+                resumed_validator.check(ev).unwrap_or_else(|e| {
+                    panic!("N={n} cut={cut}: restored validator rejected the tail: {e}")
+                });
+                resumed.ingest(ev);
+                ml.ingest(ev);
+            }
+            assert_reports_bit_identical(
+                &full.report(|_| true),
+                &resumed.report(|_| true),
+                &format!("N={n} cut={cut}"),
+            );
+            assert_eq!(
+                full.watermark_s().to_bits(),
+                resumed.watermark_s().to_bits(),
+                "N={n} cut={cut}: watermark"
+            );
+            assert_eq!(want, snapshot_bytes(&resumed), "N={n} cut={cut}: snapshot bytes");
+            assert_eq!(
+                snapshot_bytes(&ml),
+                snapshot_bytes(&resumed),
+                "N={n} cut={cut}: continued original vs resumed"
+            );
+        });
+    }
+}
+
+/// End-to-end crash drill on the real binary: a `--checkpoint` monitor
+/// killed by an injected `monitor-exit` fault (exit 86, right after a
+/// snapshot+checkpoint) must `--resume` and finish with a final snapshot
+/// byte-identical to a monitor that never died.
+#[test]
+fn killed_monitor_resumes_to_the_uninterrupted_snapshot() {
+    let dir = scratch("crash");
+    let stream = dir.join("stream.txt");
+    let ok = Command::new(bin())
+        .args(["monitor", "record", "--days", "0.1", "--seed", "91", "--arrivals-per-hour", "6"])
+        .args(["--out", &stream.display().to_string()])
+        .status()
+        .expect("spawning tpufleet")
+        .success();
+    assert!(ok, "monitor record failed");
+    let snap = dir.join("snap.json");
+    let ckpt = dir.join("mon.ckpt");
+    let monitor_args = |cmd: &mut Command| {
+        cmd.args(["monitor", "--in", &stream.display().to_string()]);
+        cmd.args(["--width-s", "900", "--ring-windows", "4", "--snapshot-every", "600"]);
+        cmd.args(["--out", &snap.display().to_string()]);
+        cmd.args(["--checkpoint", &ckpt.display().to_string()]);
+    };
+    let mut doomed = Command::new(bin());
+    monitor_args(&mut doomed);
+    doomed.args(["--inject-faults", "monitor-exit:after=2"]);
+    let output = doomed.output().expect("spawning tpufleet");
+    assert_eq!(
+        output.status.code(),
+        Some(INJECTED_EXIT_CODE),
+        "injected monitor-exit must kill the process: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    assert!(ckpt.exists(), "the doomed run must leave a checkpoint behind");
+    let mut resumed = Command::new(bin());
+    monitor_args(&mut resumed);
+    resumed.args(["--resume", &ckpt.display().to_string()]);
+    let output = resumed.output().expect("spawning tpufleet");
+    assert!(
+        output.status.success(),
+        "resume failed: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&output.stderr).contains("resumed from"),
+        "resume must announce itself on stderr"
+    );
+    let resumed_snap = read(&snap);
+    let clean = dir.join("clean.json");
+    let ok = Command::new(bin())
+        .args(["monitor", "--in", &stream.display().to_string()])
+        .args(["--width-s", "900", "--ring-windows", "4"])
+        .args(["--out", &clean.display().to_string()])
+        .status()
+        .expect("spawning tpufleet")
+        .success();
+    assert!(ok, "clean one-shot monitor failed");
+    assert_eq!(resumed_snap, read(&clean), "resumed final snapshot vs never-died run");
+    // Version skew is refused, not half-read: rewrite the checkpoint
+    // with a bumped layout version and watch --resume walk away.
+    let skewed = read(&ckpt).replacen("\"ckpt_version\": 1", "\"ckpt_version\": 99", 1);
+    std::fs::write(&ckpt, skewed).unwrap();
+    let mut stale = Command::new(bin());
+    monitor_args(&mut stale);
+    stale.args(["--resume", &ckpt.display().to_string()]);
+    let output = stale.output().expect("spawning tpufleet");
+    assert_eq!(output.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&output.stderr);
+    assert!(err.contains("refusing to resume"), "{err}");
+}
+
+/// A garbled stream aborts a strict merge with the offending stream and
+/// line named — and under `--quarantine` the same merge finishes,
+/// isolating the bad stream while the healthy one still lands in the
+/// snapshot.
+#[test]
+fn quarantine_survives_a_garbled_stream_that_kills_strict_mode() {
+    let dir = scratch("quarantine");
+    let mut inputs = Vec::new();
+    for (i, seed) in [0x61u64, 0x62].iter().enumerate() {
+        let out = dir.join(format!("cell{i}.txt"));
+        let ok = Command::new(bin())
+            .args(["monitor", "record", "--days", "0.1", "--arrivals-per-hour", "6"])
+            .args(["--seed", &seed.to_string()])
+            .args(["--stream-id", &format!("cell-{i}")])
+            .args(["--out", &out.display().to_string()])
+            .status()
+            .expect("spawning tpufleet")
+            .success();
+        assert!(ok, "monitor record failed");
+        inputs.push(out);
+    }
+    // Garble one span line mid-way through stream 1.
+    let text = read(&inputs[1]);
+    let victim = text
+        .lines()
+        .filter(|l| l.starts_with("span "))
+        .nth(20)
+        .expect("stream 1 has at least 21 spans");
+    let garbled = text.replacen(victim, "span but not as we know it", 1);
+    std::fs::write(&inputs[1], garbled).unwrap();
+    let in_arg = format!("{},{}", inputs[0].display(), inputs[1].display());
+    let snap = dir.join("merged.json");
+    let merge_cmd = |extra: &[&str]| {
+        let mut cmd = Command::new(bin());
+        cmd.args(["monitor", "--merge", "--in", &in_arg]);
+        cmd.args(["--width-s", "900", "--ring-windows", "4"]);
+        cmd.args(["--out", &snap.display().to_string()]);
+        cmd.args(extra);
+        cmd.output().expect("spawning tpufleet")
+    };
+    let strict = merge_cmd(&[]);
+    assert_eq!(strict.status.code(), Some(1), "strict mode must abort on garbage");
+    let err = String::from_utf8_lossy(&strict.stderr);
+    assert!(err.contains("cell-1"), "strict error names the stream: {err}");
+    let lenient = merge_cmd(&["--quarantine"]);
+    let err = String::from_utf8_lossy(&lenient.stderr);
+    assert!(lenient.status.success(), "--quarantine must survive: {err}");
+    assert!(err.contains("quarantining stream `cell-1`"), "{err}");
+    let doc = Json::parse(&read(&snap)).expect("merged snapshot parses");
+    assert_eq!(doc.get("final").as_bool(), Some(true));
+    assert!(
+        doc.get("fleet").get("mpg").as_f64().is_some(),
+        "the healthy stream still produces a fleet report"
+    );
+}
