@@ -6,11 +6,17 @@
 //!
 //! `GOODPUT_BENCH_SPANS` caps the largest synthetic ledger (default
 //! 200_000); `GOODPUT_BENCH_SIM_DAYS` caps the windowed-vs-full
-//! simulation horizon (default 2.0). CI's bench-smoke step shrinks both
-//! so the whole bench finishes in seconds.
+//! simulation horizon (default 2.0); `GOODPUT_BENCH_SOA_SPANS` caps the
+//! SoA-vs-AoS storage comparison (default 1_000_000 — the million-span
+//! scale the monitor mode needs). CI's bench-smoke step shrinks all
+//! three so the whole bench finishes in seconds, and sets
+//! `GOODPUT_BENCH_ENFORCE=1` to turn the SoA-not-slower-than-reference
+//! check into a hard failure (the perf-smoke gate).
 
 use tpufleet::fleet::ChipGeneration;
 use tpufleet::metrics::goodput::{self, Axis};
+use tpufleet::metrics::ledger::{PgSample, Span};
+use tpufleet::metrics::reduce::CellAccum;
 use tpufleet::metrics::{JobMeta, Ledger, StackLayer, TimeClass, TimeSeries};
 use tpufleet::sim::{sweep, SimConfig, Simulation};
 use tpufleet::util::bench::{fmt_dur, Bench};
@@ -201,6 +207,120 @@ fn main() {
     }
     println!("bit-identical naive vs single-pass outputs (incl. layer cells) ... OK");
 
+    // SoA storage vs the pre-SoA array-of-structs layout at the
+    // million-span scale (`GOODPUT_BENCH_SOA_SPANS` caps it). The AoS
+    // baseline is honest: per-job `Vec<Span>` — padded 24-byte structs,
+    // contiguous — materialized in the same BTreeMap job order and folded
+    // with the exact pre-SoA loop shape, so the comparison is storage
+    // layout vs storage layout, not loop shape vs loop shape. The
+    // in-tree `report_ref` (AoS-style walk reassembling spans from the
+    // columns) is timed alongside as the property-test baseline.
+    let soa_spans = env_f64("GOODPUT_BENCH_SOA_SPANS", 1_000_000.0).max(10_000.0) as usize;
+    println!("SoA vs AoS storage: {soa_spans} spans, whole-horizon report");
+    let soa_ledger = build_ledger(soa_spans, 0x50A);
+    let horizon = 30.0 * DAY_S;
+    let aos: Vec<(Vec<Span>, Vec<PgSample>)> = soa_ledger
+        .jobs
+        .values()
+        .map(|(_, jl)| (jl.spans.iter().collect(), jl.pg_samples.clone()))
+        .collect();
+    let report_aos = |w0: f64, w1: f64| {
+        let mut cell = CellAccum::default();
+        for (spans, pgs) in &aos {
+            let mut jc = CellAccum::default();
+            let mut touched = false;
+            for s in spans {
+                if w1 <= s.t0 || w0 >= s.t1 {
+                    continue;
+                }
+                jc.add_piece(s.class, s.layer, s.clipped(w0, w1));
+                touched = true;
+            }
+            for p in pgs {
+                let lo = p.t0.max(w0);
+                let hi = p.t1.min(w1);
+                if hi <= lo {
+                    continue;
+                }
+                jc.add_pg(p.chip_seconds * ((hi - lo) / (p.t1 - p.t0)), p.pg);
+                touched = true;
+            }
+            if touched {
+                cell.merge_job(&jc);
+            }
+        }
+        cell.finalize(soa_ledger.capacity_chip_seconds(w0, w1))
+    };
+    let soa_report = goodput::report(&soa_ledger, 0.0, horizon, |_| true);
+    assert_eq!(
+        soa_report,
+        report_aos(0.0, horizon),
+        "materialized-AoS baseline must be bit-identical to the SoA chunked fold"
+    );
+    assert_eq!(
+        soa_report,
+        goodput::report_ref(&soa_ledger, 0.0, horizon, |_| true),
+        "AoS-walk reference must be bit-identical to the SoA chunked fold"
+    );
+    assert_eq!(
+        soa_report,
+        goodput::report_naive(&soa_ledger, 0.0, horizon, |_| true),
+        "naive rescans must be bit-identical to the SoA chunked fold"
+    );
+    let soa_naive_s = median("soa/report-naive", || {
+        goodput::report_naive(&soa_ledger, 0.0, horizon, |_| true)
+    });
+    let aos_s = median("soa/report-aos-structs", || report_aos(0.0, horizon));
+    let ref_s = median("soa/report-aos-walk-ref", || {
+        goodput::report_ref(&soa_ledger, 0.0, horizon, |_| true)
+    });
+    let soa_s = median("soa/report-soa-chunked", || {
+        goodput::report(&soa_ledger, 0.0, horizon, |_| true)
+    });
+    let spans_per_sec = |s: f64| soa_spans as f64 / s.max(1e-12);
+    let soa_vs_aos = aos_s / soa_s.max(1e-12);
+    let soa_vs_naive = soa_naive_s / soa_s.max(1e-12);
+    let aos_resident = soa_spans * std::mem::size_of::<Span>();
+    let soa_resident: usize =
+        soa_ledger.jobs.values().map(|(_, jl)| jl.spans.resident_bytes()).sum();
+    println!(
+        "  spans/sec: naive {:.3e}  aos-structs {:.3e}  aos-walk-ref {:.3e}  \
+         soa-chunked {:.3e}",
+        spans_per_sec(soa_naive_s),
+        spans_per_sec(aos_s),
+        spans_per_sec(ref_s),
+        spans_per_sec(soa_s),
+    );
+    println!(
+        "  soa vs aos {:.2}x ({} -> {}), vs naive {:.2}x; resident: aos {} B -> soa {} B \
+         ({:.1}%)",
+        soa_vs_aos,
+        fmt_dur(aos_s),
+        fmt_dur(soa_s),
+        soa_vs_naive,
+        aos_resident,
+        soa_resident,
+        100.0 * soa_resident as f64 / aos_resident as f64,
+    );
+    // The CI perf-smoke gate: the SoA chunked sweep must not regress
+    // below the AoS baseline (ratio >= 1.0 with scheduling slack) and
+    // must hold the smaller resident footprint. Advisory locally;
+    // GOODPUT_BENCH_ENFORCE=1 makes failure fatal.
+    let soa_gate_ok = soa_vs_aos >= 0.9 && soa_resident < aos_resident;
+    println!(
+        "perf gate: soa-chunked >= aos baseline (ratio {soa_vs_aos:.2}, slack 0.9) \
+         with smaller resident estimate ... {}",
+        if soa_gate_ok { "OK" } else { "UNEXPECTED" }
+    );
+    if std::env::var("GOODPUT_BENCH_ENFORCE").ok().as_deref() == Some("1") && !soa_gate_ok {
+        eprintln!("GOODPUT_BENCH_ENFORCE=1: SoA perf-smoke gate failed");
+        std::process::exit(1);
+    }
+    println!(
+        "shape: >=2x spans/sec vs naive at 1e6+ spans ... {}",
+        if soa_spans < 1_000_000 || soa_vs_naive >= 2.0 { "OK" } else { "UNEXPECTED" }
+    );
+
     // Windowed-ledger memory: the same simulation accounted in streaming
     // mode holds O(windows x jobs) cells instead of O(spans) spans, with
     // a bit-identical whole-horizon report.
@@ -257,6 +377,24 @@ fn main() {
         ("report_speedup", Json::num(headline_rep)),
         ("segmented_speedup", Json::num(headline_seg)),
         ("timeseries_speedup", Json::num(headline_ts)),
+        (
+            "soa",
+            Json::obj(vec![
+                ("spans", Json::num(soa_spans as f64)),
+                ("naive_seconds", Json::num(soa_naive_s)),
+                ("aos_structs_seconds", Json::num(aos_s)),
+                ("aos_walk_ref_seconds", Json::num(ref_s)),
+                ("soa_chunked_seconds", Json::num(soa_s)),
+                ("naive_spans_per_sec", Json::num(spans_per_sec(soa_naive_s))),
+                ("aos_structs_spans_per_sec", Json::num(spans_per_sec(aos_s))),
+                ("aos_walk_ref_spans_per_sec", Json::num(spans_per_sec(ref_s))),
+                ("soa_chunked_spans_per_sec", Json::num(spans_per_sec(soa_s))),
+                ("soa_vs_aos_ratio", Json::num(soa_vs_aos)),
+                ("soa_vs_naive_speedup", Json::num(soa_vs_naive)),
+                ("aos_resident_bytes", Json::num(aos_resident as f64)),
+                ("soa_resident_bytes", Json::num(soa_resident as f64)),
+            ]),
+        ),
         ("sim_days", Json::num(days)),
         ("full_ledger_retained_items", Json::num(full_spans as f64)),
         ("windowed_peak_cells", Json::num(peak as f64)),

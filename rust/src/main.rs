@@ -1402,7 +1402,7 @@ fn cmd_trace(args: &Args) -> i32 {
 
 /// Flag vocabulary for `monitor` stream ingest (the `record` subaction
 /// declares its own).
-const MONITOR_FLAGS: [&str; 17] = [
+const MONITOR_FLAGS: [&str; 19] = [
     "in",
     "out",
     "width-s",
@@ -1417,7 +1417,9 @@ const MONITOR_FLAGS: [&str; 17] = [
     "listen",
     "series-out",
     "checkpoint",
+    "checkpoint-keep",
     "resume",
+    "no-auto-resume",
     "quarantine",
     "inject-faults",
 ];
@@ -1457,6 +1459,9 @@ struct MonitorIngest {
     /// Streaming mode only: `--checkpoint FILE`, written atomically at
     /// every snapshot emission so a killed monitor can `--resume`.
     ckpt: Option<String>,
+    /// `--checkpoint-keep K`: checkpoint generations retained per write
+    /// (`FILE`, `FILE.1`, …); 1 (the default) keeps only the latest.
+    ckpt_keep: usize,
 }
 
 impl MonitorIngest {
@@ -1533,7 +1538,7 @@ impl MonitorIngest {
                 ("cap_events", Json::num(self.stats.cap_events as f64)),
             ]),
         );
-        ckpt::write_atomic(std::path::Path::new(path), &Json::Obj(doc))
+        ckpt::write_rotating(std::path::Path::new(path), &Json::Obj(doc), self.ckpt_keep)
             .map_err(|e| format!("writing checkpoint {path} failed: {e}"))
     }
 
@@ -1771,10 +1776,40 @@ fn cmd_monitor(args: &Args) -> i32 {
         return 2;
     }
     let ckpt_path = args.get("checkpoint").map(str::to_string);
-    let resume_path = args.get("resume").map(str::to_string);
+    let mut resume_path = args.get("resume").map(str::to_string);
     if batch && (ckpt_path.is_some() || resume_path.is_some()) {
         eprintln!("monitor: --checkpoint/--resume require streaming mode (drop --batch)");
         return 2;
+    }
+    let ckpt_keep = args.get_usize("checkpoint-keep", 1);
+    if args.get("checkpoint-keep").is_some() && ckpt_path.is_none() {
+        eprintln!("monitor: --checkpoint-keep only applies with --checkpoint FILE");
+        return 2;
+    }
+    if ckpt_keep == 0 {
+        eprintln!("monitor: --checkpoint-keep must be at least 1");
+        return 2;
+    }
+    if args.has_flag("no-auto-resume") && ckpt_path.is_none() {
+        eprintln!("monitor: --no-auto-resume only applies with --checkpoint FILE");
+        return 2;
+    }
+    // Auto-resume: `--checkpoint FILE` with no explicit `--resume` picks
+    // up a compatible checkpoint already sitting at FILE (a restarted
+    // follower continues where its predecessor died). Compatibility is
+    // enforced by the same version/mode/shape checks as explicit
+    // `--resume`; an incompatible file is a hard error rather than a
+    // silent restart, and `--no-auto-resume` opts out entirely.
+    if resume_path.is_none() && !args.has_flag("no-auto-resume") {
+        if let Some(path) = &ckpt_path {
+            if std::path::Path::new(path).exists() {
+                eprintln!(
+                    "monitor: auto-resuming from existing checkpoint {path} \
+                     (disable with --no-auto-resume)"
+                );
+                resume_path = Some(path.clone());
+            }
+        }
     }
     let dash = match args.get("listen") {
         None => None,
@@ -1804,6 +1839,7 @@ fn cmd_monitor(args: &Args) -> i32 {
             snapshot_every,
             dash,
             ckpt: ckpt_path,
+            ckpt_keep,
             resume: resume_path,
             quarantine,
         };
@@ -1839,6 +1875,7 @@ fn cmd_monitor(args: &Args) -> i32 {
         series_out: args.get("series-out").map(str::to_string),
         dash,
         ckpt: ckpt_path,
+        ckpt_keep,
     };
     let mut skip_lines = 0u64;
     if let Some(path) = &resume_path {
@@ -2054,6 +2091,7 @@ struct MergeOpts {
     snapshot_every: Option<f64>,
     dash: Option<http::SharedDash>,
     ckpt: Option<String>,
+    ckpt_keep: usize,
     resume: Option<String>,
     quarantine: bool,
 }
@@ -2072,6 +2110,7 @@ struct MergeResume {
 /// validator state and consumed-line counts, under the version header.
 fn write_merge_ckpt(
     path: &str,
+    keep: usize,
     ml: &MonitorLedger,
     merger: &merge::StreamMerger,
     validators: &[proto::Validator],
@@ -2091,7 +2130,7 @@ fn write_merge_ckpt(
         "validators".to_string(),
         Json::arr(validators.iter().map(|v| v.ckpt_json())),
     );
-    ckpt::write_atomic(std::path::Path::new(path), &Json::Obj(doc))
+    ckpt::write_rotating(std::path::Path::new(path), &Json::Obj(doc), keep)
         .map_err(|e| format!("writing checkpoint {path} failed: {e}"))
 }
 
@@ -2161,6 +2200,7 @@ fn cmd_monitor_merge(args: &Args, opts: MergeOpts) -> i32 {
         snapshot_every,
         dash,
         ckpt: ckpt_path,
+        ckpt_keep,
         resume,
         quarantine,
     } = opts;
@@ -2317,7 +2357,9 @@ fn cmd_monitor_merge(args: &Args, opts: MergeOpts) -> i32 {
                         last_emit = ml.watermark_s();
                         emit_merged(&ml, &merger, &sinks, false, false)?;
                         if let Some(path) = &ckpt_path {
-                            write_merge_ckpt(path, &ml, &merger, &validators, &lines, last_emit)?;
+                            write_merge_ckpt(
+                                path, ckpt_keep, &ml, &merger, &validators, &lines, last_emit,
+                            )?;
                         }
                         // Chaos site: die right after snapshot +
                         // checkpoint (see the single-stream path).
@@ -2343,7 +2385,7 @@ fn cmd_monitor_merge(args: &Args, opts: MergeOpts) -> i32 {
         }
         emit_merged(&ml, &merger, &sinks, false, true)?;
         if let Some(path) = &ckpt_path {
-            write_merge_ckpt(path, &ml, &merger, &validators, &lines, last_emit)?;
+            write_merge_ckpt(path, ckpt_keep, &ml, &merger, &validators, &lines, last_emit)?;
         }
         Ok(())
     };
@@ -2448,6 +2490,26 @@ mod tests {
         a.reject_unknown("monitor", &MONITOR_FLAGS).expect("fault-tolerance flags are known");
         let err = parse("--checkpoints c").reject_unknown("monitor", &MONITOR_FLAGS).unwrap_err();
         assert!(err.contains("--checkpoints"), "{err}");
+    }
+
+    /// The auto-resume / rotation satellites: `--no-auto-resume` and
+    /// `--checkpoint-keep` are in the monitor vocabulary, and their
+    /// misspellings are rejected with the subcommand named.
+    #[test]
+    fn monitor_vocabulary_accepts_auto_resume_and_rotation_flags() {
+        let a = parse(
+            "--in a.txt --checkpoint mon.ckpt --checkpoint-keep 3 \
+             --no-auto-resume --snapshot-every 900",
+        );
+        a.reject_unknown("monitor", &MONITOR_FLAGS).expect("rotation flags are known");
+        for (argv, bad) in [
+            ("--no-auto-resumes --checkpoint c", "--no-auto-resumes"),
+            ("--checkpoint-keeps 3 --checkpoint c", "--checkpoint-keeps"),
+        ] {
+            let err = parse(argv).reject_unknown("monitor", &MONITOR_FLAGS).unwrap_err();
+            assert!(err.starts_with("monitor: unknown flag(s)"), "{argv}: {err}");
+            assert!(err.contains(bad), "{argv}: {err}");
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@
 pub mod attribution;
 
 use super::ledger::{JobMeta, Ledger, TimeClass};
-use super::reduce::fold_ledger;
+use super::reduce::{fold_ledger, fold_ledger_ref};
 use super::stack::{StackLayer, N_LAYERS};
 use crate::workload::{Framework, ModelArch, Phase, SizeClass};
 
@@ -117,6 +117,25 @@ pub fn report<F: Fn(&JobMeta) -> bool>(
     filter: F,
 ) -> GoodputReport {
     let cells = fold_ledger(ledger, &[(w0, w1)], 1, |m, gs| {
+        if filter(m) {
+            gs.push(0);
+        }
+    });
+    cells[0][0].finalize(ledger.capacity_chip_seconds(w0, w1))
+}
+
+/// [`report`] over the retained array-of-structs fold
+/// ([`fold_ledger_ref`]): the pre-SoA single-pass shape — per-span
+/// struct reassembly, enum-keyed bucket dispatch. The property suite
+/// asserts it bit-matches the chunked-column [`report`], and the
+/// `goodput_reduce` bench measures the SoA speedup against it.
+pub fn report_ref<F: Fn(&JobMeta) -> bool>(
+    ledger: &Ledger,
+    w0: f64,
+    w1: f64,
+    filter: F,
+) -> GoodputReport {
+    let cells = fold_ledger_ref(ledger, &[(w0, w1)], 1, |m, gs| {
         if filter(m) {
             gs.push(0);
         }
@@ -409,6 +428,8 @@ mod tests {
             let fast = report(&l, w0, w1, |_| true);
             let slow = report_naive(&l, w0, w1, |_| true);
             assert_reports_bit_identical(&fast, &slow, &format!("[{w0}, {w1})"));
+            let aos = report_ref(&l, w0, w1, |_| true);
+            assert_reports_bit_identical(&fast, &aos, &format!("AoS ref [{w0}, {w1})"));
             let filt = |m: &JobMeta| m.phase == Phase::Training;
             let fast = report(&l, w0, w1, filt);
             let slow = report_naive(&l, w0, w1, filt);

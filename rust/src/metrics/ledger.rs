@@ -65,6 +65,19 @@ impl TimeClass {
         Self::ALL.iter().copied().find(|c| c.name() == s)
     }
 
+    /// The class's small-int column encoding: its index in [`Self::ALL`]
+    /// (declaration order — pinned by tests). This is the byte the SoA
+    /// span columns store and the chunked folds index buckets by.
+    pub const fn index(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Self::index`]: decode a span-column byte. `None` for
+    /// anything outside the seven encoded variants.
+    pub fn from_index(i: u8) -> Option<TimeClass> {
+        Self::ALL.get(i as usize).copied()
+    }
+
     /// Does this class count as "all-allocated" time (the SG numerator and
     /// RG denominator)? `Partial` does not: the bulk-synchronous gang is
     /// incomplete (Fig. 11). `Queued` holds no chips at all.
@@ -118,13 +131,106 @@ impl Span {
 
     /// Chip-seconds of this span clipped to window [w0, w1).
     pub fn clipped(&self, w0: f64, w1: f64) -> f64 {
-        let lo = self.t0.max(w0);
-        let hi = self.t1.min(w1);
-        if hi <= lo {
-            0.0
-        } else {
-            (hi - lo) * self.chips as f64
+        clip_cs(self.t0, self.t1, self.chips, w0, w1)
+    }
+}
+
+/// Chip-seconds of a span clipped to [w0, w1) — THE one clip expression
+/// every reduction path shares ([`Span::clipped`], the chunked column
+/// sweeps in `metrics::reduce`, the windowed and monitor ingest folds).
+/// Centralizing it is what keeps each path's arithmetic bit-identical:
+/// same max/min order, same subtract-then-scale.
+#[inline(always)]
+pub fn clip_cs(t0: f64, t1: f64, chips: u32, w0: f64, w1: f64) -> f64 {
+    let lo = t0.max(w0);
+    let hi = t1.min(w1);
+    if hi <= lo {
+        0.0
+    } else {
+        (hi - lo) * chips as f64
+    }
+}
+
+/// Structure-of-arrays span storage: the per-job span list decomposed
+/// into contiguous columns — `t0`/`t1` as `f64`, `chips` as `u32`, and
+/// `class`/`layer` packed as one-byte small ints ([`TimeClass::index`] /
+/// [`StackLayer::index`]). The reduction folds sweep these columns in
+/// cache-line-sized runs instead of loading padded `Span` structs
+/// (22 bytes of payload per span vs `size_of::<Span>()` = 24 with
+/// padding, and each sweep touches only the columns it needs).
+///
+/// The write side preserves insertion order exactly — `push` appends to
+/// every column — so per-job summation order (the canonical order every
+/// reduction shares) is unchanged and all outputs stay
+/// `f64::to_bits`-identical to the per-`Span` walk.
+#[derive(Clone, Debug, Default)]
+pub struct SpanColumns {
+    t0: Vec<f64>,
+    t1: Vec<f64>,
+    chips: Vec<u32>,
+    class: Vec<u8>,
+    layer: Vec<u8>,
+}
+
+impl SpanColumns {
+    pub fn len(&self) -> usize {
+        self.t0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t0.is_empty()
+    }
+
+    /// Append one span, decomposed into the columns (insertion order is
+    /// the canonical per-job summation order — never reorder).
+    pub fn push(&mut self, s: Span) {
+        self.t0.push(s.t0);
+        self.t1.push(s.t1);
+        self.chips.push(s.chips);
+        self.class.push(s.class.index());
+        self.layer.push(s.layer.index());
+    }
+
+    /// Reassemble span `i`. Panics out of bounds, like `Vec` indexing.
+    pub fn get(&self, i: usize) -> Span {
+        Span {
+            t0: self.t0[i],
+            t1: self.t1[i],
+            chips: self.chips[i],
+            class: TimeClass::from_index(self.class[i]).expect("valid class column byte"),
+            layer: StackLayer::from_index(self.layer[i]).expect("valid layer column byte"),
         }
+    }
+
+    pub fn last(&self) -> Option<Span> {
+        self.len().checked_sub(1).map(|i| self.get(i))
+    }
+
+    /// Walk the spans in insertion order as reassembled [`Span`] values —
+    /// the compatibility surface for reference reductions and tests; hot
+    /// paths sweep [`Self::cols`] instead.
+    pub fn iter(&self) -> impl Iterator<Item = Span> + '_ {
+        (0..self.len()).map(|i| self.get(i))
+    }
+
+    /// The raw columns `(t0, t1, chips, class, layer)` for zipped slice
+    /// sweeps (bounds checks hoisted by the zip; class/layer bytes index
+    /// accumulator buckets directly).
+    #[allow(clippy::type_complexity)]
+    pub fn cols(&self) -> (&[f64], &[f64], &[u32], &[u8], &[u8]) {
+        (&self.t0, &self.t1, &self.chips, &self.class, &self.layer)
+    }
+
+    /// The span end-time column (what windowed scans binary-search).
+    pub fn t1s(&self) -> &[f64] {
+        &self.t1
+    }
+
+    /// Resident payload bytes of the columns (8 + 8 + 4 + 1 + 1 per
+    /// span) — the peak-memory estimate the `goodput_reduce` bench
+    /// compares against the padded `size_of::<Span>()` AoS figure.
+    pub fn resident_bytes(&self) -> usize {
+        self.len() * (8 + 8 + 4 + 1 + 1)
     }
 }
 
@@ -140,7 +246,10 @@ pub struct PgSample {
 
 #[derive(Clone, Debug, Default)]
 pub struct JobLedger {
-    pub spans: Vec<Span>,
+    /// The job's spans, stored as contiguous columns ([`SpanColumns`]).
+    /// Insertion order is preserved exactly — it is the canonical per-job
+    /// summation order every reduction shares.
+    pub spans: SpanColumns,
     pub pg_samples: Vec<PgSample>,
     /// True once any span was recorded out of time order (t0 or t1 below
     /// its predecessor's). The engine always appends in time order, so
@@ -158,7 +267,7 @@ impl JobLedger {
         if self.unordered {
             0
         } else {
-            self.spans.partition_point(|s| s.t1 <= w0)
+            self.spans.t1s().partition_point(|&t1| t1 <= w0)
         }
     }
 
@@ -365,17 +474,26 @@ impl Ledger {
         TimeClass::ALL
             .iter()
             .map(|&class| {
+                let want = class.index();
                 self.jobs
                     .values()
                     .filter(|(meta, _)| filter(meta))
                     .map(|(_, jl)| {
+                        let start = jl.first_overlapping(w0);
+                        let ordered = jl.time_ordered();
+                        let (t0s, t1s, chips, classes, _) = jl.spans.cols();
                         let mut sub = 0.0;
-                        for s in &jl.spans[jl.first_overlapping(w0)..] {
-                            if jl.time_ordered() && s.t0 >= w1 {
+                        for (((&t0, &t1), &ch), &cls) in t0s[start..]
+                            .iter()
+                            .zip(&t1s[start..])
+                            .zip(&chips[start..])
+                            .zip(&classes[start..])
+                        {
+                            if ordered && t0 >= w1 {
                                 break;
                             }
-                            if s.class == class {
-                                sub += s.clipped(w0, w1);
+                            if cls == want {
+                                sub += clip_cs(t0, t1, ch, w0, w1);
                             }
                         }
                         sub
@@ -410,7 +528,7 @@ impl Ledger {
     pub fn end_time_by_fold(&self) -> f64 {
         self.jobs
             .values()
-            .flat_map(|(_, jl)| jl.spans.iter().map(|s| s.t1))
+            .flat_map(|(_, jl)| jl.spans.t1s().iter().copied())
             .fold(0.0, f64::max)
     }
 }
@@ -582,7 +700,7 @@ mod tests {
             let t = i as f64 * 10.0;
             l.add_span_auto(1, t, t + 10.0, 4, *class);
         }
-        for s in &l.jobs[&1].1.spans {
+        for s in l.jobs[&1].1.spans.iter() {
             assert_eq!(s.layer, StackLayer::of_class(s.class), "{:?}", s.class);
         }
         // Pure-layer buckets read back their class totals bitwise.
@@ -596,7 +714,7 @@ mod tests {
         let mut l = Ledger::new();
         l.ensure_job(meta(1));
         l.add_span(1, 0.0, 10.0, 4, TimeClass::Startup, StackLayer::Framework);
-        assert_eq!(l.jobs[&1].1.spans[0].layer, StackLayer::Framework);
+        assert_eq!(l.jobs[&1].1.spans.get(0).layer, StackLayer::Framework);
         assert_eq!(l.layer_chip_seconds(StackLayer::Compiler, 0.0, 10.0, |_| true), 0.0);
         assert_eq!(l.layer_chip_seconds(StackLayer::Framework, 0.0, 10.0, |_| true), 40.0);
     }
@@ -637,6 +755,62 @@ mod tests {
                 assert_eq!(fast.to_bits(), slow.to_bits(), "job 1 [{w0}, {w1})");
             }
         }
+    }
+
+    /// SoA columns must round-trip every span field bitwise, preserve
+    /// insertion order, and report the packed payload size (no padding).
+    #[test]
+    fn span_columns_round_trip_preserves_order_and_bits() {
+        let mut cols = SpanColumns::default();
+        assert!(cols.is_empty());
+        assert!(cols.last().is_none());
+        let span = |t0: f64, t1: f64, chips: u32, class: TimeClass, layer: StackLayer| Span {
+            t0,
+            t1,
+            chips,
+            class,
+            layer,
+        };
+        let spans = [
+            span(0.5, 7.25, 3, TimeClass::Queued, StackLayer::Scheduling),
+            span(7.25, 9.0, 256, TimeClass::Startup, StackLayer::Compiler),
+            span(2.0, 4.0, 1, TimeClass::Lost, StackLayer::Hardware),
+        ];
+        for s in spans {
+            cols.push(s);
+        }
+        assert_eq!(cols.len(), 3);
+        assert_eq!(cols.resident_bytes(), 3 * 22);
+        assert!(cols.resident_bytes() < 3 * std::mem::size_of::<Span>());
+        for (i, (want, got)) in spans.iter().zip(cols.iter()).enumerate() {
+            assert_eq!(want.t0.to_bits(), got.t0.to_bits(), "span {i} t0");
+            assert_eq!(want.t1.to_bits(), got.t1.to_bits(), "span {i} t1");
+            assert_eq!(want.chips, got.chips, "span {i} chips");
+            assert_eq!(want.class, got.class, "span {i} class");
+            assert_eq!(want.layer, got.layer, "span {i} layer");
+        }
+        let last = cols.last().unwrap();
+        assert_eq!(last.class, TimeClass::Lost);
+        let (t0s, t1s, chips, classes, layers) = cols.cols();
+        assert_eq!(t0s, &[0.5, 7.25, 2.0]);
+        assert_eq!(t1s, cols.t1s());
+        assert_eq!(chips, &[3, 256, 1]);
+        let want_classes = [TimeClass::Queued, TimeClass::Startup, TimeClass::Lost];
+        let want_layers = [StackLayer::Scheduling, StackLayer::Compiler, StackLayer::Hardware];
+        assert_eq!(classes, &want_classes.map(|c| c.index()));
+        assert_eq!(layers, &want_layers.map(|l| l.index()));
+    }
+
+    /// Class small-int encoding covers every variant and rejects bytes
+    /// past the end — the contract the one-byte span column relies on.
+    #[test]
+    fn class_index_round_trips_every_variant() {
+        for (i, &c) in TimeClass::ALL.iter().enumerate() {
+            assert_eq!(c.index() as usize, i, "{c:?}");
+            assert_eq!(TimeClass::from_index(c.index()), Some(c));
+        }
+        assert_eq!(TimeClass::from_index(TimeClass::ALL.len() as u8), None);
+        assert_eq!(TimeClass::from_index(u8::MAX), None);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! byte-identity guarantees rest on.
 
 use super::goodput::GoodputReport;
-use super::ledger::{JobMeta, Ledger, TimeClass};
+use super::ledger::{clip_cs, JobMeta, Ledger, TimeClass};
 use super::stack::{StackLayer, N_LAYERS};
 
 /// Number of [`TimeClass`] buckets every cell tracks.
@@ -60,6 +60,16 @@ impl CellAccum {
     /// Fold one clipped span piece into its class AND layer buckets.
     #[inline]
     pub fn add_piece(&mut self, class: TimeClass, layer: StackLayer, chip_seconds: f64) {
+        self.add_piece_idx(class.index(), layer.index(), chip_seconds);
+    }
+
+    /// [`Self::add_piece`] by small-int column bytes — the branch-light
+    /// bucket dispatch the chunked column sweeps use: the one-byte
+    /// class/layer columns index the accumulator arrays directly, no
+    /// enum decode or match. Same additions as `add_piece` (it delegates
+    /// here), so the two are interchangeable bit-for-bit.
+    #[inline(always)]
+    pub fn add_piece_idx(&mut self, class: u8, layer: u8, chip_seconds: f64) {
         self.class_cs[class as usize] += chip_seconds;
         self.layer_cs[layer as usize] += chip_seconds;
     }
@@ -148,6 +158,12 @@ where
     cell
 }
 
+/// Chunk size for the single-window column sweep: 1024 spans per chunk
+/// keeps each column run (8 KiB of t0 + 8 KiB of t1 + 4 KiB of chips +
+/// 2 KiB of class/layer bytes) resident in L1 while the sweep clips and
+/// bucket-dispatches, without per-span loop overhead dominating.
+const FOLD_CHUNK: usize = 1024;
+
 /// Walk every job's spans and PG samples exactly once, accumulating into
 /// `n_groups × windows.len()` cells.
 ///
@@ -156,6 +172,15 @@ where
 /// into the scratch vec (pushing nothing skips the job — the filter).
 /// A job may belong to several groups (e.g. "fleet" plus its segment);
 /// its subtotal is merged into each.
+///
+/// The span walk is a chunked sweep over the SoA columns
+/// ([`super::ledger::SpanColumns`]): zipped slice iteration hoists the
+/// bounds checks, and the one-byte class/layer columns index the
+/// accumulator buckets directly ([`CellAccum::add_piece_idx`] — no enum
+/// decode, no match). Spans are visited strictly in insertion order
+/// within each job and jobs in `BTreeMap` order, so every cell's
+/// addition chain is identical to the per-`Span` reference walk
+/// ([`fold_ledger_ref`]) and the outputs are `f64::to_bits`-equal.
 ///
 /// Returns cells as `[group][window]`.
 pub fn fold_ledger(
@@ -178,10 +203,115 @@ pub fn fold_ledger(
         }
         let mut touched_lo = usize::MAX;
         let mut touched_hi = 0usize;
-        for s in &jl.spans {
-            // First window whose end is past the span start; windows
-            // before it cannot overlap (they contributed exactly 0.0 in
-            // the naive scan, so skipping them is bit-identical).
+        let (t0s, t1s, chips, classes, layers) = jl.spans.cols();
+        if nw == 1 {
+            // Single-window fast path (whole-horizon reports, segmented
+            // folds): no window search at all — one chunked sweep of the
+            // columns. Per span the reference does `start =
+            // partition_point(w1 <= t0)` (here: 1 ⇔ w1 <= t0, i.e. skip)
+            // then breaks on `w0 >= t1` (skip); any span passing both
+            // gets exactly one add_piece of its clipped piece — the same
+            // single addition, in the same insertion order, as here.
+            let (w0, w1) = windows[0];
+            let cell = &mut job_cells[0];
+            let mut any = false;
+            for ((((t0c, t1c), chc), clc), lyc) in t0s
+                .chunks(FOLD_CHUNK)
+                .zip(t1s.chunks(FOLD_CHUNK))
+                .zip(chips.chunks(FOLD_CHUNK))
+                .zip(classes.chunks(FOLD_CHUNK))
+                .zip(layers.chunks(FOLD_CHUNK))
+            {
+                for ((((&t0, &t1), &ch), &cls), &lyr) in
+                    t0c.iter().zip(t1c).zip(chc).zip(clc).zip(lyc)
+                {
+                    if w1 <= t0 || w0 >= t1 {
+                        continue;
+                    }
+                    cell.add_piece_idx(cls, lyr, clip_cs(t0, t1, ch, w0, w1));
+                    any = true;
+                }
+            }
+            if any {
+                touched_lo = 0;
+                touched_hi = 0;
+            }
+        } else {
+            for ((((&t0, &t1), &ch), &cls), &lyr) in
+                t0s.iter().zip(t1s).zip(chips).zip(classes).zip(layers)
+            {
+                // First window whose end is past the span start; windows
+                // before it cannot overlap (they contributed exactly 0.0
+                // in the naive scan, so skipping them is bit-identical).
+                let start = windows.partition_point(|&(_, w1)| w1 <= t0);
+                for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+                    if w0 >= t1 {
+                        break;
+                    }
+                    job_cells[w].add_piece_idx(cls, lyr, clip_cs(t0, t1, ch, w0, w1));
+                    touched_lo = touched_lo.min(w);
+                    touched_hi = touched_hi.max(w);
+                }
+            }
+        }
+        for s in &jl.pg_samples {
+            let start = windows.partition_point(|&(_, w1)| w1 <= s.t0);
+            for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
+                if w0 >= s.t1 {
+                    break;
+                }
+                let lo = s.t0.max(w0);
+                let hi = s.t1.min(w1);
+                if hi <= lo {
+                    continue;
+                }
+                let frac = (hi - lo) / (s.t1 - s.t0);
+                job_cells[w].add_pg(s.chip_seconds * frac, s.pg);
+                touched_lo = touched_lo.min(w);
+                touched_hi = touched_hi.max(w);
+            }
+        }
+        if touched_lo == usize::MAX {
+            // No overlap with any window: the job's subtotal is all-zero
+            // and merging it would only add 0.0s (exact no-ops).
+            continue;
+        }
+        for w in touched_lo..=touched_hi {
+            let jc = job_cells[w];
+            for &g in &groups {
+                cells[g][w].merge_job(&jc);
+            }
+            job_cells[w] = CellAccum::default();
+        }
+    }
+    cells
+}
+
+/// The retained array-of-structs reference fold: reassembles each span
+/// and walks it exactly the way [`fold_ledger`] did before the SoA
+/// restructure — per-span window search, enum-keyed bucket dispatch.
+/// This is the baseline the property suite (`tests/goodput_reduce.rs`)
+/// and the `goodput_reduce` bench's SoA-vs-reference gate compare
+/// against; it must never be "optimized".
+pub fn fold_ledger_ref(
+    ledger: &Ledger,
+    windows: &[(f64, f64)],
+    n_groups: usize,
+    mut groups_of: impl FnMut(&JobMeta, &mut Vec<usize>),
+) -> Vec<Vec<CellAccum>> {
+    let nw = windows.len();
+    let mut cells = vec![vec![CellAccum::default(); nw]; n_groups];
+    let mut job_cells = vec![CellAccum::default(); nw];
+    let mut groups: Vec<usize> = Vec::with_capacity(n_groups);
+    for (meta, jl) in ledger.jobs.values() {
+        groups.clear();
+        groups_of(meta, &mut groups);
+        if groups.is_empty() {
+            continue;
+        }
+        let mut touched_lo = usize::MAX;
+        let mut touched_hi = 0usize;
+        for s in jl.spans.iter() {
             let start = windows.partition_point(|&(_, w1)| w1 <= s.t0);
             for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
                 if w0 >= s.t1 {
@@ -210,8 +340,6 @@ pub fn fold_ledger(
             }
         }
         if touched_lo == usize::MAX {
-            // No overlap with any window: the job's subtotal is all-zero
-            // and merging it would only add 0.0s (exact no-ops).
             continue;
         }
         for w in touched_lo..=touched_hi {
@@ -322,6 +450,70 @@ mod tests {
         // And the finalized report carries the buckets through verbatim.
         let r = cell.finalize(1000.0);
         assert_eq!(r.layer_cs, cell.layer_cs);
+    }
+
+    /// The chunked SoA fold must match the retained AoS reference walk
+    /// bitwise cell-for-cell — across the single-window fast path (with
+    /// more spans than one chunk), multi-window series, and windows that
+    /// miss every span (touched bookkeeping / job_count).
+    #[test]
+    fn chunked_fold_matches_reference_fold_bitwise() {
+        let mut l = Ledger::new();
+        for id in 1..=3u64 {
+            l.ensure_job(meta(id, if id == 2 { Phase::Serving } else { Phase::Training }));
+        }
+        let mut t = 0.0;
+        for i in 0..(FOLD_CHUNK * 2 + 37) {
+            let id = 1 + (i % 3) as u64;
+            let class = TimeClass::ALL[i % TimeClass::ALL.len()];
+            let layer = StackLayer::ALL[i % StackLayer::ALL.len()];
+            let dur = 0.3 + (i % 11) as f64 * 0.17;
+            l.add_span(id, t, t + dur, 1 + (i % 5) as u32, class, layer);
+            if class == TimeClass::Productive {
+                l.add_pg_sample(id, t, t + dur, 1 + (i % 5) as u32, 0.5 + (i % 4) as f64 * 0.1);
+            }
+            t += dur * 0.8;
+        }
+        let horizon = t;
+        let window_sets: Vec<Vec<(f64, f64)>> = vec![
+            vec![(0.0, horizon)],                       // single-window fast path
+            vec![(horizon * 0.2, horizon * 0.4)],       // single window, partial overlap
+            vec![(horizon + 1.0, horizon + 2.0)],       // single window, no overlap
+            (0..24)                                     // multi-window series
+                .map(|w| (horizon * w as f64 / 24.0, horizon * (w + 1) as f64 / 24.0))
+                .collect(),
+        ];
+        let grouping = |m: &JobMeta, gs: &mut Vec<usize>| {
+            gs.push(0);
+            if m.phase == Phase::Serving {
+                gs.push(1);
+            }
+        };
+        for windows in &window_sets {
+            let fast = fold_ledger(&l, windows, 2, grouping);
+            let slow = fold_ledger_ref(&l, windows, 2, grouping);
+            for (g, (fg, sg)) in fast.iter().zip(&slow).enumerate() {
+                for (w, (fc, sc)) in fg.iter().zip(sg).enumerate() {
+                    assert_eq!(fc.job_count, sc.job_count, "group {g} window {w}");
+                    assert_eq!(fc.pg_w.to_bits(), sc.pg_w.to_bits(), "group {g} window {w}");
+                    assert_eq!(fc.pg_sum.to_bits(), sc.pg_sum.to_bits(), "group {g} window {w}");
+                    for c in 0..N_CLASSES {
+                        assert_eq!(
+                            fc.class_cs[c].to_bits(),
+                            sc.class_cs[c].to_bits(),
+                            "group {g} window {w} class {c}"
+                        );
+                    }
+                    for y in 0..N_LAYERS {
+                        assert_eq!(
+                            fc.layer_cs[y].to_bits(),
+                            sc.layer_cs[y].to_bits(),
+                            "group {g} window {w} layer {y}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::goodput::{report_naive, GoodputReport};
 use super::ledger::{JobMeta, Ledger};
-use super::reduce::fold_ledger;
+use super::reduce::{fold_ledger, fold_ledger_ref};
 
 /// A reporting window.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +62,33 @@ impl TimeSeries {
         let windows = Self::windows_for(t0, t1, width_s);
         let spans: Vec<(f64, f64)> = windows.iter().map(|w| (w.t0, w.t1)).collect();
         let cells = fold_ledger(ledger, &spans, 1, |m, gs| {
+            if filter(m) {
+                gs.push(0);
+            }
+        });
+        let reports = windows
+            .iter()
+            .zip(&cells[0])
+            .map(|(w, c)| c.finalize(ledger.capacity_chip_seconds(w.t0, w.t1)))
+            .collect();
+        TimeSeries { label: label.to_string(), windows, reports }
+    }
+
+    /// [`build`] over the retained array-of-structs fold
+    /// ([`fold_ledger_ref`]) — the pre-SoA single-pass shape, kept as the
+    /// baseline the SoA column sweep is property-tested and benched
+    /// against.
+    pub fn build_ref<F: Fn(&JobMeta) -> bool>(
+        label: &str,
+        ledger: &Ledger,
+        t0: f64,
+        t1: f64,
+        width_s: f64,
+        filter: F,
+    ) -> TimeSeries {
+        let windows = Self::windows_for(t0, t1, width_s);
+        let spans: Vec<(f64, f64)> = windows.iter().map(|w| (w.t0, w.t1)).collect();
+        let cells = fold_ledger_ref(ledger, &spans, 1, |m, gs| {
             if filter(m) {
                 gs.push(0);
             }

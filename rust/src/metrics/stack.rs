@@ -70,6 +70,19 @@ impl StackLayer {
         Self::ALL.iter().copied().find(|l| l.name() == s)
     }
 
+    /// The layer's small-int column encoding: its index in [`Self::ALL`]
+    /// (declaration order — pinned by tests). This is the byte the SoA
+    /// span columns store and the chunked folds index buckets by.
+    pub const fn index(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Self::index`]: decode a span-column byte. `None` for
+    /// anything outside the six encoded variants.
+    pub fn from_index(i: u8) -> Option<StackLayer> {
+        Self::ALL.get(i as usize).copied()
+    }
+
     /// The default layer a [`TimeClass`] attributes to when the emitter
     /// has no finer-grained provenance (plain `Ledger::add_span`). The
     /// simulation engine refines two of these per span: `Startup` spans
@@ -98,6 +111,18 @@ mod tests {
         for (i, l) in StackLayer::ALL.iter().enumerate() {
             assert_eq!(*l as usize, i, "{}", l.name());
         }
+    }
+
+    /// Layer small-int encoding covers every variant and rejects bytes
+    /// past the end — the contract the one-byte span column relies on.
+    #[test]
+    fn layer_index_round_trips_every_variant() {
+        for (i, &l) in StackLayer::ALL.iter().enumerate() {
+            assert_eq!(l.index() as usize, i, "{}", l.name());
+            assert_eq!(StackLayer::from_index(l.index()), Some(l));
+        }
+        assert_eq!(StackLayer::from_index(StackLayer::ALL.len() as u8), None);
+        assert_eq!(StackLayer::from_index(u8::MAX), None);
     }
 
     #[test]

@@ -36,7 +36,7 @@ use std::collections::BTreeMap;
 use crate::workload::JobId;
 
 use super::goodput::{Axis, GoodputReport, SegmentReport};
-use super::ledger::{capacity_integral, push_capacity_step, JobMeta, Span, TimeClass};
+use super::ledger::{capacity_integral, clip_cs, push_capacity_step, JobMeta, TimeClass};
 use super::reduce::{merge_job_totals, CellAccum};
 use super::series::{TimeSeries, Window};
 use super::stack::StackLayer;
@@ -153,15 +153,17 @@ impl WindowedLedger {
         let windows = &self.windows;
         let entry = self.jobs.get_mut(&id).expect("add_span before ensure_job");
         let wj = &mut entry.1;
-        let span = Span { t0, t1, chips, class, layer };
-        wj.total.add_piece(class, layer, span.clipped(0.0, horizon));
+        // Decode class/layer to their column bytes once; every fold below
+        // bucket-dispatches by small int (same additions as add_piece).
+        let (cls, lyr) = (class.index(), layer.index());
+        wj.total.add_piece_idx(cls, lyr, clip_cs(t0, t1, chips, 0.0, horizon));
         let start = windows.partition_point(|&(_, w1)| w1 <= t0);
         for (w, &(w0, w1)) in windows.iter().enumerate().skip(start) {
             if w0 >= t1 {
                 break;
             }
             let cell = Self::cell_mut(wj, w, &mut self.cells_allocated);
-            cell.add_piece(class, layer, span.clipped(w0, w1));
+            cell.add_piece_idx(cls, lyr, clip_cs(t0, t1, chips, w0, w1));
         }
     }
 

@@ -127,6 +127,32 @@ pub fn write_atomic(path: &Path, doc: &Json) -> std::io::Result<()> {
     std::fs::rename(&tmp, path)
 }
 
+/// [`write_atomic`] with generation rotation for long-running followers:
+/// before the new checkpoint lands at `path`, the existing generations
+/// shift down one slot — `path` → `<path>.1`, `<path>.1` → `<path>.2`, …
+/// — keeping the last `keep` generations total (`keep = 1` is plain
+/// `write_atomic`, the default behavior). Every shift is a same-directory
+/// rename and the final write is the usual tmp+rename, so a crash at any
+/// point leaves each retained slot either its previous complete file or
+/// the next generation's complete file — never a torn checkpoint.
+pub fn write_rotating(path: &Path, doc: &Json, keep: usize) -> std::io::Result<()> {
+    if keep > 1 {
+        let generation = |k: usize| {
+            let mut s = path.as_os_str().to_os_string();
+            s.push(format!(".{k}"));
+            std::path::PathBuf::from(s)
+        };
+        // Shift oldest-first so nothing is overwritten before it moves.
+        for k in (1..keep).rev() {
+            let src = if k == 1 { path.to_path_buf() } else { generation(k - 1) };
+            if src.exists() {
+                std::fs::rename(&src, generation(k))?;
+            }
+        }
+    }
+    write_atomic(path, doc)
+}
+
 /// Read and parse a checkpoint, enforcing the version header.
 pub fn read(path: &Path) -> Result<Json, String> {
     let text = std::fs::read_to_string(path)
@@ -171,6 +197,39 @@ mod tests {
         assert!(err.contains("re-run without --resume"), "{err}");
         let err = check_header(&Json::obj(vec![])).unwrap_err();
         assert!(err.contains("not a monitor checkpoint"), "{err}");
+    }
+
+    /// Rotation keeps exactly the last `keep` generations, newest at the
+    /// bare path, and every retained file parses as a valid checkpoint.
+    #[test]
+    fn rotating_write_retains_last_k_generations() {
+        let dir =
+            std::env::temp_dir().join(format!("tpufleet-ckpt-rot-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mon.ckpt");
+        let stamped = |n: u32| {
+            let mut doc = header_json();
+            if let Json::Obj(m) = &mut doc {
+                m.insert("stamp".into(), Json::num(n as f64));
+            }
+            doc
+        };
+        for n in 1..=5 {
+            write_rotating(&path, &stamped(n), 3).unwrap();
+        }
+        // Newest at the bare path, two older generations behind it.
+        assert_eq!(read(&path).unwrap().get("stamp").as_u64(), Some(5));
+        let generation = |k: u32| dir.join(format!("mon.ckpt.{k}"));
+        assert_eq!(read(&generation(1)).unwrap().get("stamp").as_u64(), Some(4));
+        assert_eq!(read(&generation(2)).unwrap().get("stamp").as_u64(), Some(3));
+        assert!(!generation(3).exists(), "keep=3 must not retain a 4th generation");
+        assert!(!path.with_extension("tmp").exists());
+
+        // keep=1 is plain write_atomic: generations stop shifting.
+        write_rotating(&path, &stamped(6), 1).unwrap();
+        assert_eq!(read(&path).unwrap().get("stamp").as_u64(), Some(6));
+        assert_eq!(read(&generation(1)).unwrap().get("stamp").as_u64(), Some(4));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod proto;
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
-use crate::metrics::ledger::{capacity_integral, Span};
+use crate::metrics::ledger::{capacity_integral, clip_cs};
 use crate::metrics::reduce::{merge_job_totals, CellAccum};
 use crate::metrics::{AttributionReport, GoodputReport, JobMeta, StackLayer, Window};
 use crate::util::Json;
@@ -162,11 +162,14 @@ impl MonitorLedger {
                     return;
                 }
                 let job = self.jobs.get_mut(&id).expect("add_span before ensure_job");
+                // Decode class/layer to their column bytes once; the folds
+                // below bucket-dispatch by small int (same additions as
+                // the enum-keyed add_piece — it delegates to this).
+                let (cls, lyr) = (class.index(), layer.index());
                 // Whole-horizon piece: t0 >= 0 and t1 <= watermark <=
                 // final horizon, so the batch `clipped(0, horizon)` bounds
                 // are both no-ops and the piece is (t1 - t0) * chips.
-                let span = Span { t0, t1, chips, class, layer };
-                job.total.add_piece(class, layer, span.chip_seconds());
+                job.total.add_piece_idx(cls, lyr, (t1 - t0) * chips as f64);
                 let nwin = self.windows_started - self.ring_start;
                 let mut i = 0;
                 while i < nwin && self.boundaries[i + 1] <= t0 {
@@ -180,9 +183,9 @@ impl MonitorLedger {
                     // w1 is the unclipped chain boundary; the batch list
                     // clips its last window to the horizon, but t1 never
                     // exceeds it, so the clipped piece is identical.
-                    let piece = span.clipped(w0, w1);
+                    let piece = clip_cs(t0, t1, chips, w0, w1);
                     let w = self.ring_start + i;
-                    Self::job_cell(job, w, &mut self.live_cells).add_piece(class, layer, piece);
+                    Self::job_cell(job, w, &mut self.live_cells).add_piece_idx(cls, lyr, piece);
                     i += 1;
                 }
                 self.note_live(id);

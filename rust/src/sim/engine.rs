@@ -1105,6 +1105,12 @@ mod tests {
         let full_spans: usize =
             full.ledger.jobs.values().map(|(_, jl)| jl.spans.len()).sum();
         assert!(full_spans > 0, "sanity: the full run did record spans");
+        // And the full ledger's engine-emitted storage is SoA-compact:
+        // 22 payload bytes per span, strictly under the padded struct.
+        let resident: usize =
+            full.ledger.jobs.values().map(|(_, jl)| jl.spans.resident_bytes()).sum();
+        assert_eq!(resident, full_spans * 22);
+        assert!(resident < full_spans * std::mem::size_of::<crate::metrics::ledger::Span>());
     }
 
     /// The tentpole contract: every chip-second the engine classifies

@@ -90,8 +90,12 @@ fn random_ledger(rng: &mut Rng) -> (Ledger, f64) {
 
 use tpufleet::testkit::assert_reports_bit_identical as assert_bitwise;
 
-/// Single-pass `report` == naive reference, bit for bit, under random
-/// ledgers, windows, and meta filters.
+/// Single-pass `report` == naive reference == retained AoS-walk
+/// reference, bit for bit, under random ledgers, windows, and meta
+/// filters. Three-way on purpose: `report` now sweeps the SoA columns
+/// chunk-wise, `report_ref` reassembles per-span structs the pre-SoA
+/// way, and `report_naive` rescans per class — all over the same
+/// column storage.
 #[test]
 fn prop_single_pass_report_matches_naive() {
     check(80, 0x5EDC, |rng| {
@@ -100,17 +104,29 @@ fn prop_single_pass_report_matches_naive() {
             let a = rng.range_f64(0.0, end);
             let b = rng.range_f64(0.0, end);
             let (w0, w1) = (a.min(b), a.max(b));
+            let fast = goodput::report(&ledger, w0, w1, |_| true);
             assert_bitwise(
-                &goodput::report(&ledger, w0, w1, |_| true),
+                &fast,
                 &goodput::report_naive(&ledger, w0, w1, |_| true),
                 &format!("fleet [{w0}, {w1})"),
             );
+            assert_bitwise(
+                &fast,
+                &goodput::report_ref(&ledger, w0, w1, |_| true),
+                &format!("fleet AoS ref [{w0}, {w1})"),
+            );
             let phase = [Phase::Training, Phase::Serving, Phase::BulkInference]
                 [rng.below(3) as usize];
+            let fast = goodput::report(&ledger, w0, w1, |m| m.phase == phase);
             assert_bitwise(
-                &goodput::report(&ledger, w0, w1, |m| m.phase == phase),
+                &fast,
                 &goodput::report_naive(&ledger, w0, w1, |m| m.phase == phase),
                 &format!("{} [{w0}, {w1})", phase.name()),
+            );
+            assert_bitwise(
+                &fast,
+                &goodput::report_ref(&ledger, w0, w1, |m| m.phase == phase),
+                &format!("{} AoS ref [{w0}, {w1})", phase.name()),
             );
         }
     });
@@ -134,7 +150,9 @@ fn prop_single_pass_segmented_matches_naive() {
     });
 }
 
-/// One-fold `TimeSeries::build` == per-window naive reference.
+/// One-fold `TimeSeries::build` == per-window naive reference == the
+/// retained AoS-walk fold (`build_ref`) — the multi-window shape of the
+/// chunked-SoA-vs-reference property.
 #[test]
 fn prop_single_pass_series_matches_naive() {
     check(40, 0x5E71E5, |rng| {
@@ -142,11 +160,53 @@ fn prop_single_pass_series_matches_naive() {
         let width = rng.range_f64(end / 30.0, end / 2.0);
         let fast = TimeSeries::build("t", &ledger, 0.0, end, width, |_| true);
         let slow = TimeSeries::build_naive("t", &ledger, 0.0, end, width, |_| true);
+        let aos = TimeSeries::build_ref("t", &ledger, 0.0, end, width, |_| true);
         assert_eq!(fast.windows.len(), slow.windows.len());
+        assert_eq!(fast.windows.len(), aos.windows.len());
         for ((f, s), w) in fast.reports.iter().zip(&slow.reports).zip(&fast.windows) {
             assert_bitwise(f, s, &format!("window [{}, {})", w.t0, w.t1));
         }
+        for ((f, a), w) in fast.reports.iter().zip(&aos.reports).zip(&fast.windows) {
+            assert_bitwise(f, a, &format!("AoS ref window [{}, {})", w.t0, w.t1));
+        }
     });
+}
+
+/// Every `TimeClass` × `StackLayer` combination survives the one-byte
+/// span columns: spans written through the public ledger API read back
+/// with their exact class and layer (the integration-level mirror of
+/// the `index()`/`from_index()` unit round-trips), and the per-class /
+/// per-layer totals land in the right buckets.
+#[test]
+fn soa_columns_round_trip_every_class_layer_combination() {
+    let mut ledger = Ledger::new();
+    ledger.set_capacity(0.0, 10_000);
+    let job = random_job(&mut Rng::new(0xC01), 1);
+    ledger.ensure_job(JobMeta::of(&job));
+    let mut t = 0.0;
+    let mut written = Vec::new();
+    for &class in TimeClass::ALL.iter() {
+        for &layer in StackLayer::ALL.iter() {
+            ledger.add_span(1, t, t + 5.0, 8, class, layer);
+            written.push((t, class, layer));
+            t += 10.0;
+        }
+    }
+    let jl = &ledger.jobs[&1].1;
+    assert_eq!(jl.spans.len(), TimeClass::ALL.len() * StackLayer::ALL.len());
+    for ((t0, class, layer), got) in written.iter().zip(jl.spans.iter()) {
+        assert_eq!(got.t0.to_bits(), t0.to_bits());
+        assert_eq!(got.class, *class, "class at t0={t0}");
+        assert_eq!(got.layer, *layer, "layer at t0={t0}");
+    }
+    // Bucket placement: each layer holds exactly its written piece sum,
+    // chunked fold vs naive per-layer rescan, bitwise.
+    let report = goodput::report(&ledger, 0.0, t, |_| true);
+    for (i, layer) in StackLayer::ALL.iter().enumerate() {
+        let naive = ledger.layer_chip_seconds(*layer, 0.0, t, |_| true);
+        assert_eq!(report.layer_cs[i].to_bits(), naive.to_bits(), "{}", layer.name());
+        assert_eq!(naive, TimeClass::ALL.len() as f64 * 5.0 * 8.0, "{}", layer.name());
+    }
 }
 
 fn sweep_spec(workers: usize) -> SweepSpec {
